@@ -1,0 +1,53 @@
+//! Quickstart: the paper's core mechanics in ~60 lines.
+//!
+//! Reproduces the numeric examples of paper Figs. 2–4: manipulation,
+//! approximation, packed multiplication on the bit-accurate DSP48E1
+//! model, and fine-tuning.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sdmm::dsp::SdmmEngine;
+use sdmm::manip::{approximate_signed, manipulate};
+use sdmm::packing::{fine_tune_tuple, is_feasible_exact, pack_approx, Layout};
+
+fn main() -> anyhow::Result<()> {
+    // --- Fig. 2: parameter manipulation -----------------------------
+    // |W| = 44 = 2^2 * (1 + 2^1 * 5): the 6-bit multiply W*I becomes a
+    // 3-bit multiply (MW=5) plus shift/concat.
+    let m = manipulate(44);
+    println!("44 = 2^{} * (1 + 2^{} * {})", m.s, m.n, m.mw);
+    assert_eq!((m.mw, m.n, m.s), (5, 1, 2));
+
+    // --- Eq. 4: approximation ----------------------------------------
+    // 23 needs MW=11 (4 bits) -> moved to the nearest representable 22.
+    let (neg, a) = approximate_signed(23, 8).unwrap();
+    println!("23 ~> {}{} (|err| = {})", if neg { "-" } else { "" }, a.approx, a.abs_error());
+    assert_eq!(a.approx, 22);
+
+    // --- Fig. 3 / Eq. 8: three 8-bit multiplications, ONE DSP op ----
+    let layout = Layout::for_bits(8)?;
+    let tuple = pack_approx(&layout, &[-44, 3, 96])?;
+    let mut engine = SdmmEngine::new();
+    for input in [-128i64, -77, 0, 51, 127] {
+        let products = engine.execute(&tuple, &[input]);
+        println!("I={input:>5}: products = {:?}", products);
+        assert_eq!(products, tuple.expected_products(&[input]));
+    }
+    println!(
+        "3 multiplications/op, {} DSP ops total (paper k=3 for 8-bit)",
+        engine.stats().ops
+    );
+
+    // --- Fig. 4: fine-tuning in exact (non-approximated) mode --------
+    let wide = vec![127, 127, 127]; // MW=63 each: cannot fit 25 bits
+    assert!(!is_feasible_exact(&layout, &wide));
+    let rep = fine_tune_tuple(&layout, &wide);
+    println!(
+        "fine-tune {:?} -> {:?} (Bray-Curtis {:.4})",
+        rep.original, rep.tuned, rep.distance
+    );
+    assert!(is_feasible_exact(&layout, &rep.tuned));
+
+    println!("quickstart OK");
+    Ok(())
+}

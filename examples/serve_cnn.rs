@@ -1,0 +1,109 @@
+//! End-to-end driver (DESIGN.md §5, "§6 e2e" row): load the trained
+//! CNN artifacts, serve batched inference requests through the Rust
+//! coordinator + PJRT runtime with SDMM-approximated weights, and
+//! report accuracy (quantized vs approximated) plus serving
+//! latency/throughput.
+//!
+//! This is the serving-paper driver the system prompt requires: a real
+//! (small) model, batched requests, latency/throughput reported, with
+//! the paper's technique (weight approximation + packing) in the loop.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example serve_cnn`
+
+use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
+use sdmm::runtime::{Artifacts, WeightMode};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    if !sdmm::runtime::artifacts_available(&dir) {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let art = Artifacts::load(&dir)?;
+    let xs = art.f32("eval_x")?;
+    let ys = art.i32("eval_y")?;
+    let item = 16 * 16;
+    let n_eval = ys.len().min(512);
+
+    println!("== accuracy: quantized vs SDMM-approximated (Table 2 e2e) ==");
+    for w_bits in [8u32, 6, 4] {
+        let mut errs = Vec::new();
+        for mode in [
+            WeightMode::Quantized { w_bits },
+            WeightMode::Approximated { w_bits },
+        ] {
+            let dir2 = dir.clone();
+            let server = InferenceServer::start_factory(
+                move || CnnRunner::load(&dir2, mode),
+                BatchPolicy::default(),
+            );
+            let mut wrong = 0usize;
+            let rxs: Vec<_> = (0..n_eval)
+                .map(|i| server.submit(xs[i * item..(i + 1) * item].to_vec()))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let logits = rx.recv()??;
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 != ys[i] {
+                    wrong += 1;
+                }
+            }
+            server.shutdown();
+            errs.push(wrong as f64 / n_eval as f64 * 100.0);
+        }
+        println!(
+            "W={w_bits}b: err(quant) {:>5.2}%  err(approx) {:>5.2}%  delta {:+.2} pp{}",
+            errs[0],
+            errs[1],
+            errs[1] - errs[0],
+            if w_bits == 4 { "  (must be +0.00: 4-bit exact)" } else { "" }
+        );
+        if w_bits == 4 {
+            assert_eq!(errs[0], errs[1], "4-bit approximation must be lossless");
+        }
+    }
+
+    println!("\n== serving: batched throughput/latency (approx 8-bit) ==");
+    let dir2 = dir.clone();
+    let server = InferenceServer::start_factory(
+        move || CnnRunner::load(&dir2, WeightMode::Approximated { w_bits: 8 }),
+        BatchPolicy::default(),
+    );
+    let requests = 2048usize;
+    let concurrency = 64usize;
+    let t0 = Instant::now();
+    let mut inflight = std::collections::VecDeque::new();
+    let (mut sent, mut done) = (0usize, 0usize);
+    while done < requests {
+        while inflight.len() < concurrency && sent < requests {
+            let off = (sent * item) % (xs.len() - item);
+            inflight.push_back(server.submit(xs[off..off + item].to_vec()));
+            sent += 1;
+        }
+        if let Some(rx) = inflight.pop_front() {
+            rx.recv()??;
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!(
+        "{} requests in {:.3}s -> {:.0} req/s | latency p50 {:.2}ms p99 {:.2}ms | \
+         {} batches, occupancy {:.1}%",
+        m.requests,
+        wall.as_secs_f64(),
+        m.throughput_per_sec(wall),
+        m.latency.p50() / 1e6,
+        m.latency.p99() / 1e6,
+        m.batches,
+        m.batch_occupancy(16) * 100.0
+    );
+    println!("serve_cnn OK");
+    Ok(())
+}

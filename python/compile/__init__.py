@@ -1,0 +1,2 @@
+# Build-time compile path (Layer 1 + Layer 2). Never imported at runtime:
+# the Rust binary only consumes the artifacts this package emits.

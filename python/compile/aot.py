@@ -1,0 +1,179 @@
+"""AOT export: train the Layer-2 model, lower everything to HLO text,
+dump weights + eval data for the Rust runtime.
+
+Artifacts (all consumed by rust/src/runtime):
+  cnn_fwd.hlo.txt    - forward pass, params as runtime arguments
+  sdmm_gemm.hlo.txt  - the Layer-1 Pallas packed-GEMM kernel (interpret
+                       lowering -> plain HLO, runnable on CPU PJRT)
+  weights.bin        - trained f32 weights + eval set (custom binary)
+  manifest.json      - tensor table + metadata
+
+HLO *text* is the interchange format, NOT serialized protos: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the kernel needs int64 lanes
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref, sdmm
+from . import sdmm_lib
+
+# Fixed shapes baked into the artifacts (mirrored in rust/src/runtime).
+SERVE_BATCH = 16
+GEMM_B, GEMM_K, GEMM_MG = 8, 64, 16  # M = 48
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cnn_fwd():
+    shapes = [s for _, s in M.param_shapes()]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    x_spec = jax.ShapeDtypeStruct((SERVE_BATCH, 1, M.INPUT_HW, M.INPUT_HW), jnp.float32)
+
+    def fwd(*args):
+        params = list(args[:-1])
+        return (M.forward(params, args[-1]),)
+
+    lowered = jax.jit(fwd).lower(*specs, x_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_sdmm_gemm():
+    i32 = jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((GEMM_B, GEMM_K), i32),            # x
+        jax.ShapeDtypeStruct((GEMM_MG, GEMM_K), i32),           # a_words
+        jax.ShapeDtypeStruct((GEMM_MG, 3, GEMM_K), i32),        # n
+        jax.ShapeDtypeStruct((GEMM_MG, 3, GEMM_K), i32),        # s
+        jax.ShapeDtypeStruct((GEMM_MG, 3, GEMM_K), i32),        # zero
+        jax.ShapeDtypeStruct((GEMM_MG, 3, GEMM_K), i32),        # neg
+    ]
+
+    def fn(x, a, n, s, z, ng):
+        return (sdmm.sdmm_gemm(x, a, n, s, z, ng),)
+
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def kernel_self_check():
+    """Build-time gate: the Pallas kernel must equal the oracle exactly
+    on a random packed problem before we ship artifacts."""
+    rng = np.random.default_rng(0)
+    wq = rng.integers(-128, 128, size=(GEMM_MG * 3, GEMM_K))
+    x = rng.integers(-128, 128, size=(GEMM_B, GEMM_K)).astype(np.int32)
+    packed = sdmm_lib.pack_weight_matrix(wq, 8)
+    ctl = sdmm.pack_controls(packed)
+    out = sdmm.sdmm_gemm(
+        jnp.asarray(x),
+        jnp.asarray(ctl["a_words"]),
+        jnp.asarray(ctl["n"]),
+        jnp.asarray(ctl["s"]),
+        jnp.asarray(ctl["zero"]),
+        jnp.asarray(ctl["neg"]),
+    )
+    want = ref.ref_gemm_numpy(x, packed["w_approx"])
+    if not np.array_equal(np.asarray(out), want):
+        raise SystemExit("sdmm kernel self-check FAILED (kernel != oracle)")
+    return ctl, x, want
+
+
+class BinWriter:
+    """weights.bin: concatenated little-endian tensors + manifest table."""
+
+    def __init__(self, path):
+        self.f = open(path, "wb")
+        self.table = []
+        self.offset = 0
+
+    def add(self, name, arr):
+        arr = np.ascontiguousarray(arr)
+        dtype = {"float32": "f32", "int32": "i32"}[str(arr.dtype)]
+        raw = arr.tobytes()
+        self.f.write(raw)
+        self.table.append(
+            dict(name=name, dtype=dtype, shape=list(arr.shape), offset=self.offset,
+                 bytes=len(raw))
+        )
+        self.offset += len(raw)
+
+    def close(self):
+        self.f.close()
+        return self.table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    print("[aot] kernel self-check (pallas vs oracle)...", flush=True)
+    ctl, x_k, want_k = kernel_self_check()
+    print("[aot] kernel self-check OK")
+
+    print("[aot] training tiny CNN...", flush=True)
+    params, (x_ev, y_ev), acc = M.train(seed=args.seed, steps=args.steps)
+    print(f"[aot] train done, eval accuracy = {acc:.3f}")
+    if acc < 0.8:
+        raise SystemExit(f"training failed to converge (acc={acc})")
+
+    print("[aot] lowering cnn_fwd...", flush=True)
+    with open(os.path.join(out, "cnn_fwd.hlo.txt"), "w") as f:
+        f.write(lower_cnn_fwd())
+    print("[aot] lowering sdmm_gemm (pallas, interpret)...", flush=True)
+    with open(os.path.join(out, "sdmm_gemm.hlo.txt"), "w") as f:
+        f.write(lower_sdmm_gemm())
+
+    print("[aot] writing weights.bin + manifest.json...", flush=True)
+    w = BinWriter(os.path.join(out, "weights.bin"))
+    for (name, _), p in zip(M.param_shapes(), params):
+        w.add(name, np.asarray(p, dtype=np.float32))
+    w.add("eval_x", np.asarray(x_ev, dtype=np.float32))
+    w.add("eval_y", np.asarray(y_ev, dtype=np.int32))
+    # the kernel-artifact regression vectors (rust runtime test)
+    w.add("gemm_x", x_k.astype(np.int32))
+    for key in ("a_words", "n", "s", "zero", "neg"):
+        w.add(f"gemm_{key}", ctl[key].astype(np.int32))
+    w.add("gemm_out", want_k.astype(np.int32))
+    table = w.close()
+
+    manifest = dict(
+        hlo=dict(cnn_fwd="cnn_fwd.hlo.txt", sdmm_gemm="sdmm_gemm.hlo.txt"),
+        serve_batch=SERVE_BATCH,
+        input_hw=M.INPUT_HW,
+        num_classes=M.NUM_CLASSES,
+        gemm=dict(b=GEMM_B, k=GEMM_K, mg=GEMM_MG),
+        train_accuracy=acc,
+        weights="weights.bin",
+        tensors=table,
+    )
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done -> {out}")
+
+
+if __name__ == "__main__":
+    main()

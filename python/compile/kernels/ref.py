@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracle for the SDMM kernel.
+
+The packed datapath must equal an ordinary integer GEMM against the
+*approximated* weights - exactly, not allclose: every value is an
+integer identity. `ref_gemm` is that GEMM; `python/tests/test_kernel.py`
+asserts bitwise equality against `sdmm.sdmm_gemm` across shapes, seeds
+and weight distributions (hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_gemm(x, w_approx):
+    """out[b, m] = sum_k w_approx[m, k] * x[b, k] in int64, cast int32.
+
+    x: [B, K] int; w_approx: [M, K] int (already Eq.4-approximated).
+    """
+    out = jnp.einsum(
+        "bk,mk->bm", x.astype(jnp.int64), w_approx.astype(jnp.int64)
+    )
+    return out.astype(jnp.int32)
+
+
+def ref_gemm_numpy(x, w_approx):
+    """NumPy twin used by the aot manifest self-check."""
+    import numpy as np
+
+    return np.einsum(
+        "bk,mk->bm", x.astype(np.int64), w_approx.astype(np.int64)
+    ).astype(np.int32)

@@ -1,0 +1,146 @@
+"""Layer-1 Pallas kernel: the SDMM packed-GEMM datapath.
+
+The kernel emulates, bit-exactly and in vectorized form, what one DSP
+block column of the paper's systolic array computes: for every
+(batch b, weight-group mg, position k) one wide multiply
+
+    P = A(mg,k) * Iu(b,k) + C(b,mg,k)        (DSP48E1: 25x18 mult + 48b add)
+
+carries three independent products W_{3mg+j,k} * I_{b,k} (8-bit layout,
+slot width 11). Slot extraction, the n/s shifts, the I[n-1:0] concat and
+the sign stage then reconstruct the products, which accumulate over k
+into out[b, m] - i.e. a full integer GEMM X @ W^T where every multiply
+went through the packed datapath.
+
+TPU adaptation (DESIGN.md par.3): the DSP's wide multiplier becomes a
+wide integer vector lane; BlockSpec tiles (B_T x K) x (MG_T x K) into
+VMEM the way the paper tiles IMem/WMem into BRAM. interpret=True
+everywhere - CPU PJRT cannot execute Mosaic custom-calls.
+
+Requires jax_enable_x64 (the 25x18 product + 48-bit add needs 64-bit
+integer lanes).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+V_BITS = 8
+SLOT_W = V_BITS + 3  # 11
+A_OFFSETS = (0, 11, 22)
+KW = 3
+A_PORT = 25
+B_PORT = 18
+
+
+def _sdmm_products(a_words, x, n, s, zero, neg):
+    """Vectorized packed-datapath emulation.
+
+    a_words: [MG, K] int64 packed A words
+    x:       [B, K] int64 signed activations (8-bit range)
+    n,s,zero,neg: [MG, KW, K] int64 per-slot controls
+    returns  [B, MG, KW, K] int64 products W_hat * I
+    """
+    iu = (x & 0xFF).astype(jnp.int64)  # [B, K] zero-extended input
+    neg_i = (x < 0).astype(jnp.int64)  # [B, K]
+
+    # --- C word: sign-extension compensation per slot (Eq. 7) ---
+    # sex(j) = ((7 - mw_j) * neg(I)) << v | ((I >>a n_j) mod 2^v)
+    mw = jnp.stack(
+        [(a_words >> off) & 0x7 for off in A_OFFSETS], axis=1
+    )  # [MG, KW, K]
+    shifted = jnp.right_shift(x[:, None, None, :], n[None]) & 0xFF  # [B,MG,KW,K]
+    sex = ((7 - mw)[None] * neg_i[:, None, None, :]) << V_BITS | shifted
+    gate = 1 - zero[None]  # zero slots contribute no SEx
+    sex = sex * gate
+    # per-slot static offsets (python ints -> no captured constant array)
+    c_word = sum(sex[:, :, j, :] << A_OFFSETS[j] for j in range(KW))  # [B,MG,K]
+
+    # --- port sign corrections (signed 25-bit A / 18-bit B ports) ---
+    a_neg = (a_words >> (A_PORT - 1)) & 1  # [MG, K]
+    c_word = c_word + a_neg[None] * (iu[:, None, :] << A_PORT)
+    # (B port never goes negative for v=8: Iu <= 255 << 2^17.)
+
+    # --- the DSP op: P = A*Iu + C, wrapping mod 2^48 ---
+    a_signed = a_words - (a_neg << A_PORT)  # what the signed port sees
+    p = (a_signed[None] * iu[:, None, :] + c_word) & ((1 << 48) - 1)
+
+    # --- post-processing: slot extract, sign-interpret, concat, shift ---
+    slots = jnp.stack(
+        [(p >> A_OFFSETS[j]) & ((1 << SLOT_W) - 1) for j in range(KW)], axis=2
+    )  # [B,MG,KW,K]
+    signed = slots - ((slots >> (SLOT_W - 1)) << SLOT_W)
+    low_mask = (jnp.int64(1) << n) - 1  # [MG,KW,K]
+    concat = (signed << n[None]) | (iu[:, None, None, :] & low_mask[None])
+    prods = concat << s[None]
+    prods = jnp.where(neg[None] == 1, -prods, prods)
+    prods = jnp.where(zero[None] == 1, 0, prods)
+    return prods
+
+
+def _kernel(x_ref, a_ref, n_ref, s_ref, zero_ref, neg_ref, o_ref):
+    x = x_ref[...].astype(jnp.int64)
+    a = a_ref[...].astype(jnp.int64)
+    n = n_ref[...].astype(jnp.int64)
+    s = s_ref[...].astype(jnp.int64)
+    z = zero_ref[...].astype(jnp.int64)
+    ng = neg_ref[...].astype(jnp.int64)
+    prods = _sdmm_products(a, x, n, s, z, ng)  # [B, MG, KW, K]
+    # Accumulate over K (the LUT adder tree of the PE) and unfold the
+    # (MG, KW) axes into M = 3*MG output channels.
+    acc = jnp.sum(prods, axis=-1)  # [B, MG, KW]
+    b, mg, kw = acc.shape
+    o_ref[...] = acc.reshape(b, mg * kw).astype(jnp.int32)
+
+
+def sdmm_gemm(x, a_words, n, s, zero, neg, *, block_b: int = 0, block_mg: int = 0):
+    """Packed-datapath GEMM: out[b, m] = sum_k W_hat[m, k] * x[b, k].
+
+    x: [B, K] int32; a_words: [MG, K] int32/int64;
+    n, s, zero, neg: [MG, KW, K] int32.
+    Returns [B, 3*MG] int32.
+
+    block_b / block_mg tile the batch / weight-group axes through VMEM
+    (0 = whole axis in one block).
+    """
+    b, k = x.shape
+    mg = a_words.shape[0]
+    bb = block_b or b
+    bmg = block_mg or mg
+    assert b % bb == 0 and mg % bmg == 0
+    grid = (b // bb, mg // bmg)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bmg, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bmg, KW, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bmg, KW, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bmg, KW, k), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bmg, KW, k), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bmg * KW), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, mg * KW), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, a_words, n, s, zero, neg)
+
+
+def pack_controls(packed: dict):
+    """Reshape pack_weight_matrix outputs ([M, K]) into the kernel's
+    [MG, KW, K] control layout."""
+    import numpy as np
+
+    m, k = packed["n"].shape
+    mg = m // KW
+
+    def rs(key):
+        return np.ascontiguousarray(packed[key].reshape(mg, KW, k)).astype(np.int32)
+
+    return dict(
+        a_words=packed["a_words"].astype(np.int32),
+        n=rs("n"),
+        s=rs("s"),
+        zero=rs("zero"),
+        neg=rs("neg"),
+    )

@@ -1,0 +1,124 @@
+"""Layer-2 JAX model: the small CNN served by the Rust coordinator.
+
+Architecture (mirrored by rust/src/cnn/zoo.rs::tiny_cnn):
+
+    input [B, 1, 16, 16]
+      conv 3x3 pad 1 ->  8 ch, relu, maxpool2   -> [B,  8, 8, 8]
+      conv 3x3 pad 1 -> 16 ch, relu, maxpool2   -> [B, 16, 4, 4]
+      conv 3x3 pad 1 -> 32 ch, relu, maxpool2   -> [B, 32, 2, 2]
+      fc 128 -> 10 logits
+
+Weights enter as *parameters* of the lowered HLO so the Rust runtime can
+feed either plain-quantized or SDMM-approximated weights into the same
+executable and measure the Table 2 delta end-to-end.
+
+The forward pass is pure f32 compute over dequantized weights: the
+integer identity (SDMM == approx-weight multiply) is established at the
+kernel level (test_kernel.py) and by the Rust DSP model; the serving
+graph then uses the mathematically-equal dense form (DESIGN.md par.4).
+"""
+
+import jax
+import jax.numpy as jnp
+
+CONVS = ((1, 8), (8, 16), (16, 32))
+FC = (128, 10)
+INPUT_HW = 16
+NUM_CLASSES = 10
+
+
+def param_shapes():
+    """Ordered (name, shape) of all parameters."""
+    shapes = []
+    for i, (cin, cout) in enumerate(CONVS):
+        shapes.append((f"conv{i + 1}_w", (cout, cin, 3, 3)))
+    shapes.append(("fc_w", (FC[1], FC[0])))
+    return shapes
+
+
+def init_params(key):
+    params = []
+    for name, shape in param_shapes():
+        key, sub = jax.random.split(key)
+        fan_in = 1
+        for d in shape[1:]:
+            fan_in *= d
+        params.append(jax.random.normal(sub, shape) * (2.0 / fan_in) ** 0.5)
+    return params
+
+
+def forward(params, x):
+    """x: [B, 1, 16, 16] f32 -> logits [B, 10] f32."""
+    h = x
+    for w in params[:-1]:
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        )
+    b = h.shape[0]
+    h = h.reshape(b, -1)
+    return h @ params[-1].T
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def make_prototypes(key):
+    """Class prototypes: low-pass-filtered random patterns (shared
+    between the train and eval splits)."""
+    protos = jax.random.normal(key, (NUM_CLASSES, 1, INPUT_HW, INPUT_HW))
+    kernel = jnp.ones((1, 1, 3, 3)) / 9.0
+    for _ in range(2):
+        protos = jax.lax.conv_general_dilated(
+            protos, kernel, (1, 1), "SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+    return protos
+
+
+def make_dataset(key, n, protos=None):
+    """Synthetic 10-class task: prototype + Gaussian noise. Linearly
+    separable enough to train in seconds, hard enough that quantization
+    error is visible in the logit margins. If `protos` is None the key
+    is split to derive them (single-split convenience)."""
+    kp, k2, k3 = jax.random.split(key, 3)
+    if protos is None:
+        protos = make_prototypes(kp)
+    labels = jax.random.randint(k2, (n,), 0, NUM_CLASSES)
+    noise = jax.random.normal(k3, (n, 1, INPUT_HW, INPUT_HW)) * 0.7
+    images = protos[labels] + noise
+    return images, labels
+
+
+def train(seed: int = 0, steps: int = 400, batch: int = 64, lr: float = 3e-2):
+    """Train with plain SGD + momentum (no external deps). Returns
+    (params, final train accuracy on a held-out batch)."""
+    key = jax.random.PRNGKey(seed)
+    kp, kproto, kd, ke = jax.random.split(key, 4)
+    params = init_params(kp)
+    protos = make_prototypes(kproto)
+    x_all, y_all = make_dataset(kd, 4096, protos)
+    x_ev, y_ev = make_dataset(ke, 1024, protos)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    mom = [jnp.zeros_like(p) for p in params]
+
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        idx = rng.integers(0, x_all.shape[0], size=batch)
+        _, grads = grad_fn(params, x_all[idx], y_all[idx])
+        mom = [0.9 * m + g for m, g in zip(mom, grads)]
+        params = [p - lr * m for p, m in zip(params, mom)]
+
+    logits = jax.jit(forward)(params, x_ev)
+    acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y_ev))
+    return params, (x_ev, y_ev), acc

@@ -1,0 +1,129 @@
+"""Python mirror of the Rust packing pipeline (rust/src/manip, packing).
+
+Only what the Layer-1/2 build path needs: Algorithm 1, the Eq. 4
+approximation, and the 8-bit (3 weights x 1 input) A-word packing used
+by the Pallas GEMM kernel. Kept deliberately small - the Rust crate is
+the source of truth; `python/tests/test_crosscheck.py` pins the two
+implementations against the same vectors.
+"""
+
+from functools import lru_cache
+
+import numpy as np
+
+APPROX_MW = (0, 1, 3, 5, 7)
+# 8-bit layout constants (DESIGN.md par.3): slot width v+3, offsets 0/11/22.
+V_BITS = 8
+SLOT_W = V_BITS + 3
+A_OFFSETS = (0, 11, 22)
+KW = 3
+
+
+def manipulate(w: int):
+    """Algorithm 1: w = 2^s * (1 + 2^n * mw), minimal mw. w > 0."""
+    assert w > 0
+    s = 0
+    while w % 2 == 0:
+        s += 1
+        w //= 2
+    w -= 1
+    n = 0
+    if w > 0:
+        while w % 2 == 0:
+            n += 1
+            w //= 2
+    return w, n, s  # mw, n, s
+
+
+@lru_cache(maxsize=None)
+def representable(max_mag: int):
+    """Sorted magnitudes 2^s(1+2^n*mw) <= max_mag, mw in APPROX_MW."""
+    vals = set()
+    for mw in APPROX_MW:
+        for n in range(max_mag.bit_length() + 1):
+            base = 1 + (mw << n)
+            if base > max_mag:
+                break
+            v = base
+            while v <= max_mag:
+                vals.add(v)
+                v *= 2
+    return tuple(sorted(vals))
+
+
+@lru_cache(maxsize=None)
+def approx_table(c_bits: int):
+    """magnitude -> nearest representable (ties toward smaller)."""
+    max_mag = 1 << (c_bits - 1)
+    reps = representable(max_mag)
+    table = {}
+    arr = np.asarray(reps)
+    for m in range(1, max_mag + 1):
+        i = int(np.searchsorted(arr, m))
+        lo = arr[i - 1] if i > 0 else None
+        hi = arr[i] if i < len(arr) else None
+        if lo is None:
+            best = hi
+        elif hi is None:
+            best = lo
+        else:
+            best = lo if m - lo <= hi - m else hi
+        table[m] = int(best)
+    return table
+
+
+def approximate_signed(value: int, c_bits: int):
+    """-> (zero, negative, mw, n, s, magnitude) after Eq. 4."""
+    if value == 0:
+        return True, False, 0, 0, 0, 0
+    neg = value < 0
+    max_mag = 1 << (c_bits - 1)
+    mag = min(abs(value), max_mag)
+    mag = approx_table(c_bits)[mag]
+    mw, n, s = manipulate(mag)
+    assert mw in APPROX_MW
+    return False, neg, mw, n, s, mag
+
+
+def pack_weight_matrix(wq: np.ndarray, c_bits: int = 8):
+    """Pack an [M, K] int weight matrix along M in groups of 3 (the
+    weight-stationary SDMM arrangement: three output channels share one
+    input). M must be a multiple of 3.
+
+    Returns dict of arrays:
+      a_words [M/3, K] int64, and per-weight controls [M, K] int32:
+      n, s, zero, neg, plus approximated signed weights w_approx [M, K].
+    """
+    m, k = wq.shape
+    assert m % KW == 0, f"M={m} not a multiple of {KW}"
+    a_words = np.zeros((m // KW, k), dtype=np.int64)
+    n_arr = np.zeros((m, k), dtype=np.int32)
+    s_arr = np.zeros((m, k), dtype=np.int32)
+    zero = np.zeros((m, k), dtype=np.int32)
+    neg = np.zeros((m, k), dtype=np.int32)
+    w_approx = np.zeros((m, k), dtype=np.int64)
+    for kk in range(k):
+        for mg in range(m // KW):
+            a = 0
+            for j in range(KW):
+                mm = mg * KW + j
+                z, ng, mw, n, s, mag = approximate_signed(int(wq[mm, kk]), c_bits)
+                a |= mw << A_OFFSETS[j]
+                n_arr[mm, kk] = n
+                s_arr[mm, kk] = s
+                zero[mm, kk] = int(z)
+                neg[mm, kk] = int(ng)
+                w_approx[mm, kk] = 0 if z else (-mag if ng else mag)
+            a_words[mg, kk] = a
+    return dict(a_words=a_words, n=n_arr, s=s_arr, zero=zero, neg=neg, w_approx=w_approx)
+
+
+def approximate_array(wq: np.ndarray, c_bits: int) -> np.ndarray:
+    """Elementwise Eq. 4 approximation of a signed integer array."""
+    out = np.zeros_like(wq, dtype=np.int64)
+    flat_in = wq.reshape(-1)
+    flat_out = out.reshape(-1)
+    for i, v in enumerate(flat_in):
+        z, ng, _, _, _, mag = approximate_signed(int(v), c_bits)
+        flat_out[i] = 0 if z else (-mag if ng else mag)
+    return out

@@ -1,0 +1,80 @@
+"""Cross-implementation pinning: the Python build-path mirror
+(compile/sdmm_lib.py) must agree with the Rust crate on shared vectors.
+
+The Rust side pins the same vectors in rust/src/manip tests; if either
+implementation drifts, one of the two suites breaks.
+"""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import sdmm_lib
+
+# (input, mw, n, s) — Algorithm 1 vectors (match rust manip tests)
+MANIP_VECTORS = [
+    (44, 5, 1, 2),     # paper Fig. 2: 44 = 2^2 (1 + 2^1 * 5)
+    (1, 0, 0, 0),
+    (128, 0, 0, 7),
+    (3, 1, 1, 0),
+    (7, 3, 1, 0),
+    (15, 7, 1, 0),
+    (22, 5, 1, 1),
+    (96, 1, 1, 5),
+    (127, 63, 1, 0),
+]
+
+# (signed value, approx magnitude) — Eq. 4 vectors
+APPROX_VECTORS = [
+    (23, 22),     # nearest representable, tie-break low (rust-pinned)
+    (-23, 22),
+    (44, 44),     # exact
+    (127, 128),   # rounds up to the power of two
+    (-128, 128),
+    (89, 88),
+    (11, 11),
+    (54, 52),
+]
+
+
+def test_manipulation_vectors():
+    for w, mw, n, s in MANIP_VECTORS:
+        assert sdmm_lib.manipulate(w) == (mw, n, s), f"w={w}"
+
+
+def test_approximation_vectors():
+    for v, mag in APPROX_VECTORS:
+        z, neg, mw, n, s, m = sdmm_lib.approximate_signed(v, 8)
+        assert not z
+        assert m == mag, f"v={v}: {m} != {mag}"
+        assert neg == (v < 0)
+
+
+def test_representable_set_sizes_match_rust():
+    assert len(sdmm_lib.representable(128)) == 64
+    assert len(sdmm_lib.representable(32)) == 28
+    assert len(sdmm_lib.representable(8)) == 8
+
+
+def test_exactly_128_of_256():
+    exact = 0
+    for v in range(-128, 128):
+        if v == 0:
+            exact += 1
+            continue
+        z, _, _, _, _, mag = sdmm_lib.approximate_signed(v, 8)
+        if mag == min(abs(v), 128):
+            exact += 1
+    assert exact == 128
+
+
+def test_a_word_layout_matches_rust():
+    # rust: pack_approx(&l8, &[-44, 3, 96]) -> slots mw 5,1,1 at 0/11/22
+    import numpy as np
+
+    packed = sdmm_lib.pack_weight_matrix(np.array([[-44], [3], [96]]), 8)
+    a = int(packed["a_words"][0, 0])
+    assert a & 0x7 == 5           # |−44| -> MW 5
+    assert (a >> 11) & 0x7 == 1   # 3 -> MW 1
+    assert (a >> 22) & 0x7 == 1   # 96 -> MW 1
+    assert packed["w_approx"][:, 0].tolist() == [-44, 3, 96]

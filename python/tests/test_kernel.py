@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas SDMM kernel vs the pure-jnp oracle.
+
+Equality is EXACT (integer identity), never allclose. hypothesis sweeps
+shapes, seeds and weight distributions.
+"""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import sdmm_lib
+from compile.kernels import ref, sdmm
+
+
+def run_pair(wq: np.ndarray, x: np.ndarray, block_b=0, block_mg=0):
+    packed = sdmm_lib.pack_weight_matrix(wq, 8)
+    ctl = sdmm.pack_controls(packed)
+    out = sdmm.sdmm_gemm(
+        jnp.asarray(x.astype(np.int32)),
+        jnp.asarray(ctl["a_words"]),
+        jnp.asarray(ctl["n"]),
+        jnp.asarray(ctl["s"]),
+        jnp.asarray(ctl["zero"]),
+        jnp.asarray(ctl["neg"]),
+        block_b=block_b,
+        block_mg=block_mg,
+    )
+    want = ref.ref_gemm_numpy(x, packed["w_approx"])
+    return np.asarray(out), want
+
+
+def test_small_known():
+    # W rows: [3, -44, 0]; x column of ones -> out = row sums of W_hat.
+    wq = np.array([[3, 3], [-44, -44], [0, 0]])
+    x = np.ones((1, 2), dtype=np.int32)
+    out, want = run_pair(wq, x)
+    assert out.tolist() == [[6, -88, 0]]
+    assert np.array_equal(out, want)
+
+
+def test_extremes():
+    wq = np.array([[-128, 127, -1], [127, -128, 1], [15, -15, 0]])
+    x = np.array([[-128, 127, -1], [0, 1, -8]], dtype=np.int32)
+    out, want = run_pair(wq, x)
+    assert np.array_equal(out, want)
+
+
+def test_random_dense():
+    rng = np.random.default_rng(1)
+    wq = rng.integers(-128, 128, size=(12, 32))
+    x = rng.integers(-128, 128, size=(4, 32)).astype(np.int32)
+    out, want = run_pair(wq, x)
+    assert np.array_equal(out, want)
+
+
+def test_blocked_grid_matches_single_block():
+    rng = np.random.default_rng(2)
+    wq = rng.integers(-128, 128, size=(24, 16))
+    x = rng.integers(-128, 128, size=(8, 16)).astype(np.int32)
+    a, want = run_pair(wq, x)
+    b, _ = run_pair(wq, x, block_b=4, block_mg=2)
+    assert np.array_equal(a, want)
+    assert np.array_equal(b, want)
+
+
+def test_zero_weights_and_inputs():
+    wq = np.zeros((6, 8), dtype=np.int64)
+    x = np.zeros((2, 8), dtype=np.int32)
+    out, want = run_pair(wq, x)
+    assert out.sum() == 0
+    assert np.array_equal(out, want)
+
+
+def test_laplacian_network_like():
+    rng = np.random.default_rng(3)
+    wq = np.clip(np.round(rng.laplace(0, 5.0, size=(48, 64))), -128, 127).astype(int)
+    x = np.clip(np.round(rng.laplace(0, 20.0, size=(8, 64))), -128, 127).astype(np.int32)
+    out, want = run_pair(wq, x)
+    assert np.array_equal(out, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mg=st.integers(1, 6),
+    k=st.integers(1, 24),
+    b=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1.0, 4.0, 30.0, 128.0]),
+)
+def test_hypothesis_sweep(mg, k, b, seed, scale):
+    rng = np.random.default_rng(seed)
+    wq = np.clip(np.round(rng.laplace(0, scale, size=(3 * mg, k))), -128, 127).astype(int)
+    x = rng.integers(-128, 128, size=(b, k)).astype(np.int32)
+    out, want = run_pair(wq, x)
+    assert np.array_equal(out, want)
+
+
+def test_manipulation_identity():
+    for w in range(1, 129):
+        mw, n, s = sdmm_lib.manipulate(w)
+        assert (1 + (mw << n)) << s == w
+
+
+def test_representable_counts_match_rust():
+    # pinned against rust/src/manip tests
+    assert len(sdmm_lib.representable(128)) == 64
+    assert len(sdmm_lib.representable(32)) == 28
+    assert len(sdmm_lib.representable(8)) == 8
+
+
+@given(st.integers(-128, 127))
+@settings(max_examples=256, deadline=None)
+def test_approximation_sound(v):
+    z, neg, mw, n, s, mag = sdmm_lib.approximate_signed(v, 8)
+    if z:
+        assert v == 0
+    else:
+        assert mw in sdmm_lib.APPROX_MW
+        assert (1 + (mw << n)) << s == mag
+        assert abs(mag - min(abs(v), 128)) <= 4
+        assert neg == (v < 0)

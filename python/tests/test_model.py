@@ -1,0 +1,58 @@
+"""L2 model checks: shapes, training smoke, parameter-count parity with
+the Rust zoo (rust/src/cnn/zoo.rs::tiny_cnn)."""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def test_param_shapes():
+    shapes = dict(M.param_shapes())
+    assert shapes["conv1_w"] == (8, 1, 3, 3)
+    assert shapes["conv2_w"] == (16, 8, 3, 3)
+    assert shapes["conv3_w"] == (32, 16, 3, 3)
+    assert shapes["fc_w"] == (10, 128)
+
+
+def test_param_count_matches_rust_zoo():
+    # rust tiny_cnn: conv params 8*9 + 16*8*9 + 32*16*9 = 5832; fc 1280.
+    total = 0
+    for _, s in M.param_shapes():
+        n = 1
+        for d in s:
+            n *= d
+        total += n
+    assert total == 5832 + 1280
+
+
+def test_forward_shape_and_finite():
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key)
+    x = jax.random.normal(key, (4, 1, 16, 16))
+    logits = M.forward(params, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_dataset_balanced_and_deterministic():
+    x1, y1 = M.make_dataset(jax.random.PRNGKey(7), 500)
+    x2, y2 = M.make_dataset(jax.random.PRNGKey(7), 500)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    assert np.array_equal(np.asarray(x1), np.asarray(x2))
+    # all classes present
+    assert len(set(np.asarray(y1).tolist())) == M.NUM_CLASSES
+
+
+def test_training_converges_fast_smoke():
+    # short run: must beat chance by a wide margin
+    _, _, acc = M.train(seed=1, steps=120, batch=64)
+    assert acc > 0.5, f"accuracy {acc}"

@@ -1,0 +1,36 @@
+//! Compression codec throughput (Table 3 pipelines): Huffman encode +
+//! decode, pruning, WRC end-to-end.
+
+use sdmm::compress::{huffman_decode, huffman_encode, prune_magnitude, wrc_compress};
+use sdmm::packing::Layout;
+use sdmm::util::bench::BenchSuite;
+use sdmm::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("compress");
+    let mut rng = Rng::new(4);
+    let n = 65_536usize;
+    let ws: Vec<i64> = (0..n)
+        .map(|_| rng.laplace(2.0).round().clamp(-128.0, 127.0) as i64)
+        .collect();
+
+    suite.bench("huffman encode 64k weights", n as f64, || {
+        huffman_encode(&ws).1
+    });
+
+    let (bytes, _, book) = huffman_encode(&ws);
+    suite.bench("huffman decode 64k weights", n as f64, || {
+        huffman_decode(&bytes, ws.len(), &book).len()
+    });
+
+    suite.bench("prune 64k weights (65%)", n as f64, || {
+        prune_magnitude(&ws, 0.65).sparsity
+    });
+
+    let layout = Layout::for_bits(8).unwrap();
+    suite.bench("wrc full pipeline 64k weights", n as f64, || {
+        wrc_compress(&layout, &ws, 0.65).unwrap().wrc.percent()
+    });
+
+    suite.run();
+}

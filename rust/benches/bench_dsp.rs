@@ -1,0 +1,56 @@
+//! DSP model throughput: raw DSP48E1 ops and full SDMM executions
+//! (pack + execute + unpack) per bit width — the simulator's innermost
+//! hot path (the perf pass optimizes this; see EXPERIMENTS.md §Perf).
+
+use sdmm::dsp::{Dsp48E1, DspOp, SdmmEngine};
+use sdmm::packing::{pack_approx, Layout};
+use sdmm::util::bench::BenchSuite;
+use sdmm::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("dsp");
+    let mut rng = Rng::new(2);
+
+    let mut dsp = Dsp48E1::new();
+    let mut a = 1u64;
+    suite.bench("raw dsp48e1 mult-add-c", 1.0, || {
+        a = a.wrapping_mul(6364136223846793005).wrapping_add(1);
+        dsp.exec(DspOp::MultAddC, a, a >> 32, a >> 16, 0)
+    });
+
+    for v in [8u32, 6, 4] {
+        let layout = Layout::for_bits(v).unwrap();
+        let lim = 1i64 << (v - 1);
+        let tuples: Vec<_> = (0..256)
+            .map(|_| {
+                let ws: Vec<i64> =
+                    (0..layout.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                pack_approx(&layout, &ws).unwrap()
+            })
+            .collect();
+        let inputs: Vec<Vec<i64>> = (0..256)
+            .map(|_| (0..layout.ki()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        let mut engine = SdmmEngine::new();
+        let mut i = 0;
+        let k = layout.k() as f64;
+        suite.bench(
+            &format!("sdmm execute {v}-bit ({}x mult/op)", layout.k()),
+            k,
+            || {
+                i = (i + 1) % 256;
+                engine.execute(&tuples[i], &inputs[i])
+            },
+        );
+
+        // pre-packed raw op (no unpack) — the PE datapath alone
+        let mut engine2 = SdmmEngine::new();
+        let mut j = 0;
+        suite.bench(&format!("sdmm execute_raw {v}-bit"), k, || {
+            j = (j + 1) % 256;
+            engine2.execute_raw(&tuples[j], &inputs[j])
+        });
+    }
+
+    suite.run();
+}

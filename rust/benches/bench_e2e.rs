@@ -1,0 +1,58 @@
+//! End-to-end serving benchmark: the coordinator (dynamic batcher +
+//! worker thread + PJRT executable) under closed-loop load — the
+//! serving-side headline measurement recorded in EXPERIMENTS.md.
+//! Skips (exit 0) when artifacts are missing.
+
+use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
+use sdmm::runtime::{artifacts_available, Artifacts, WeightMode};
+use sdmm::util::bench::BenchSuite;
+use std::time::Instant;
+
+fn main() {
+    let dir = "artifacts";
+    if !artifacts_available(dir) {
+        println!("SKIP bench_e2e: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let mut suite = BenchSuite::new("e2e-serving");
+    let art = Artifacts::load(dir).unwrap();
+    let xs = art.f32("eval_x").unwrap();
+    let item = 16 * 16;
+
+    for (name, conc) in [("closed-loop c=1", 1usize), ("closed-loop c=64", 64)] {
+        let server = InferenceServer::start_factory(
+            move || CnnRunner::load("artifacts", WeightMode::Approximated { w_bits: 8 }),
+            BatchPolicy::default(),
+        );
+        // warm the pipeline
+        let _ = server.infer(xs[..item].to_vec());
+        let requests = if conc == 1 { 64 } else { 512 };
+        suite.bench(&format!("{name} ({requests} req)"), requests as f64, || {
+            let mut inflight = std::collections::VecDeque::new();
+            let (mut sent, mut done) = (0usize, 0usize);
+            while done < requests {
+                while inflight.len() < conc && sent < requests {
+                    let off = (sent * item) % (xs.len() - item);
+                    inflight.push_back(server.submit(xs[off..off + item].to_vec()));
+                    sent += 1;
+                }
+                if let Some(rx) = inflight.pop_front() {
+                    rx.recv().unwrap().unwrap();
+                    done += 1;
+                }
+            }
+            done
+        });
+        let wall = Instant::now();
+        let m = server.shutdown();
+        let _ = wall;
+        println!(
+            "  -> latency p50 {:.2}ms p99 {:.2}ms, occupancy {:.1}%",
+            m.latency.p50() / 1e6,
+            m.latency.p99() / 1e6,
+            m.batch_occupancy(16) * 100.0
+        );
+    }
+
+    suite.run();
+}

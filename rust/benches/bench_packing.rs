@@ -1,0 +1,49 @@
+//! Packing-pipeline throughput: manipulation, approximation, tuple
+//! packing, WROM interning (the offline compiler's hot path).
+
+use sdmm::manip::{approximate_signed, manipulate};
+use sdmm::packing::{pack_approx, Layout, Wrom};
+use sdmm::util::bench::BenchSuite;
+use sdmm::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("packing");
+    let mut rng = Rng::new(1);
+    let values: Vec<u64> = (0..4096).map(|_| rng.below(1 << 20) + 1).collect();
+    let signed: Vec<i64> = (0..4096).map(|_| rng.range_i64(-128, 127)).collect();
+
+    let mut i = 0;
+    suite.bench("manipulate (20-bit values)", 1.0, || {
+        i = (i + 1) % values.len();
+        manipulate(values[i])
+    });
+
+    let mut j = 0;
+    suite.bench("approximate_signed (8-bit)", 1.0, || {
+        j = (j + 1) % signed.len();
+        approximate_signed(signed[j], 8)
+    });
+
+    let layout8 = Layout::for_bits(8).unwrap();
+    let mut k = 0;
+    suite.bench("pack_approx 3x8-bit tuple", 3.0, || {
+        k = (k + 3) % (signed.len() - 3);
+        pack_approx(&layout8, &signed[k..k + 3]).unwrap()
+    });
+
+    let layout4 = Layout::for_bits(4).unwrap();
+    let small: Vec<i64> = (0..4096).map(|_| rng.range_i64(-8, 7)).collect();
+    let mut k4 = 0;
+    suite.bench("pack_approx 2x4-bit tuple", 2.0, || {
+        k4 = (k4 + 2) % (small.len() - 2);
+        pack_approx(&layout4, &small[k4..k4 + 2]).unwrap()
+    });
+
+    // WROM interning at network scale (the Table 3 path)
+    suite.bench("wrom compress_stream (4096 weights)", 4096.0, || {
+        let mut wrom = Wrom::new(layout8.clone());
+        wrom.compress_stream(&signed).unwrap().tuples.len()
+    });
+
+    suite.run();
+}

@@ -1,0 +1,45 @@
+//! PJRT runtime: executable load/compile time and per-batch inference
+//! latency for the CNN forward and the Pallas SDMM GEMM artifacts.
+//! Skips (exit 0) when artifacts are missing.
+
+use sdmm::runtime::{artifacts_available, exec, Artifacts, CnnModel, WeightMode};
+use sdmm::util::bench::BenchSuite;
+
+fn main() {
+    let dir = "artifacts";
+    if !artifacts_available(dir) {
+        println!("SKIP bench_runtime: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let mut suite = BenchSuite::new("runtime");
+    let art = Artifacts::load(dir).unwrap();
+    let client = exec::Client::cpu().unwrap();
+
+    suite.bench("compile cnn_fwd.hlo.txt", 1.0, || {
+        exec::Executable::load(&client, art.hlo_path("cnn_fwd").unwrap()).unwrap()
+    });
+
+    let model = CnnModel::load(&client, &art).unwrap();
+    let staged = model.stage(WeightMode::Approximated { w_bits: 8 }).unwrap();
+    let xs = art.f32("eval_x").unwrap();
+    let item = model.input_hw * model.input_hw;
+    let x: Vec<f32> = xs[..model.batch * item].to_vec();
+    suite.bench("cnn_fwd batch-16 inference", model.batch as f64, || {
+        model.infer(&staged, &x).unwrap()
+    });
+
+    // the Pallas SDMM GEMM artifact (B=8, K=64, M=48 -> 24576 MACs)
+    let gemm = exec::Executable::load(&client, art.hlo_path("sdmm_gemm").unwrap()).unwrap();
+    let names = ["gemm_x", "gemm_a_words", "gemm_n", "gemm_s", "gemm_zero", "gemm_neg"];
+    let args: Vec<xla::Literal> = names
+        .iter()
+        .map(|n| {
+            exec::literal_i32(&art.i32(n).unwrap(), &art.shape(n).unwrap()).unwrap()
+        })
+        .collect();
+    suite.bench("pallas sdmm_gemm 8x64 @ 48x64", (8 * 64 * 48) as f64, || {
+        gemm.execute_i32(&args).unwrap()
+    });
+
+    suite.run();
+}

@@ -1,0 +1,50 @@
+//! Systolic-array simulator throughput: bit-accurate conv execution
+//! (simulated MACs/s) and analytic estimates (layers/s) across PE
+//! architectures — the Table 4/5 workload.
+
+use sdmm::cnn::infer::Tensor3;
+use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
+use sdmm::util::bench::BenchSuite;
+use sdmm::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("systolic-array");
+    let mut rng = Rng::new(3);
+
+    let layer = ConvLayer::new("bench", 8, 8, 12, 3, 1, 1, 1);
+    let weights: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+    let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+    let macs = layer.macs() as f64;
+
+    for (name, arch, v) in [
+        ("run_conv MP 8-bit (bit-accurate)", PeArch::MultiPack, 8u32),
+        ("run_conv MP 4-bit (bit-accurate)", PeArch::MultiPack, 4),
+        ("run_conv 1M 8-bit (bit-accurate)", PeArch::OneMac, 8),
+    ] {
+        let lim = 1i64 << (v - 1);
+        let w: Vec<i64> = weights.iter().map(|&x| x.clamp(-lim, lim - 1)).collect();
+        let inp = Tensor3 {
+            c: input.c,
+            h: input.h,
+            w: input.w,
+            data: input.data.iter().map(|&x| x.clamp(-lim, lim - 1)).collect(),
+        };
+        let sa = SystolicArray::new(SaConfig::paper_prototype(v, arch)).unwrap();
+        suite.bench(name, macs, || sa.run_conv(&layer, &w, &inp).unwrap().cycles);
+    }
+
+    // analytic estimates over the whole AlexNet (Table-scale workload)
+    let model = Model::build(ModelKind::Alexnet);
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    suite.bench("estimate AlexNet (5 conv layers)", 5.0, || {
+        model
+            .convs
+            .iter()
+            .map(|l| sa.estimate_layer(l).cycles)
+            .sum::<u64>()
+    });
+
+    suite.run();
+}

@@ -1,0 +1,27 @@
+//! CNN substrate: model zoo, fixed-point quantization, integer
+//! inference reference, distribution-matched weight synthesis, and the
+//! accuracy harness behind the Table 2 reproduction.
+//!
+//! The paper evaluates on AlexNet / VGG-16 (Tiny ImageNet) plus MAC
+//! counts for GoogleNet / MobileNet (Table 1). Real pretrained weights
+//! and Tiny ImageNet are not available in this environment, so (see
+//! DESIGN.md §2):
+//!
+//! * layer *shapes* are exact (from the original papers) — MAC counts
+//!   and memory sizes are therefore exact;
+//! * weight *values* are synthesized from the Laplacian distribution
+//!   that conv weights empirically follow, layer-by-layer, with a fixed
+//!   seed — approximation error statistics (the mechanism behind
+//!   Table 2) are faithful;
+//! * end-to-end classification deltas come from the small JAX-trained
+//!   CNN served through the PJRT runtime (see `coordinator` and
+//!   `examples/serve_cnn.rs`).
+
+pub mod accuracy;
+pub mod infer;
+pub mod quant;
+pub mod weights;
+pub mod zoo;
+
+pub use quant::{dequantize, quantize_symmetric, QuantParams};
+pub use zoo::{ConvLayer, Model, ModelKind};

@@ -1,0 +1,92 @@
+//! Symmetric fixed-point quantization (the paper's baseline: "quantized
+//! fixed-point implementations of the Alexnet and VGG-16").
+//!
+//! Weights quantize per-tensor symmetrically to signed `c`-bit integers;
+//! activations to signed `v`-bit. Table 2's "error increase" compares
+//! approximated-quantized against plain-quantized inference, so the
+//! quantizer here is the shared baseline for both paths.
+
+/// Scale metadata for a quantized tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Bit width (signed).
+    pub bits: u32,
+    /// Real value = q * scale.
+    pub scale: f64,
+}
+
+impl QuantParams {
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn qmin(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+}
+
+/// Quantize symmetrically: scale = max|x| / (2^(b-1) - 1).
+/// Returns (quantized values, params). All-zero input gets scale 1.
+pub fn quantize_symmetric(xs: &[f64], bits: u32) -> (Vec<i64>, QuantParams) {
+    assert!((2..=16).contains(&bits));
+    let amax = xs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    let qmax = ((1i64 << (bits - 1)) - 1) as f64;
+    let scale = if amax == 0.0 { 1.0 } else { amax / qmax };
+    let params = QuantParams { bits, scale };
+    let q = xs
+        .iter()
+        .map(|&x| {
+            let q = (x / scale).round() as i64;
+            q.clamp(params.qmin(), params.qmax())
+        })
+        .collect();
+    (q, params)
+}
+
+/// Dequantize back to reals.
+pub fn dequantize(qs: &[i64], p: &QuantParams) -> Vec<f64> {
+    qs.iter().map(|&q| q as f64 * p.scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded() {
+        let xs: Vec<f64> = (-50..=50).map(|i| i as f64 * 0.013).collect();
+        let (q, p) = quantize_symmetric(&xs, 8);
+        let back = dequantize(&q, &p);
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= p.scale / 2.0 + 1e-12, "x={x} b={b}");
+        }
+    }
+
+    #[test]
+    fn range_saturates() {
+        let xs = vec![1.0, -1.0, 0.5];
+        let (q, p) = quantize_symmetric(&xs, 4);
+        assert_eq!(p.qmax(), 7);
+        assert_eq!(q[0], 7);
+        assert_eq!(q[1], -7); // symmetric: -max maps to -qmax
+        assert!(q.iter().all(|&v| (p.qmin()..=p.qmax()).contains(&v)));
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let (q, p) = quantize_symmetric(&[0.0; 5], 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(p.scale, 1.0);
+    }
+
+    #[test]
+    fn bit_widths() {
+        for bits in [4, 6, 8] {
+            let xs: Vec<f64> = (-100..100).map(|i| (i as f64 / 37.0).sin()).collect();
+            let (q, p) = quantize_symmetric(&xs, bits);
+            let lim = 1i64 << (bits - 1);
+            assert!(q.iter().all(|&v| v >= -lim && v < lim));
+            assert!(p.scale > 0.0);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Canonical Huffman coding over i64 symbol streams.
+//!
+//! Used for the `H`, `WRC + H` and `P + WRC + H` columns of Table 3.
+//! The implementation is a complete, self-contained encoder/decoder:
+//! frequency count → package-merge-free heap construction → canonical
+//! code assignment → bit-packed emission; decode walks the canonical
+//! table. Round-trip equality is property-tested.
+
+use std::collections::HashMap;
+
+/// A canonical Huffman code book.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// symbol -> (code bits, code length); canonical order.
+    pub codes: HashMap<i64, (u64, u32)>,
+    /// Sorted (length, symbol) list for the decoder.
+    canonical: Vec<(u32, i64)>,
+}
+
+impl HuffmanCode {
+    /// Build from symbol frequencies. Single-symbol streams get a 1-bit
+    /// code (the degenerate case Huffman needs special-cased).
+    pub fn build(stream: &[i64]) -> HuffmanCode {
+        let mut freq: HashMap<i64, u64> = HashMap::new();
+        for &s in stream {
+            *freq.entry(s).or_insert(0) += 1;
+        }
+        let lengths = code_lengths(&freq);
+        canonicalize(lengths)
+    }
+
+    /// Mean code length in bits (the entropy-adjacent quantity Table 3
+    /// rates derive from).
+    pub fn mean_bits(&self, stream: &[i64]) -> f64 {
+        if stream.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = stream
+            .iter()
+            .map(|s| self.codes[s].1 as u64)
+            .sum();
+        total as f64 / stream.len() as f64
+    }
+
+    /// Code-book storage cost in bits (symbol value + length per entry;
+    /// included in every Table 3 rate we report).
+    pub fn table_bits(&self, symbol_bits: u32) -> u64 {
+        self.codes.len() as u64 * (symbol_bits as u64 + 5)
+    }
+}
+
+/// Compute code lengths with a simple two-queue Huffman construction.
+fn code_lengths(freq: &HashMap<i64, u64>) -> Vec<(i64, u32)> {
+    if freq.is_empty() {
+        return vec![];
+    }
+    if freq.len() == 1 {
+        return vec![(*freq.keys().next().unwrap(), 1)];
+    }
+    // Node arena: (weight, children or leaf symbol)
+    enum Node {
+        Leaf(i64),
+        Internal(usize, usize),
+    }
+    let mut arena: Vec<(u64, Node)> = Vec::new();
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+        std::collections::BinaryHeap::new();
+    let mut syms: Vec<(&i64, &u64)> = freq.iter().collect();
+    syms.sort(); // deterministic tie-breaking
+    for (s, w) in syms {
+        let id = arena.len();
+        arena.push((*w, Node::Leaf(*s)));
+        heap.push(std::cmp::Reverse((*w, id)));
+    }
+    while heap.len() > 1 {
+        let std::cmp::Reverse((w1, a)) = heap.pop().unwrap();
+        let std::cmp::Reverse((w2, b)) = heap.pop().unwrap();
+        let id = arena.len();
+        arena.push((w1 + w2, Node::Internal(a, b)));
+        heap.push(std::cmp::Reverse((w1 + w2, id)));
+    }
+    let root = heap.pop().unwrap().0 .1;
+    // DFS to collect depths.
+    let mut lengths = Vec::new();
+    let mut stack = vec![(root, 0u32)];
+    while let Some((id, depth)) = stack.pop() {
+        match arena[id].1 {
+            Node::Leaf(s) => lengths.push((s, depth.max(1))),
+            Node::Internal(a, b) => {
+                stack.push((a, depth + 1));
+                stack.push((b, depth + 1));
+            }
+        }
+    }
+    lengths
+}
+
+/// Assign canonical codes from (symbol, length) pairs.
+fn canonicalize(mut lengths: Vec<(i64, u32)>) -> HuffmanCode {
+    lengths.sort_by_key(|&(s, l)| (l, s));
+    let mut codes = HashMap::new();
+    let mut canonical = Vec::new();
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for (sym, len) in lengths {
+        code <<= len - prev_len;
+        prev_len = len;
+        codes.insert(sym, (code, len));
+        canonical.push((len, sym));
+        code += 1;
+    }
+    HuffmanCode { codes, canonical }
+}
+
+/// Encode a stream; returns (bit-packed bytes, bit count, code book).
+pub fn huffman_encode(stream: &[i64]) -> (Vec<u8>, u64, HuffmanCode) {
+    let book = HuffmanCode::build(stream);
+    let mut bytes = Vec::new();
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut total_bits = 0u64;
+    for s in stream {
+        let (code, len) = book.codes[s];
+        total_bits += len as u64;
+        // append MSB-first
+        for i in (0..len).rev() {
+            acc = (acc << 1) | ((code >> i) & 1);
+            nbits += 1;
+            if nbits == 8 {
+                bytes.push(acc as u8);
+                acc = 0;
+                nbits = 0;
+            }
+        }
+    }
+    if nbits > 0 {
+        bytes.push((acc << (8 - nbits)) as u8);
+    }
+    (bytes, total_bits, book)
+}
+
+/// Decode `count` symbols.
+pub fn huffman_decode(bytes: &[u8], count: usize, book: &HuffmanCode) -> Vec<i64> {
+    // Rebuild first-code tables for canonical decode.
+    // first_code[len], first_index[len]
+    let max_len = book.canonical.iter().map(|&(l, _)| l).max().unwrap_or(0);
+    let mut first_code = vec![0u64; (max_len + 2) as usize];
+    let mut first_idx = vec![0usize; (max_len + 2) as usize];
+    {
+        let mut code = 0u64;
+        let mut idx = 0usize;
+        let mut prev_len = 0u32;
+        for &(len, _) in &book.canonical {
+            code <<= len - prev_len;
+            if len != prev_len {
+                first_code[len as usize] = code;
+                first_idx[len as usize] = idx;
+                prev_len = len;
+            }
+            code += 1;
+            idx += 1;
+        }
+    }
+    // count of codes per length
+    let mut per_len = vec![0usize; (max_len + 2) as usize];
+    for &(l, _) in &book.canonical {
+        per_len[l as usize] += 1;
+    }
+
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    let read_bit = |pos: usize| -> u64 { ((bytes[pos / 8] >> (7 - pos % 8)) & 1) as u64 };
+    while out.len() < count {
+        let mut code = 0u64;
+        let mut len = 0u32;
+        loop {
+            code = (code << 1) | read_bit(bitpos);
+            bitpos += 1;
+            len += 1;
+            let l = len as usize;
+            if per_len[l] > 0 {
+                let offset = code.wrapping_sub(first_code[l]);
+                if code >= first_code[l] && (offset as usize) < per_len[l] {
+                    out.push(book.canonical[first_idx[l] + offset as usize].1);
+                    break;
+                }
+            }
+            assert!(len <= max_len, "corrupt huffman stream");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_skewed() {
+        let mut rng = Rng::new(10);
+        let stream: Vec<i64> = (0..5000)
+            .map(|_| (rng.laplace(3.0)).round() as i64)
+            .collect();
+        let (bytes, bits, book) = huffman_encode(&stream);
+        assert!(bits <= bytes.len() as u64 * 8);
+        let back = huffman_decode(&bytes, stream.len(), &book);
+        assert_eq!(back, stream);
+    }
+
+    #[test]
+    fn round_trip_uniform() {
+        let mut rng = Rng::new(11);
+        let stream: Vec<i64> = (0..2000).map(|_| rng.range_i64(-128, 127)).collect();
+        let (bytes, _, book) = huffman_encode(&stream);
+        assert_eq!(huffman_decode(&bytes, stream.len(), &book), stream);
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let stream = vec![42i64; 100];
+        let (bytes, bits, book) = huffman_encode(&stream);
+        assert_eq!(bits, 100); // 1 bit per symbol
+        assert_eq!(huffman_decode(&bytes, 100, &book), stream);
+    }
+
+    #[test]
+    fn skewed_beats_uniform_rate() {
+        let mut rng = Rng::new(12);
+        let skewed: Vec<i64> = (0..4000).map(|_| rng.laplace(2.0).round() as i64).collect();
+        let uniform: Vec<i64> = (0..4000).map(|_| rng.range_i64(-128, 127)).collect();
+        let bs = HuffmanCode::build(&skewed).mean_bits(&skewed);
+        let bu = HuffmanCode::build(&uniform).mean_bits(&uniform);
+        assert!(bs < bu, "skewed {bs} >= uniform {bu}");
+        assert!(bs < 5.0, "Laplacian 8-bit weights compress below 5 b/sym");
+    }
+
+    #[test]
+    fn mean_bits_close_to_entropy() {
+        let mut rng = Rng::new(13);
+        let stream: Vec<i64> = (0..8000).map(|_| rng.laplace(4.0).round() as i64).collect();
+        let book = HuffmanCode::build(&stream);
+        // empirical entropy
+        let mut freq = std::collections::HashMap::new();
+        for &s in &stream {
+            *freq.entry(s).or_insert(0u64) += 1;
+        }
+        let n = stream.len() as f64;
+        let h: f64 = freq
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum();
+        let mean = book.mean_bits(&stream);
+        assert!(mean >= h - 1e-9 && mean <= h + 1.0, "H={h} mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_codebook() {
+        let s = vec![1i64, 2, 2, 3, 3, 3];
+        let a = HuffmanCode::build(&s);
+        let b = HuffmanCode::build(&s);
+        assert_eq!(a.codes, b.codes);
+    }
+}

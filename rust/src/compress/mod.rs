@@ -1,0 +1,30 @@
+//! Compression codecs (paper §5, Table 3).
+//!
+//! * [`wrc`] — the paper's contribution: Weight Representation Change.
+//!   Packed tuples become `{WROM address, sign bits}` — a *guaranteed*
+//!   (data-independent) 33% / 25% / 16.7% reduction for 8/6/4-bit.
+//! * [`huffman`] — canonical Huffman coding over symbol streams
+//!   (real encoder + decoder, round-trip tested). Applied to the WROM
+//!   index stream (`WRC + H` column) or to raw quantized weights
+//!   (`H` column).
+//! * [`prune`] — magnitude pruning + run-length sparse encoding, the
+//!   Deep-Compression-style `P` stage of the `P + WRC + H` column.
+//!
+//! All rates are reported the paper's way: `compressed / original`
+//! in percent (smaller = better), alongside the equivalent `N×` factor.
+
+pub mod huffman;
+pub mod prune;
+pub mod wrc;
+
+pub use huffman::{huffman_decode, huffman_encode, HuffmanCode};
+pub use prune::{prune_magnitude, rle_encode_sparse, PruneResult};
+pub use wrc::{wrc_compress, CompressionRate, WrcResult};
+
+/// Compression rate helper: `compressed_bits / original_bits`.
+pub fn rate(compressed_bits: u64, original_bits: u64) -> CompressionRate {
+    CompressionRate {
+        compressed_bits,
+        original_bits,
+    }
+}

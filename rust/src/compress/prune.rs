@@ -1,0 +1,164 @@
+//! Magnitude pruning + sparse encoding (the `P` stage of Table 3's
+//! `P + WRC + H` column; Deep Compression's pruning analogue).
+//!
+//! Weights below a magnitude threshold (chosen to hit a target sparsity)
+//! are zeroed. The sparse stream is stored Deep-Compression style:
+//! non-zero values plus run lengths of zeros (4-bit runs with overflow
+//! markers, as in Han et al. 2015).
+
+/// Result of pruning a weight stream.
+#[derive(Clone, Debug)]
+pub struct PruneResult {
+    /// The pruned stream (zeros in place).
+    pub pruned: Vec<i64>,
+    /// Achieved sparsity (fraction zero).
+    pub sparsity: f64,
+    /// Threshold used.
+    pub threshold: u64,
+}
+
+/// Prune the smallest-magnitude weights to reach `target_sparsity`
+/// (fraction of zeros). Deterministic: ties at the threshold keep the
+/// earlier occurrences.
+pub fn prune_magnitude(weights: &[i64], target_sparsity: f64) -> PruneResult {
+    assert!((0.0..1.0).contains(&target_sparsity));
+    let want_zero = (weights.len() as f64 * target_sparsity).round() as usize;
+    let mut mags: Vec<u64> = weights.iter().map(|w| w.unsigned_abs()).collect();
+    mags.sort_unstable();
+    let threshold = if want_zero == 0 { 0 } else { mags[want_zero - 1] };
+    let mut zeroed = 0usize;
+    let pruned: Vec<i64> = weights
+        .iter()
+        .map(|&w| {
+            if w.unsigned_abs() <= threshold && zeroed < want_zero {
+                zeroed += 1;
+                0
+            } else {
+                w
+            }
+        })
+        .collect();
+    PruneResult {
+        sparsity: zeroed as f64 / weights.len().max(1) as f64,
+        pruned,
+        threshold,
+    }
+}
+
+/// Encode a sparse stream as (zero-run, value) pairs with `run_bits`-bit
+/// run lengths (Deep Compression uses 4 for conv): a run longer than
+/// the field emits a (max_run, 0) filler. Returns the symbol stream
+/// (interleaved runs and values) and its size in bits assuming
+/// `value_bits` per value symbol.
+pub fn rle_encode_sparse(stream: &[i64], run_bits: u32, value_bits: u32) -> (Vec<i64>, u64) {
+    let max_run = (1u64 << run_bits) - 1;
+    let mut symbols = Vec::new();
+    let mut bits = 0u64;
+    let mut run = 0u64;
+    for &v in stream {
+        if v == 0 {
+            run += 1;
+            if run == max_run {
+                symbols.push(run as i64);
+                symbols.push(0);
+                bits += run_bits as u64 + value_bits as u64;
+                run = 0;
+            }
+        } else {
+            symbols.push(run as i64);
+            symbols.push(v);
+            bits += run_bits as u64 + value_bits as u64;
+            run = 0;
+        }
+    }
+    if run > 0 {
+        symbols.push(run as i64);
+        symbols.push(0);
+        bits += run_bits as u64 + value_bits as u64;
+    }
+    (symbols, bits)
+}
+
+/// Decode the (run, value) stream back to the dense form (inverse of
+/// `rle_encode_sparse`); `len` is the original length.
+pub fn rle_decode_sparse(symbols: &[i64], run_bits: u32, len: usize) -> Vec<i64> {
+    let max_run = (1i64 << run_bits) - 1;
+    let mut out = Vec::with_capacity(len);
+    let mut it = symbols.chunks(2);
+    while out.len() < len {
+        let pair = it.next().expect("truncated RLE stream");
+        let (run, val) = (pair[0], pair[1]);
+        for _ in 0..run {
+            out.push(0);
+        }
+        if val != 0 || run < max_run {
+            out.push(val);
+        }
+    }
+    // A trailing (run, 0) pads exactly to len; trim defensively.
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prune_hits_target() {
+        let mut rng = Rng::new(20);
+        let ws: Vec<i64> = (0..10_000).map(|_| rng.laplace(10.0).round() as i64).collect();
+        let r = prune_magnitude(&ws, 0.9);
+        assert!((r.sparsity - 0.9).abs() < 0.01, "sparsity {}", r.sparsity);
+        // surviving weights all exceed the threshold
+        for &w in &r.pruned {
+            assert!(w == 0 || w.unsigned_abs() > 0);
+        }
+    }
+
+    #[test]
+    fn prune_keeps_large_weights() {
+        let ws = vec![100i64, 1, -100, 2, 100, -1];
+        let r = prune_magnitude(&ws, 0.5);
+        assert_eq!(r.pruned[0], 100);
+        assert_eq!(r.pruned[2], -100);
+        assert_eq!(r.pruned[4], 100);
+    }
+
+    #[test]
+    fn rle_round_trip() {
+        let mut rng = Rng::new(21);
+        let ws: Vec<i64> = (0..5000).map(|_| rng.laplace(8.0).round() as i64).collect();
+        let pruned = prune_magnitude(&ws, 0.85).pruned;
+        let (sym, _) = rle_encode_sparse(&pruned, 4, 8);
+        let back = rle_decode_sparse(&sym, 4, pruned.len());
+        assert_eq!(back, pruned);
+    }
+
+    #[test]
+    fn rle_long_runs() {
+        let mut s = vec![0i64; 100];
+        s.push(7);
+        s.extend(vec![0i64; 40]);
+        let (sym, _) = rle_encode_sparse(&s, 4, 8);
+        assert_eq!(rle_decode_sparse(&sym, 4, s.len()), s);
+    }
+
+    #[test]
+    fn rle_saves_bits_on_sparse() {
+        let mut rng = Rng::new(22);
+        let ws: Vec<i64> = (0..10_000).map(|_| rng.laplace(8.0).round() as i64).collect();
+        let pruned = prune_magnitude(&ws, 0.9).pruned;
+        let (_, bits) = rle_encode_sparse(&pruned, 4, 8);
+        let dense_bits = 8 * pruned.len() as u64;
+        assert!(bits < dense_bits / 3, "rle {bits} vs dense {dense_bits}");
+    }
+
+    #[test]
+    fn all_zero_stream() {
+        let s = vec![0i64; 33];
+        let (sym, _) = rle_encode_sparse(&s, 4, 8);
+        assert_eq!(rle_decode_sparse(&sym, 4, 33), s);
+    }
+}

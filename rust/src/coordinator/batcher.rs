@@ -1,0 +1,230 @@
+//! Dynamic batcher: collects single-image requests into fixed-size
+//! batches under a deadline (vLLM-router-style size+timeout policy,
+//! scaled to this workload).
+//!
+//! Decoupled from PJRT through the [`BatchRunner`] trait so the policy
+//! logic is unit-testable without artifacts.
+
+use std::time::{Duration, Instant};
+
+/// Something that can run one fixed-size batch. `x` is
+/// [batch * item_len] row-major; returns [batch * out_len].
+pub trait BatchRunner {
+    fn batch_size(&self) -> usize;
+    fn item_len(&self) -> usize;
+    fn out_len(&self) -> usize;
+    fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued (usually the
+    /// executable's batch size).
+    pub max_batch: usize,
+    /// Flush a partial batch once the oldest request has waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A queued request.
+struct Pending<T> {
+    x: Vec<f32>,
+    enqueued: Instant,
+    tag: T,
+}
+
+/// The batcher: accumulates requests, decides when to flush, pads the
+/// tail, and splits results back per request. Generic over a `tag`
+/// (the server uses response channels).
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+    /// (flushed batches, padded slots) — observability counters.
+    pub batches: u64,
+    pub padded_slots: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: Vec::new(),
+            batches: 0,
+            padded_slots: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: Vec<f32>, tag: T) {
+        self.queue.push(Pending {
+            x,
+            enqueued: Instant::now(),
+            tag,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should we flush now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the current head's deadline (for the worker's park
+    /// timeout); None when the queue is empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.first().map(|p| {
+            self.policy
+                .max_wait
+                .saturating_sub(now.duration_since(p.enqueued))
+        })
+    }
+
+    /// Flush up to `max_batch` requests through the runner. Returns
+    /// (tag, per-request output, queueing delay) triples.
+    pub fn flush<R: BatchRunner>(
+        &mut self,
+        runner: &mut R,
+    ) -> anyhow::Result<Vec<(T, Vec<f32>, Duration)>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let take = self.queue.len().min(self.policy.max_batch);
+        let reqs: Vec<Pending<T>> = self.queue.drain(..take).collect();
+        let item_len = runner.item_len();
+        let bsz = runner.batch_size();
+        let mut x = vec![0f32; bsz * item_len];
+        for (i, r) in reqs.iter().enumerate() {
+            anyhow::ensure!(r.x.len() == item_len, "request item length");
+            x[i * item_len..(i + 1) * item_len].copy_from_slice(&r.x);
+        }
+        self.batches += 1;
+        self.padded_slots += (bsz - reqs.len()) as u64;
+        let out = runner.run(&x)?;
+        let out_len = runner.out_len();
+        let now = Instant::now();
+        Ok(reqs
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (
+                    r.tag,
+                    out[i * out_len..(i + 1) * out_len].to_vec(),
+                    now.duration_since(r.enqueued),
+                )
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock runner: computes sum of each item, batch size 4, item 3.
+    struct Mock {
+        calls: u32,
+    }
+
+    impl BatchRunner for Mock {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn item_len(&self) -> usize {
+            3
+        }
+        fn out_len(&self) -> usize {
+            1
+        }
+        fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.calls += 1;
+            Ok(x.chunks(3).map(|c| c.iter().sum()).collect())
+        }
+    }
+
+    #[test]
+    fn flush_on_full_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            b.push(vec![i as f32; 3], i);
+        }
+        assert!(b.ready(Instant::now()));
+        let mut runner = Mock { calls: 0 };
+        let out = b.flush(&mut runner).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[2].1, vec![6.0]); // 2+2+2
+        assert!(b.is_empty());
+        assert_eq!(b.padded_slots, 0);
+    }
+
+    #[test]
+    fn deadline_flush_partial_with_padding() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(vec![1.0, 2.0, 3.0], 0);
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+        let mut runner = Mock { calls: 0 };
+        let out = b.flush(&mut runner).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, vec![6.0]);
+        assert_eq!(b.padded_slots, 3);
+        // queueing delay recorded
+        assert!(out[0].2 >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn oversized_queue_flushes_in_chunks() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..10 {
+            b.push(vec![0.0; 3], i);
+        }
+        let mut runner = Mock { calls: 0 };
+        let mut total = 0;
+        while !b.is_empty() {
+            total += b.flush(&mut runner).unwrap().len();
+        }
+        assert_eq!(total, 10);
+        assert_eq!(runner.calls, 3);
+        assert_eq!(b.padded_slots, 2); // last batch had 2 real items
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        let mut runner = Mock { calls: 0 };
+        assert!(b.flush(&mut runner).unwrap().is_empty());
+        assert_eq!(runner.calls, 0);
+        assert!(b.next_deadline(Instant::now()).is_none());
+    }
+}

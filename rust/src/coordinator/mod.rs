@@ -1,0 +1,30 @@
+//! Layer-3 coordinator: the serving side of the reproduction.
+//!
+//! The paper's use case is CNN inference on the systolic-array
+//! accelerator; the coordinator is the host-side stack a deployment
+//! would put in front of it:
+//!
+//! * [`pipeline`] — the offline *weight-packing compiler*: quantize →
+//!   approximate (Eq. 4) → pack → WROM + index stream. This is the
+//!   paper's "parameters are represented in a different format on
+//!   off-chip memory" step, producing everything the PE array needs.
+//! * [`batcher`] — dynamic batching queue (size + deadline policy) in
+//!   front of the PJRT executable; requests are single images, the
+//!   executable runs fixed-size batches (tail padding).
+//! * [`server`] — worker thread owning the executable (PJRT handles are
+//!   not Sync), request/response channels, latency/throughput metrics.
+//!
+//! Note on threading: the vendored crate set has no tokio; the
+//! coordinator uses std threads + mpsc channels, which for a
+//! single-executable CPU backend is the right shape anyway (one
+//! compute-bound worker, many cheap submitters).
+
+pub mod batcher;
+pub mod runner;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::{BatchPolicy, BatchRunner, Batcher};
+pub use pipeline::{PackedNetwork, PackingPipeline, PackingReport};
+pub use runner::CnnRunner;
+pub use server::{InferenceServer, ServerMetrics};

@@ -1,0 +1,47 @@
+//! PJRT-backed [`BatchRunner`]: the adapter between the dynamic batcher
+//! and the AOT-compiled CNN executable.
+
+use super::batcher::BatchRunner;
+use crate::runtime::{Artifacts, CnnModel, WeightMode};
+use anyhow::Result;
+
+/// Runs fixed-size batches through the PJRT executable with a staged
+/// weight set. Construct *inside* the server worker thread via
+/// [`super::InferenceServer::start_factory`] (PJRT handles are not
+/// `Send`).
+pub struct CnnRunner {
+    model: CnnModel,
+    staged: crate::runtime::model::StagedWeights,
+}
+
+impl CnnRunner {
+    pub fn load(artifacts_dir: &str, mode: WeightMode) -> Result<CnnRunner> {
+        let client = crate::runtime::exec::Client::cpu()?;
+        let artifacts = Artifacts::load(artifacts_dir)?;
+        let model = CnnModel::load(&client, &artifacts)?;
+        let staged = model.stage(mode)?;
+        Ok(CnnRunner { model, staged })
+    }
+
+    pub fn model(&self) -> &CnnModel {
+        &self.model
+    }
+}
+
+impl BatchRunner for CnnRunner {
+    fn batch_size(&self) -> usize {
+        self.model.batch
+    }
+
+    fn item_len(&self) -> usize {
+        self.model.input_hw * self.model.input_hw
+    }
+
+    fn out_len(&self) -> usize {
+        self.model.num_classes
+    }
+
+    fn run(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.model.infer(&self.staged, x)
+    }
+}

@@ -1,0 +1,213 @@
+//! Port-accurate DSP48E1 primitive model (paper Fig. 1).
+//!
+//! Models the arithmetic dataflow with the exact port widths and
+//! two's-complement semantics of the silicon:
+//!
+//! ```text
+//! A (25b signed) ──┬─ pre-adder (25b, A ± D) ──┐
+//! D (25b signed) ──┘                           ├─ 25×18 mult (43b) ──┐
+//! B (18b signed) ──────────────────────────────┘                     ├─ ALU (48b) ── P (48b)
+//! C (48b) ────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Inputs wider than a port are *truncated* exactly as the silicon
+//! would see them (callers that need range checks do them upstream);
+//! the ALU wraps modulo 2^48. Statistics (op counts, toggle activity)
+//! feed the power model (`resources::power`).
+
+use crate::util::bits::{mask, sext};
+
+/// Operation selector — the subset of DSP48E1 OPMODE/ALUMODE configs the
+/// paper's architectures use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DspOp {
+    /// P = A*B (multiplier only, C ignored) — DPU-low style.
+    Mult,
+    /// P = A*B + C — the SDMM / MAC configuration (Eq. 1).
+    MultAddC,
+    /// P = A*B + P (accumulate into the P register) — traditional MAC.
+    MultAccP,
+    /// P = (A + D)*B + C — pre-adder path (unused by SDMM; modelled for
+    /// completeness of the primitive).
+    PreAddMultAddC,
+}
+
+/// Activity statistics for the power model: per-port toggle counts are
+/// the Vivado-SAIF analogue the paper uses for Fig. 10.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DspStats {
+    pub ops: u64,
+    /// Hamming distance accumulated on each port between consecutive ops.
+    pub a_toggles: u64,
+    pub b_toggles: u64,
+    pub c_toggles: u64,
+    pub p_toggles: u64,
+}
+
+/// The DSP48E1 primitive.
+#[derive(Clone, Debug, Default)]
+pub struct Dsp48E1 {
+    /// P output register (used by MultAccP).
+    p_reg: u64,
+    /// Previous port values for toggle accounting.
+    prev: Option<(u64, u64, u64, u64)>,
+    stats: DspStats,
+}
+
+pub const A_BITS: u32 = 25;
+pub const B_BITS: u32 = 18;
+pub const C_BITS: u32 = 48;
+pub const D_BITS: u32 = 25;
+pub const P_BITS: u32 = 48;
+
+impl Dsp48E1 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execute one cycle. `a`, `b`, `c`, `d` are the raw port bit
+    /// patterns (low A_BITS/B_BITS/C_BITS/D_BITS bits are used; A, B and
+    /// D are interpreted as signed two's complement, exactly like the
+    /// silicon). Returns the 48-bit P output pattern.
+    pub fn exec(&mut self, op: DspOp, a: u64, b: u64, c: u64, d: u64) -> u64 {
+        let a_t = a & mask(A_BITS);
+        let b_t = b & mask(B_BITS);
+        let c_t = c & mask(C_BITS);
+        let d_t = d & mask(D_BITS);
+
+        let a_s = sext(a_t, A_BITS);
+        let b_s = sext(b_t, B_BITS);
+        let d_s = sext(d_t, D_BITS);
+
+        // Pre-adder (25-bit wrap, like silicon).
+        let mult_in = match op {
+            DspOp::PreAddMultAddC => sext((a_s.wrapping_add(d_s)) as u64 & mask(A_BITS), A_BITS),
+            _ => a_s,
+        };
+
+        // 25x18 signed multiply -> 43-bit result, sign-extended to 48
+        // on the ALU input (i128 avoids host overflow; silicon result is
+        // exact in 43 bits, which i64 also holds, but we stay uniform).
+        let m = (mult_in as i128) * (b_s as i128);
+        let m48 = (m as u64) & mask(P_BITS);
+
+        let alu_in2 = match op {
+            DspOp::Mult => 0,
+            DspOp::MultAddC | DspOp::PreAddMultAddC => c_t,
+            DspOp::MultAccP => self.p_reg,
+        };
+        let p = m48.wrapping_add(alu_in2) & mask(P_BITS);
+
+        // Statistics.
+        self.stats.ops += 1;
+        if let Some((pa, pb, pc, pp)) = self.prev {
+            self.stats.a_toggles += (pa ^ a_t).count_ones() as u64;
+            self.stats.b_toggles += (pb ^ b_t).count_ones() as u64;
+            self.stats.c_toggles += (pc ^ c_t).count_ones() as u64;
+            self.stats.p_toggles += (pp ^ p).count_ones() as u64;
+        }
+        self.prev = Some((a_t, b_t, c_t, p));
+        self.p_reg = p;
+        p
+    }
+
+    /// Clear the accumulation register (start of a new dot product).
+    pub fn clear_p(&mut self) {
+        self.p_reg = 0;
+    }
+
+    pub fn p(&self) -> u64 {
+        self.p_reg
+    }
+
+    pub fn stats(&self) -> DspStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = DspStats::default();
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::zext;
+
+    #[test]
+    fn signed_multiply() {
+        let mut d = Dsp48E1::new();
+        // -3 * 5 = -15
+        let p = d.exec(DspOp::Mult, zext(-3, A_BITS), zext(5, B_BITS), 0, 0);
+        assert_eq!(sext(p, P_BITS), -15);
+        // extremes of the ports
+        let p = d.exec(
+            DspOp::Mult,
+            zext(-(1 << 24), A_BITS),
+            zext(-(1 << 17), B_BITS),
+            0,
+            0,
+        );
+        assert_eq!(sext(p, P_BITS), (1i64 << 24) * (1 << 17));
+    }
+
+    #[test]
+    fn mult_add_c() {
+        let mut d = Dsp48E1::new();
+        let p = d.exec(DspOp::MultAddC, 7, 9, 100, 0);
+        assert_eq!(p, 163);
+    }
+
+    #[test]
+    fn accumulate_chain() {
+        let mut d = Dsp48E1::new();
+        d.clear_p();
+        for i in 1..=10u64 {
+            d.exec(DspOp::MultAccP, i, 2, 0, 0);
+        }
+        // sum of 2i for i in 1..=10 = 110
+        assert_eq!(d.p(), 110);
+    }
+
+    #[test]
+    fn pre_adder() {
+        let mut d = Dsp48E1::new();
+        let p = d.exec(
+            DspOp::PreAddMultAddC,
+            zext(10, A_BITS),
+            zext(3, B_BITS),
+            5,
+            zext(-4, D_BITS),
+        );
+        // (10 + -4) * 3 + 5 = 23
+        assert_eq!(p, 23);
+    }
+
+    #[test]
+    fn alu_wraps_mod_2_48() {
+        let mut d = Dsp48E1::new();
+        let big_c = mask(48);
+        let p = d.exec(DspOp::MultAddC, 1, 1, big_c, 0);
+        assert_eq!(p, 0); // 1 + (2^48 - 1) wraps to 0
+    }
+
+    #[test]
+    fn port_truncation_matches_silicon() {
+        let mut d = Dsp48E1::new();
+        // 26-bit A pattern: silicon sees only the low 25 bits.
+        let a26 = 1u64 << 25 | 3;
+        let p = d.exec(DspOp::Mult, a26, 2, 0, 0);
+        assert_eq!(sext(p, P_BITS), 6);
+    }
+
+    #[test]
+    fn toggle_stats_accumulate() {
+        let mut d = Dsp48E1::new();
+        d.exec(DspOp::Mult, 0, 0, 0, 0);
+        d.exec(DspOp::Mult, 0b1111, 0, 0, 0);
+        let st = d.stats();
+        assert_eq!(st.ops, 2);
+        assert_eq!(st.a_toggles, 4);
+    }
+}

@@ -1,0 +1,178 @@
+//! SDMM execution engine: drives the DSP48E1 primitive with packed
+//! operands (paper Fig. 5, "multiple parameter multiplication" stage).
+
+use super::dsp48::{Dsp48E1, DspOp, A_BITS, B_BITS};
+use crate::packing::PackedTuple;
+use crate::util::bits::mask;
+
+/// Executes packed tuples on a bit-accurate DSP48E1. One engine models
+/// one DSP block of the PE array.
+#[derive(Clone, Debug, Default)]
+pub struct SdmmEngine {
+    dsp: Dsp48E1,
+    /// Extra LUT adder usage when the A-port sign correction is active
+    /// (v=8, top-slot MW ≥ 4): the correction `+ (B << 25)` is folded
+    /// into the C word — zero DSP cost, counted for the area model.
+    pub corrections: u64,
+}
+
+impl SdmmEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execute one SDMM: k = kw·ki multiplications on one DSP op.
+    /// Returns `out[j][i] = Ŵ_j · I_i` (bit-exact).
+    pub fn execute(&mut self, tuple: &PackedTuple, inputs: &[i64]) -> Vec<Vec<i64>> {
+        let p = self.execute_raw(tuple, inputs);
+        tuple.unpack_all(p, inputs)
+    }
+
+    /// Non-allocating execute: products land in `out[j * ki + i]`.
+    /// The simulator hot path (EXPERIMENTS.md §Perf).
+    pub fn execute_into(&mut self, tuple: &PackedTuple, inputs: &[i64], out: &mut [i64]) {
+        let p = self.execute_raw(tuple, inputs);
+        tuple.unpack_into(p, inputs, out);
+    }
+
+    /// Execute and return the raw 48-bit P word (before post-processing).
+    pub fn execute_raw(&mut self, tuple: &PackedTuple, inputs: &[i64]) -> u64 {
+        let b = tuple.layout.b_word(inputs);
+        let mut c = tuple.c_word(inputs);
+        if tuple.a_sign_correction() {
+            // The 25-bit A port is signed; a packed word with bit 24 set
+            // would be read as negative. Pre-bias the C word by B << 25
+            // so the signed product plus bias equals the unsigned
+            // product the packing math assumes (DESIGN.md §3).
+            c = c.wrapping_add(b << A_BITS) & mask(48);
+            self.corrections += 1;
+        }
+        if (b >> (B_BITS - 1)) & 1 == 1 {
+            // Same for the signed 18-bit B port: a negative top input
+            // (4-bit layout, third input at bits 14..17) sets bit 17.
+            // Bias by A << 18 (A is a positive packed word).
+            c = c.wrapping_add(tuple.a_word << B_BITS) & mask(48);
+            self.corrections += 1;
+        }
+        self.dsp.exec(DspOp::MultAddC, tuple.a_word, b, c, 0)
+    }
+
+    pub fn stats(&self) -> super::DspStats {
+        self.dsp.stats()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.dsp.reset_stats();
+        self.corrections = 0;
+    }
+}
+
+/// Traditional 1-MAC-per-DSP unit (the paper's `1M` baseline, Fig. 8a):
+/// P += W·I on the DSP multiplier + accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct MacUnit {
+    dsp: Dsp48E1,
+}
+
+impl MacUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.dsp.clear_p();
+    }
+
+    /// One MAC cycle: acc += w * i. Returns the signed accumulator.
+    pub fn mac(&mut self, w: i64, i: i64) -> i64 {
+        let p = self.dsp.exec(
+            DspOp::MultAccP,
+            crate::util::bits::zext(w, super::dsp48::A_BITS),
+            crate::util::bits::zext(i, super::dsp48::B_BITS),
+            0,
+            0,
+        );
+        crate::util::bits::sext(p, 48)
+    }
+
+    pub fn acc(&self) -> i64 {
+        crate::util::bits::sext(self.dsp.p(), 48)
+    }
+
+    pub fn stats(&self) -> super::DspStats {
+        self.dsp.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{pack_approx, Layout};
+
+    #[test]
+    fn engine_matches_expected_8bit() {
+        let l = Layout::for_bits(8).unwrap();
+        let mut e = SdmmEngine::new();
+        let t = pack_approx(&l, &[-100, 44, 15]).unwrap();
+        for i in -128..=127i64 {
+            assert_eq!(e.execute(&t, &[i]), t.expected_products(&[i]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn engine_matches_expected_6bit() {
+        let l = Layout::for_bits(6).unwrap();
+        let mut e = SdmmEngine::new();
+        let t = pack_approx(&l, &[-32, 17]).unwrap();
+        for i1 in -32..32i64 {
+            for i2 in -32..32i64 {
+                assert_eq!(
+                    e.execute(&t, &[i1, i2]),
+                    t.expected_products(&[i1, i2]),
+                    "i=({i1},{i2})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_expected_4bit() {
+        let l = Layout::for_bits(4).unwrap();
+        let mut e = SdmmEngine::new();
+        let t = pack_approx(&l, &[-8, 7]).unwrap();
+        for i1 in -8..8i64 {
+            for i2 in -8..8i64 {
+                for i3 in -8..8i64 {
+                    assert_eq!(
+                        e.execute(&t, &[i1, i2, i3]),
+                        t.expected_products(&[i1, i2, i3])
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_dsp_op_per_sdmm() {
+        let l = Layout::for_bits(8).unwrap();
+        let mut e = SdmmEngine::new();
+        let t = pack_approx(&l, &[1, 2, 3]).unwrap();
+        for i in 0..10 {
+            e.execute(&t, &[i]);
+        }
+        // 10 SDMM executions = 10 DSP ops = 30 multiplications.
+        assert_eq!(e.stats().ops, 10);
+    }
+
+    #[test]
+    fn mac_unit_dot_product() {
+        let mut m = MacUnit::new();
+        m.clear();
+        let ws = [3i64, -5, 7];
+        let is = [10i64, 20, -30];
+        for (w, i) in ws.iter().zip(is.iter()) {
+            m.mac(*w, *i);
+        }
+        assert_eq!(m.acc(), 3 * 10 - 5 * 20 + 7 * -30);
+    }
+}

@@ -1,0 +1,114 @@
+//! DSP block generations (paper §2.1).
+//!
+//! The paper prototypes on the 7-series **DSP48E1** (25×18 multiplier,
+//! 25-bit pre-adder) and describes the UltraScale **DSP48E2** (27×18,
+//! 27-bit pre-adder). The extra two multiplicand bits matter for the
+//! *exact* (non-approximated) mode: more tuples fit without
+//! fine-tuning — quantified by `report::ablation`.
+
+/// A DSP block generation: port widths of the multiply-add datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DspGeneration {
+    /// Xilinx 7-series (Zynq-7000, the paper's prototype target).
+    Dsp48E1,
+    /// Xilinx UltraScale / UltraScale+.
+    Dsp48E2,
+}
+
+impl DspGeneration {
+    /// Multiplicand (A) port width feeding the multiplier.
+    pub const fn a_bits(&self) -> u32 {
+        match self {
+            DspGeneration::Dsp48E1 => 25,
+            DspGeneration::Dsp48E2 => 27,
+        }
+    }
+
+    /// Multiplier (B) port width.
+    pub const fn b_bits(&self) -> u32 {
+        18
+    }
+
+    /// Accumulator / C port width.
+    pub const fn c_bits(&self) -> u32 {
+        48
+    }
+
+    /// Pre-adder width (same as A on both generations).
+    pub const fn preadder_bits(&self) -> u32 {
+        self.a_bits()
+    }
+
+    pub const fn name(&self) -> &'static str {
+        match self {
+            DspGeneration::Dsp48E1 => "DSP48E1",
+            DspGeneration::Dsp48E2 => "DSP48E2",
+        }
+    }
+}
+
+/// Exact-mode feasibility on a given generation: slot widths mirror
+/// `packing::pack_exact`, but against this generation's A port.
+pub fn is_feasible_exact_on(
+    generation: DspGeneration,
+    v_bits: u32,
+    weights: &[i64],
+) -> bool {
+    let mut off = 0u32;
+    let mut a_need = 0u32;
+    for &w in weights {
+        let mw_bits = if w == 0 {
+            1
+        } else {
+            crate::util::bits::bit_len(crate::manip::manipulate(w.unsigned_abs()).mw).max(1)
+        };
+        a_need = off + mw_bits;
+        off += v_bits + mw_bits;
+    }
+    a_need <= generation.a_bits() && off <= generation.c_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_widths() {
+        assert_eq!(DspGeneration::Dsp48E1.a_bits(), 25);
+        assert_eq!(DspGeneration::Dsp48E2.a_bits(), 27);
+        assert_eq!(DspGeneration::Dsp48E1.b_bits(), 18);
+        assert_eq!(DspGeneration::Dsp48E2.c_bits(), 48);
+    }
+
+    #[test]
+    fn e2_feasible_superset_of_e1() {
+        // every tuple feasible on E1 is feasible on E2, and some tuples
+        // are E2-only (the 2 extra A bits)
+        let mut rng = crate::util::rng::Rng::new(55);
+        let mut e2_only = 0;
+        for _ in 0..20_000 {
+            let t: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+            let e1 = is_feasible_exact_on(DspGeneration::Dsp48E1, 8, &t);
+            let e2 = is_feasible_exact_on(DspGeneration::Dsp48E2, 8, &t);
+            assert!(!e1 || e2, "E1-feasible but not E2: {t:?}");
+            if e2 && !e1 {
+                e2_only += 1;
+            }
+        }
+        assert!(e2_only > 100, "expected E2-only tuples, got {e2_only}");
+    }
+
+    #[test]
+    fn e1_matches_packing_module() {
+        // the generation-parametric check agrees with packing::is_feasible_exact
+        let layout = crate::packing::Layout::for_bits(8).unwrap();
+        let mut rng = crate::util::rng::Rng::new(56);
+        for _ in 0..5000 {
+            let t: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+            assert_eq!(
+                is_feasible_exact_on(DspGeneration::Dsp48E1, 8, &t),
+                crate::packing::is_feasible_exact(&layout, &t)
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Bit-accurate DSP48E1 model and the SDMM execution engine.
+//!
+//! The paper's correctness claim is a bit-level identity on Xilinx
+//! DSP48E1 silicon. We reproduce the silicon as a port-accurate model
+//! ([`Dsp48E1`]): 25-bit A / 18-bit B / 48-bit C ports, 25-bit
+//! pre-adder, signed 25×18 multiplier, 48-bit ALU with wrap-around —
+//! exactly the dataflow of paper Fig. 1. The SDMM engine
+//! ([`SdmmEngine`]) drives the model with packed operands and
+//! post-processes the results; it is the processing element's compute
+//! stage (paper Fig. 5) minus the FPGA.
+
+mod dsp48;
+mod engine;
+mod generation;
+
+pub use dsp48::{Dsp48E1, DspOp, DspStats};
+pub use engine::{MacUnit, SdmmEngine};
+pub use generation::{is_feasible_exact_on, DspGeneration};

@@ -1,0 +1,51 @@
+//! # SDMM — Single DSP, Multiple Multiplications
+//!
+//! A production-grade reproduction of *"Near-Precise Parameter
+//! Approximation for Multiple Multiplications on A Single DSP Block"*
+//! (E. Kalali, R. van Leuken, IEEE Trans. Computers, 2021).
+//!
+//! The crate is the Layer-3 (Rust) part of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): a Pallas kernel emulating
+//!   the packed-DSP GEMM datapath, lowered to HLO at build time.
+//! * **Layer 2** (`python/compile/model.py`): a quantized CNN forward
+//!   pass in JAX consuming approximated weights, AOT-exported to
+//!   `artifacts/*.hlo.txt`.
+//! * **Layer 3** (this crate): the packing pipeline (manipulation,
+//!   approximation, fine-tuning, WROM), a bit-accurate DSP48E1 +
+//!   systolic-array simulator, resource/power models, compression
+//!   codecs, the PJRT runtime and the batched inference coordinator.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for reproduced paper tables/figures.
+//!
+//! ## Quick tour
+//!
+//! ```
+//! use sdmm::manip::manipulate;
+//! use sdmm::packing::{pack_approx, Layout};
+//! use sdmm::dsp::SdmmEngine;
+//!
+//! // |W| = 44 = 2^2 * (1 + 2^1 * 5)  — paper Fig. 2.
+//! let m = manipulate(44);
+//! assert_eq!((m.mw, m.n, m.s), (5, 1, 2));
+//!
+//! // Three 8-bit weights on ONE DSP block.
+//! let layout = Layout::for_bits(8).unwrap();
+//! let tuple = pack_approx(&layout, &[-44, 127, 3]).unwrap();
+//! let mut engine = SdmmEngine::new();
+//! let products = engine.execute(&tuple, &[-77]);
+//! assert_eq!(products, tuple.expected_products(&[-77]));
+//! ```
+
+pub mod cnn;
+pub mod compress;
+pub mod coordinator;
+pub mod dsp;
+pub mod manip;
+pub mod packing;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sa;
+pub mod util;

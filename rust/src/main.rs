@@ -1,0 +1,300 @@
+//! `sdmm` — the CLI for the SDMM reproduction.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the vendored set):
+//!
+//! ```text
+//! sdmm manip <value> [--bits N]         decompose/approximate one value
+//! sdmm pack <w1,w2,..> [--bits N]       pack a tuple, show A/C words
+//! sdmm report <table1..table6|fig4|fig7|fig9|fig10|rom|all> [--artifacts DIR]
+//! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
+//!            [--bits N] [--artifacts DIR]     batched serving demo
+//! sdmm sim [--bits N] [--arch 1m|2m|mp]       systolic-array estimates
+//! ```
+
+use anyhow::{bail, Context, Result};
+use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
+use sdmm::manip::{approximate_signed, manipulate};
+use sdmm::packing::{pack_approx, Layout};
+use sdmm::runtime::WeightMode;
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
+use std::time::Instant;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag_u32(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "manip" => cmd_manip(&args),
+        "pack" => cmd_pack(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "sim" => cmd_sim(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `sdmm help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sdmm — Single DSP, Multiple Multiplications (Kalali & van Leuken, IEEE TC 2021)\n\
+         \n\
+         usage:\n\
+         sdmm manip <value> [--bits N]\n\
+         sdmm pack <w1,w2,...> [--bits N]\n\
+         sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|ablation|all>\n\
+         \x20            [--artifacts DIR]\n\
+         sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
+         sdmm sim [--bits N] [--arch 1m|2m|mp]"
+    );
+}
+
+fn cmd_manip(args: &Args) -> Result<()> {
+    let v: i64 = args
+        .positional
+        .first()
+        .context("manip needs a value")?
+        .parse()?;
+    let bits = args.flag_u32("bits", 8)?;
+    match approximate_signed(v, bits) {
+        None => println!("{v}: zero weight — explicit zero slot (paper is silent on 0)"),
+        Some((neg, a)) => {
+            let m = manipulate(a.approx);
+            println!(
+                "{v} -> {}{} = 2^{} * (1 + 2^{} * {})   exact={}  |err|={}",
+                if neg { "-" } else { "" },
+                a.approx,
+                m.s,
+                m.n,
+                m.mw,
+                a.exact(),
+                a.abs_error()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let list = args.positional.first().context("pack needs w1,w2,...")?;
+    let ws: Vec<i64> = list
+        .split(',')
+        .map(|t| t.trim().parse::<i64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    let bits = args.flag_u32("bits", 8)?;
+    let layout = Layout::for_bits(bits)?;
+    let tuple = pack_approx(&layout, &ws)?;
+    println!(
+        "layout: v={bits} kw={} ki={} (k={} mults/DSP)",
+        layout.kw(),
+        layout.ki(),
+        layout.k()
+    );
+    println!("implemented weights: {:?}", tuple.values());
+    println!(
+        "A word: {:#x} ({} bits)",
+        tuple.a_word,
+        64 - tuple.a_word.leading_zeros()
+    );
+    let example_inputs: Vec<i64> = (1..=layout.ki() as i64).collect();
+    println!(
+        "C word for I={example_inputs:?}: {:#x}",
+        tuple.c_word(&example_inputs)
+    );
+    let mut engine = sdmm::dsp::SdmmEngine::new();
+    println!(
+        "products for I={example_inputs:?}: {:?}",
+        engine.execute(&tuple, &example_inputs)
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let dir = args.flag("artifacts", "artifacts");
+    let out = match which {
+        "table1" => sdmm::report::table1(),
+        "table2" => sdmm::report::table2(&dir),
+        "table3" => sdmm::report::table3(),
+        "table4" => sdmm::report::table4(),
+        "table5" => sdmm::report::table5(),
+        "table6" => sdmm::report::table6(),
+        "fig4" => sdmm::report::fig4(),
+        "fig7" => sdmm::report::fig7(),
+        "fig9" => sdmm::report::fig9(),
+        "fig10" => sdmm::report::fig10(),
+        "rom" => sdmm::report::rom_bounds(),
+        "network" => sdmm::report::network_summary(),
+        "ablation" => sdmm::report::ablation::all(),
+        "all" => sdmm::report::all(&dir),
+        other => bail!("unknown report {other:?}"),
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.flag("artifacts", "artifacts");
+    if !sdmm::runtime::artifacts_available(&dir) {
+        bail!("artifacts missing in {dir:?} — run `make artifacts`");
+    }
+    let requests = args.flag_usize("requests", 512)?;
+    let concurrency = args.flag_usize("concurrency", 32)?;
+    let bits = args.flag_u32("bits", 8)?;
+    let mode = match args.flag("mode", "approx").as_str() {
+        "float" => WeightMode::Float,
+        "quant" => WeightMode::Quantized { w_bits: bits },
+        "approx" => WeightMode::Approximated { w_bits: bits },
+        other => bail!("unknown mode {other:?}"),
+    };
+    println!("loading model ({mode:?}) from {dir} ...");
+    let dir2 = dir.clone();
+    let server = InferenceServer::start_factory(
+        move || CnnRunner::load(&dir2, mode),
+        BatchPolicy::default(),
+    );
+
+    // load generator: `concurrency` in-flight requests until `requests`
+    // total are served
+    let art = sdmm::runtime::Artifacts::load(&dir)?;
+    let xs = art.f32("eval_x")?;
+    let item = 16 * 16;
+    let t0 = Instant::now();
+    let mut inflight = std::collections::VecDeque::new();
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    while done < requests {
+        while inflight.len() < concurrency && sent < requests {
+            let off = (sent * item) % (xs.len() - item);
+            inflight.push_back(server.submit(xs[off..off + item].to_vec()));
+            sent += 1;
+        }
+        if let Some(rx) = inflight.pop_front() {
+            rx.recv().context("server dropped")??;
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!(
+        "served {} requests in {:.3}s  ->  {:.0} req/s",
+        m.requests,
+        wall.as_secs_f64(),
+        m.throughput_per_sec(wall)
+    );
+    println!(
+        "latency: p50 {:.2} ms  p99 {:.2} ms  mean {:.2} ms",
+        m.latency.p50() / 1e6,
+        m.latency.p99() / 1e6,
+        m.latency.mean() / 1e6
+    );
+    println!(
+        "batches {}  occupancy {:.1}%",
+        m.batches,
+        m.batch_occupancy(16) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let bits = args.flag_u32("bits", 8)?;
+    let arch = match args.flag("arch", "mp").as_str() {
+        "1m" => PeArch::OneMac,
+        "2m" => PeArch::TwoMult,
+        "mp" => PeArch::MultiPack,
+        other => bail!("unknown arch {other:?}"),
+    };
+    let cfg = SaConfig::paper_prototype(bits, arch);
+    let sa = SystolicArray::new(cfg.clone())?;
+    println!(
+        "array {}x{} {} @{}MHz — {} DSP blocks, peak {:.1} GOPs",
+        cfg.rows,
+        cfg.cols,
+        arch.name(),
+        cfg.freq_mhz,
+        cfg.dsp_blocks(),
+        cfg.peak_gops()
+    );
+    println!(
+        "{:<10} {:>12} {:>10} {:>10} {:>8} {:>14}",
+        "layer", "MACs", "cycles", "time(us)", "util", "W bits moved"
+    );
+    let model = sdmm::cnn::zoo::Model::build(sdmm::cnn::zoo::ModelKind::Alexnet);
+    for layer in &model.convs {
+        let est = sa.estimate_layer(layer);
+        println!(
+            "{:<10} {:>12} {:>10} {:>10.0} {:>7.1}% {:>14}",
+            layer.name,
+            est.macs,
+            est.cycles,
+            est.time_us(&cfg),
+            est.utilization(&cfg) * 100.0,
+            est.traffic.offchip_weight_bits
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! The novel parameter approximation (paper Eq. 4).
+//!
+//! `W ≈ 2^s · (1 + 2^n · MW_A)` with `MW_A ∈ {0,1,3,5,7}`. This caps the
+//! manipulated parameter at 3 bits, which fixes the number of parameters
+//! per DSP block and shrinks the WROM to at most a few thousand entries.
+//!
+//! Key reproduced claims (tested below):
+//! * 128 of 256 signed 8-bit parameters are exactly representable
+//!   (64 of 128 magnitudes; signs double it; the paper counts ±).
+//! * every signed parameter below 6 bits is exact (so 4-bit columns of
+//!   Table 2 are exactly zero).
+
+use super::{manipulate, Manipulated, APPROX_MW};
+
+/// A fully-resolved approximate parameter: the nearest value of the
+/// constrained form, plus its decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ApproxParam {
+    /// Original magnitude requested.
+    pub original: u64,
+    /// Approximated magnitude actually implemented.
+    pub approx: u64,
+    /// Decomposition of `approx` with `mw ∈ {0,1,3,5,7}`.
+    pub m: Manipulated,
+}
+
+impl ApproxParam {
+    /// Absolute approximation error `|approx - original|`.
+    pub fn abs_error(&self) -> u64 {
+        self.approx.abs_diff(self.original)
+    }
+
+    /// Whether the approximation is exact.
+    pub fn exact(&self) -> bool {
+        self.approx == self.original
+    }
+}
+
+/// All representable magnitudes `2^s(1+2^n·MW_A) ≤ max_mag` under the
+/// approximation, sorted ascending. `max_mag` is typically `2^(c-1)`
+/// for signed c-bit parameters.
+pub fn representable_magnitudes(max_mag: u64) -> Vec<u64> {
+    let mut set = std::collections::BTreeSet::new();
+    let top = 64 - max_mag.leading_zeros();
+    for &mw in &APPROX_MW {
+        for n in 0..=top {
+            let base = 1u64 + ((mw as u64) << n);
+            if base > max_mag {
+                break;
+            }
+            let mut v = base;
+            loop {
+                set.insert(v);
+                match v.checked_mul(2) {
+                    Some(next) if next <= max_mag => v = next,
+                    _ => break,
+                }
+            }
+        }
+    }
+    set.into_iter().collect()
+}
+
+/// Approximate a positive magnitude to the nearest representable value
+/// (ties break toward the smaller value, matching "minor changes" in the
+/// paper — the direction does not matter for any reported metric and is
+/// pinned by tests for determinism).
+///
+/// `max_mag` bounds the representable set (the approximated value may
+/// not exceed the fixed-point range of the original parameter).
+///
+/// Hot path of the packing compiler: the representable set per
+/// `max_mag` is memoized (perf pass; see EXPERIMENTS.md §Perf —
+/// rebuilding the BTreeSet per call cost ~1 µs/weight).
+pub fn approximate(magnitude: u64, max_mag: u64) -> ApproxParam {
+    assert!(magnitude > 0, "approximate(0): use an explicit zero slot");
+    assert!(magnitude <= max_mag);
+    // Fast path: already representable?
+    let m = manipulate(magnitude);
+    if APPROX_MW.contains(&(m.mw.min(255) as u8)) {
+        return ApproxParam {
+            original: magnitude,
+            approx: magnitude,
+            m,
+        };
+    }
+    let best = nearest_representable(magnitude, max_mag);
+    ApproxParam {
+        original: magnitude,
+        approx: best,
+        m: manipulate(best),
+    }
+}
+
+/// Memoized nearest-representable lookup. Small `max_mag` (the common
+/// 4/6/8/16-bit cases) get a direct per-magnitude table; larger ranges
+/// fall back to a cached sorted set + binary search.
+fn nearest_representable(magnitude: u64, max_mag: u64) -> u64 {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    const TABLE_LIMIT: u64 = 1 << 16;
+
+    static TABLES: OnceLock<Mutex<HashMap<u64, std::sync::Arc<Vec<u32>>>>> = OnceLock::new();
+    static SETS: OnceLock<Mutex<HashMap<u64, std::sync::Arc<Vec<u64>>>>> = OnceLock::new();
+
+    let nearest_in = |reps: &[u64]| -> u64 {
+        let idx = reps.partition_point(|&r| r < magnitude);
+        let lo = reps.get(idx.wrapping_sub(1)).copied();
+        let hi = reps.get(idx).copied();
+        match (lo, hi) {
+            (Some(a), Some(b)) => {
+                if magnitude - a <= b - magnitude {
+                    a
+                } else {
+                    b
+                }
+            }
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => unreachable!("representable set is never empty"),
+        }
+    };
+
+    if max_mag <= TABLE_LIMIT {
+        let tables = TABLES.get_or_init(|| Mutex::new(HashMap::new()));
+        let table = {
+            let mut guard = tables.lock().unwrap();
+            guard
+                .entry(max_mag)
+                .or_insert_with(|| {
+                    let reps = representable_magnitudes(max_mag);
+                    let mut t = vec![0u32; max_mag as usize + 1];
+                    for mag in 1..=max_mag {
+                        let idx = reps.partition_point(|&r| r < mag);
+                        let lo = reps.get(idx.wrapping_sub(1)).copied();
+                        let hi = reps.get(idx).copied();
+                        t[mag as usize] = match (lo, hi) {
+                            (Some(a), Some(b)) => {
+                                if mag - a <= b - mag {
+                                    a as u32
+                                } else {
+                                    b as u32
+                                }
+                            }
+                            (Some(a), None) => a as u32,
+                            (None, Some(b)) => b as u32,
+                            (None, None) => unreachable!(),
+                        };
+                    }
+                    std::sync::Arc::new(t)
+                })
+                .clone()
+        };
+        return table[magnitude as usize] as u64;
+    }
+    let sets = SETS.get_or_init(|| Mutex::new(HashMap::new()));
+    let reps = {
+        let mut guard = sets.lock().unwrap();
+        guard
+            .entry(max_mag)
+            .or_insert_with(|| std::sync::Arc::new(representable_magnitudes(max_mag)))
+            .clone()
+    };
+    nearest_in(&reps)
+}
+
+/// Approximate a signed value; returns (negative, ApproxParam) or `None`
+/// for zero (which gets an explicit zero slot downstream).
+pub fn approximate_signed(value: i64, c_bits: u32) -> Option<(bool, ApproxParam)> {
+    if value == 0 {
+        return None;
+    }
+    // Signed c-bit range is [-2^(c-1), 2^(c-1)-1]; the paper treats the
+    // magnitude range symmetrically (sign-magnitude on the ROM index),
+    // so we clamp the max magnitude to 2^(c-1) which covers -2^(c-1).
+    let max_mag = 1u64 << (c_bits - 1);
+    let mag = (value.unsigned_abs()).min(max_mag);
+    Some((value < 0, approximate(mag, max_mag)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representable_counts_match_paper() {
+        // 64 exact magnitudes in [1,128] ⇒ 128 of 256 signed 8-bit values
+        // (paper §3.2: "128 of 256 8-bit signed parameters ... without
+        // any error").
+        assert_eq!(representable_magnitudes(128).len(), 64);
+        // 6-bit: 28 of 32 magnitudes; 4-bit: all 8 magnitudes.
+        assert_eq!(representable_magnitudes(32).len(), 28);
+        assert_eq!(representable_magnitudes(8).len(), 8);
+    }
+
+    #[test]
+    fn below_6_bit_always_exact() {
+        // Paper: "Eq. (4) can implement signed parameters smaller than
+        // 6-bits without any error".
+        for mag in 1..=16u64 {
+            assert!(approximate(mag, 16).exact(), "mag={mag}");
+        }
+    }
+
+    #[test]
+    fn mw_always_in_approx_set() {
+        for mag in 1..=128u64 {
+            let a = approximate(mag, 128);
+            assert!(APPROX_MW.contains(&(a.m.mw as u8)), "{a:?}");
+            assert_eq!(a.m.value(), a.approx);
+        }
+    }
+
+    #[test]
+    fn error_at_most_one_lsb_of_gap() {
+        // The representable set is dense enough that 8-bit error ≤ 4.
+        let mut worst = 0;
+        for mag in 1..=128u64 {
+            worst = worst.max(approximate(mag, 128).abs_error());
+        }
+        assert!(worst <= 4, "worst 8-bit approx error {worst}");
+    }
+
+    #[test]
+    fn approximation_idempotent() {
+        for mag in 1..=128u64 {
+            let a = approximate(mag, 128);
+            let b = approximate(a.approx, 128);
+            assert!(b.exact());
+            assert_eq!(b.approx, a.approx);
+        }
+    }
+
+    #[test]
+    fn fig4_style_values() {
+        // Spot values: 23 = 1+2*11 needs MW=11 (4 bits) ⇒ approximated.
+        let a = approximate(23, 128);
+        assert!(!a.exact());
+        // neighbours of 23 in the representable set are 22 (2*(1+2*5))
+        // and 24 (8*3) — distance 1 each; tie breaks low.
+        assert_eq!(a.approx, 22);
+        // 44 is exactly representable (MW=5).
+        assert!(approximate(44, 128).exact());
+    }
+
+    #[test]
+    fn signed_wrapper() {
+        assert_eq!(approximate_signed(0, 8), None);
+        let (neg, a) = approximate_signed(-44, 8).unwrap();
+        assert!(neg);
+        assert!(a.exact());
+        let (neg, a) = approximate_signed(127, 8).unwrap();
+        assert!(!neg);
+        assert_eq!(a.original, 127);
+        // -128 magnitude clamps into range and is a power of two: exact.
+        let (_, a) = approximate_signed(-128, 8).unwrap();
+        assert!(a.exact());
+        assert_eq!(a.approx, 128);
+    }
+}

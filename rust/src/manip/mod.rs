@@ -1,0 +1,173 @@
+//! Parameter manipulation and approximation (paper §3.1–§3.2).
+//!
+//! Every non-zero fixed-point magnitude is rewritten as
+//! `|W| = 2^s · (1 + 2^n · MW)` (Eq. 2, Algorithm 1), turning a wide
+//! multiplication `W·I` into a narrow multiply `MW·I` plus an add, a
+//! concatenation and a shift (Eq. 5). The *approximation* (Eq. 4)
+//! additionally constrains `MW ∈ {0, 1, 3, 5, 7}` — at most 3 bits — so
+//! that (a) a fixed number of parameters packs onto one DSP block and
+//! (b) the WROM dictionary stays small.
+//!
+//! This module is pure integer math with exhaustive tests; everything
+//! downstream (packing, WROM, compression, the Pallas kernel) consumes
+//! the [`Manipulated`] / [`ApproxParam`] types defined here.
+
+mod approx;
+mod error;
+
+pub use approx::{approximate, approximate_signed, representable_magnitudes, ApproxParam};
+pub use error::{approximation_error_table, ErrorStats};
+
+/// Allowed manipulated-parameter values under the approximation (Eq. 4).
+pub const APPROX_MW: [u8; 5] = [0, 1, 3, 5, 7];
+
+/// Result of Algorithm 1 on a positive magnitude:
+/// `magnitude = 2^s · (1 + 2^n · mw)` with `mw` odd or zero, minimal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manipulated {
+    /// Manipulated parameter MW (odd, or 0 when the magnitude is a power
+    /// of two).
+    pub mw: u64,
+    /// Inner shift n.
+    pub n: u32,
+    /// Outer shift s (trailing zeros of the original magnitude).
+    pub s: u32,
+}
+
+impl Manipulated {
+    /// Reconstruct the magnitude this decomposition represents.
+    #[inline]
+    pub const fn value(&self) -> u64 {
+        (1 + (self.mw << self.n)) << self.s
+    }
+
+    /// Bit length of MW — the quantity the approximation caps at 3.
+    #[inline]
+    pub const fn mw_bits(&self) -> u32 {
+        64 - self.mw.leading_zeros()
+    }
+}
+
+/// Algorithm 1 (paper): decompose a positive magnitude.
+///
+/// ```text
+/// s  <- trailing zeros of W        (W /= 2^s)
+/// W  <- W - 1
+/// n  <- trailing zeros of W        (W /= 2^n, if W > 0)
+/// MW <- W
+/// ```
+///
+/// Panics on `w == 0`: zero is *not representable* in this form. The
+/// paper is silent on zero weights; the packing layer handles them with
+/// an explicit zero flag (see `packing::ParamSlot`).
+pub fn manipulate(w: u64) -> Manipulated {
+    assert!(w > 0, "manipulate(0): zero has no 2^s*(1+2^n*MW) form");
+    let s = w.trailing_zeros();
+    let w = w >> s;
+    let w = w - 1; // now even or zero
+    if w == 0 {
+        return Manipulated { mw: 0, n: 0, s };
+    }
+    let n = w.trailing_zeros();
+    Manipulated { mw: w >> n, n, s }
+}
+
+/// A signed fixed-point parameter in sign-magnitude form, as consumed by
+/// the packing pipeline (the DSP multiplies magnitudes; the sign is
+/// applied by the post-processing `S` blocks, paper Fig. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SignedParam {
+    /// True for negative parameters.
+    pub negative: bool,
+    /// Magnitude (0 allowed — handled as an explicit zero slot).
+    pub magnitude: u64,
+}
+
+impl SignedParam {
+    pub fn from_value(v: i64) -> Self {
+        SignedParam {
+            negative: v < 0,
+            magnitude: v.unsigned_abs(),
+        }
+    }
+
+    pub fn value(&self) -> i64 {
+        let m = self.magnitude as i64;
+        if self.negative {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// The sign-extension mask of Eq. 7: `mask = 7 - MW` for the approximate
+/// set (`0→111, 1→110, 3→100, 5→010, 7→000`). Used when the input
+/// variable is negative to compensate packed-unsigned multiplication.
+#[inline]
+pub const fn sex_mask(mw: u8) -> u8 {
+    7 - mw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig2_example() {
+        // Fig. 2 context: a parameter whose MW shrinks from 5 bits to 2.
+        // W = 44 = 2^2 * (1 + 2^1 * 5): s=2, n=1, MW=5.
+        let m = manipulate(44);
+        assert_eq!(m, Manipulated { mw: 5, n: 1, s: 2 });
+        assert_eq!(m.value(), 44);
+    }
+
+    #[test]
+    fn powers_of_two_have_zero_mw() {
+        for s in 0..20 {
+            let m = manipulate(1 << s);
+            assert_eq!(m.mw, 0);
+            assert_eq!(m.s, s);
+            assert_eq!(m.value(), 1 << s);
+        }
+    }
+
+    #[test]
+    fn mw_is_odd_or_zero() {
+        for w in 1..=100_000u64 {
+            let m = manipulate(w);
+            assert!(m.mw == 0 || m.mw % 2 == 1, "w={w} m={m:?}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_exhaustive_20bit() {
+        for w in 1..(1u64 << 20) {
+            assert_eq!(manipulate(w).value(), w);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "manipulate(0)")]
+    fn zero_panics() {
+        manipulate(0);
+    }
+
+    #[test]
+    fn sex_masks_match_paper() {
+        // Paper §3.3.2: mask = 111,110,100,010,000 for MW = 0,1,3,5,7.
+        assert_eq!(sex_mask(0), 0b111);
+        assert_eq!(sex_mask(1), 0b110);
+        assert_eq!(sex_mask(3), 0b100);
+        assert_eq!(sex_mask(5), 0b010);
+        assert_eq!(sex_mask(7), 0b000);
+    }
+
+    #[test]
+    fn signed_param_round_trip() {
+        for v in -300..=300i64 {
+            let p = SignedParam::from_value(v);
+            assert_eq!(p.value(), v);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! DSP port layouts for the SDMM.
+//!
+//! A layout fixes, for a given input bit width `v`:
+//! * how many weight slots go in the multiplicand port A (25-bit) and at
+//!   which offsets,
+//! * how many input variables pack into the multiplier port B (18-bit),
+//! * the product-slot width `w = v + mw_width`.
+//!
+//! Product slot (j, i) lands at bit `a_off[j] + b_off[i]` of `A·B` and
+//! must be `w` bits wide with no overlap — validated by
+//! [`Layout::validate`] and exhaustively by the packing tests.
+//!
+//! The three shipped layouts meet the paper's multiplies/DSP (k = 3/4/6
+//! for v = 8/6/4) within DSP48E1 port widths (DESIGN.md §3):
+//!
+//! | v | kw×ki | A offsets | B offsets | slot width |
+//! |---|-------|-----------|-----------|------------|
+//! | 8 | 3×1   | 0,11,22   | 0         | 11         |
+//! | 6 | 2×2   | 0,18      | 0,9       | 9          |
+//! | 4 | 2×3   | 0,21      | 0,7,14    | 7          |
+
+use anyhow::{bail, Result};
+
+/// DSP48E1 port widths (paper Fig. 1).
+pub const A_PORT_BITS: u32 = 25;
+pub const B_PORT_BITS: u32 = 18;
+pub const C_PORT_BITS: u32 = 48;
+/// Width of the approximated manipulated parameter (Eq. 4).
+pub const MW_A_BITS: u32 = 3;
+
+/// A packing layout: placement of weight slots and input variables on
+/// the DSP ports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// Input variable bit width (v).
+    pub v: u32,
+    /// Weight (parameter) bit width (c). Usually equal to `v` in the
+    /// paper's (W,I) grid; kept separate because Table 2 sweeps both.
+    pub c: u32,
+    /// Bit offsets of the weight slots within the A word.
+    pub a_offsets: Vec<u32>,
+    /// Bit offsets of the packed inputs within the B word.
+    pub b_offsets: Vec<u32>,
+    /// Product slot width `w = v + MW_A_BITS`.
+    pub slot_width: u32,
+}
+
+impl Layout {
+    /// The paper's layout for a given input bit width (8, 6 or 4).
+    pub fn for_bits(v: u32) -> Result<Layout> {
+        Self::for_bits_wc(v, v)
+    }
+
+    /// Layout with distinct weight/input widths (Table 2 sweeps (W,I)
+    /// over {8,6,4}²). The slot geometry depends only on the *input*
+    /// width (slot = v + 3); the weight width `c` bounds magnitudes.
+    pub fn for_bits_wc(c: u32, v: u32) -> Result<Layout> {
+        let (a_offsets, b_offsets): (Vec<u32>, Vec<u32>) = match v {
+            8 => (vec![0, 11, 22], vec![0]),
+            6 => (vec![0, 18], vec![0, 9]),
+            4 => (vec![0, 21], vec![0, 7, 14]),
+            _ => bail!("unsupported input bit width v={v} (supported: 4, 6, 8)"),
+        };
+        let l = Layout {
+            v,
+            c,
+            a_offsets,
+            b_offsets,
+            slot_width: v + MW_A_BITS,
+        };
+        l.validate()?;
+        Ok(l)
+    }
+
+    /// Number of weight slots in the A word.
+    pub fn kw(&self) -> usize {
+        self.a_offsets.len()
+    }
+
+    /// Number of inputs packed in the B word.
+    pub fn ki(&self) -> usize {
+        self.b_offsets.len()
+    }
+
+    /// Multiplications per DSP block (the paper's k: 3/4/6).
+    pub fn k(&self) -> usize {
+        self.kw() * self.ki()
+    }
+
+    /// Bit position of product slot (weight j, input i).
+    pub fn slot_offset(&self, j: usize, i: usize) -> u32 {
+        self.a_offsets[j] + self.b_offsets[i]
+    }
+
+    /// Check port widths and product-slot disjointness.
+    pub fn validate(&self) -> Result<()> {
+        if self.v < 2 || self.v > 16 || self.c < 2 || self.c > 16 {
+            bail!("bit widths out of range: v={} c={}", self.v, self.c);
+        }
+        // A port: top slot's MW field must fit.
+        let a_need = self.a_offsets.iter().max().unwrap() + MW_A_BITS;
+        if a_need > A_PORT_BITS {
+            bail!("A word needs {a_need} bits > {A_PORT_BITS}");
+        }
+        // B port: top input field must fit.
+        let b_need = self.b_offsets.iter().max().unwrap() + self.v;
+        if b_need > B_PORT_BITS {
+            bail!("B word needs {b_need} bits > {B_PORT_BITS}");
+        }
+        // Product slots must be disjoint and fit the 48-bit ALU.
+        let mut slots: Vec<u32> = (0..self.kw())
+            .flat_map(|j| (0..self.ki()).map(move |i| (j, i)))
+            .map(|(j, i)| self.slot_offset(j, i))
+            .collect();
+        slots.sort_unstable();
+        for pair in slots.windows(2) {
+            if pair[1] - pair[0] < self.slot_width {
+                bail!(
+                    "product slots at bits {} and {} overlap (width {})",
+                    pair[0],
+                    pair[1],
+                    self.slot_width
+                );
+            }
+        }
+        let p_need = slots.last().unwrap() + self.slot_width;
+        if p_need > C_PORT_BITS {
+            bail!("packed product needs {p_need} bits > {C_PORT_BITS}");
+        }
+        Ok(())
+    }
+
+    /// Pack signed inputs into the B word (zero-extended bit patterns —
+    /// the sign is restored through the SEx words, paper §3.3.2).
+    pub fn b_word(&self, inputs: &[i64]) -> u64 {
+        assert_eq!(inputs.len(), self.ki(), "expected {} inputs", self.ki());
+        let mut b = 0u64;
+        for (i, &inp) in inputs.iter().enumerate() {
+            debug_assert!(
+                crate::util::bits::fits_signed(inp, self.v),
+                "input {inp} exceeds {} bits",
+                self.v
+            );
+            b |= crate::util::bits::zext(inp, self.v) << self.b_offsets[i];
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_k_values() {
+        // Paper §3.2: k = 3, 4, 6 for 8, 6, 4-bit input variables.
+        assert_eq!(Layout::for_bits(8).unwrap().k(), 3);
+        assert_eq!(Layout::for_bits(6).unwrap().k(), 4);
+        assert_eq!(Layout::for_bits(4).unwrap().k(), 6);
+    }
+
+    #[test]
+    fn all_layouts_validate() {
+        for v in [4, 6, 8] {
+            for c in [4, 6, 8] {
+                Layout::for_bits_wc(c, v).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_width_rejected() {
+        assert!(Layout::for_bits(5).is_err());
+        assert!(Layout::for_bits(16).is_err());
+    }
+
+    #[test]
+    fn slot_positions_8bit() {
+        let l = Layout::for_bits(8).unwrap();
+        assert_eq!(l.slot_offset(0, 0), 0);
+        assert_eq!(l.slot_offset(1, 0), 11);
+        assert_eq!(l.slot_offset(2, 0), 22);
+        // A word payload is exactly the 25-bit port.
+        assert_eq!(l.a_offsets.last().unwrap() + MW_A_BITS, 25);
+    }
+
+    #[test]
+    fn slot_positions_4bit_disjoint() {
+        let l = Layout::for_bits(4).unwrap();
+        let mut offs: Vec<u32> = Vec::new();
+        for j in 0..2 {
+            for i in 0..3 {
+                offs.push(l.slot_offset(j, i));
+            }
+        }
+        offs.sort_unstable();
+        assert_eq!(offs, vec![0, 7, 14, 21, 28, 35]);
+    }
+
+    #[test]
+    fn b_word_packs_negative_inputs() {
+        let l = Layout::for_bits(6).unwrap();
+        let b = l.b_word(&[-1, -32]);
+        // -1 -> 0b111111 at bit 0; -32 -> 0b100000 at bit 9.
+        assert_eq!(b, 0b111111 | (0b100000 << 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected 3 inputs")]
+    fn b_word_arity_checked() {
+        Layout::for_bits(4).unwrap().b_word(&[1, 2]);
+    }
+
+    #[test]
+    fn overlapping_layout_rejected() {
+        let l = Layout {
+            v: 8,
+            c: 8,
+            a_offsets: vec![0, 5], // 5 < slot width 11 -> overlap
+            b_offsets: vec![0],
+            slot_width: 11,
+        };
+        assert!(l.validate().is_err());
+    }
+}

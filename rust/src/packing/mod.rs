@@ -1,0 +1,25 @@
+//! Multiplication packing (paper §3.3): build the DSP operand words that
+//! execute k independent multiplications on one DSP block.
+//!
+//! * [`layout`] — the port layouts per bit width (8-bit: 3W×1I,
+//!   6-bit: 2W×2I, 4-bit: 2W×3I; see DESIGN.md §3 for why the paper's
+//!   single-input Eq. 8 cannot meet its own k on a 25×18 multiplier).
+//! * [`tuple`] — A/B/C word construction (Eq. 8/10), the sign-extension
+//!   words (Eq. 7 and its exact-mode generalization of Eq. 6), slot
+//!   extraction and post-processing (concat `I[n-1:0]`, `<< s`, sign).
+//! * [`finetune`] — exact-mode feasibility + Bray-Curtis tuple
+//!   replacement (Eq. 9, paper §3.3.4).
+//! * [`wrom`] — the on-chip dictionary: dedup packed weight tuples,
+//!   assign indices, produce the off-chip index stream (WRC compression).
+
+pub mod finetune;
+pub mod layout;
+pub mod tuple;
+pub mod wrom;
+
+pub use finetune::{
+    bray_curtis, fine_tune_stream, fine_tune_tuple, is_feasible_exact, FineTuneReport,
+};
+pub use layout::Layout;
+pub use tuple::{pack_approx, pack_exact, PackedTuple, Slot};
+pub use wrom::{Wrom, WromEntry, WromIndexStream};

@@ -1,0 +1,425 @@
+//! Packed tuples: the A word, the sign-extension C word, and the
+//! post-processing that recovers k exact products from one DSP result.
+//!
+//! The arithmetic identity implemented here (derived from paper
+//! Eq. 5–8; see DESIGN.md §3 for the derivation):
+//!
+//! ```text
+//! slot(j,i) = low_w( MW_j · Iu_i  +  SEx_{j,i} )                w = v+3
+//! SEx_{j,i} = ((2^m - 1 - MW_j) · neg(I_i)) << v  |  (I_i >>a n_j) mod 2^v
+//! product   = sign_j · ( (sext_w(slot) << n_j | Iu_i[n_j-1:0]) << s_j )
+//! ```
+//!
+//! where `Iu` is the zero-extended bit pattern of the signed input and
+//! `m` is the MW field width (3 under the approximation). Every slot
+//! value stays in `[0, 2^w)` so slots never interact through carries —
+//! that is what makes the single wide multiply + single wide add of the
+//! DSP block carry k independent multiplications.
+
+use super::layout::{Layout, A_PORT_BITS, MW_A_BITS};
+use crate::manip::{approximate_signed, manipulate};
+use crate::util::bits::{mask, sext, zext};
+use anyhow::{bail, Result};
+
+/// One weight slot of a packed tuple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slot {
+    /// Explicit zero weight (not representable as 2^s(1+2^n·MW); the
+    /// post-processing gates the output to 0 — DESIGN.md §3).
+    pub zero: bool,
+    /// Sign of the weight (applied by the post-processing S block).
+    pub negative: bool,
+    /// Manipulated parameter (MW_A under approximation).
+    pub mw: u64,
+    /// Width of the MW field in the A word (3 in approx mode; the true
+    /// bit length in exact mode).
+    pub mw_width: u32,
+    /// Inner shift n.
+    pub n: u32,
+    /// Outer shift s.
+    pub s: u32,
+    /// The magnitude this slot implements: 2^s(1+2^n·mw), 0 if zero.
+    pub magnitude: u64,
+}
+
+impl Slot {
+    /// The signed weight value this slot implements.
+    pub fn value(&self) -> i64 {
+        if self.zero {
+            0
+        } else if self.negative {
+            -(self.magnitude as i64)
+        } else {
+            self.magnitude as i64
+        }
+    }
+
+    fn from_signed(value: i64, c_bits: u32) -> Slot {
+        match approximate_signed(value, c_bits) {
+            None => Slot {
+                zero: true,
+                negative: false,
+                mw: 0,
+                mw_width: MW_A_BITS,
+                n: 0,
+                s: 0,
+                magnitude: 0,
+            },
+            Some((neg, a)) => Slot {
+                zero: false,
+                negative: neg,
+                mw: a.m.mw,
+                mw_width: MW_A_BITS,
+                n: a.m.n,
+                s: a.m.s,
+                magnitude: a.approx,
+            },
+        }
+    }
+
+    fn from_signed_exact(value: i64) -> Slot {
+        if value == 0 {
+            return Slot {
+                zero: true,
+                negative: false,
+                mw: 0,
+                mw_width: 1,
+                n: 0,
+                s: 0,
+                magnitude: 0,
+            };
+        }
+        let m = manipulate(value.unsigned_abs());
+        Slot {
+            zero: false,
+            negative: value < 0,
+            mw: m.mw,
+            mw_width: crate::util::bits::bit_len(m.mw).max(1),
+            n: m.n,
+            s: m.s,
+            magnitude: m.value(),
+        }
+    }
+}
+
+/// A tuple of weights packed for one DSP block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedTuple {
+    pub layout: Layout,
+    /// One slot per weight (len = layout.kw()).
+    pub slots: Vec<Slot>,
+    /// Multiplicand word for the DSP A port (input-independent — this is
+    /// what the WROM stores, paper §4/§5).
+    pub a_word: u64,
+    /// Per-slot A-word offsets (equal to layout.a_offsets in approx
+    /// mode; cumulative variable-width offsets in exact mode).
+    pub a_offsets: Vec<u32>,
+    /// Slot widths (v + mw_width per slot).
+    pub slot_widths: Vec<u32>,
+}
+
+/// Pack a tuple of signed weights in *approximation mode* (Eq. 4): every
+/// weight moves to the nearest representable value, MW fits in 3 bits,
+/// the layout's fixed offsets apply. This always succeeds — the property
+/// the paper's fine-tuning step exists to provide in exact mode.
+pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
+    if weights.len() != layout.kw() {
+        bail!(
+            "tuple arity {} != layout weight slots {}",
+            weights.len(),
+            layout.kw()
+        );
+    }
+    let c = layout.c;
+    let max_mag = 1i64 << (c - 1);
+    for &w in weights {
+        // Closed range: +2^(c-1) is admitted because the approximation
+        // itself may round 2^(c-1)-1 up to the power of two (127 -> 128),
+        // which the hardware implements exactly (MW=0, s=c-1).
+        if w < -max_mag || w > max_mag {
+            bail!("weight {w} out of signed {c}-bit range");
+        }
+    }
+    let slots: Vec<Slot> = weights.iter().map(|&w| Slot::from_signed(w, c)).collect();
+    let mut a_word = 0u64;
+    for (j, slot) in slots.iter().enumerate() {
+        a_word |= slot.mw << layout.a_offsets[j];
+    }
+    Ok(PackedTuple {
+        layout: layout.clone(),
+        slots,
+        a_word,
+        a_offsets: layout.a_offsets.clone(),
+        slot_widths: vec![layout.slot_width; layout.kw()],
+    })
+}
+
+/// Pack a tuple in *exact mode* (no approximation, paper §3.3.3 with
+/// Eq. 6-style sign extension): slot widths vary with each weight's MW
+/// bit length; fails when the tuple does not fit the A port — the
+/// condition fine-tuning repairs (§3.3.4). Exact mode supports only
+/// single-input layouts (the paper's Eq. 8 form).
+pub fn pack_exact(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
+    if layout.ki() != 1 {
+        bail!("exact mode requires a single-input layout");
+    }
+    if weights.len() != layout.kw() {
+        bail!(
+            "tuple arity {} != layout weight slots {}",
+            weights.len(),
+            layout.kw()
+        );
+    }
+    let slots: Vec<Slot> = weights.iter().map(|&w| Slot::from_signed_exact(w)).collect();
+    // Variable-width placement: slot j occupies product bits
+    // [off_j, off_j + v + mw_width_j); the A word carries MW_j at off_j.
+    let mut a_offsets = Vec::with_capacity(slots.len());
+    let mut slot_widths = Vec::with_capacity(slots.len());
+    let mut off = 0u32;
+    for slot in &slots {
+        let w = layout.v + slot.mw_width;
+        a_offsets.push(off);
+        slot_widths.push(w);
+        off += w;
+    }
+    let a_need = a_offsets.last().unwrap() + slots.last().unwrap().mw_width;
+    if a_need > A_PORT_BITS {
+        bail!("tuple does not fit: A word needs {a_need} > {A_PORT_BITS} bits (fine-tuning required)");
+    }
+    if off > 48 {
+        bail!("tuple does not fit: product needs {off} > 48 bits");
+    }
+    let mut a_word = 0u64;
+    for (j, slot) in slots.iter().enumerate() {
+        a_word |= slot.mw << a_offsets[j];
+    }
+    Ok(PackedTuple {
+        layout: layout.clone(),
+        slots,
+        a_word,
+        a_offsets,
+        slot_widths,
+    })
+}
+
+impl PackedTuple {
+    /// The k weight values this tuple implements (after approximation).
+    pub fn values(&self) -> Vec<i64> {
+        self.slots.iter().map(|s| s.value()).collect()
+    }
+
+    /// Does the A word set the sign bit of the signed 25-bit A port?
+    /// (Happens for v=8 when the top slot's MW ≥ 4; the engine then adds
+    /// the `B << 25` correction through the C port — DESIGN.md §3.)
+    pub fn a_sign_correction(&self) -> bool {
+        (self.a_word >> (A_PORT_BITS - 1)) & 1 == 1
+    }
+
+    /// Sign-extension word SEx for (slot j, input i) — Eq. 7 (approx,
+    /// m = 3) and its Eq. 6 generalization (exact, m = mw_width).
+    pub fn sex_word(&self, j: usize, input: i64) -> u64 {
+        let slot = &self.slots[j];
+        if slot.zero {
+            return 0;
+        }
+        let v = self.layout.v;
+        let m = slot.mw_width;
+        let neg = input < 0;
+        let mask_mw = (mask(m) - slot.mw) * (neg as u64);
+        (mask_mw << v) | zext(input >> slot.n, v)
+    }
+
+    /// Build the accumulator (C port) word for a set of inputs: the sum
+    /// of all per-slot SEx words at their product offsets (Eq. 8 row 3).
+    pub fn c_word(&self, inputs: &[i64]) -> u64 {
+        assert_eq!(inputs.len(), self.layout.ki());
+        let mut c = 0u64;
+        for j in 0..self.slots.len() {
+            for (i, &input) in inputs.iter().enumerate() {
+                let off = self.a_offsets[j] + self.layout.b_offsets[i];
+                c += self.sex_word(j, input) << off;
+            }
+        }
+        c & mask(48)
+    }
+
+    /// Post-process one product slot out of the 48-bit DSP result `p`
+    /// (paper Fig. 5 "post-processing"): extract the w-bit field,
+    /// sign-interpret, concatenate `I[n-1:0]`, shift by s, apply the
+    /// weight sign, gate zeros.
+    pub fn unpack_slot(&self, p: u64, j: usize, i: usize, input: i64) -> i64 {
+        let slot = &self.slots[j];
+        if slot.zero {
+            return 0;
+        }
+        let off = self.a_offsets[j] + self.layout.b_offsets[i];
+        let w = self.layout.v + slot.mw_width;
+        let field = (p >> off) & mask(w);
+        let s_val = sext(field, w);
+        let concat = (s_val << slot.n) | (zext(input, self.layout.v) & mask(slot.n)) as i64;
+        let r = concat << slot.s;
+        if slot.negative {
+            -r
+        } else {
+            r
+        }
+    }
+
+    /// Non-allocating unpack: `out[j * ki + i] = Ŵ_j · I_i`.
+    /// (Perf-pass addition: the nested-Vec `unpack_all` costs ~65 ns of
+    /// allocation per DSP op — this is the simulator hot path.)
+    pub fn unpack_into(&self, p: u64, inputs: &[i64], out: &mut [i64]) {
+        let ki = self.layout.ki();
+        debug_assert_eq!(out.len(), self.slots.len() * ki);
+        for j in 0..self.slots.len() {
+            for (i, &inp) in inputs.iter().enumerate() {
+                out[j * ki + i] = self.unpack_slot(p, j, i, inp);
+            }
+        }
+    }
+
+    /// Unpack every product: `out[j][i] = Ŵ_j · I_i`.
+    pub fn unpack_all(&self, p: u64, inputs: &[i64]) -> Vec<Vec<i64>> {
+        (0..self.slots.len())
+            .map(|j| {
+                inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &inp)| self.unpack_slot(p, j, i, inp))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Reference products `Ŵ_j · I_i` computed directly (the oracle the
+    /// DSP path must match bit-for-bit).
+    pub fn expected_products(&self, inputs: &[i64]) -> Vec<Vec<i64>> {
+        self.slots
+            .iter()
+            .map(|s| inputs.iter().map(|&i| s.value() * i).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Emulate the full DSP op in plain integer math (the dsp module has
+    /// the port-accurate version; this keeps tuple tests self-contained).
+    fn run(t: &PackedTuple, inputs: &[i64]) -> u64 {
+        let b = t.layout.b_word(inputs);
+        let a_s = sext(t.a_word, A_PORT_BITS); // signed 25-bit port
+        let corr = if t.a_sign_correction() { b << A_PORT_BITS } else { 0 };
+        ((a_s as i128 * b as i128) as u64)
+            .wrapping_add(t.c_word(inputs))
+            .wrapping_add(corr)
+            & mask(48)
+    }
+
+    #[test]
+    fn pack_8bit_exhaustive_inputs() {
+        let l = Layout::for_bits(8).unwrap();
+        let t = pack_approx(&l, &[-44, 127, 3]).unwrap();
+        for i in -128..=127i64 {
+            let p = run(&t, &[i]);
+            assert_eq!(t.unpack_all(p, &[i]), t.expected_products(&[i]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn pack_8bit_top_slot_sign_correction() {
+        let l = Layout::for_bits(8).unwrap();
+        // Weight with MW=7 in the top slot sets A bit 24.
+        let t = pack_approx(&l, &[1, 1, 15]).unwrap(); // 15 = 1+2*7 -> MW=7
+        assert!(t.a_sign_correction());
+        for i in [-128i64, -1, 0, 1, 127] {
+            let p = run(&t, &[i]);
+            assert_eq!(t.unpack_all(p, &[i]), t.expected_products(&[i]));
+        }
+    }
+
+    #[test]
+    fn pack_6bit_two_inputs() {
+        let l = Layout::for_bits(6).unwrap();
+        let t = pack_approx(&l, &[-25, 31]).unwrap();
+        for i1 in -32..32i64 {
+            for i2 in [-32i64, -7, 0, 5, 31] {
+                let p = run(&t, &[i1, i2]);
+                assert_eq!(
+                    t.unpack_all(p, &[i1, i2]),
+                    t.expected_products(&[i1, i2]),
+                    "i1={i1} i2={i2}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_4bit_all_weights_all_inputs() {
+        let l = Layout::for_bits(4).unwrap();
+        for w1 in -8..8i64 {
+            for w2 in -8..8i64 {
+                let t = pack_approx(&l, &[w1, w2]).unwrap();
+                // 4-bit weights are always exact (paper §3.2).
+                assert_eq!(t.values(), vec![w1, w2]);
+                for i in [-8i64, -3, 0, 7] {
+                    let p = run(&t, &[i, -i.max(-7), 1]);
+                    assert_eq!(
+                        t.unpack_all(p, &[i, -i.max(-7), 1]),
+                        t.expected_products(&[i, -i.max(-7), 1])
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_slot() {
+        let l = Layout::for_bits(8).unwrap();
+        let t = pack_approx(&l, &[0, -1, 0]).unwrap();
+        assert_eq!(t.values(), vec![0, -1, 0]);
+        for i in [-128i64, 0, 99] {
+            let p = run(&t, &[i]);
+            assert_eq!(t.unpack_all(p, &[i]), vec![vec![0], vec![-i], vec![0]]);
+        }
+    }
+
+    #[test]
+    fn exact_mode_small_tuple_fits() {
+        let l = Layout::for_bits(8).unwrap();
+        // MWs: 3 (2 bits), 0 (1 bit), 1 (1 bit) — total A bits
+        // (8+2)+(8+1)+1 = 22 ≤ 25.
+        let t = pack_exact(&l, &[7, 64, -96]).unwrap();
+        assert_eq!(t.values(), vec![7, 64, -96]);
+        for i in -128..=127i64 {
+            let p = run(&t, &[i]);
+            assert_eq!(t.unpack_all(p, &[i]), t.expected_products(&[i]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn exact_mode_wide_tuple_rejected() {
+        let l = Layout::for_bits(8).unwrap();
+        // 127 = 1 + 2*63 -> MW=63 (6 bits); three of them can't fit.
+        assert!(pack_exact(&l, &[127, 127, 127]).is_err());
+    }
+
+    #[test]
+    fn approx_mode_range_checked() {
+        let l = Layout::for_bits(8).unwrap();
+        // +128 admitted (closed range — approximation target of 127)
+        assert!(pack_approx(&l, &[128, 0, 0]).is_ok());
+        assert!(pack_approx(&l, &[129, 0, 0]).is_err());
+        assert!(pack_approx(&l, &[-129, 0, 0]).is_err());
+        assert!(pack_approx(&l, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn approximated_values_nearest() {
+        let l = Layout::for_bits(8).unwrap();
+        // 23 -> 22 (see manip tests), -23 -> -22.
+        let t = pack_approx(&l, &[23, -23, 44]).unwrap();
+        assert_eq!(t.values(), vec![22, -22, 44]);
+    }
+}

@@ -1,0 +1,362 @@
+//! WROM — the on-chip dictionary of packed tuples (paper §4/§5) and the
+//! off-chip index stream (the WRC compression, Table 3's `WRC` column).
+//!
+//! The A word and the per-slot (n, s, zero) shift controls depend only
+//! on the weight *magnitudes* — never on the input variable — so each
+//! distinct magnitude group is stored once in on-chip ROM. Off-chip
+//! memory (and the on-chip WMem) then stores, per group, only
+//! `{WROM address, sign bits}` in the paper's fixed formats:
+//!
+//! | bits | group k | raw bits | index format      | saving |
+//! |------|---------|----------|-------------------|--------|
+//! | 8    | 3       | 24       | 13 addr + 3 signs | 33 %   |
+//! | 6    | 4       | 24       | 14 addr + 4 signs | 25 %   |
+//! | 4    | 6       | 24       | 14 addr + 6 signs | 16.7 % |
+//!
+//! A *group* is the paper's k = multiplications/DSP. For 8-bit the
+//! group is one A-word (3 weight slots); for 6/4-bit a group spans 2/3
+//! A-words (kw = 2 weight slots each — the multi-input layouts,
+//! DESIGN.md §3) that the PE consumes over consecutive B-word batches.
+
+use super::layout::Layout;
+use super::tuple::{pack_approx, PackedTuple, Slot};
+use std::collections::HashMap;
+
+/// The paper's multiplications-per-DSP (= weights per off-chip index
+/// word) for a bit width.
+pub fn paper_group_size(v: u32) -> usize {
+    match v {
+        8 => 3,
+        6 => 4,
+        4 => 6,
+        _ => 3,
+    }
+}
+
+/// One ROM entry: everything the PE needs to run a magnitude group.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WromEntry {
+    /// The DSP A-port words, one per kw-sized chunk of the group
+    /// (paper: "most significant 24 bits of the ROM output are
+    /// connected to the A input").
+    pub a_words: Vec<u64>,
+    /// Per-weight shift controls used by the decompression hardware to
+    /// build the C word and by post-processing (n, s, zero).
+    pub slots: Vec<Slot>,
+}
+
+impl WromEntry {
+    /// ROM entry width in bits (for the Fig. 7 memory model): 25 bits
+    /// per A word + per slot (n, s: ceil(log2 v) each, zero flag: 1).
+    pub fn bits(&self, layout: &Layout) -> u32 {
+        let shift_bits = 64 - (layout.v as u64).leading_zeros();
+        self.a_words.len() as u32 * 25 + self.slots.len() as u32 * (2 * shift_bits + 1)
+    }
+}
+
+/// Key identifying a magnitude group (sign-stripped, zero-flagged),
+/// packed into a u128: 17 bits per slot (16-bit magnitude + zero flag),
+/// up to 6 slots. Avoids a Vec allocation + deep hash per intern —
+/// the Table 3 path interns millions of groups (EXPERIMENTS.md §Perf).
+type GroupKey = u128;
+
+fn group_key(slots: &[Slot]) -> GroupKey {
+    debug_assert!(slots.len() <= 7);
+    let mut key: u128 = 0;
+    for s in slots {
+        debug_assert!(s.magnitude < (1 << 16));
+        key = (key << 17) | ((s.zero as u128) << 16) | s.magnitude as u128;
+    }
+    key
+}
+
+/// The WROM builder: dedups magnitude groups, assigns addresses.
+#[derive(Clone, Debug)]
+pub struct Wrom {
+    pub layout: Layout,
+    /// Weights per off-chip index word (paper k: 3/4/6).
+    pub group_size: usize,
+    entries: Vec<WromEntry>,
+    index: HashMap<GroupKey, u32>,
+}
+
+/// The off-chip representation of a weight stream: per group, a WROM
+/// address plus the sign bits (paper §5: "a 16-bit value ... most
+/// significant 13 bits index the WROM, least significant 3 bits store
+/// the sign bits").
+#[derive(Clone, Debug)]
+pub struct WromIndexStream {
+    /// (rom_address, sign_bits) per group; sign bit j set = weight j of
+    /// the group negative.
+    pub tuples: Vec<(u32, u32)>,
+    /// Number of weights represented (tail group may be padded).
+    pub weight_count: usize,
+}
+
+impl Wrom {
+    pub fn new(layout: Layout) -> Self {
+        let group_size = paper_group_size(layout.v);
+        debug_assert_eq!(group_size % layout.kw(), 0);
+        Wrom {
+            layout,
+            group_size,
+            entries: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entry(&self, addr: u32) -> &WromEntry {
+        &self.entries[addr as usize]
+    }
+
+    /// Address width needed for the current entry count.
+    pub fn addr_bits(&self) -> u32 {
+        (usize::BITS - self.entries.len().saturating_sub(1).leading_zeros()).max(1)
+    }
+
+    /// Bits per off-chip group index in the paper's fixed format.
+    pub fn index_bits_fixed(&self) -> u32 {
+        match self.layout.v {
+            8 => 16, // 13 addr + 3 signs (3x8 = 24 -> 16: 33%)
+            6 => 18, // 14 addr + 4 signs (4x6 = 24 -> 18: 25%)
+            4 => 20, // 14 addr + 6 signs (6x4 = 24 -> 20: 16.7%)
+            _ => self.addr_bits() + self.group_size as u32,
+        }
+    }
+
+    /// The paper's maximum address space per format (§3.2: "8192, 16384
+    /// and 16384 for 8, 6 and 4-bit parameters").
+    pub fn paper_max_entries(&self) -> u64 {
+        1u64 << (self.index_bits_fixed() - self.group_size as u32)
+    }
+
+    /// Intern a signed weight group (len = group_size): returns
+    /// (rom_address, sign_bits) plus the packed per-A-word tuples.
+    pub fn intern(&mut self, weights: &[i64]) -> anyhow::Result<(u32, u32, Vec<PackedTuple>)> {
+        anyhow::ensure!(
+            weights.len() == self.group_size,
+            "group arity {} != {}",
+            weights.len(),
+            self.group_size
+        );
+        let packed: Vec<PackedTuple> = weights
+            .chunks(self.layout.kw())
+            .map(|chunk| pack_approx(&self.layout, chunk))
+            .collect::<anyhow::Result<_>>()?;
+        let slots: Vec<Slot> = packed.iter().flat_map(|t| t.slots.iter().copied()).collect();
+        let key = group_key(&slots);
+        let addr = match self.index.get(&key) {
+            Some(&a) => a,
+            None => {
+                let a = self.entries.len() as u32;
+                self.entries.push(WromEntry {
+                    a_words: packed.iter().map(|t| t.a_word).collect(),
+                    slots: slots
+                        .iter()
+                        .map(|s| Slot {
+                            negative: false, // ROM stores magnitudes only
+                            ..*s
+                        })
+                        .collect(),
+                });
+                self.index.insert(key, a);
+                a
+            }
+        };
+        let mut signs = 0u32;
+        for (j, s) in slots.iter().enumerate() {
+            if s.negative {
+                signs |= 1 << j;
+            }
+        }
+        Ok((addr, signs, packed))
+    }
+
+    /// Compress a full weight stream into the index stream, building the
+    /// ROM as a side effect. The stream is chunked into groups (tail
+    /// zero-padded), matching the weight-stationary loading order.
+    pub fn compress_stream(&mut self, weights: &[i64]) -> anyhow::Result<WromIndexStream> {
+        let g = self.group_size;
+        let mut tuples = Vec::with_capacity(weights.len().div_ceil(g));
+        for chunk in weights.chunks(g) {
+            let mut t: Vec<i64> = chunk.to_vec();
+            t.resize(g, 0);
+            let (addr, signs, _) = self.intern(&t)?;
+            tuples.push((addr, signs));
+        }
+        Ok(WromIndexStream {
+            tuples,
+            weight_count: weights.len(),
+        })
+    }
+
+    /// Reconstruct the (approximated) signed weights from an index
+    /// stream — the decompression path of the PE (paper Fig. 5).
+    pub fn decompress(&self, stream: &WromIndexStream) -> Vec<i64> {
+        let mut out = Vec::with_capacity(stream.weight_count);
+        for &(addr, signs) in &stream.tuples {
+            let e = self.entry(addr);
+            for (j, slot) in e.slots.iter().enumerate() {
+                if out.len() == stream.weight_count {
+                    break;
+                }
+                let mag = slot.magnitude as i64;
+                out.push(if signs >> j & 1 == 1 { -mag } else { mag });
+            }
+        }
+        out
+    }
+
+    /// Total ROM size in bits (Fig. 7's initial-overhead point).
+    pub fn rom_bits(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| e.bits(&self.layout) as u64)
+            .sum()
+    }
+
+    /// The raw cross-product bound on distinct magnitude groups (every
+    /// representable magnitude + zero, to the power of the group size).
+    /// Real networks use a tiny fraction of this — the measured counts
+    /// vs the paper's §3.2 claims are in `report::rom`.
+    pub fn max_entries(layout: &Layout) -> u64 {
+        let max_mag = 1u64 << (layout.c - 1);
+        let d = crate::manip::representable_magnitudes(max_mag).len() as u64 + 1;
+        d.pow(paper_group_size(layout.v) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wrom8() -> Wrom {
+        Wrom::new(Layout::for_bits(8).unwrap())
+    }
+
+    #[test]
+    fn group_sizes_match_paper() {
+        assert_eq!(paper_group_size(8), 3);
+        assert_eq!(paper_group_size(6), 4);
+        assert_eq!(paper_group_size(4), 6);
+        // and they are whole multiples of the layout's A-word capacity
+        for v in [4u32, 6, 8] {
+            let l = Layout::for_bits(v).unwrap();
+            assert_eq!(paper_group_size(v) % l.kw(), 0);
+        }
+    }
+
+    #[test]
+    fn intern_dedups_magnitudes_across_signs() {
+        let mut w = wrom8();
+        let (a1, s1, _) = w.intern(&[44, -3, 7]).unwrap();
+        let (a2, s2, _) = w.intern(&[-44, 3, 7]).unwrap();
+        assert_eq!(a1, a2, "same magnitudes share a ROM entry");
+        assert_ne!(s1, s2);
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn six_bit_entry_spans_two_a_words() {
+        let mut w = Wrom::new(Layout::for_bits(6).unwrap());
+        let (addr, _, packed) = w.intern(&[31, -17, 5, 0]).unwrap();
+        assert_eq!(packed.len(), 2);
+        assert_eq!(w.entry(addr).a_words.len(), 2);
+        assert_eq!(w.entry(addr).slots.len(), 4);
+    }
+
+    #[test]
+    fn round_trip_stream() {
+        let mut w = wrom8();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let ws: Vec<i64> = (0..1000).map(|_| rng.range_i64(-128, 127)).collect();
+        let stream = w.compress_stream(&ws).unwrap();
+        let back = w.decompress(&stream);
+        assert_eq!(back.len(), ws.len());
+        // Decompressed = approximated originals.
+        for (orig, dec) in ws.iter().zip(&back) {
+            match crate::manip::approximate_signed(*orig, 8) {
+                None => assert_eq!(*dec, 0),
+                Some((neg, a)) => {
+                    let expect = if neg { -(a.approx as i64) } else { a.approx as i64 };
+                    assert_eq!(*dec, expect, "orig={orig}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_stream_4bit() {
+        let mut w = Wrom::new(Layout::for_bits(4).unwrap());
+        let mut rng = crate::util::rng::Rng::new(4);
+        let ws: Vec<i64> = (0..997).map(|_| rng.range_i64(-8, 7)).collect();
+        let stream = w.compress_stream(&ws).unwrap();
+        // 4-bit weights are exact: decompression returns the originals.
+        assert_eq!(w.decompress(&stream), ws);
+    }
+
+    #[test]
+    fn paper_address_space_bounds() {
+        // §3.2: 8192 / 16384 / 16384 maximum entries.
+        assert_eq!(wrom8().paper_max_entries(), 8192);
+        assert_eq!(Wrom::new(Layout::for_bits(6).unwrap()).paper_max_entries(), 16384);
+        assert_eq!(Wrom::new(Layout::for_bits(4).unwrap()).paper_max_entries(), 16384);
+    }
+
+    #[test]
+    fn index_bits_guarantees() {
+        assert_eq!(wrom8().index_bits_fixed(), 16);
+        assert_eq!(Wrom::new(Layout::for_bits(6).unwrap()).index_bits_fixed(), 18);
+        assert_eq!(Wrom::new(Layout::for_bits(4).unwrap()).index_bits_fixed(), 20);
+    }
+
+    #[test]
+    fn addr_bits_grow() {
+        let mut w = wrom8();
+        assert_eq!(w.addr_bits(), 1);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..200 {
+            let t: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+            w.intern(&t).unwrap();
+        }
+        assert!(w.len() > 64);
+        assert!(w.addr_bits() >= 7);
+    }
+
+    #[test]
+    fn rom_entry_width() {
+        let mut w = wrom8();
+        w.intern(&[1, 2, 3]).unwrap();
+        // 25 (one A word) + 3 slots * (2*4 shift bits + 1 zero flag).
+        assert_eq!(w.entry(0).bits(&w.layout), 25 + 3 * 9);
+    }
+
+    #[test]
+    fn laplacian_network_fits_paper_address_space() {
+        // The §3.2 claim that matters downstream: a real network's
+        // distinct magnitude groups fit the 13-bit address space.
+        // Trained conv weights quantized per-tensor sit mostly within a
+        // few LSBs of zero (std ~ amax/20 => Laplace b ~ 5 LSB at
+        // 8-bit) — the regime in which the paper's simulations found
+        // <= 8192 distinct groups.
+        let mut w = wrom8();
+        let mut rng = crate::util::rng::Rng::new(77);
+        let ws: Vec<i64> = (0..120_000)
+            .map(|_| (rng.laplace(5.0)).round().clamp(-128.0, 127.0) as i64)
+            .collect();
+        w.compress_stream(&ws).unwrap();
+        assert!(
+            (w.len() as u64) < w.paper_max_entries(),
+            "{} entries exceed the paper's 8192 bound",
+            w.len()
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Report generators — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every generator returns a formatted text block that prints the
+//! paper's numbers next to ours, so `sdmm report all | tee` produces
+//! the EXPERIMENTS.md evidence directly. Generators are pure library
+//! calls — the same code paths the tests pin down.
+
+pub mod ablation;
+mod network;
+mod tables;
+
+pub use network::network_summary;
+pub use tables::*;
+
+/// Render every report in paper order.
+pub fn all(artifacts_dir: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&table1());
+    out.push_str(&table2(artifacts_dir));
+    out.push_str(&table3());
+    out.push_str(&table4());
+    out.push_str(&table5());
+    out.push_str(&table6());
+    out.push_str(&fig4());
+    out.push_str(&fig7());
+    out.push_str(&fig9());
+    out.push_str(&fig10());
+    out.push_str(&rom_bounds());
+    out.push_str(&network_summary());
+    out.push_str(&ablation::all());
+    out
+}

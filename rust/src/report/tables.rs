@@ -1,0 +1,463 @@
+//! The individual table/figure generators.
+
+use crate::cnn::accuracy::{classification_delta, weight_error_report};
+use crate::cnn::weights::synth_layer_weights;
+use crate::cnn::zoo::{Model, ModelKind};
+use crate::compress::wrc_compress;
+use crate::manip::representable_magnitudes;
+use crate::packing::{fine_tune_tuple, is_feasible_exact, Layout, Wrom};
+use crate::resources::area::array_area;
+use crate::resources::devices::{min_bram36, mp_256pe, Device, DPU_HIGH, DPU_LOW};
+use crate::resources::memory::MemoryAnalysis;
+use crate::resources::power::PowerModel;
+use crate::sa::{PeArch, SaConfig};
+use crate::util::rng::Rng;
+use std::fmt::Write;
+
+fn header(title: &str) -> String {
+    format!("\n==== {title} ====\n")
+}
+
+/// Table 1: MAC counts for the four zoo networks.
+pub fn table1() -> String {
+    let mut s = header("Table 1 — conv MACs (millions): paper vs exact layer tables");
+    let paper = [
+        (ModelKind::Alexnet, 666.0),
+        (ModelKind::Vgg16, 15300.0),
+        (ModelKind::GoogleNet, 1233.0),
+        (ModelKind::MobileNet, 568.0),
+    ];
+    let _ = writeln!(s, "{:<12} {:>10} {:>10} {:>8}", "model", "paper", "ours", "ratio");
+    for (kind, p) in paper {
+        let ours = Model::build(kind).conv_macs() as f64 / 1e6;
+        let _ = writeln!(s, "{:<12} {:>10.0} {:>10.1} {:>8.2}", kind.name(), p, ours, ours / p);
+    }
+    s.push_str(
+        "note: GoogleNet published conv-MAC counts vary (1.2-1.6G) with\n\
+         which inception branches are included; ours expands all branches.\n",
+    );
+    s
+}
+
+/// Table 2: error increase from approximation + fine-tuning.
+pub fn table2(artifacts_dir: &str) -> String {
+    let mut s = header("Table 2 — error increase (%) from approximation (W,I sweep)");
+    s.push_str("paper: |delta| <= 0.38 pp across the whole grid; exact zeros for 4-bit W\n\n");
+
+    // (a) weight-level: distribution-matched AlexNet/VGG-16 shapes
+    s.push_str("(a) weight-level approximation error (exact layer shapes, Laplacian fits):\n");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>6} {:>12} {:>14} {:>12}",
+        "model", "Wbits", "changed%", "mean |rel err|", "max abs err"
+    );
+    for kind in [ModelKind::Alexnet, ModelKind::Vgg16] {
+        for bits in [8u32, 6, 4] {
+            let st = weight_error_report(kind, bits, 42);
+            let _ = writeln!(
+                s,
+                "{:<10} {:>6} {:>11.1}% {:>14.5} {:>12.1}",
+                kind.name(),
+                bits,
+                st.changed_fraction() * 100.0,
+                st.rel_error.mean(),
+                if st.changed == 0 { 0.0 } else { st.abs_error.max() },
+            );
+        }
+    }
+
+    // (b) task-level: integer CNN, 9 (W,I) combos
+    s.push_str("\n(b) task-level error increase (integer tiny-CNN, synthetic task):\n");
+    let _ = writeln!(s, "{:>6} {:>6} {:>10} {:>10} {:>10}", "W", "I", "err(q)%", "err(a)%", "delta pp");
+    for w in [8u32, 6, 4] {
+        for i in [8u32, 6, 4] {
+            let d = classification_delta(w, i, 250, 7);
+            let _ = writeln!(
+                s,
+                "{:>6} {:>6} {:>10.2} {:>10.2} {:>+10.2}",
+                w, i, d.err_quant, d.err_approx, d.delta_pp
+            );
+        }
+    }
+
+    // (c) end-to-end through PJRT when artifacts are present
+    if crate::runtime::artifacts_available(artifacts_dir) {
+        s.push_str("\n(c) end-to-end (trained CNN via PJRT, eval split):\n");
+        match table2_e2e(artifacts_dir) {
+            Ok(rows) => {
+                let _ = writeln!(s, "{:>6} {:>10} {:>10} {:>10}", "W", "err(q)%", "err(a)%", "delta pp");
+                for (w, eq, ea) in rows {
+                    let _ = writeln!(s, "{:>6} {:>10.2} {:>10.2} {:>+10.2}", w, eq, ea, ea - eq);
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(s, "  (PJRT path failed: {e})");
+            }
+        }
+    } else {
+        s.push_str("\n(c) end-to-end: SKIPPED (artifacts/ missing — run `make artifacts`)\n");
+    }
+    s
+}
+
+/// The PJRT end-to-end Table 2 rows: (w_bits, err_quant, err_approx).
+pub fn table2_e2e(artifacts_dir: &str) -> anyhow::Result<Vec<(u32, f64, f64)>> {
+    use crate::runtime::{exec, Artifacts, CnnModel, WeightMode};
+    let a = Artifacts::load(artifacts_dir)?;
+    let client = exec::Client::cpu()?;
+    let model = CnnModel::load(&client, &a)?;
+    let xs = a.f32("eval_x")?;
+    let ys = a.i32("eval_y")?;
+    let item = model.input_hw * model.input_hw;
+    let batches = (ys.len() / model.batch).min(16);
+    let mut rows = Vec::new();
+    for w_bits in [8u32, 6, 4] {
+        let mut errs = [0usize; 2];
+        for (mi, mode) in [
+            WeightMode::Quantized { w_bits },
+            WeightMode::Approximated { w_bits },
+        ]
+        .iter()
+        .enumerate()
+        {
+            let staged = model.stage(*mode)?;
+            let mut wrong = 0usize;
+            for b in 0..batches {
+                let x = &xs[b * model.batch * item..(b + 1) * model.batch * item];
+                let logits = model.infer(&staged, x)?;
+                for (i, p) in model.argmax_rows(&logits).iter().enumerate() {
+                    if *p as i32 != ys[b * model.batch + i] {
+                        wrong += 1;
+                    }
+                }
+            }
+            errs[mi] = wrong;
+        }
+        let n = (batches * model.batch) as f64;
+        rows.push((w_bits, errs[0] as f64 / n * 100.0, errs[1] as f64 / n * 100.0));
+    }
+    Ok(rows)
+}
+
+/// Table 3: compression rates for conv layers.
+pub fn table3() -> String {
+    let mut s = header("Table 3 — compression rates (conv layers)");
+    s.push_str(
+        "paper (8,8): H 14.65/14.18  WRC 66.6  WRC+H 10.80/10.17  P+WRC+H 8.96/8.49 (%)\n\
+         weights here are distribution-matched synthetics — the paper's\n\
+         trained nets are peakier, so H-column magnitudes differ; the WRC\n\
+         column is data-independent and exact, and orderings must match.\n\n",
+    );
+    let _ = writeln!(
+        s,
+        "{:<10} {:>6} {:>9} {:>9} {:>9} {:>11} {:>9}",
+        "model", "bits", "H%", "WRC%", "WRC+H%", "P+WRC+H%", "WROM"
+    );
+    for kind in [ModelKind::Alexnet, ModelKind::Vgg16] {
+        let model = Model::build(kind);
+        for bits in [8u32, 6, 4] {
+            let layout = Layout::for_bits(bits).unwrap();
+            // distribution-matched, subsampled for speed
+            let mut rng = Rng::new(9);
+            let mut ws: Vec<i64> = Vec::new();
+            for layer in &model.convs {
+                let wf = synth_layer_weights(layer, &mut rng);
+                let (q, _) = crate::cnn::quant::quantize_symmetric(&wf, bits);
+                let stride = (q.len() / 60_000).max(1);
+                ws.extend(q.iter().step_by(stride));
+            }
+            let r = wrc_compress(&layout, &ws, 0.65).unwrap();
+            let _ = writeln!(
+                s,
+                "{:<10} {:>6} {:>9.2} {:>9.2} {:>9.2} {:>11.2} {:>9}",
+                kind.name(),
+                bits,
+                r.huffman_only.percent(),
+                r.wrc.percent(),
+                r.wrc_huffman.percent(),
+                r.prune_wrc_huffman.percent(),
+                r.wrom_entries,
+            );
+        }
+    }
+    s
+}
+
+/// Table 4: 12×12 MP implementation results.
+pub fn table4() -> String {
+    let mut s = header("Table 4 — 12×12 MP systolic array (LUT/DFF/DSP/BRAM)");
+    let paper = [
+        (4u32, 432u64, 576u64, 1152u64, 5732u64, 24u64, 54.0),
+        (6, 972, 2016, 1728, 7667, 36, 68.5),
+        (8, 1680, 3769, 2160, 9244, 48, 69.0),
+    ];
+    let _ = writeln!(
+        s,
+        "{:>5} {:>16} {:>16} {:>16} {:>14} {:>9} {:>12}",
+        "bits", "decomp LUT", "post-p LUT", "accum LUT", "DFF", "DSP", "BRAM36"
+    );
+    for (v, d, p, ac, ff, dsp, br) in paper {
+        let a = array_area(&SaConfig::paper_prototype(v, PeArch::MultiPack));
+        let _ = writeln!(
+            s,
+            "{v:>5} {:>7}/{d:<8} {:>7}/{p:<8} {:>7}/{ac:<8} {:>6}/{ff:<7} {:>4}/{dsp:<4} {:>5}/{br:<6}",
+            a.lut_decompress, a.lut_postprocess, a.lut_accumulate, a.dff, a.dsp, a.bram36,
+        );
+    }
+    s.push_str("(format: ours/paper; model calibrated on this table, see DESIGN.md)\n");
+    s
+}
+
+/// Table 5: 1M / 2M / MP comparison.
+pub fn table5() -> String {
+    let mut s = header("Table 5 — PE architecture comparison (12×12)");
+    let rows: [(u32, PeArch, u64, u64, u64, f64); 7] = [
+        (4, PeArch::OneMac, 235, 10167, 144, 48.0),
+        (4, PeArch::MultiPack, 2356, 5732, 24, 54.0),
+        (6, PeArch::OneMac, 382, 11189, 144, 69.5),
+        (6, PeArch::MultiPack, 5459, 7667, 36, 68.5),
+        (8, PeArch::OneMac, 475, 11973, 144, 92.0),
+        (8, PeArch::TwoMult, 2773, 8343, 72, 92.0),
+        (8, PeArch::MultiPack, 8217, 9244, 48, 69.0),
+    ];
+    let _ = writeln!(
+        s,
+        "{:>5} {:>5} {:>14} {:>14} {:>10} {:>12}",
+        "bits", "arch", "LUT", "DFF", "DSP", "BRAM36"
+    );
+    for (v, arch, lut, dff, dsp, bram) in rows {
+        let a = array_area(&SaConfig::paper_prototype(v, arch));
+        let _ = writeln!(
+            s,
+            "{v:>5} {:>5} {:>6}/{lut:<7} {:>6}/{dff:<7} {:>4}/{dsp:<5} {:>5}/{bram:<6}",
+            arch.name(),
+            a.lut_total(),
+            a.dff,
+            a.dsp,
+            a.bram36,
+        );
+    }
+    let m1 = array_area(&SaConfig::paper_prototype(8, PeArch::OneMac));
+    let mp = array_area(&SaConfig::paper_prototype(8, PeArch::MultiPack));
+    let _ = writeln!(
+        s,
+        "DSP reduction MP vs 1M: {:.1}% (paper: 66.6% @8b, 75% @6b, 83.3% @4b)",
+        (1.0 - mp.dsp as f64 / m1.dsp as f64) * 100.0
+    );
+    s
+}
+
+/// Table 6: MP (256 PEs) vs the Xilinx DPU.
+pub fn table6() -> String {
+    let mut s = header("Table 6 — 256-PE MP vs Xilinx DPU");
+    let (cfg, area) = mp_256pe();
+    let _ = writeln!(
+        s,
+        "{:<22} {:>8} {:>8} {:>6} {:>8} {:>10}",
+        "impl", "LUT", "DFF", "DSP", "BRAM36", "peak GOPs"
+    );
+    for d in [DPU_HIGH, DPU_LOW] {
+        let _ = writeln!(
+            s,
+            "{:<22} {:>8} {:>8} {:>6} {:>8} {:>10}",
+            d.name, d.luts, d.ffs, d.dsps, d.bram36, d.peak_gops
+        );
+    }
+    let _ = writeln!(
+        s,
+        "{:<22} {:>8} {:>8} {:>6} {:>8} {:>10}",
+        "MP 256PE (model)",
+        area.lut_total(),
+        area.dff,
+        area.dsp,
+        area.bram36,
+        cfg.peak_gops()
+    );
+    s.push_str("paper MP row: LUT 11562, DFF 13882, DSP 88, BRAM 76, 128 GOPs\n");
+    s
+}
+
+/// Fig. 4: fine-tuning + approximation shrink the unique-tuple set.
+pub fn fig4() -> String {
+    let mut s = header("Fig. 4 — tuple set reduction (fine-tune, then approximate)");
+    let layout = Layout::for_bits(8).unwrap();
+    // ten 3-tuples in the spirit of the figure: wide-MW members force
+    // fine-tuning, and the whole set collapses onto two approximated
+    // groups — (22,44,88) and (13,26,52) — exactly the paper's 10->..->2
+    // mechanism.
+    let tuples: Vec<Vec<i64>> = vec![
+        vec![23, 45, 89],
+        vec![22, 44, 88],
+        vec![23, 44, 90],
+        vec![22, 45, 87],
+        vec![23, 45, 88],
+        vec![13, 27, 53],
+        vec![13, 26, 52],
+        vec![13, 27, 52],
+        vec![13, 26, 53],
+        vec![13, 27, 54],
+    ];
+    let infeasible = tuples
+        .iter()
+        .filter(|t| !is_feasible_exact(&layout, t))
+        .count();
+    let tuned: Vec<Vec<i64>> = tuples
+        .iter()
+        .map(|t| fine_tune_tuple(&layout, t).tuned)
+        .collect();
+    let uniq_tuned: std::collections::BTreeSet<_> = tuned.iter().cloned().collect();
+    let mut wrom = Wrom::new(layout);
+    for t in &tuples {
+        wrom.intern(t).unwrap();
+    }
+    let _ = writeln!(s, "tuples: {}", tuples.len());
+    let _ = writeln!(s, "infeasible before fine-tuning (exact mode): {infeasible}");
+    let _ = writeln!(s, "unique after fine-tuning: {}", uniq_tuned.len());
+    let _ = writeln!(
+        s,
+        "unique after approximation (WROM entries): {} (paper's example: 10 -> 7 -> 2)",
+        wrom.len()
+    );
+    s
+}
+
+/// Fig. 7: on-chip memory break-even.
+pub fn fig7() -> String {
+    let mut s = header("Fig. 7 — parameters stored vs on-chip memory budget");
+    for v in [8u32, 6, 4] {
+        let m = MemoryAnalysis::for_bits(v);
+        let _ = writeln!(
+            s,
+            "{v}-bit: WROM overhead {:.1} KB, break-even {:.1} KB, asymptotic gain {:.2}x",
+            m.wrom_bits() as f64 / 8192.0,
+            m.break_even_bits() as f64 / 8192.0,
+            m.group as f64 * v as f64 / m.index_bits as f64,
+        );
+        let _ = writeln!(s, "{:>10} {:>14} {:>14}", "KB", "traditional", "MP (WRC)");
+        for (kb, t, p) in m.sweep(&[16, 32, 64, 128, 256, 512, 1024]) {
+            let _ = writeln!(s, "{kb:>10} {t:>14} {p:>14}");
+        }
+    }
+    s
+}
+
+/// Fig. 9: Zybo Z7-10 utilization.
+pub fn fig9() -> String {
+    let mut s = header("Fig. 9 — Zybo Z7-10 resource utilization (8-bit)");
+    let dev = Device::ZYBO_Z7_10;
+    let _ = writeln!(
+        s,
+        "{:<6} {:>8} {:>8} {:>8} {:>10} {:>6}",
+        "arch", "LUT%", "FF%", "DSP%", "minBRAM%", "fits"
+    );
+    for arch in [PeArch::OneMac, PeArch::TwoMult, PeArch::MultiPack] {
+        let cfg = SaConfig::paper_prototype(8, arch);
+        let a = array_area(&cfg);
+        let (l, f, d, _) = dev.utilization(&a);
+        let mb = min_bram36(&cfg) / dev.bram36;
+        let _ = writeln!(
+            s,
+            "{:<6} {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}% {:>6}",
+            arch.name(),
+            l * 100.0,
+            f * 100.0,
+            d * 100.0,
+            mb * 100.0,
+            dev.fits_resized(&a, min_bram36(&cfg)),
+        );
+    }
+    s.push_str("paper: 1M does not fit (180% DSP); MP fits at 60% DSP\n");
+    s
+}
+
+/// Fig. 10: power comparison.
+pub fn fig10() -> String {
+    let mut s = header("Fig. 10 — power reduction of MP vs 1M");
+    let m = PowerModel::default();
+    let paper = [(4u32, 64.1), (6, 54.8), (8, 36.0)];
+    let _ = writeln!(s, "{:>6} {:>12} {:>12}", "bits", "paper", "model");
+    for (v, p) in paper {
+        let _ = writeln!(s, "{v:>6} {p:>11.1}% {:>11.1}%", m.reduction_percent(v));
+    }
+    s.push_str("(model calibrated on the 8-bit pair; 6/4-bit are predictions)\n");
+    s
+}
+
+/// §3.2 ROM bounds + the 128/256 exactness claim.
+pub fn rom_bounds() -> String {
+    let mut s = header("§3.2 — representable values & WROM bounds");
+    let mags = representable_magnitudes(128);
+    // negatives: all 64 magnitudes (incl. -128); positives: 63 (128 is
+    // out of range); plus zero = 128 exact values.
+    let exact = mags.len() + mags.iter().filter(|&&m| m <= 127).count() + 1;
+    let _ = writeln!(
+        s,
+        "8-bit signed values exactly representable: {exact} of 256 (paper: 128)"
+    );
+    let _ = writeln!(
+        s,
+        "representable magnitudes: 8-bit {}, 6-bit {}, 4-bit {} (4-bit complete => zero error)",
+        representable_magnitudes(128).len(),
+        representable_magnitudes(32).len(),
+        representable_magnitudes(8).len()
+    );
+    for v in [8u32, 6, 4] {
+        let layout = Layout::for_bits(v).unwrap();
+        let mut wrom = Wrom::new(layout);
+        // distribution-matched network stream: the full synthetic
+        // AlexNet conv weights (heavy-tailed, per-tensor quantized)
+        let model = Model::build(ModelKind::Alexnet);
+        let qs = crate::cnn::weights::synth_model_quantized(&model, v, 4);
+        let mut n = 0usize;
+        for layer in &qs {
+            wrom.compress_stream(layer).unwrap();
+            n += layer.len();
+        }
+        let _ = writeln!(
+            s,
+            "{v}-bit WROM after full AlexNet conv stream ({n} weights): {} entries (paper bound {})",
+            wrom.len(),
+            wrom.paper_max_entries()
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders() {
+        let t = table1();
+        assert!(t.contains("Alexnet"));
+        assert!(t.contains("MobileNet"));
+    }
+
+    #[test]
+    fn table4_and_5_render() {
+        let t4 = table4();
+        assert!(t4.contains("1680"));
+        let t5 = table5();
+        assert!(t5.contains("66.6") || t5.contains("66.7"));
+    }
+
+    #[test]
+    fn fig4_reduction_happens() {
+        let f = fig4();
+        assert!(f.contains("unique after approximation"));
+    }
+
+    #[test]
+    fn fig10_renders_three_rows() {
+        let f = fig10();
+        assert!(f.contains("64.1"));
+        assert!(f.contains("36.0"));
+    }
+
+    #[test]
+    fn rom_bounds_contains_claims() {
+        let r = rom_bounds();
+        assert!(r.contains("of 256"));
+    }
+}

@@ -1,0 +1,143 @@
+//! On-chip memory analysis — the Fig. 7 reproduction.
+//!
+//! Traditional hardware stores raw c-bit weights in WMem. The MP
+//! hardware stores (a) the WROM dictionary once (the "initial
+//! overhead" — the non-zero intercept in Fig. 7) and (b) per weight
+//! group only the index word in WMem. Above a break-even memory size
+//! the MP representation stores *more* parameters in the same on-chip
+//! budget; below it the WROM overhead dominates.
+
+use crate::packing::wrom::paper_group_size;
+
+/// Fig. 7 model for one bit width.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryAnalysis {
+    pub v_bits: u32,
+    /// WROM entries provisioned (the paper's address-space bound).
+    pub wrom_entries: u64,
+    /// Bits per WROM entry.
+    pub wrom_entry_bits: u64,
+    /// Index word bits (13+3 / 14+4 / 14+6).
+    pub index_bits: u64,
+    pub group: u64,
+}
+
+impl MemoryAnalysis {
+    pub fn for_bits(v_bits: u32) -> MemoryAnalysis {
+        let group = paper_group_size(v_bits) as u64;
+        let (entries, index_bits) = match v_bits {
+            8 => (8192, 16),
+            6 => (16384, 18),
+            4 => (16384, 20),
+            _ => (8192, 16),
+        };
+        // entry: one 25-bit A word per kw-chunk + per-slot (n, s, zero).
+        let shift_bits = 64 - (v_bits as u64).leading_zeros() as u64;
+        let kw = match v_bits {
+            8 => 3,
+            _ => 2,
+        };
+        let a_words = group / kw;
+        let entry_bits = a_words * 25 + group * (2 * shift_bits + 1);
+        MemoryAnalysis {
+            v_bits,
+            wrom_entries: entries,
+            wrom_entry_bits: entry_bits,
+            index_bits,
+            group,
+        }
+    }
+
+    /// Fixed WROM overhead in bits.
+    pub fn wrom_bits(&self) -> u64 {
+        self.wrom_entries * self.wrom_entry_bits
+    }
+
+    /// Parameters a *traditional* design stores in `budget_bits`.
+    pub fn params_traditional(&self, budget_bits: u64) -> u64 {
+        budget_bits / self.v_bits as u64
+    }
+
+    /// Parameters the MP design stores in `budget_bits` (WROM paid
+    /// first, then index words).
+    pub fn params_mp(&self, budget_bits: u64) -> u64 {
+        let left = budget_bits.saturating_sub(self.wrom_bits());
+        left / self.index_bits * self.group
+    }
+
+    /// The break-even on-chip size (bits) above which MP stores more.
+    pub fn break_even_bits(&self) -> u64 {
+        // params_mp(B) = params_trad(B)
+        // (B - W)/I * g = B / v  =>  B (g/I - 1/v) = W g / I
+        let g = self.group as f64;
+        let i = self.index_bits as f64;
+        let v = self.v_bits as f64;
+        let w = self.wrom_bits() as f64;
+        let denom = g / i - 1.0 / v;
+        assert!(denom > 0.0, "MP must asymptotically win");
+        (w * g / i / denom).ceil() as u64
+    }
+
+    /// Sample the two curves for a report sweep (sizes in KB).
+    pub fn sweep(&self, sizes_kb: &[u64]) -> Vec<(u64, u64, u64)> {
+        sizes_kb
+            .iter()
+            .map(|&kb| {
+                let bits = kb * 8 * 1024;
+                (kb, self.params_traditional(bits), self.params_mp(bits))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrom_overhead_is_initial_point() {
+        let m = MemoryAnalysis::for_bits(8);
+        // below the WROM size, MP stores nothing
+        assert_eq!(m.params_mp(m.wrom_bits()), 0);
+        assert!(m.params_traditional(m.wrom_bits()) > 0);
+    }
+
+    #[test]
+    fn mp_wins_above_break_even() {
+        for v in [4u32, 6, 8] {
+            let m = MemoryAnalysis::for_bits(v);
+            let be = m.break_even_bits();
+            let below = be / 2;
+            let above = be * 2;
+            assert!(
+                m.params_mp(below) <= m.params_traditional(below),
+                "v={v} below break-even"
+            );
+            assert!(
+                m.params_mp(above) > m.params_traditional(above),
+                "v={v} above break-even"
+            );
+        }
+    }
+
+    #[test]
+    fn asymptotic_ratio_matches_wrc() {
+        // For large budgets the ratio approaches c·g/index = 24/16 = 1.5
+        // (8-bit) — the same 33% WRC saving.
+        let m = MemoryAnalysis::for_bits(8);
+        let big = 1u64 << 33;
+        let ratio = m.params_mp(big) as f64 / m.params_traditional(big) as f64;
+        assert!((ratio - 1.5).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn break_even_in_plausible_range() {
+        // Fig. 7 places the crossover within on-chip scales (tens of
+        // KB–few MB).
+        for v in [4u32, 6, 8] {
+            let be = MemoryAnalysis::for_bits(v).break_even_bits();
+            let kb = be / 8 / 1024;
+            assert!((8..8192).contains(&kb), "v={v} break-even {kb} KB");
+        }
+    }
+}

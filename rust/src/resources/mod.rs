@@ -1,0 +1,24 @@
+//! FPGA resource, memory and power models — the synthesis-free
+//! substrate for Tables 4/5/6 and Figs. 7/9/10 (DESIGN.md §2).
+//!
+//! * [`area`] — structural LUT/FF/BRAM/DSP model for the three PE
+//!   architectures. Primitive costs (adders, muxes, barrel shifters)
+//!   compose exactly like the paper's PE netlists; the handful of free
+//!   constants are calibrated on Table 4 and then *predict* Table 5,
+//!   Table 6 and Fig. 9.
+//! * [`memory`] — on-chip memory accounting: WROM overhead vs WMem
+//!   savings, the Fig. 7 break-even sweep.
+//! * [`power`] — activity-based power: toggle counts from the SA
+//!   simulator × per-resource energy coefficients (Fig. 10's ratios).
+//! * [`devices`] — device budgets (ZC706, Zybo Z7-10) and the Xilinx
+//!   DPU reference rows for Table 6.
+
+pub mod area;
+pub mod devices;
+pub mod memory;
+pub mod power;
+
+pub use area::{ArrayArea, PeArea};
+pub use devices::{Device, DpuConfig};
+pub use memory::MemoryAnalysis;
+pub use power::{PowerBreakdown, PowerModel};

@@ -1,0 +1,151 @@
+//! Activity-based power model — the Fig. 10 reproduction.
+//!
+//! The paper estimates power with Vivado from post-implementation SAIF
+//! activity; the claim is a *ratio*: MP consumes 64.1% / 54.8% / 36%
+//! less than 1M for 4/6/8-bit MAC blocks. The mechanism: one DSP op
+//! carries k multiplications (dynamic DSP energy ÷ k), paid for with
+//! LUT adders + decompression toggles, and narrower off-chip/WMem
+//! traffic.
+//!
+//! Coefficients are relative energies per toggled primitive (28 nm
+//! Zynq-class, normalized to the LUT toggle = 1): the DSP op cost and
+//! the static share are the two calibration constants; they are fitted
+//! on Fig. 10's 8-bit pair and then *predict* the 6/4-bit ratios.
+
+use super::area::pe_area;
+use crate::sa::PeArch;
+
+/// Relative energy coefficients (per event).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// One DSP48 multiply-add op (toggling the full 25×18 datapath).
+    pub e_dsp_op: f64,
+    /// One LUT output toggle.
+    pub e_lut: f64,
+    /// One DFF clock+data toggle.
+    pub e_dff: f64,
+    /// Activity factor of the LUT fabric (fraction toggling per cycle).
+    pub alpha: f64,
+    /// Static + clock-tree share of a MAC block's power (fraction of
+    /// the 1M total).
+    pub static_share: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            // Calibrated on Fig. 10's 8-bit pair (MP = 64% of 1M):
+            // DSP48E1 dynamic ≈ 60 LUT-toggle equivalents per op.
+            e_dsp_op: 60.0,
+            e_lut: 1.0,
+            e_dff: 0.4,
+            alpha: 0.25,
+            static_share: 0.18,
+        }
+    }
+}
+
+/// Per-architecture power breakdown for a block computing k parallel
+/// MACs (the paper's Fig. 10 experiment: 6/4/3 MAC blocks for 4/6/8-bit
+/// so both architectures compute the same work per cycle).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerBreakdown {
+    pub dsp: f64,
+    pub lut: f64,
+    pub dff: f64,
+    pub statics: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dsp + self.lut + self.dff + self.statics
+    }
+}
+
+impl PowerModel {
+    /// Relative power of a k-MAC block per cycle for an architecture
+    /// (k = the MP multiplies/DSP at this width, so both architectures
+    /// do identical work per cycle, as in the paper's Fig. 10 setup).
+    pub fn mac_block(&self, v_bits: u32, arch: PeArch) -> PowerBreakdown {
+        let k = PeArch::MultiPack.mults_per_dsp(v_bits) as f64;
+        // number of DSP blocks in the k-MAC block
+        let blocks = match arch {
+            PeArch::OneMac => k,
+            PeArch::TwoMult => k / 2.0,
+            PeArch::MultiPack => 1.0,
+        };
+        let pe = pe_area(v_bits, arch);
+        let luts = (pe.lut_decompress + pe.lut_postprocess + pe.lut_accumulate) as f64 * blocks
+            / if arch == PeArch::MultiPack { 1.0 } else { 1.0 };
+        let dffs = pe.dff as f64 * blocks;
+        let dsp = blocks * self.e_dsp_op * (v_bits as f64 / 8.0).powf(0.5);
+        let lut = luts * self.alpha * self.e_lut;
+        let dff = dffs * self.alpha * self.e_dff;
+        // static share referenced to the 1M block of the same k
+        let one_mac_dyn = k * self.e_dsp_op * (v_bits as f64 / 8.0).powf(0.5)
+            + k * pe_area(v_bits, PeArch::OneMac).dff as f64 * self.alpha * self.e_dff;
+        let statics = self.static_share * one_mac_dyn / (1.0 - self.static_share);
+        PowerBreakdown {
+            dsp,
+            lut,
+            dff,
+            statics,
+        }
+    }
+
+    /// Fig. 10's metric: percent power reduction of MP vs 1M at a bit
+    /// width.
+    pub fn reduction_percent(&self, v_bits: u32) -> f64 {
+        let mp = self.mac_block(v_bits, PeArch::MultiPack).total();
+        let m1 = self.mac_block(v_bits, PeArch::OneMac).total();
+        (1.0 - mp / m1) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_ordering() {
+        // Paper Fig. 10: reductions grow as bit width shrinks:
+        // 36% (8-bit) < 54.8% (6-bit) < 64.1% (4-bit).
+        let m = PowerModel::default();
+        let r8 = m.reduction_percent(8);
+        let r6 = m.reduction_percent(6);
+        let r4 = m.reduction_percent(4);
+        assert!(r8 < r6 && r6 < r4, "{r8} {r6} {r4}");
+    }
+
+    #[test]
+    fn fig10_magnitudes() {
+        // Within ±12 percentage points of the paper's bars (the model
+        // is calibrated on the 8-bit pair, 6/4-bit are predictions).
+        let m = PowerModel::default();
+        assert!((m.reduction_percent(8) - 36.0).abs() < 12.0, "{}", m.reduction_percent(8));
+        assert!((m.reduction_percent(6) - 54.8).abs() < 12.0, "{}", m.reduction_percent(6));
+        assert!((m.reduction_percent(4) - 64.1).abs() < 12.0, "{}", m.reduction_percent(4));
+    }
+
+    #[test]
+    fn mp_dsp_energy_divided_by_k() {
+        let m = PowerModel::default();
+        let mp = m.mac_block(8, PeArch::MultiPack);
+        let m1 = m.mac_block(8, PeArch::OneMac);
+        assert!((m1.dsp / mp.dsp - 3.0).abs() < 1e-9);
+        // and MP pays more LUT power
+        assert!(mp.lut > m1.lut);
+    }
+
+    #[test]
+    fn breakdown_positive() {
+        let m = PowerModel::default();
+        for v in [4u32, 6, 8] {
+            for arch in [PeArch::OneMac, PeArch::MultiPack] {
+                let b = m.mac_block(v, arch);
+                assert!(b.total() > 0.0);
+                assert!(b.dsp > 0.0 && b.statics > 0.0);
+            }
+        }
+    }
+}

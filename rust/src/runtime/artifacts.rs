@@ -1,0 +1,212 @@
+//! Artifact reader: manifest.json + weights.bin (the custom binary
+//! format written by python/compile/aot.py::BinWriter).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor in weights.bin.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+impl TensorEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Loaded artifact directory.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    tensors: HashMap<String, TensorEntry>,
+    blob: Vec<u8>,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let weights_name = manifest
+            .get("weights")
+            .and_then(|j| j.as_str())
+            .unwrap_or("weights.bin");
+        let blob = std::fs::read(dir.join(weights_name))
+            .with_context(|| format!("reading {weights_name}"))?;
+        let mut tensors = HashMap::new();
+        for t in manifest
+            .get("tensors")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing tensors[]"))?
+        {
+            let entry = TensorEntry {
+                name: t
+                    .get("name")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                dtype: t
+                    .get("dtype")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(|j| j.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                offset: t.get("offset").and_then(|j| j.as_usize()).unwrap_or(0),
+                bytes: t.get("bytes").and_then(|j| j.as_usize()).unwrap_or(0),
+            };
+            tensors.insert(entry.name.clone(), entry);
+        }
+        Ok(Artifacts {
+            dir,
+            manifest,
+            tensors,
+            blob,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor {name:?} not in manifest"))
+    }
+
+    /// Read an f32 tensor by name.
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        let e = self.entry(name)?;
+        if e.dtype != "f32" {
+            bail!("tensor {name} is {}, wanted f32", e.dtype);
+        }
+        Ok(self.blob[e.offset..e.offset + e.bytes]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Read an i32 tensor by name.
+    pub fn i32(&self, name: &str) -> Result<Vec<i32>> {
+        let e = self.entry(name)?;
+        if e.dtype != "i32" {
+            bail!("tensor {name} is {}, wanted i32", e.dtype);
+        }
+        Ok(self.blob[e.offset..e.offset + e.bytes]
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn shape(&self, name: &str) -> Result<Vec<usize>> {
+        Ok(self.entry(name)?.shape.clone())
+    }
+
+    /// Path of an HLO module listed in the manifest `hlo` table.
+    pub fn hlo_path(&self, key: &str) -> Result<PathBuf> {
+        let name = self
+            .manifest
+            .get("hlo")
+            .and_then(|h| h.get(key))
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("manifest hlo.{key} missing"))?;
+        Ok(self.dir.join(name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.manifest
+            .get(key)
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("manifest {key} missing"))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.manifest.get(key).and_then(|j| j.as_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a synthetic artifact dir to test the reader without PJRT.
+    fn fake_dir() -> tempdir::TempDirLite {
+        let d = tempdir::TempDirLite::new("sdmm-artifacts-test");
+        let blob: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .chain([7i32, -9].iter().flat_map(|i| i.to_le_bytes()))
+            .collect();
+        std::fs::write(d.path().join("weights.bin"), &blob).unwrap();
+        std::fs::write(
+            d.path().join("manifest.json"),
+            r#"{"weights":"weights.bin","serve_batch":16,
+                "hlo":{"cnn_fwd":"cnn_fwd.hlo.txt"},
+                "tensors":[
+                 {"name":"a","dtype":"f32","shape":[3],"offset":0,"bytes":12},
+                 {"name":"b","dtype":"i32","shape":[2],"offset":12,"bytes":8}]}"#,
+        )
+        .unwrap();
+        d
+    }
+
+    #[test]
+    fn reads_tensors() {
+        let d = fake_dir();
+        let a = Artifacts::load(d.path()).unwrap();
+        assert_eq!(a.f32("a").unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(a.i32("b").unwrap(), vec![7, -9]);
+        assert_eq!(a.shape("a").unwrap(), vec![3]);
+        assert_eq!(a.meta_usize("serve_batch").unwrap(), 16);
+        assert!(a.hlo_path("cnn_fwd").unwrap().ends_with("cnn_fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let d = fake_dir();
+        let a = Artifacts::load(d.path()).unwrap();
+        assert!(a.f32("b").is_err());
+        assert!(a.i32("a").is_err());
+        assert!(a.f32("nope").is_err());
+    }
+
+    /// Minimal tempdir (no external crates): mkdir under std::env::temp_dir.
+    mod tempdir {
+        pub struct TempDirLite(std::path::PathBuf);
+        impl TempDirLite {
+            pub fn new(prefix: &str) -> Self {
+                let p = std::env::temp_dir().join(format!(
+                    "{prefix}-{}-{:?}",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                let _ = std::fs::remove_dir_all(&p);
+                std::fs::create_dir_all(&p).unwrap();
+                TempDirLite(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDirLite {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+}

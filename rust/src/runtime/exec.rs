@@ -1,0 +1,97 @@
+//! One compiled HLO module on the PJRT CPU client.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The client is shared (PJRT clients are
+//! heavyweight); executables are cheap handles.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Client(Arc<xla::PjRtClient>);
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        Ok(Client(Arc::new(
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        )))
+    }
+
+    pub fn platform(&self) -> String {
+        self.0.platform_name()
+    }
+}
+
+/// A compiled executable with typed convenience wrappers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Compile an HLO text file.
+    pub fn load(client: &Client, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Execute with pre-built literals; returns the elements of the
+    /// result tuple (jax lowering uses return_tuple=True).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and read the single f32 output.
+    pub fn execute_f32(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let mut outs = self.execute(args)?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+        Ok(outs.pop().unwrap().to_vec::<f32>()?)
+    }
+
+    /// Execute and read the single i32 output.
+    pub fn execute_i32(&self, args: &[xla::Literal]) -> Result<Vec<i32>> {
+        let mut outs = self.execute(args)?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+        Ok(outs.pop().unwrap().to_vec::<i32>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal shape mismatch: {} vs {:?}",
+        data.len(),
+        shape
+    );
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal shape mismatch: {} vs {:?}",
+        data.len(),
+        shape
+    );
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}

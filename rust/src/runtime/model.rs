@@ -1,0 +1,128 @@
+//! The serving model wrapper: weights staged once, batched inference,
+//! and the quantize/approximate weight transforms that produce the
+//! Table 2 end-to-end delta.
+
+use super::artifacts::Artifacts;
+use super::exec::{literal_f32, Client, Executable};
+use crate::cnn::infer::approximate_weights;
+use crate::cnn::quant::{dequantize, quantize_symmetric};
+use anyhow::{Context, Result};
+
+/// Which weights the executable is fed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightMode {
+    /// Trained f32 weights untouched.
+    Float,
+    /// Symmetric fixed-point quantization at `w_bits` (the paper's
+    /// baseline), dequantized back to f32 for the f32 graph.
+    Quantized { w_bits: u32 },
+    /// Quantized then Eq.4-approximated (the SDMM hardware's view).
+    Approximated { w_bits: u32 },
+}
+
+/// The tiny-CNN serving model: a PJRT executable + pre-staged weight
+/// literal sets for each mode.
+pub struct CnnModel {
+    exe: Executable,
+    pub batch: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    weight_names: Vec<String>,
+    weights_f32: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+impl CnnModel {
+    pub fn load(client: &Client, artifacts: &Artifacts) -> Result<CnnModel> {
+        let exe = Executable::load(client, artifacts.hlo_path("cnn_fwd")?)?;
+        let batch = artifacts.meta_usize("serve_batch")?;
+        let input_hw = artifacts.meta_usize("input_hw")?;
+        let num_classes = artifacts.meta_usize("num_classes")?;
+        let weight_names = vec![
+            "conv1_w".to_string(),
+            "conv2_w".to_string(),
+            "conv3_w".to_string(),
+            "fc_w".to_string(),
+        ];
+        let mut weights_f32 = Vec::new();
+        for name in &weight_names {
+            weights_f32.push((artifacts.f32(name)?, artifacts.shape(name)?));
+        }
+        Ok(CnnModel {
+            exe,
+            batch,
+            input_hw,
+            num_classes,
+            weight_names,
+            weights_f32,
+        })
+    }
+
+    /// Produce the f32 weight tensors for a mode (quantize → optionally
+    /// approximate → dequantize with the same scale).
+    pub fn weights_for_mode(&self, mode: WeightMode) -> Vec<Vec<f32>> {
+        self.weights_f32
+            .iter()
+            .map(|(w, _)| match mode {
+                WeightMode::Float => w.clone(),
+                WeightMode::Quantized { w_bits } => {
+                    let f64s: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+                    let (q, p) = quantize_symmetric(&f64s, w_bits);
+                    dequantize(&q, &p).iter().map(|&x| x as f32).collect()
+                }
+                WeightMode::Approximated { w_bits } => {
+                    let f64s: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+                    let (q, p) = quantize_symmetric(&f64s, w_bits);
+                    let qa = approximate_weights(&q, w_bits);
+                    dequantize(&qa, &p).iter().map(|&x| x as f32).collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Build the staged weight literals for a mode.
+    pub fn stage(&self, mode: WeightMode) -> Result<StagedWeights> {
+        let tensors = self.weights_for_mode(mode);
+        let mut lits = Vec::new();
+        for (t, (_, shape)) in tensors.iter().zip(&self.weights_f32) {
+            lits.push(literal_f32(t, shape)?);
+        }
+        Ok(StagedWeights { mode, lits })
+    }
+
+    /// Run one batch: `x` is [batch, 1, hw, hw] flattened. Returns
+    /// logits [batch * num_classes].
+    pub fn infer(&self, staged: &StagedWeights, x: &[f32]) -> Result<Vec<f32>> {
+        let shape = [self.batch, 1, self.input_hw, self.input_hw];
+        let x_lit = literal_f32(x, &shape).context("input literal")?;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(staged.lits.len() + 1);
+        for l in &staged.lits {
+            args.push(l.clone());
+        }
+        args.push(x_lit);
+        self.exe.execute_f32(&args)
+    }
+
+    /// Argmax per row of a logits buffer.
+    pub fn argmax_rows(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks(self.num_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    pub fn weight_names(&self) -> &[String] {
+        &self.weight_names
+    }
+}
+
+/// Weight literals staged for repeated execution.
+pub struct StagedWeights {
+    pub mode: WeightMode,
+    lits: Vec<xla::Literal>,
+}

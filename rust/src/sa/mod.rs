@@ -1,0 +1,24 @@
+//! Cycle-level weight-stationary systolic array simulator (paper §5).
+//!
+//! The prototype is a parametric R×C PE grid in the TPU-style mapping:
+//! the reduction (K) dimension lies along rows, output channels along
+//! columns, input pixels stream over time. Three PE architectures are
+//! modelled, matching the paper's comparison:
+//!
+//! * **1M** (Fig. 8a) — one MAC/DSP, the baseline.
+//! * **2M** (Fig. 8b) — two 8-bit multiplications/DSP (Xilinx WP486
+//!   concatenation), LUT accumulation.
+//! * **MP** (Fig. 5) — the paper's SDMM PE: 3/4/6 multiplications/DSP
+//!   with WROM decompression, post-processing and LUT accumulation.
+//!
+//! The simulator is *functionally bit-accurate* (every multiplication
+//! goes through the DSP48E1 model; outputs are golden-checked against
+//! `cnn::infer`) and *cycle-counted* (pipeline fill/drain, weight
+//! loads, memory traffic) — the substrate for Tables 4/5 context,
+//! Fig. 7 break-even and Fig. 10 activity numbers.
+
+mod array;
+mod pe;
+
+pub use array::{LayerRun, MemTraffic, SaConfig, SystolicArray};
+pub use pe::{MultiPackPe, OneMacPe, PeArch, PeStats};

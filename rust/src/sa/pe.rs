@@ -1,0 +1,201 @@
+//! Processing-element architectures (paper Fig. 5 and Fig. 8).
+
+use crate::dsp::{MacUnit, SdmmEngine};
+use crate::packing::{pack_approx, Layout};
+use anyhow::Result;
+
+/// The three PE architectures the paper compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PeArch {
+    /// One MAC per DSP (baseline, Fig. 8a).
+    OneMac,
+    /// Two 8-bit multiplications per DSP (WP486, Fig. 8b). 8-bit only.
+    TwoMult,
+    /// Multiplication packing / SDMM (the paper's PE, Fig. 5).
+    MultiPack,
+}
+
+impl PeArch {
+    /// Multiplications executed per DSP block per cycle.
+    pub fn mults_per_dsp(&self, v_bits: u32) -> usize {
+        match self {
+            PeArch::OneMac => 1,
+            PeArch::TwoMult => {
+                assert_eq!(v_bits, 8, "2M supports 8-bit only (paper §6)");
+                2
+            }
+            PeArch::MultiPack => crate::packing::wrom::paper_group_size(v_bits),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeArch::OneMac => "1M",
+            PeArch::TwoMult => "2M",
+            PeArch::MultiPack => "MP",
+        }
+    }
+}
+
+/// Per-PE activity counters (feed the power model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeStats {
+    pub dsp_ops: u64,
+    pub mults: u64,
+    pub lut_adds: u64,
+    pub wrom_lookups: u64,
+}
+
+/// A multi-pack PE: holds one packed weight group (weight-stationary)
+/// and multiplies it with streamed inputs on the bit-accurate engine.
+pub struct MultiPackPe {
+    pub layout: Layout,
+    engine: SdmmEngine,
+    /// One packed tuple per kw-chunk of the group.
+    tuples: Vec<crate::packing::PackedTuple>,
+    pub stats: PeStats,
+}
+
+impl MultiPackPe {
+    pub fn new(layout: Layout) -> Self {
+        MultiPackPe {
+            layout,
+            engine: SdmmEngine::new(),
+            tuples: Vec::new(),
+            stats: PeStats::default(),
+        }
+    }
+
+    /// Load a weight group (weights.len() = paper group size).
+    pub fn load_weights(&mut self, weights: &[i64]) -> Result<()> {
+        self.tuples = weights
+            .chunks(self.layout.kw())
+            .map(|c| pack_approx(&self.layout, c))
+            .collect::<Result<_>>()?;
+        self.stats.wrom_lookups += 1;
+        Ok(())
+    }
+
+    /// Multiply the stationary group with a batch of inputs
+    /// (inputs.len() = layout.ki() per tuple execution). Returns the
+    /// products for every weight of the group against every input.
+    pub fn step(&mut self, inputs: &[i64]) -> Vec<i64> {
+        let ki = self.layout.ki();
+        assert_eq!(inputs.len(), ki);
+        let mut out = Vec::with_capacity(self.tuples.len() * self.layout.kw() * ki);
+        for t in &self.tuples {
+            let prods = self.engine.execute(t, inputs);
+            self.stats.dsp_ops += 1;
+            for row in prods {
+                for p in row {
+                    out.push(p);
+                    self.stats.mults += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// The effective (approximated) weights held.
+    pub fn weights(&self) -> Vec<i64> {
+        self.tuples.iter().flat_map(|t| t.values()).collect()
+    }
+
+    pub fn toggle_stats(&self) -> crate::dsp::DspStats {
+        self.engine.stats()
+    }
+}
+
+/// Baseline 1M PE.
+pub struct OneMacPe {
+    mac: MacUnit,
+    weight: i64,
+    pub stats: PeStats,
+}
+
+impl OneMacPe {
+    pub fn new() -> Self {
+        OneMacPe {
+            mac: MacUnit::new(),
+            weight: 0,
+            stats: PeStats::default(),
+        }
+    }
+
+    pub fn load_weight(&mut self, w: i64) {
+        self.weight = w;
+    }
+
+    pub fn step(&mut self, input: i64) -> i64 {
+        self.stats.dsp_ops += 1;
+        self.stats.mults += 1;
+        self.mac.clear();
+        self.mac.mac(self.weight, input)
+    }
+
+    pub fn toggle_stats(&self) -> crate::dsp::DspStats {
+        self.mac.stats()
+    }
+}
+
+impl Default for OneMacPe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mults_per_dsp_match_paper() {
+        assert_eq!(PeArch::OneMac.mults_per_dsp(8), 1);
+        assert_eq!(PeArch::TwoMult.mults_per_dsp(8), 2);
+        assert_eq!(PeArch::MultiPack.mults_per_dsp(8), 3);
+        assert_eq!(PeArch::MultiPack.mults_per_dsp(6), 4);
+        assert_eq!(PeArch::MultiPack.mults_per_dsp(4), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "2M supports 8-bit only")]
+    fn two_mult_rejects_non_8bit() {
+        PeArch::TwoMult.mults_per_dsp(4);
+    }
+
+    #[test]
+    fn multipack_pe_8bit() {
+        let l = Layout::for_bits(8).unwrap();
+        let mut pe = MultiPackPe::new(l);
+        pe.load_weights(&[-44, 3, 127]).unwrap();
+        assert_eq!(pe.weights(), vec![-44, 3, 128]); // 127 -> 128
+        let out = pe.step(&[-5]);
+        assert_eq!(out, vec![220, -15, -640]);
+        assert_eq!(pe.stats.dsp_ops, 1);
+        assert_eq!(pe.stats.mults, 3);
+    }
+
+    #[test]
+    fn multipack_pe_4bit_six_mults_one_op() {
+        let l = Layout::for_bits(4).unwrap();
+        let mut pe = MultiPackPe::new(l);
+        pe.load_weights(&[1, -2, 3, -4, 5, -6]).unwrap();
+        // group of 6 = 3 tuples of kw=2; each tuple serves ki=3 inputs
+        let out = pe.step(&[7, -8, 1]);
+        // per tuple: rows = weights, cols = inputs
+        assert_eq!(out.len(), 6 * 3);
+        assert_eq!(pe.stats.dsp_ops, 3);
+        assert_eq!(pe.stats.mults, 18);
+        assert_eq!(out[0], 7); // w=1 * i=7
+        assert_eq!(out[1], -8); // w=1 * i=-8
+        assert_eq!(out[3], -14); // w=-2 * i=7
+    }
+
+    #[test]
+    fn one_mac_pe() {
+        let mut pe = OneMacPe::new();
+        pe.load_weight(-7);
+        assert_eq!(pe.step(6), -42);
+        assert_eq!(pe.stats.mults, 1);
+    }
+}

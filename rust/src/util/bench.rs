@@ -1,0 +1,197 @@
+//! Micro-benchmark harness (criterion substitute — criterion is not in
+//! the vendored crate set).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`BenchSuite`], registers closures, and calls [`BenchSuite::run`].
+//! The harness does warmup, then timed batches until a target wall time
+//! is reached, and reports mean / p50 / p99 per-iteration latency and
+//! derived throughput. Output is plain text so `cargo bench | tee` logs
+//! are self-describing.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Iterations per timed batch (amortizes timer overhead).
+    pub batch: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1200),
+            batch: 1,
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration latency in nanoseconds.
+    pub latency: Summary,
+    /// Optional user-supplied items/iteration for throughput reporting.
+    pub items_per_iter: f64,
+    pub total_iters: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.latency.mean() == 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.latency.mean()
+    }
+}
+
+pub struct BenchSuite {
+    suite: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        // Allow a fast smoke run: SDMM_BENCH_FAST=1 cargo bench
+        let fast = std::env::var("SDMM_BENCH_FAST").is_ok();
+        let config = if fast {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                batch: 1,
+            }
+        } else {
+            BenchConfig::default()
+        };
+        println!("== bench suite: {suite} ==");
+        BenchSuite {
+            suite: suite.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration and returns a
+    /// value (consumed with `black_box` to defeat DCE). `items` is the
+    /// number of logical items one iteration processes (for throughput).
+    pub fn bench<R>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> R) {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.config.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut latency = Summary::new();
+        let mut total: u64 = 0;
+        let start = Instant::now();
+        while start.elapsed() < self.config.measure {
+            let t0 = Instant::now();
+            for _ in 0..self.config.batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / self.config.batch as f64;
+            latency.add(dt);
+            total += self.config.batch as u64;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            latency,
+            items_per_iter: items,
+            total_iters: total,
+        };
+        print_result(&result);
+        self.results.push(result);
+    }
+
+    /// Finish: print a compact summary table.
+    pub fn run(self) {
+        println!("-- {} summary --", self.suite);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            "benchmark", "mean", "p50", "p99", "throughput/s"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>14}",
+                r.name,
+                fmt_ns(r.latency.mean()),
+                fmt_ns(r.latency.p50()),
+                fmt_ns(r.latency.p99()),
+                fmt_count(r.throughput_per_sec()),
+            );
+        }
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    println!(
+        "  {:<42} mean={} p50={} p99={} iters={} thr={}{}",
+        r.name,
+        fmt_ns(r.latency.mean()),
+        fmt_ns(r.latency.p50()),
+        fmt_ns(r.latency.p99()),
+        r.total_iters,
+        fmt_count(r.throughput_per_sec()),
+        if r.items_per_iter == 1.0 { "/s" } else { " items/s" },
+    );
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Human-format a count (throughput).
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_count(1234.0), "1.23k");
+        assert_eq!(fmt_count(2.5e6), "2.50M");
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("SDMM_BENCH_FAST", "1");
+        let mut s = BenchSuite::new("selftest");
+        let mut acc = 0u64;
+        s.bench("noop-ish", 1.0, || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(s.results.len(), 1);
+        assert!(s.results[0].total_iters > 0);
+    }
+}

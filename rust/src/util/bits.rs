@@ -1,0 +1,139 @@
+//! Two's-complement bit-field helpers.
+//!
+//! All DSP-block and packing arithmetic in this crate is done on `i64`/
+//! `u64` host integers with *explicit* field widths, mirroring the RTL
+//! the paper describes. These helpers are the single place where
+//! sign-extension / truncation semantics live.
+
+/// `width`-bit all-ones mask (width 0..=64).
+#[inline]
+pub const fn mask(width: u32) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Truncate to `width` bits (zero-extend semantics).
+#[inline]
+pub const fn zext(value: i64, width: u32) -> u64 {
+    (value as u64) & mask(width)
+}
+
+/// Interpret the low `width` bits of `value` as a signed two's-complement
+/// number (sign-extend to i64).
+#[inline]
+pub const fn sext(value: u64, width: u32) -> i64 {
+    debug_assert!(width >= 1 && width <= 64);
+    let v = value & mask(width);
+    let sign = 1u64 << (width - 1);
+    if v & sign != 0 {
+        (v | !mask(width)) as i64
+    } else {
+        v as i64
+    }
+}
+
+/// Extract the bit-field `[lo, lo+width)` of `value`.
+#[inline]
+pub const fn field(value: u64, lo: u32, width: u32) -> u64 {
+    (value >> lo) & mask(width)
+}
+
+/// Insert `field` into bits `[lo, lo+width)` of `value` (clears first).
+#[inline]
+pub const fn insert(value: u64, lo: u32, width: u32, f: u64) -> u64 {
+    (value & !(mask(width) << lo)) | ((f & mask(width)) << lo)
+}
+
+/// Number of bits required to represent the non-negative `v`
+/// (`0 -> 0`, `1 -> 1`, `7 -> 3`, `8 -> 4`).
+#[inline]
+pub const fn bit_len(v: u64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+/// Does `value` fit in a signed `width`-bit field?
+#[inline]
+pub const fn fits_signed(value: i64, width: u32) -> bool {
+    if width >= 64 {
+        return true;
+    }
+    let lim = 1i64 << (width - 1);
+    value >= -lim && value < lim
+}
+
+/// Does `value` fit in an unsigned `width`-bit field?
+#[inline]
+pub const fn fits_unsigned(value: u64, width: u32) -> bool {
+    width >= 64 || value <= mask(width)
+}
+
+/// Arithmetic shift right that matches Verilog `>>>` on a `width`-bit
+/// signed value held in an i64.
+#[inline]
+pub const fn asr(value: i64, shift: u32) -> i64 {
+    value >> shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(8), 0xFF);
+        assert_eq!(mask(48), 0xFFFF_FFFF_FFFF);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn sext_round_trip() {
+        for w in 1..=16u32 {
+            let lim = 1i64 << (w - 1);
+            for v in -lim..lim {
+                assert_eq!(sext(zext(v, w), w), v, "w={w} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn sext_examples() {
+        assert_eq!(sext(0xFF, 8), -1);
+        assert_eq!(sext(0x80, 8), -128);
+        assert_eq!(sext(0x7F, 8), 127);
+        assert_eq!(sext(0b111, 3), -1);
+        assert_eq!(sext(0b100, 3), -4);
+    }
+
+    #[test]
+    fn field_insert_inverse() {
+        let v = 0xDEAD_BEEF_1234u64;
+        let f = field(v, 12, 16);
+        assert_eq!(insert(v, 12, 16, f), v);
+        let w = insert(v, 12, 16, 0xABCD);
+        assert_eq!(field(w, 12, 16), 0xABCD);
+    }
+
+    #[test]
+    fn bit_len_examples() {
+        assert_eq!(bit_len(0), 0);
+        assert_eq!(bit_len(1), 1);
+        assert_eq!(bit_len(7), 3);
+        assert_eq!(bit_len(8), 4);
+        assert_eq!(bit_len(255), 8);
+    }
+
+    #[test]
+    fn fits() {
+        assert!(fits_signed(-128, 8));
+        assert!(fits_signed(127, 8));
+        assert!(!fits_signed(128, 8));
+        assert!(!fits_signed(-129, 8));
+        assert!(fits_unsigned(255, 8));
+        assert!(!fits_unsigned(256, 8));
+    }
+}

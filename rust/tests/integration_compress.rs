@@ -1,0 +1,82 @@
+//! Integration: the full Table 3 compression pipelines on
+//! distribution-matched model weights, plus codec round-trips at scale.
+
+use sdmm::compress::{huffman_decode, huffman_encode, prune_magnitude, wrc_compress};
+use sdmm::compress::prune::rle_decode_sparse;
+use sdmm::compress::prune::rle_encode_sparse;
+use sdmm::cnn::weights::synth_model_quantized;
+use sdmm::cnn::zoo::{Model, ModelKind};
+use sdmm::packing::Layout;
+
+fn alexnet_stream(bits: u32) -> Vec<i64> {
+    let model = Model::build(ModelKind::Alexnet);
+    synth_model_quantized(&model, bits, 21)
+        .into_iter()
+        .flat_map(|layer| {
+            let stride = (layer.len() / 40_000).max(1);
+            layer.into_iter().step_by(stride).collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+#[test]
+fn wrc_guarantee_is_data_independent() {
+    // WRC % must be exactly the paper's guarantee on ANY stream.
+    for (bits, pct) in [(8u32, 66.67), (6, 75.0), (4, 83.33)] {
+        let ws = alexnet_stream(bits);
+        let layout = Layout::for_bits(bits).unwrap();
+        let r = wrc_compress(&layout, &ws, 0.65).unwrap();
+        assert!(
+            (r.wrc.percent() - pct).abs() < 0.2,
+            "bits={bits}: {}",
+            r.wrc.percent()
+        );
+    }
+}
+
+#[test]
+fn table3_orderings_hold_on_model_weights() {
+    // Paper Table 3 shape: P+WRC+H < WRC+H < WRC, and H < WRC.
+    let ws = alexnet_stream(8);
+    let layout = Layout::for_bits(8).unwrap();
+    let r = wrc_compress(&layout, &ws, 0.65).unwrap();
+    assert!(r.prune_wrc_huffman.percent() < r.wrc_huffman.percent(), "{r:?}");
+    assert!(r.wrc_huffman.percent() < r.wrc.percent(), "{r:?}");
+    assert!(r.huffman_only.percent() < r.wrc.percent(), "{r:?}");
+    // WROM stays within the paper's 13-bit address space
+    assert!(r.wrom_entries as u64 <= 8192, "{}", r.wrom_entries);
+}
+
+#[test]
+fn huffman_round_trip_at_model_scale() {
+    let ws = alexnet_stream(8);
+    let (bytes, bits, book) = huffman_encode(&ws);
+    assert!(bits > 0);
+    assert_eq!(huffman_decode(&bytes, ws.len(), &book), ws);
+}
+
+#[test]
+fn prune_rle_round_trip_at_model_scale() {
+    let ws = alexnet_stream(6);
+    let pruned = prune_magnitude(&ws, 0.8).pruned;
+    let (sym, _) = rle_encode_sparse(&pruned, 4, 6);
+    assert_eq!(rle_decode_sparse(&sym, 4, pruned.len()), pruned);
+}
+
+#[test]
+fn deeper_pruning_compresses_more() {
+    let ws = alexnet_stream(8);
+    let layout = Layout::for_bits(8).unwrap();
+    let r50 = wrc_compress(&layout, &ws, 0.50).unwrap();
+    let r90 = wrc_compress(&layout, &ws, 0.90).unwrap();
+    assert!(r90.prune_wrc_huffman.percent() < r50.prune_wrc_huffman.percent());
+}
+
+#[test]
+fn four_bit_stream_compresses_hardest_relative() {
+    // paper Table 3: absolute % grows as bit width shrinks for WRC
+    // (less redundancy to remove per weight) — orderings preserved.
+    let l8 = wrc_compress(&Layout::for_bits(8).unwrap(), &alexnet_stream(8), 0.65).unwrap();
+    let l4 = wrc_compress(&Layout::for_bits(4).unwrap(), &alexnet_stream(4), 0.65).unwrap();
+    assert!(l4.wrc.percent() > l8.wrc.percent());
+}

@@ -1,0 +1,156 @@
+//! Integration: the packing pipeline + serving coordinator, including
+//! the PJRT-backed path when artifacts are available.
+
+use sdmm::coordinator::pipeline::PipelineMode;
+use sdmm::coordinator::{BatchPolicy, BatchRunner, CnnRunner, InferenceServer, PackingPipeline};
+use sdmm::packing::Layout;
+use sdmm::util::rng::Rng;
+use std::time::Duration;
+
+#[test]
+fn packing_pipeline_end_to_end() {
+    let mut rng = Rng::new(31);
+    let layers: Vec<(String, Vec<f64>)> = (0..4)
+        .map(|i| {
+            (
+                format!("layer{i}"),
+                (0..3000).map(|_| rng.laplace(0.04)).collect(),
+            )
+        })
+        .collect();
+    for bits in [8u32, 6, 4] {
+        let p = PackingPipeline::new(Layout::for_bits(bits).unwrap(), PipelineMode::Approximate);
+        let net = p.pack_network(&layers).unwrap();
+        let rep = net.report();
+        assert_eq!(rep.total_weights, 12_000);
+        // guaranteed WRC rates
+        let expect = match bits {
+            8 => 66.67,
+            6 => 75.0,
+            _ => 83.33,
+        };
+        assert!((rep.compression_percent() - expect).abs() < 0.5);
+        // every layer decompresses to its effective weights
+        for l in &net.layers {
+            assert_eq!(net.wrom.decompress(&l.stream), l.effective_weights);
+        }
+        // WROM fits the paper's address space
+        assert!(rep.wrom_entries as u64 <= net.wrom.paper_max_entries());
+    }
+}
+
+#[test]
+fn exact_mode_tunes_tuples() {
+    let mut rng = Rng::new(32);
+    // heavy-tailed weights: many wide-MW values force fine-tuning
+    let layers = vec![(
+        "w".to_string(),
+        (0..3000)
+            .map(|_| if rng.bool(0.5) { rng.f64() - 0.5 } else { rng.laplace(0.3) })
+            .collect::<Vec<f64>>(),
+    )];
+    let p = PackingPipeline::new(Layout::for_bits(8).unwrap(), PipelineMode::ExactFineTuned);
+    let net = p.pack_network(&layers).unwrap();
+    assert!(net.exact_tuples > 0);
+    assert!(
+        net.tuned_tuples > 0,
+        "expected some tuples to need fine-tuning"
+    );
+}
+
+/// CPU-only mock runner for coordinator stress (no PJRT needed).
+struct SumRunner;
+
+impl BatchRunner for SumRunner {
+    fn batch_size(&self) -> usize {
+        16
+    }
+    fn item_len(&self) -> usize {
+        8
+    }
+    fn out_len(&self) -> usize {
+        1
+    }
+    fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(x.chunks(8).map(|c| c.iter().sum()).collect())
+    }
+}
+
+#[test]
+fn coordinator_under_load_preserves_request_response_pairing() {
+    let server = InferenceServer::start(
+        SumRunner,
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(300),
+        },
+    );
+    let n = 500;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(vec![i as f32; 8]))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out, vec![8.0 * i as f32], "request {i} got wrong batch slot");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, n as u64);
+    assert!(m.latency.p99() > 0.0);
+}
+
+#[test]
+fn pjrt_backed_server_roundtrip() {
+    if !sdmm::runtime::artifacts_available("artifacts") {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let server = InferenceServer::start_factory(
+        || CnnRunner::load("artifacts", sdmm::runtime::WeightMode::Approximated { w_bits: 8 }),
+        BatchPolicy::default(),
+    );
+    let art = sdmm::runtime::Artifacts::load("artifacts").unwrap();
+    let xs = art.f32("eval_x").unwrap();
+    let logits = server.infer(xs[..256].to_vec()).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let m = server.shutdown();
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn pjrt_server_batch_vs_single_consistent() {
+    if !sdmm::runtime::artifacts_available("artifacts") {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    // same image submitted alone and inside a burst must yield the
+    // same logits (padding must not leak across slots)
+    let server = InferenceServer::start_factory(
+        || CnnRunner::load("artifacts", sdmm::runtime::WeightMode::Float),
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        },
+    );
+    let art = sdmm::runtime::Artifacts::load("artifacts").unwrap();
+    let xs = art.f32("eval_x").unwrap();
+    let img = xs[..256].to_vec();
+    let solo = server.infer(img.clone()).unwrap();
+    let rxs: Vec<_> = (0..16)
+        .map(|i| {
+            if i == 7 {
+                server.submit(img.clone())
+            } else {
+                server.submit(xs[(i + 1) * 256..(i + 2) * 256].to_vec())
+            }
+        })
+        .collect();
+    let batched = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(_, rx)| rx.recv().unwrap().unwrap())
+        .collect::<Vec<_>>();
+    for (a, b) in solo.iter().zip(&batched[7]) {
+        assert!((a - b).abs() < 1e-4, "solo {a} vs batched {b}");
+    }
+}

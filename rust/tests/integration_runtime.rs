@@ -1,0 +1,172 @@
+//! Integration: the Rust runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts`. Tests are skipped (with a loud marker)
+//! when the artifacts are absent so `cargo test` stays usable on a
+//! fresh checkout; CI (`make test`) always builds artifacts first.
+
+use sdmm::runtime::{artifacts_available, exec, Artifacts, CnnModel, WeightMode};
+
+fn artifacts_dir() -> Option<String> {
+    // tests run from the crate root
+    let dir = "artifacts".to_string();
+    if artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_and_weights_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).unwrap();
+    assert_eq!(a.shape("conv1_w").unwrap(), vec![8, 1, 3, 3]);
+    assert_eq!(a.shape("fc_w").unwrap(), vec![10, 128]);
+    let acc = a.meta_f64("train_accuracy").unwrap();
+    assert!(acc > 0.8, "trained accuracy {acc}");
+}
+
+#[test]
+fn cnn_forward_executes_and_classifies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).unwrap();
+    let client = exec::Client::cpu().unwrap();
+    let model = CnnModel::load(&client, &a).unwrap();
+    let staged = model.stage(WeightMode::Float).unwrap();
+
+    let xs = a.f32("eval_x").unwrap();
+    let ys = a.i32("eval_y").unwrap();
+    let item = model.input_hw * model.input_hw;
+    let batch = model.batch;
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..8 {
+        let x = &xs[b * batch * item..(b + 1) * batch * item];
+        let logits = model.infer(&staged, x).unwrap();
+        let preds = model.argmax_rows(&logits);
+        for (i, p) in preds.iter().enumerate() {
+            if *p as i32 == ys[b * batch + i] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    // must reproduce the training-time eval accuracy (same data)
+    let trained = a.meta_f64("train_accuracy").unwrap();
+    assert!(
+        (acc - trained).abs() < 0.08,
+        "PJRT accuracy {acc} vs python {trained}"
+    );
+}
+
+#[test]
+fn quantized_and_approximated_modes_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).unwrap();
+    let client = exec::Client::cpu().unwrap();
+    let model = CnnModel::load(&client, &a).unwrap();
+
+    let xs = a.f32("eval_x").unwrap();
+    let item = model.input_hw * model.input_hw;
+    let x = &xs[..model.batch * item];
+
+    for mode in [
+        WeightMode::Quantized { w_bits: 8 },
+        WeightMode::Approximated { w_bits: 8 },
+        WeightMode::Approximated { w_bits: 4 },
+    ] {
+        let staged = model.stage(mode).unwrap();
+        let logits = model.infer(&staged, x).unwrap();
+        assert_eq!(logits.len(), model.batch * model.num_classes);
+        assert!(logits.iter().all(|v| v.is_finite()), "{mode:?}");
+    }
+}
+
+#[test]
+fn weight_modes_differ_only_where_expected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).unwrap();
+    let client = exec::Client::cpu().unwrap();
+    let model = CnnModel::load(&client, &a).unwrap();
+    // 4-bit: approximation is exact => quantized and approximated
+    // weights must be IDENTICAL (paper §3.2).
+    let wq = model.weights_for_mode(WeightMode::Quantized { w_bits: 4 });
+    let wa = model.weights_for_mode(WeightMode::Approximated { w_bits: 4 });
+    assert_eq!(wq, wa, "4-bit approximation must be lossless");
+    // 8-bit: some weights move.
+    let wq8 = model.weights_for_mode(WeightMode::Quantized { w_bits: 8 });
+    let wa8 = model.weights_for_mode(WeightMode::Approximated { w_bits: 8 });
+    assert_ne!(wq8, wa8, "8-bit approximation should alter some weights");
+}
+
+#[test]
+fn pallas_kernel_artifact_matches_rust_dsp_model() {
+    // THE cross-layer equivalence: the HLO lowered from the Pallas
+    // kernel (L1), executed via PJRT from Rust (L3), must agree with
+    // the bit-accurate DSP48E1 model on the same packed problem — and
+    // with the python-side oracle output stored in the artifacts.
+    let Some(dir) = artifacts_dir() else { return };
+    let a = Artifacts::load(&dir).unwrap();
+    let client = exec::Client::cpu().unwrap();
+    let exe = exec::Executable::load(&client, a.hlo_path("sdmm_gemm").unwrap()).unwrap();
+
+    let names = ["gemm_x", "gemm_a_words", "gemm_n", "gemm_s", "gemm_zero", "gemm_neg"];
+    let mut args = Vec::new();
+    for n in names {
+        let data = a.i32(n).unwrap();
+        let shape = a.shape(n).unwrap();
+        args.push(exec::literal_i32(&data, &shape).unwrap());
+    }
+    let out = exe.execute_i32(&args).unwrap();
+    let want = a.i32("gemm_out").unwrap();
+    assert_eq!(out, want, "PJRT sdmm_gemm != python oracle");
+
+    // Now the Rust DSP model on the same problem.
+    let x = a.i32("gemm_x").unwrap();
+    let xs = a.shape("gemm_x").unwrap(); // [B, K]
+    let aw = a.i32("gemm_a_words").unwrap();
+    let n_ = a.i32("gemm_n").unwrap();
+    let s_ = a.i32("gemm_s").unwrap();
+    let z_ = a.i32("gemm_zero").unwrap();
+    let g_ = a.i32("gemm_neg").unwrap();
+    let (b, k) = (xs[0], xs[1]);
+    let mg = a.shape("gemm_a_words").unwrap()[0];
+
+    let layout = sdmm::packing::Layout::for_bits(8).unwrap();
+    let mut engine = sdmm::dsp::SdmmEngine::new();
+    let mut rust_out = vec![0i32; b * mg * 3];
+    for bi in 0..b {
+        for g in 0..mg {
+            for kk in 0..k {
+                // rebuild the tuple from the control arrays
+                // control layout: [MG, 3, K] flattened
+                let idx3 = |j: usize| (g * 3 + j) * k + kk;
+                let weights: Vec<i64> = (0..3)
+                    .map(|j| {
+                        let zero = z_[idx3(j)] == 1;
+                        if zero {
+                            0
+                        } else {
+                            let mwv = (aw[g * k + kk] >> (11 * j)) & 7;
+                            let mag = (1i64 + ((mwv as i64) << n_[idx3(j)])) << s_[idx3(j)];
+                            if g_[idx3(j)] == 1 {
+                                -mag
+                            } else {
+                                mag
+                            }
+                        }
+                    })
+                    .collect();
+                let tuple = sdmm::packing::pack_approx(&layout, &weights).unwrap();
+                let prods = engine.execute(&tuple, &[x[bi * k + kk] as i64]);
+                for j in 0..3 {
+                    rust_out[bi * mg * 3 + g * 3 + j] += prods[j][0] as i32;
+                }
+            }
+        }
+    }
+    assert_eq!(rust_out, want, "rust DSP model != python oracle");
+}

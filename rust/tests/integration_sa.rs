@@ -1,0 +1,115 @@
+//! Integration: systolic-array simulator vs the CNN reference across
+//! architectures, bit widths, and layer geometries (grouped, strided,
+//! padded, depthwise).
+
+use sdmm::cnn::infer::{approximate_weights, conv2d_int, Tensor3};
+use sdmm::cnn::zoo::ConvLayer;
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
+use sdmm::util::rng::Rng;
+
+fn setup(layer: &ConvLayer, v: u32, seed: u64) -> (Vec<i64>, Tensor3) {
+    let mut rng = Rng::new(seed);
+    let lim = 1i64 << (v - 1);
+    let w = (0..layer.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+    let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+    (w, input)
+}
+
+#[test]
+fn mp_matches_golden_across_geometries() {
+    let geometries = [
+        ConvLayer::new("stride2", 8, 3, 6, 3, 2, 1, 1),
+        ConvLayer::new("1x1", 5, 8, 9, 1, 1, 0, 1),
+        ConvLayer::new("grouped", 6, 4, 6, 3, 1, 1, 2),
+        ConvLayer::new("depthwise", 6, 4, 4, 3, 1, 1, 4),
+        ConvLayer::new("5x5", 7, 2, 3, 5, 1, 2, 1),
+        ConvLayer::new("nopad", 6, 3, 3, 3, 1, 0, 1),
+    ];
+    for v in [8u32, 6, 4] {
+        let sa = SystolicArray::new(SaConfig::paper_prototype(v, PeArch::MultiPack)).unwrap();
+        for layer in &geometries {
+            let (w, input) = setup(layer, v, 11);
+            let run = sa.run_conv(layer, &w, &input).unwrap();
+            let golden = conv2d_int(&input, &approximate_weights(&w, v), layer);
+            assert_eq!(
+                run.output.unwrap(),
+                golden,
+                "v={v} layer={}",
+                layer.name
+            );
+        }
+    }
+}
+
+#[test]
+fn one_mac_is_exact_everywhere() {
+    let layer = ConvLayer::new("t", 7, 3, 5, 3, 1, 1, 1);
+    for v in [8u32, 6, 4] {
+        let sa = SystolicArray::new(SaConfig::paper_prototype(v, PeArch::OneMac)).unwrap();
+        let (w, input) = setup(&layer, v, 12);
+        let run = sa.run_conv(&layer, &w, &input).unwrap();
+        assert_eq!(run.output.unwrap(), conv2d_int(&input, &w, &layer));
+    }
+}
+
+#[test]
+fn approximation_error_bounded_at_layer_level() {
+    // MP output vs EXACT-weight output: bounded by sum of |dW|·|I|.
+    let layer = ConvLayer::new("t", 6, 4, 6, 3, 1, 1, 1);
+    let (w, input) = setup(&layer, 8, 13);
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let run = sa.run_conv(&layer, &w, &input).unwrap();
+    let exact = conv2d_int(&input, &w, &layer);
+    let out = run.output.unwrap();
+    let max_dw = 4i64; // worst 8-bit approximation error (tested in manip)
+    let bound = max_dw * 128 * (layer.in_ch * layer.kernel * layer.kernel) as i64;
+    for (a, b) in out.data.iter().zip(&exact.data) {
+        assert!((a - b).abs() <= bound, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn cycle_model_consistency() {
+    // cycles scale ~linearly in MACs for same-shape layers; utilization
+    // bounded by 1; MP and 1M have identical cycle counts (same lane
+    // grid) but MP uses 1/3 the DSPs.
+    let small = ConvLayer::new("s", 13, 64, 64, 3, 1, 1, 1);
+    let big = ConvLayer::new("b", 13, 64, 128, 3, 1, 1, 1);
+    let mp = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let m1 = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::OneMac)).unwrap();
+    let es = mp.estimate_layer(&small);
+    let eb = mp.estimate_layer(&big);
+    assert!(eb.cycles > es.cycles);
+    let ratio = eb.cycles as f64 / es.cycles as f64;
+    assert!((ratio - 2.0).abs() < 0.2, "cycle ratio {ratio}");
+    let cfg = SaConfig::paper_prototype(8, PeArch::MultiPack);
+    assert!(es.utilization(&cfg) <= 1.0);
+    assert_eq!(m1.estimate_layer(&small).cycles, es.cycles);
+}
+
+#[test]
+fn traffic_accounting_sane() {
+    let layer = ConvLayer::new("t", 13, 32, 48, 3, 1, 1, 1);
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let est = sa.estimate_layer(&layer);
+    let t = est.traffic;
+    // every output written once
+    assert_eq!(t.omem_writes, 48 * 13 * 13);
+    // WRC weight stream: 16 bits per 3 weights
+    assert_eq!(
+        t.offchip_weight_bits,
+        (layer.params().div_ceil(3)) * 16
+    );
+    assert!(t.imem_reads > 0 && t.wmem_reads > 0);
+}
+
+#[test]
+fn toggles_accumulate_for_power_model() {
+    let layer = ConvLayer::new("t", 5, 2, 3, 3, 1, 1, 1);
+    let (w, input) = setup(&layer, 8, 14);
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let run = sa.run_conv(&layer, &w, &input).unwrap();
+    assert!(run.toggles.ops > 0);
+    assert!(run.toggles.p_toggles > 0);
+}

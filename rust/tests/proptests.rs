@@ -1,0 +1,222 @@
+//! Property tests (util::check harness — proptest is not vendored).
+//! Each property runs hundreds of randomized cases with a fixed seed;
+//! failures print the reproducing input.
+
+use sdmm::dsp::SdmmEngine;
+use sdmm::manip::{approximate_signed, manipulate};
+use sdmm::packing::{bray_curtis, fine_tune_tuple, is_feasible_exact, pack_approx, Layout};
+use sdmm::util::check::check;
+
+#[test]
+fn prop_manipulation_is_exact_decomposition() {
+    check(
+        "manipulate-round-trip",
+        5000,
+        101,
+        |r| r.below((1 << 24) - 1) + 1,
+        |&w| {
+            let m = manipulate(w);
+            if m.value() == w && (m.mw == 0 || m.mw % 2 == 1) {
+                Ok(())
+            } else {
+                Err(format!("{m:?} != {w}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_approximation_minimizes_distance() {
+    // the chosen representable value is at least as close as any
+    // random competitor of the constrained form
+    check(
+        "approx-is-nearest",
+        2000,
+        102,
+        |r| {
+            (
+                r.range_i64(1, 128) as u64,
+                r.below(5),
+                r.below(8) as u32,
+                r.below(8) as u32,
+            )
+        },
+        |&(mag, mw_idx, n, s)| {
+            let a = sdmm::manip::approximate(mag, 128);
+            let mw = sdmm::manip::APPROX_MW[mw_idx as usize] as u64;
+            let competitor = (1 + (mw << n)) << s;
+            if competitor <= 128 && competitor.abs_diff(mag) < a.abs_error() {
+                Err(format!("{competitor} closer to {mag} than {}", a.approx))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sdmm_identity_8bit() {
+    let layout = Layout::for_bits(8).unwrap();
+    let mut engine = SdmmEngine::new();
+    check(
+        "sdmm-8bit-identity",
+        8000,
+        103,
+        |r| {
+            (
+                [
+                    r.range_i64(-128, 127),
+                    r.range_i64(-128, 127),
+                    r.range_i64(-128, 127),
+                ],
+                r.range_i64(-128, 127),
+            )
+        },
+        |&(ws, i)| {
+            let t = pack_approx(&layout, &ws).map_err(|e| e.to_string())?;
+            let got = t.unpack_all(engine.execute_raw(&t, &[i]), &[i]);
+            let want = t.expected_products(&[i]);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{got:?} != {want:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sdmm_identity_multi_input() {
+    for v in [6u32, 4] {
+        let layout = Layout::for_bits(v).unwrap();
+        let lim = 1i64 << (v - 1);
+        let mut engine = SdmmEngine::new();
+        let ki = layout.ki();
+        let kw = layout.kw();
+        check(
+            "sdmm-multi-input-identity",
+            6000,
+            104 + v as u64,
+            |r| {
+                let ws: Vec<i64> = (0..kw).map(|_| r.range_i64(-lim, lim - 1)).collect();
+                let is: Vec<i64> = (0..ki).map(|_| r.range_i64(-lim, lim - 1)).collect();
+                (ws, is)
+            },
+            |(ws, is)| {
+                let t = pack_approx(&layout, ws).map_err(|e| e.to_string())?;
+                let got = t.unpack_all(engine.execute_raw(&t, is), is);
+                let want = t.expected_products(is);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("{got:?} != {want:?}"))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_fine_tuning_produces_feasible_nearby_tuples() {
+    let layout = Layout::for_bits(8).unwrap();
+    check(
+        "fine-tune-feasible",
+        400,
+        105,
+        |r| {
+            vec![
+                r.range_i64(-128, 127),
+                r.range_i64(-128, 127),
+                r.range_i64(-128, 127),
+            ]
+        },
+        |ws| {
+            let rep = fine_tune_tuple(&layout, ws);
+            if !is_feasible_exact(&layout, &rep.tuned) {
+                return Err("tuned tuple infeasible".into());
+            }
+            if rep.was_feasible && rep.tuned != *ws {
+                return Err("feasible tuple was altered".into());
+            }
+            if rep.distance > 0.2 {
+                return Err(format!("tuned too far: BC {}", rep.distance));
+            }
+            for (o, t) in ws.iter().zip(&rep.tuned) {
+                if o.signum() != t.signum() && *o != 0 {
+                    return Err("sign flipped".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bray_curtis_metric_properties() {
+    check(
+        "bray-curtis-bounds",
+        3000,
+        106,
+        |r| {
+            let u: Vec<i64> = (0..3).map(|_| r.range_i64(1, 127)).collect();
+            let v: Vec<i64> = (0..3).map(|_| r.range_i64(1, 127)).collect();
+            (u, v)
+        },
+        |(u, v)| {
+            let d = bray_curtis(u, v);
+            let d2 = bray_curtis(v, u);
+            if d < 0.0 || d > 1.0 {
+                return Err(format!("out of range: {d}"));
+            }
+            if (d - d2).abs() > 1e-12 {
+                return Err("not symmetric".into());
+            }
+            if u == v && d != 0.0 {
+                return Err("identity violated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_approximation_monotone_under_scaling() {
+    // scaling a magnitude by 2 scales its approximation by 2
+    // (powers of two factor straight out of Eq. 2's 2^s)
+    check(
+        "approx-scale-2",
+        2000,
+        107,
+        |r| r.range_i64(1, 64),
+        |&m| {
+            let a1 = sdmm::manip::approximate(m as u64, 128);
+            let a2 = sdmm::manip::approximate(2 * m as u64, 256);
+            if a2.approx == 2 * a1.approx {
+                Ok(())
+            } else {
+                Err(format!("{} vs {}", a1.approx, a2.approx))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_zero_and_sign_symmetry() {
+    check(
+        "sign-symmetry",
+        2000,
+        108,
+        |r| r.range_i64(1, 127),
+        |&v| {
+            let (n1, a1) = approximate_signed(v, 8).unwrap();
+            let (n2, a2) = approximate_signed(-v, 8).unwrap();
+            if n1 || !n2 {
+                return Err("sign flags wrong".into());
+            }
+            if a1.approx != a2.approx {
+                return Err("approximation not sign-symmetric".into());
+            }
+            Ok(())
+        },
+    );
+}
