@@ -1,8 +1,9 @@
 //! DSP model throughput: raw DSP48E1 ops and full SDMM executions
-//! (pack + execute + unpack) per bit width — the simulator's innermost
-//! hot path (the perf pass optimizes this; see EXPERIMENTS.md §Perf).
+//! (pack + execute + unpack) per bit width, and the lane-parallel batch
+//! engine against the scalar engine on identical work — the simulator's
+//! innermost hot path (EXPERIMENTS.md §Perf).
 
-use sdmm::dsp::{Dsp48E1, DspOp, SdmmEngine};
+use sdmm::dsp::{BatchEngine, BatchLanes, Dsp48E1, DspOp, PreparedTuple, SdmmEngine};
 use sdmm::packing::{pack_approx, Layout};
 use sdmm::util::bench::BenchSuite;
 use sdmm::util::rng::Rng;
@@ -50,6 +51,25 @@ fn main() {
             j = (j + 1) % 256;
             engine2.execute_raw(&tuples[j], &inputs[j])
         });
+
+        // batch engine on identical work: one tuple, 256 input groups
+        // of P words per call (the scalar comparison point for the
+        // EXPERIMENTS.md §Perf table)
+        let prepared: Vec<PreparedTuple> = tuples.iter().map(PreparedTuple::prepare).collect();
+        let flat: Vec<i64> = inputs.iter().flatten().copied().collect();
+        let lanes = BatchLanes::pack(&layout, &flat);
+        let mut bengine = BatchEngine::new();
+        let mut raw = vec![0u64; lanes.groups()];
+        let mut ti = 0;
+        suite.bench(
+            &format!("batch execute_raw {v}-bit (256 groups/call)"),
+            k * lanes.groups() as f64,
+            || {
+                ti = (ti + 1) % 256;
+                bengine.execute_raw_batch(&prepared[ti], &lanes, &mut raw);
+                raw[0]
+            },
+        );
     }
 
     suite.run();

@@ -1,20 +1,113 @@
-//! End-to-end serving benchmark: the coordinator (dynamic batcher +
-//! worker thread + PJRT executable) under closed-loop load — the
-//! serving-side headline measurement recorded in EXPERIMENTS.md.
-//! Skips (exit 0) when artifacts are missing.
+//! End-to-end benchmarks.
+//!
+//! Part 1 (always runs): a native 3-conv integer CNN through the
+//! systolic-array simulator, scalar engine vs batch engine with reused
+//! weight planes — the end-to-end half of the scalar-vs-batch
+//! comparison recorded in EXPERIMENTS.md §Perf.
+//!
+//! Part 2 (PJRT serving): the coordinator (dynamic batcher + worker
+//! thread + PJRT executable) under closed-loop load. Skips when the
+//! artifacts are missing or the `pjrt` feature is off.
 
-use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
-use sdmm::runtime::{artifacts_available, Artifacts, WeightMode};
+use sdmm::cnn::infer::{relu, requantize, Tensor3};
+use sdmm::cnn::zoo::ConvLayer;
+use sdmm::packing::PackedPlane;
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::bench::BenchSuite;
-use std::time::Instant;
+use sdmm::util::rng::Rng;
+
+fn native_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("c1", 16, 8, 16, 3, 1, 1, 1),
+        ConvLayer::new("c2", 16, 16, 16, 3, 1, 1, 1),
+        ConvLayer::new("c3", 16, 16, 24, 3, 1, 1, 1),
+    ]
+}
+
+/// Run the native network; `conv` executes one conv layer.
+fn forward(
+    layers: &[ConvLayer],
+    input: &Tensor3,
+    mut conv: impl FnMut(usize, &Tensor3) -> Tensor3,
+) -> Tensor3 {
+    let mut x = input.clone();
+    for i in 0..layers.len() {
+        let mut y = conv(i, &x);
+        relu(&mut y);
+        x = requantize(&y, 8).0;
+    }
+    x
+}
+
+fn bench_native(suite: &mut BenchSuite) {
+    let layers = native_layers();
+    let mut rng = Rng::new(17);
+    let weights: Vec<Vec<i64>> = layers
+        .iter()
+        .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+        .collect();
+    let mut input = Tensor3::zeros(layers[0].in_ch, layers[0].in_hw, layers[0].in_hw);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+    let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let planes: Vec<PackedPlane> = layers
+        .iter()
+        .zip(&weights)
+        .map(|(l, w)| sa.pack_plane(l, w).unwrap())
+        .collect();
+
+    // identical outputs before timing
+    let out_scalar = forward(&layers, &input, |i, x| {
+        sa.run_conv(&layers[i], &weights[i], x).unwrap().output.unwrap()
+    });
+    let out_batch = forward(&layers, &input, |i, x| {
+        sa.run_conv_batch_with_plane(&layers[i], &planes[i], x)
+            .unwrap()
+            .output
+            .unwrap()
+    });
+    assert_eq!(out_scalar, out_batch, "e2e paths diverged");
+
+    suite.bench("native 3-conv e2e (scalar engine)", macs as f64, || {
+        forward(&layers, &input, |i, x| {
+            sa.run_conv(&layers[i], &weights[i], x).unwrap().output.unwrap()
+        })
+        .data[0]
+    });
+    suite.bench("native 3-conv e2e (batch engine + planes)", macs as f64, || {
+        forward(&layers, &input, |i, x| {
+            sa.run_conv_batch_with_plane(&layers[i], &planes[i], x)
+                .unwrap()
+                .output
+                .unwrap()
+        })
+        .data[0]
+    });
+}
 
 fn main() {
+    let mut suite = BenchSuite::new("e2e");
+    bench_native(&mut suite);
+    serving(&mut suite);
+    suite.run();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serving(_suite: &mut BenchSuite) {
+    println!("SKIP e2e serving: built without the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
+fn serving(suite: &mut BenchSuite) {
+    use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
+    use sdmm::runtime::{artifacts_available, Artifacts, WeightMode};
+
     let dir = "artifacts";
     if !artifacts_available(dir) {
-        println!("SKIP bench_e2e: artifacts/ missing (run `make artifacts`)");
+        println!("SKIP e2e serving: artifacts/ missing (run `make artifacts`)");
         return;
     }
-    let mut suite = BenchSuite::new("e2e-serving");
     let art = Artifacts::load(dir).unwrap();
     let xs = art.f32("eval_x").unwrap();
     let item = 16 * 16;
@@ -43,9 +136,7 @@ fn main() {
             }
             done
         });
-        let wall = Instant::now();
         let m = server.shutdown();
-        let _ = wall;
         println!(
             "  -> latency p50 {:.2}ms p99 {:.2}ms, occupancy {:.1}%",
             m.latency.p50() / 1e6,
@@ -53,6 +144,4 @@ fn main() {
             m.batch_occupancy(16) * 100.0
         );
     }
-
-    suite.run();
 }

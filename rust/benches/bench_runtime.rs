@@ -1,11 +1,22 @@
 //! PJRT runtime: executable load/compile time and per-batch inference
 //! latency for the CNN forward and the Pallas SDMM GEMM artifacts.
-//! Skips (exit 0) when artifacts are missing.
-
-use sdmm::runtime::{artifacts_available, exec, Artifacts, CnnModel, WeightMode};
-use sdmm::util::bench::BenchSuite;
+//! Skips (exit 0) when artifacts are missing or the crate was built
+//! without the `pjrt` feature.
 
 fn main() {
+    run();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!("SKIP bench_runtime: built without the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
+fn run() {
+    use sdmm::runtime::{artifacts_available, exec, Artifacts, CnnModel, WeightMode};
+    use sdmm::util::bench::BenchSuite;
+
     let dir = "artifacts";
     if !artifacts_available(dir) {
         println!("SKIP bench_runtime: artifacts/ missing (run `make artifacts`)");
@@ -31,7 +42,7 @@ fn main() {
     // the Pallas SDMM GEMM artifact (B=8, K=64, M=48 -> 24576 MACs)
     let gemm = exec::Executable::load(&client, art.hlo_path("sdmm_gemm").unwrap()).unwrap();
     let names = ["gemm_x", "gemm_a_words", "gemm_n", "gemm_s", "gemm_zero", "gemm_neg"];
-    let args: Vec<xla::Literal> = names
+    let args: Vec<exec::Literal> = names
         .iter()
         .map(|n| {
             exec::literal_i32(&art.i32(n).unwrap(), &art.shape(n).unwrap()).unwrap()

@@ -1,12 +1,27 @@
 //! Systolic-array simulator throughput: bit-accurate conv execution
 //! (simulated MACs/s) and analytic estimates (layers/s) across PE
-//! architectures — the Table 4/5 workload.
+//! architectures — the Table 4/5 workload — plus the scalar-vs-batch
+//! comparison the perf acceptance gate reads (EXPERIMENTS.md §Perf).
 
 use sdmm::cnn::infer::Tensor3;
 use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::bench::BenchSuite;
 use sdmm::util::rng::Rng;
+use std::time::Instant;
+
+/// Median wall-clock of `n` runs of `f` (seconds).
+fn median_secs<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[n / 2]
+}
 
 fn main() {
     let mut suite = BenchSuite::new("systolic-array");
@@ -33,7 +48,47 @@ fn main() {
         };
         let sa = SystolicArray::new(SaConfig::paper_prototype(v, arch)).unwrap();
         suite.bench(name, macs, || sa.run_conv(&layer, &w, &inp).unwrap().cycles);
+        if arch == PeArch::MultiPack {
+            suite.bench(
+                &format!("run_conv_batch MP {v}-bit (lane-parallel)"),
+                macs,
+                || sa.run_conv_batch(&layer, &w, &inp).unwrap().cycles,
+            );
+        }
     }
+
+    // The acceptance comparison: a larger MP layer, scalar engine vs
+    // batch engine (packing amortized via the reused plane), identical
+    // outputs asserted before timing.
+    let big = ConvLayer::new("cmp", 14, 16, 48, 3, 1, 1, 1);
+    let w: Vec<i64> = (0..big.params()).map(|_| rng.range_i64(-128, 127)).collect();
+    let mut inp = Tensor3::zeros(big.in_ch, big.in_hw, big.in_hw);
+    inp.data = (0..inp.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+    let plane = sa.pack_plane(&big, &w).unwrap();
+    let scalar_run = sa.run_conv(&big, &w, &inp).unwrap();
+    let batch_run = sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap();
+    assert_eq!(scalar_run.output, batch_run.output, "paths diverged");
+    let big_macs = big.macs() as f64;
+    suite.bench("cmp-layer run_conv MP 8-bit (scalar)", big_macs, || {
+        sa.run_conv(&big, &w, &inp).unwrap().mults
+    });
+    suite.bench("cmp-layer run_conv_batch_with_plane MP 8-bit", big_macs, || {
+        sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap().mults
+    });
+    let reps = if std::env::var("SDMM_BENCH_FAST").is_ok() { 3 } else { 7 };
+    let t_scalar = median_secs(reps, || sa.run_conv(&big, &w, &inp).unwrap());
+    let t_batch = median_secs(reps, || {
+        sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap()
+    });
+    println!(
+        "  -> cmp layer ({} MACs): scalar {:.2}ms, batch {:.2}ms — speedup {:.2}x \
+         (threads: SDMM_THREADS or all cores)",
+        big.macs(),
+        t_scalar * 1e3,
+        t_batch * 1e3,
+        t_scalar / t_batch
+    );
 
     // analytic estimates over the whole AlexNet (Table-scale workload)
     let model = Model::build(ModelKind::Alexnet);

@@ -62,43 +62,73 @@ pub fn approximate_weights(qweights: &[i64], c_bits: u32) -> Vec<i64> {
 /// Direct integer convolution. `weights` is OIHW flattened; `layer`
 /// supplies geometry (groups supported). Output accumulators are raw
 /// i64 sums (no requantization here).
+///
+/// Output channels are independent, so the work is tiled across
+/// worker threads (one `o_hw²` output plane per chunk; integer adds
+/// only, so the result is bit-identical at any thread count).
 pub fn conv2d_int(input: &Tensor3, weights: &[i64], layer: &ConvLayer) -> Tensor3 {
     assert_eq!(input.c, layer.in_ch);
     assert_eq!(input.h, layer.in_hw);
     assert_eq!(weights.len() as u64, layer.params());
     let o_hw = layer.out_hw();
-    let g = layer.groups;
-    let icg = layer.in_ch / g;
-    let ocg = layer.out_ch / g;
-    let k = layer.kernel;
     let mut out = Tensor3::zeros(layer.out_ch, o_hw, o_hw);
-    for oc in 0..layer.out_ch {
-        let group = oc / ocg;
-        for oy in 0..o_hw {
-            for ox in 0..o_hw {
-                let mut acc = 0i64;
-                for ic in 0..icg {
-                    let in_c = group * icg + ic;
-                    for ky in 0..k {
-                        let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
-                        if iy < 0 || iy >= input.h as i64 {
+    crate::util::par::par_chunks_mut(&mut out.data, o_hw * o_hw, |oc, plane| {
+        conv2d_channel(input, weights, layer, oc, plane);
+    });
+    out
+}
+
+/// One output channel of the direct convolution, written into `plane`
+/// (`o_hw * o_hw` accumulators, row-major).
+fn conv2d_channel(
+    input: &Tensor3,
+    weights: &[i64],
+    layer: &ConvLayer,
+    oc: usize,
+    plane: &mut [i64],
+) {
+    let o_hw = layer.out_hw();
+    let icg = layer.in_ch / layer.groups;
+    let ocg = layer.out_ch / layer.groups;
+    let k = layer.kernel;
+    let group = oc / ocg;
+    for oy in 0..o_hw {
+        for ox in 0..o_hw {
+            let mut acc = 0i64;
+            for ic in 0..icg {
+                let in_c = group * icg + ic;
+                for ky in 0..k {
+                    let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
+                    if iy < 0 || iy >= input.h as i64 {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
+                        if ix < 0 || ix >= input.w as i64 {
                             continue;
                         }
-                        for kx in 0..k {
-                            let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
-                            if ix < 0 || ix >= input.w as i64 {
-                                continue;
-                            }
-                            let w = weights[((oc * icg + ic) * k + ky) * k + kx];
-                            acc += w * input.at(in_c, iy as usize, ix as usize);
-                        }
+                        let w = weights[((oc * icg + ic) * k + ky) * k + kx];
+                        acc += w * input.at(in_c, iy as usize, ix as usize);
                     }
                 }
-                out.set(oc, oy, ox, acc);
             }
+            plane[oy * o_hw + ox] = acc;
         }
     }
-    out
+}
+
+/// Convolution through a pre-packed SDMM weight plane on the batch
+/// engine (`packing::PackedPlane` + `dsp::BatchEngine`): the weights
+/// the output reflects are the plane's *approximated* values, i.e.
+/// `conv2d_plane(x, plane, l) == conv2d_int(x,
+/// plane.effective_weights(l), l)` bit-for-bit. Pack once per layer,
+/// run per input — the accuracy harness's throughput path.
+pub fn conv2d_plane(
+    input: &Tensor3,
+    plane: &crate::packing::PackedPlane,
+    layer: &ConvLayer,
+) -> Tensor3 {
+    plane.execute_conv(input, layer).0
 }
 
 /// ReLU in place.
@@ -257,6 +287,21 @@ mod tests {
         let ws8: Vec<i64> = (-128..128).collect();
         let a = approximate_weights(&ws8, 8);
         assert_eq!(approximate_weights(&a, 8), a);
+    }
+
+    #[test]
+    fn conv2d_plane_matches_conv2d_int_on_effective_weights() {
+        use crate::packing::{Layout, PackedPlane};
+        let layer = ConvLayer::new("t", 5, 3, 5, 3, 1, 1, 1);
+        let mut rng = crate::util::rng::Rng::new(8);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let mut input = Tensor3::zeros(3, 5, 5);
+        input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = PackedPlane::build(&Layout::for_bits(8).unwrap(), 3, &w, &layer).unwrap();
+        assert_eq!(
+            conv2d_plane(&input, &plane, &layer),
+            conv2d_int(&input, &plane.effective_weights(&layer), &layer)
+        );
     }
 
     #[test]

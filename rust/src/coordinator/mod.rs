@@ -15,16 +15,18 @@
 //!   not Sync), request/response channels, latency/throughput metrics.
 //!
 //! Note on threading: the vendored crate set has no tokio; the
-//! coordinator uses std threads + mpsc channels, which for a
-//! single-executable CPU backend is the right shape anyway (one
-//! compute-bound worker, many cheap submitters).
+//! coordinator uses std threads, a Condvar-signalled submit queue
+//! (producers wake the worker immediately; partial batches flush on the
+//! head-of-line deadline via `wait_timeout`) and per-request mpsc
+//! response channels — for a single-executable CPU backend the right
+//! shape anyway (one compute-bound worker, many cheap submitters).
 
 pub mod batcher;
 pub mod runner;
 pub mod pipeline;
 pub mod server;
 
-pub use batcher::{BatchPolicy, BatchRunner, Batcher};
+pub use batcher::{BatchPolicy, BatchRunner, Batcher, QueueStatus, SubmitQueue};
 pub use pipeline::{PackedNetwork, PackingPipeline, PackingReport};
 pub use runner::CnnRunner;
 pub use server::{InferenceServer, ServerMetrics};

@@ -9,7 +9,8 @@
 //! evaluation).
 
 use crate::cnn::quant::{quantize_symmetric, QuantParams};
-use crate::packing::{fine_tune_stream, Layout, Wrom, WromIndexStream};
+use crate::cnn::zoo::ConvLayer;
+use crate::packing::{fine_tune_stream, Layout, PackedPlane, Wrom, WromIndexStream};
 use anyhow::Result;
 
 /// Pipeline mode: the paper's approximation (fixed 3-bit MW) or exact
@@ -111,6 +112,20 @@ impl PackingPipeline {
             exact_tuples: tuples_total,
         })
     }
+
+    /// Stage one conv layer's quantized weights as a reusable execution
+    /// plane for the batch engine — the serving-side analogue of the
+    /// WROM load: pack once at deploy time, run per request
+    /// (`cnn::infer::conv2d_plane` /
+    /// `sa::SystolicArray::run_conv_batch_with_plane`).
+    pub fn pack_conv_plane(
+        &self,
+        qweights: &[i64],
+        layer: &ConvLayer,
+        group: usize,
+    ) -> Result<PackedPlane> {
+        PackedPlane::build(&self.layout, group, qweights, layer)
+    }
 }
 
 impl PackedNetwork {
@@ -183,6 +198,19 @@ mod tests {
         let p2 = PackingPipeline::new(Layout::for_bits(8).unwrap(), PipelineMode::Approximate);
         let net2 = p2.pack_network(&synth_layers(3)).unwrap();
         assert!(net.layers.len() == net2.layers.len());
+    }
+
+    #[test]
+    fn conv_plane_staging_matches_approximation() {
+        let p = PackingPipeline::new(Layout::for_bits(8).unwrap(), PipelineMode::Approximate);
+        let layer = ConvLayer::new("c", 6, 3, 5, 3, 1, 1, 1);
+        let mut rng = Rng::new(6);
+        let q: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = p.pack_conv_plane(&q, &layer, 3).unwrap();
+        assert_eq!(
+            plane.effective_weights(&layer),
+            crate::cnn::infer::approximate_weights(&q, 8)
+        );
     }
 
     #[test]

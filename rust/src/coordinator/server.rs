@@ -1,8 +1,12 @@
 //! The inference server: one worker thread owns the executable (PJRT
-//! handles are not Sync), clients submit single images over a channel
-//! and receive logits back; the dynamic batcher shapes the traffic.
+//! handles are not Sync), clients submit single images through the
+//! Condvar-signalled [`SubmitQueue`] and receive logits back over
+//! per-request channels; the dynamic batcher shapes the traffic. The
+//! worker parks on the queue with the head-of-line deadline as its
+//! timeout, so a new request wakes it immediately and a partial batch
+//! still flushes exactly at `max_wait`.
 
-use super::batcher::{BatchPolicy, BatchRunner, Batcher};
+use super::batcher::{BatchPolicy, BatchRunner, Batcher, QueueStatus, SubmitQueue};
 use crate::util::stats::Summary;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -41,7 +45,7 @@ impl ServerMetrics {
 
 /// Handle to a running server.
 pub struct InferenceServer {
-    tx: Option<mpsc::Sender<Request>>,
+    queue: Arc<SubmitQueue<Request>>,
     worker: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<ServerMetrics>>,
 }
@@ -61,33 +65,40 @@ impl InferenceServer {
         R: BatchRunner + 'static,
         F: FnOnce() -> anyhow::Result<R> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let queue: Arc<SubmitQueue<Request>> = SubmitQueue::new();
+        let queue_w = Arc::clone(&queue);
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
         let metrics_w = Arc::clone(&metrics);
         let worker = std::thread::spawn(move || match factory() {
-            Ok(runner) => worker_loop(runner, policy, rx, metrics_w),
+            Ok(runner) => worker_loop(runner, policy, queue_w, metrics_w),
             Err(e) => {
                 // Fail every request with the construction error.
-                while let Ok(req) = rx.recv() {
-                    let _ = req.resp.send(Err(anyhow::anyhow!("runner init failed: {e}")));
+                let mut incoming = Vec::new();
+                loop {
+                    let status = queue_w.drain_wait(None, &mut incoming);
+                    for req in incoming.drain(..) {
+                        let _ = req.resp.send(Err(anyhow::anyhow!("runner init failed: {e}")));
+                    }
+                    if status == QueueStatus::Closed {
+                        break;
+                    }
                 }
             }
         });
         InferenceServer {
-            tx: Some(tx),
+            queue,
             worker: Some(worker),
             metrics,
         }
     }
 
-    /// Submit one image; returns the receiver for its logits.
+    /// Submit one image; returns the receiver for its logits. The
+    /// Condvar push wakes the worker immediately.
     pub fn submit(&self, x: Vec<f32>) -> mpsc::Receiver<anyhow::Result<Vec<f32>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        let _ = self
-            .tx
-            .as_ref()
-            .expect("server running")
-            .send(Request { x, resp: resp_tx });
+        // If the queue is already closed the request is dropped and the
+        // receiver reports a disconnected server.
+        let _ = self.queue.push(Request { x, resp: resp_tx });
         resp_rx
     }
 
@@ -104,7 +115,7 @@ impl InferenceServer {
 
     /// Graceful shutdown: close the queue and join the worker.
     pub fn shutdown(mut self) -> ServerMetrics {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -115,7 +126,7 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -125,24 +136,14 @@ impl Drop for InferenceServer {
 fn worker_loop<R: BatchRunner>(
     mut runner: R,
     policy: BatchPolicy,
-    rx: mpsc::Receiver<Request>,
+    queue: Arc<SubmitQueue<Request>>,
     metrics: Arc<Mutex<ServerMetrics>>,
 ) {
     let mut batcher: Batcher<(mpsc::Sender<anyhow::Result<Vec<f32>>>, Instant)> =
         Batcher::new(policy);
+    let mut incoming: Vec<Request> = Vec::new();
     let mut open = true;
     while open || !batcher.is_empty() {
-        // Drain what is available without blocking.
-        loop {
-            match rx.try_recv() {
-                Ok(req) => batcher.push(req.x, (req.resp, Instant::now())),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    open = false;
-                    break;
-                }
-            }
-        }
         let now = Instant::now();
         if batcher.ready(now) || (!open && !batcher.is_empty()) {
             match batcher.flush(&mut runner) {
@@ -166,19 +167,19 @@ fn worker_loop<R: BatchRunner>(
                     // (Simplest robust behaviour for a simulator.)
                 }
             }
-        } else if open {
-            // Park until more work or the head-of-line deadline.
-            match batcher.next_deadline(now) {
-                Some(d) => match rx.recv_timeout(d.max(Duration::from_micros(50))) {
-                    Ok(req) => batcher.push(req.x, (req.resp, Instant::now())),
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
-                },
-                None => match rx.recv() {
-                    Ok(req) => batcher.push(req.x, (req.resp, Instant::now())),
-                    Err(_) => open = false,
-                },
-            }
+            continue;
+        }
+        // Reaching here implies the queue is still open (a closed queue
+        // with a non-empty batcher takes the flush branch above, and an
+        // empty batcher ends the loop).
+        // Park on the Condvar until more work arrives (immediate wake)
+        // or the head-of-line deadline lapses (partial-batch flush).
+        let status = queue.drain_wait(batcher.next_deadline(Instant::now()), &mut incoming);
+        if status == QueueStatus::Closed {
+            open = false;
+        }
+        for req in incoming.drain(..) {
+            batcher.push(req.x, (req.resp, Instant::now()));
         }
     }
 }

@@ -1,0 +1,676 @@
+//! Lane-parallel SDMM batch execution (the simulator's throughput
+//! engine, EXPERIMENTS.md §Perf).
+//!
+//! [`SdmmEngine`](super::SdmmEngine) drives the port-accurate
+//! [`Dsp48E1`](super::Dsp48E1) one packed tuple at a time: per call it
+//! rebuilds sign-extension words, branches on two port-sign
+//! corrections, and updates per-port toggle statistics. That is the
+//! right tool for the power model, but reproducing Table 2/6 over
+//! AlexNet/VGG-scale layers executes hundreds of millions of SDMM ops
+//! where only the *values* matter. This module evaluates many
+//! independent P words per call over plain `u64` chunks — the same
+//! batching insight the paper applies to the DSP block itself.
+//!
+//! ## The scalar-free identity
+//!
+//! `SdmmEngine::execute_raw` computes, on the signed 25×18 multiplier,
+//!
+//! ```text
+//! P = sext25(A)·sext18(B) + C + a24·(B << 25) + b17·(A << 18)  (mod 2^48)
+//! ```
+//!
+//! where `a24`/`b17` are the port sign bits and the two correction
+//! terms are the ones the engine folds into the C word. Substituting
+//! `sext25(A) = A − 2^25·a24` and `sext18(B) = B − 2^18·b17` collapses
+//! the whole thing to *unsigned* arithmetic:
+//!
+//! ```text
+//! P = A·B + C + 2^43·a24·b17   (mod 2^48)
+//! ```
+//!
+//! (The shipped layouts never set both sign bits at once, but the bias
+//! term is kept so the identity is unconditional — `proptest_batch`
+//! asserts bit-exact equivalence against the port-accurate engine for
+//! every layout.) The C word decomposes per (slot j, lane i) into a
+//! negative-input mask plus a shifted input field:
+//!
+//! ```text
+//! SEx(j, i) << off = neg_i·NEG_j« + (P_i >> n_j) << (aoff_j + boff_i)
+//! ```
+//!
+//! with `NEG_j = ((2^m −1− MW_j) << v | hi_j) << aoff_j` and
+//! `hi_j` the top `min(n_j, v)` bits of the v-bit window — all
+//! input-independent. [`PreparedTuple`] hoists these constants once per
+//! tuple; the per-lane kernel is then a handful of shifts, masks, one
+//! `u64` multiply and adds, which LLVM auto-vectorizes over the group
+//! chunks. An explicit AVX2 path (feature `simd`, runtime-detected)
+//! covers the single-input layouts; the scalar kernel remains the
+//! bit-exact reference either way.
+
+use super::engine::SdmmEngine;
+use crate::packing::{Layout, PackedTuple};
+use crate::util::bits::{mask, sext, zext};
+
+/// Upper bounds across every supported layout (8-bit: 3×1, 6-bit: 2×2,
+/// 4-bit: 2×3 — see `packing::layout`).
+pub const MAX_KW: usize = 3;
+pub const MAX_KI: usize = 3;
+
+/// Input-independent constants of one packed tuple, hoisted out of the
+/// per-lane kernel. Shared layer-wide through `packing::PackedPlane`.
+#[derive(Clone, Debug)]
+pub struct PreparedTuple {
+    /// Unsigned A-port word.
+    pub a_word: u64,
+    /// 1 when A bit 24 is set (the v=8 top-slot MW ≥ 4 case).
+    a24: u64,
+    v: u32,
+    ki: usize,
+    kw: usize,
+    b_offsets: [u32; MAX_KI],
+    /// Active (non-zero) slots, packed front-to-back.
+    n_active: usize,
+    act_n: [u32; MAX_KW],
+    act_aoff: [u32; MAX_KW],
+    /// `NEG_j` before the per-lane `<< boff_i` shift.
+    act_neg: [u64; MAX_KW],
+    /// Post-processing constants per *original* slot index.
+    slot_zero: [bool; MAX_KW],
+    slot_negated: [bool; MAX_KW],
+    slot_n: [u32; MAX_KW],
+    slot_s: [u32; MAX_KW],
+    slot_w: [u32; MAX_KW],
+    slot_aoff: [u32; MAX_KW],
+}
+
+impl PreparedTuple {
+    pub fn prepare(t: &PackedTuple) -> PreparedTuple {
+        let v = t.layout.v;
+        let ki = t.layout.ki();
+        let kw = t.slots.len();
+        assert!(kw <= MAX_KW && ki <= MAX_KI, "layout exceeds batch bounds");
+        let mut p = PreparedTuple {
+            a_word: t.a_word,
+            a24: (t.a_word >> 24) & 1,
+            v,
+            ki,
+            kw,
+            b_offsets: [0; MAX_KI],
+            n_active: 0,
+            act_n: [0; MAX_KW],
+            act_aoff: [0; MAX_KW],
+            act_neg: [0; MAX_KW],
+            slot_zero: [true; MAX_KW],
+            slot_negated: [false; MAX_KW],
+            slot_n: [0; MAX_KW],
+            slot_s: [0; MAX_KW],
+            slot_w: [0; MAX_KW],
+            slot_aoff: [0; MAX_KW],
+        };
+        for (i, &off) in t.layout.b_offsets.iter().enumerate() {
+            p.b_offsets[i] = off;
+        }
+        for (j, slot) in t.slots.iter().enumerate() {
+            p.slot_zero[j] = slot.zero;
+            p.slot_negated[j] = slot.negative;
+            p.slot_n[j] = slot.n;
+            p.slot_s[j] = slot.s;
+            p.slot_w[j] = v + slot.mw_width;
+            p.slot_aoff[j] = t.a_offsets[j];
+            if slot.zero {
+                continue;
+            }
+            // Top min(n, v) bits of the v-bit window: the sign bits that
+            // `zext(input >> n, v)` pulls in for negative inputs.
+            let hi = !(mask(v) >> slot.n) & mask(v);
+            let base = (mask(slot.mw_width) - slot.mw) << v;
+            let a = p.n_active;
+            p.act_n[a] = slot.n;
+            p.act_aoff[a] = t.a_offsets[j];
+            p.act_neg[a] = (base | hi) << t.a_offsets[j];
+            p.n_active += 1;
+        }
+        p
+    }
+
+    pub fn ki(&self) -> usize {
+        self.ki
+    }
+
+    pub fn kw(&self) -> usize {
+        self.kw
+    }
+
+    /// One P word from pre-packed lane patterns (`p_lanes[i] =
+    /// zext(x_i, v)`, `neg_lanes[i]` all-ones for negative `x_i`).
+    #[inline]
+    pub fn p_word(&self, p_lanes: &[u64], neg_lanes: &[u64]) -> u64 {
+        let mut b = 0u64;
+        for i in 0..self.ki {
+            b |= p_lanes[i] << self.b_offsets[i];
+        }
+        let mut c = 0u64;
+        for a in 0..self.n_active {
+            let n = self.act_n[a];
+            let aoff = self.act_aoff[a];
+            let negw = self.act_neg[a];
+            for i in 0..self.ki {
+                let boff = self.b_offsets[i];
+                c = c
+                    .wrapping_add(neg_lanes[i] & (negw << boff))
+                    .wrapping_add((p_lanes[i] >> n) << (aoff + boff));
+            }
+        }
+        let bias = ((b >> 17) & self.a24) << 43;
+        self.a_word
+            .wrapping_mul(b)
+            .wrapping_add(c)
+            .wrapping_add(bias)
+            & mask(48)
+    }
+
+    /// Lane-parallel P words for single-input layouts: one output per
+    /// input pattern. The loop body is branch-free so LLVM can
+    /// auto-vectorize the chunked form.
+    #[inline]
+    pub fn p_words_ki1(&self, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        debug_assert_eq!(self.ki, 1);
+        debug_assert_eq!(self.b_offsets[0], 0);
+        debug_assert!(p.len() >= out.len() && neg.len() >= out.len());
+        let a = self.a_word;
+        let m48 = mask(48);
+        let na = self.n_active;
+        let (n0, o0, g0) = (self.act_n[0], self.act_aoff[0], self.act_neg[0]);
+        let (n1, o1, g1) = (self.act_n[1], self.act_aoff[1], self.act_neg[1]);
+        let (n2, o2, g2) = (self.act_n[2], self.act_aoff[2], self.act_neg[2]);
+        for ((o, &pv), &nv) in out.iter_mut().zip(p).zip(neg) {
+            let mut c = 0u64;
+            if na > 0 {
+                c = c.wrapping_add(nv & g0).wrapping_add((pv >> n0) << o0);
+            }
+            if na > 1 {
+                c = c.wrapping_add(nv & g1).wrapping_add((pv >> n1) << o1);
+            }
+            if na > 2 {
+                c = c.wrapping_add(nv & g2).wrapping_add((pv >> n2) << o2);
+            }
+            // ki = 1 ⇒ B < 2^16, bit 17 can never be set: no bias term.
+            *o = a.wrapping_mul(pv).wrapping_add(c) & m48;
+        }
+    }
+
+    /// Post-process one product slot out of a raw P word (identical to
+    /// `PackedTuple::unpack_slot`, using the hoisted constants).
+    #[inline]
+    pub fn unpack_slot(&self, p: u64, j: usize, i: usize, p_lane: u64) -> i64 {
+        if self.slot_zero[j] {
+            return 0;
+        }
+        let off = self.slot_aoff[j] + self.b_offsets[i];
+        let w = self.slot_w[j];
+        let n = self.slot_n[j];
+        let val = sext(p >> off, w);
+        let concat = (val << n) | (p_lane & mask(n)) as i64;
+        let r = concat << self.slot_s[j];
+        if self.slot_negated[j] {
+            -r
+        } else {
+            r
+        }
+    }
+}
+
+/// Pre-packed input lanes shared by every tuple of a tile: the zero-
+/// extended v-bit patterns and the negative-input masks, one entry per
+/// (group, lane).
+#[derive(Clone, Debug)]
+pub struct BatchLanes {
+    ki: usize,
+    groups: usize,
+    v: u32,
+    /// `zext(x, v)` per lane, `[group * ki + lane]`.
+    p: Vec<u64>,
+    /// `u64::MAX` where the input is negative, else 0; same layout.
+    neg: Vec<u64>,
+}
+
+impl BatchLanes {
+    /// Pack `inputs` as consecutive ki-sized groups
+    /// (`inputs.len() % layout.ki() == 0`).
+    pub fn pack(layout: &Layout, inputs: &[i64]) -> BatchLanes {
+        let ki = layout.ki();
+        assert_eq!(inputs.len() % ki, 0, "inputs not a multiple of ki");
+        let mut lanes = BatchLanes {
+            ki,
+            groups: inputs.len() / ki,
+            v: layout.v,
+            p: Vec::with_capacity(inputs.len()),
+            neg: Vec::with_capacity(inputs.len()),
+        };
+        lanes.extend(inputs);
+        lanes
+    }
+
+    /// Single-lane packing: lane 0 carries `xs`, the remaining ki−1
+    /// lanes stream zeros. Bit-exact for the weight-stationary conv
+    /// mapping, which replicates one pixel across the input lanes and
+    /// consumes only lane 0 (product slots never interact through
+    /// carries, so idle-lane contents cannot perturb lane 0).
+    pub fn pack_lane0(layout: &Layout, xs: &[i64]) -> BatchLanes {
+        let ki = layout.ki();
+        let mut lanes = BatchLanes {
+            ki,
+            groups: xs.len(),
+            v: layout.v,
+            p: vec![0; xs.len() * ki],
+            neg: vec![0; xs.len() * ki],
+        };
+        for (g, &x) in xs.iter().enumerate() {
+            debug_assert!(crate::util::bits::fits_signed(x, layout.v));
+            lanes.p[g * ki] = zext(x, layout.v);
+            lanes.neg[g * ki] = if x < 0 { u64::MAX } else { 0 };
+        }
+        lanes
+    }
+
+    /// Reuse the allocation for a fresh single-lane tile (the conv
+    /// inner loop repacks per tap without reallocating).
+    pub fn repack_lane0(&mut self, xs: &[i64]) {
+        assert_eq!(self.groups, xs.len(), "lane tile size changed");
+        if self.ki > 1 {
+            self.p.iter_mut().for_each(|v| *v = 0);
+            self.neg.iter_mut().for_each(|v| *v = 0);
+        }
+        for (g, &x) in xs.iter().enumerate() {
+            self.p[g * self.ki] = zext(x, self.v);
+            self.neg[g * self.ki] = if x < 0 { u64::MAX } else { 0 };
+        }
+    }
+
+    fn extend(&mut self, inputs: &[i64]) {
+        for &x in inputs {
+            debug_assert!(crate::util::bits::fits_signed(x, self.v));
+            self.p.push(zext(x, self.v));
+            self.neg.push(if x < 0 { u64::MAX } else { 0 });
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    pub fn ki(&self) -> usize {
+        self.ki
+    }
+
+    /// Lane-0 patterns as a contiguous slice (only valid for ki = 1).
+    fn lane0_slices(&self) -> (&[u64], &[u64]) {
+        (&self.p, &self.neg)
+    }
+}
+
+/// The batch execution engine. Functionally equivalent to running
+/// [`SdmmEngine`] once per (tuple, input group) — proven bit-exact by
+/// `tests/proptest_batch.rs` — but evaluated lane-parallel without the
+/// port-accurate model's toggle bookkeeping (use the scalar engine when
+/// feeding the power model).
+#[derive(Clone, Debug, Default)]
+pub struct BatchEngine {
+    /// DSP ops this engine stands in for (one per tuple per group).
+    pub ops: u64,
+}
+
+impl BatchEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raw 48-bit P words for one tuple across every input group:
+    /// `out[g]` is what `SdmmEngine::execute_raw` returns for group `g`.
+    pub fn execute_raw_batch(
+        &mut self,
+        tuple: &PreparedTuple,
+        lanes: &BatchLanes,
+        out: &mut [u64],
+    ) {
+        assert_eq!(lanes.ki, tuple.ki, "lane arity != tuple layout");
+        assert!(out.len() >= lanes.groups, "output buffer too small");
+        let out = &mut out[..lanes.groups];
+        self.ops += lanes.groups as u64;
+        if tuple.ki == 1 {
+            let (p, neg) = lanes.lane0_slices();
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if simd::avx2_available() {
+                    // SAFETY: AVX2 presence checked at runtime.
+                    unsafe { simd::p_words_ki1_avx2(tuple, p, neg, out) };
+                    return;
+                }
+            }
+            tuple.p_words_ki1(p, neg, out);
+        } else {
+            let ki = tuple.ki;
+            for (g, o) in out.iter_mut().enumerate() {
+                *o = tuple.p_word(
+                    &lanes.p[g * ki..(g + 1) * ki],
+                    &lanes.neg[g * ki..(g + 1) * ki],
+                );
+            }
+        }
+    }
+
+    /// Full product unpacking: `out[g * kw*ki + j * ki + i]` is the
+    /// product of slot j and lane i for group g — the batched analogue
+    /// of `SdmmEngine::execute_into` per group.
+    #[allow(clippy::needless_range_loop)]
+    pub fn execute_batch_into(
+        &mut self,
+        tuple: &PreparedTuple,
+        lanes: &BatchLanes,
+        p_scratch: &mut Vec<u64>,
+        out: &mut [i64],
+    ) {
+        let (kw, ki, groups) = (tuple.kw, tuple.ki, lanes.groups);
+        assert!(out.len() >= groups * kw * ki, "output buffer too small");
+        p_scratch.resize(groups, 0);
+        self.execute_raw_batch(tuple, lanes, p_scratch);
+        for g in 0..groups {
+            let p = p_scratch[g];
+            let base = g * kw * ki;
+            for j in 0..kw {
+                for i in 0..ki {
+                    out[base + j * ki + i] =
+                        tuple.unpack_slot(p, j, i, lanes.p[g * ki + i]);
+                }
+            }
+        }
+    }
+
+    /// Fused conv inner loop: accumulate lane-0 products of slots
+    /// `0..take` into `take` accumulator rows of `stride`-wide `acc`
+    /// (`acc[(row0 + j) * stride + g] += product(j, lane 0, group g)`).
+    /// Non-allocating: `p_scratch` is caller-owned and reused.
+    #[allow(clippy::too_many_arguments)]
+    pub fn accumulate_lane0(
+        &mut self,
+        tuple: &PreparedTuple,
+        lanes: &BatchLanes,
+        p_scratch: &mut Vec<u64>,
+        acc: &mut [i64],
+        row0: usize,
+        stride: usize,
+        take: usize,
+    ) {
+        let groups = lanes.groups;
+        debug_assert!(take <= tuple.kw);
+        debug_assert!(stride >= groups);
+        debug_assert!((row0 + take) * stride <= acc.len());
+        p_scratch.resize(groups, 0);
+        self.execute_raw_batch(tuple, lanes, p_scratch);
+        let ki = tuple.ki;
+        for j in 0..take {
+            if tuple.slot_zero[j] {
+                continue;
+            }
+            let off = tuple.slot_aoff[j]; // lane 0: boff = 0 contribution
+            let boff = tuple.b_offsets[0];
+            let off = off + boff;
+            let w = tuple.slot_w[j];
+            let n = tuple.slot_n[j];
+            let s = tuple.slot_s[j];
+            let negated = tuple.slot_negated[j];
+            let row = &mut acc[(row0 + j) * stride..(row0 + j) * stride + groups];
+            let lowmask = mask(n);
+            for ((rv, &pw), &pl) in row
+                .iter_mut()
+                .zip(p_scratch.iter())
+                .zip(lanes.p.iter().step_by(ki))
+            {
+                let val = sext(pw >> off, w);
+                let concat = (val << n) | (pl & lowmask) as i64;
+                let r = concat << s;
+                if negated {
+                    *rv -= r;
+                } else {
+                    *rv += r;
+                }
+            }
+        }
+    }
+
+    /// Convenience wrapper mirroring `SdmmEngine::execute` for one
+    /// input group (used by the equivalence tests).
+    pub fn execute_one(&mut self, tuple: &PreparedTuple, inputs: &[i64]) -> Vec<Vec<i64>> {
+        assert_eq!(inputs.len(), tuple.ki);
+        let mut p_lanes = [0u64; MAX_KI];
+        let mut negs = [0u64; MAX_KI];
+        for (i, &x) in inputs.iter().enumerate() {
+            p_lanes[i] = zext(x, self.v_of(tuple));
+            negs[i] = if x < 0 { u64::MAX } else { 0 };
+        }
+        self.ops += 1;
+        let p = tuple.p_word(&p_lanes[..tuple.ki], &negs[..tuple.ki]);
+        (0..tuple.kw)
+            .map(|j| {
+                (0..tuple.ki)
+                    .map(|i| tuple.unpack_slot(p, j, i, p_lanes[i]))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn v_of(&self, tuple: &PreparedTuple) -> u32 {
+        tuple.v
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.ops = 0;
+    }
+}
+
+/// Scalar cross-check helper: run the port-accurate engine over the
+/// same (tuple, lanes) pairs and return its raw P words — the oracle
+/// for the batch path (tests and benches).
+pub fn scalar_raw_reference(
+    engine: &mut SdmmEngine,
+    tuple: &PackedTuple,
+    inputs: &[i64],
+) -> Vec<u64> {
+    let ki = tuple.layout.ki();
+    inputs
+        .chunks(ki)
+        .map(|group| engine.execute_raw(tuple, group))
+        .collect()
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    //! Explicit AVX2 kernel for single-input layouts. Bit-identical to
+    //! [`PreparedTuple::p_words_ki1`]: 4 groups per vector, unsigned
+    //! 25×18-class multiply via `mul_epu32` (operands < 2^32, product
+    //! < 2^43), C-word accumulation with shared shift counts.
+
+    use super::PreparedTuple;
+    use crate::util::bits::mask;
+    use std::arch::x86_64::*;
+
+    #[inline]
+    pub fn avx2_available() -> bool {
+        std::is_x86_feature_detected!("avx2")
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn p_words_ki1_avx2(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        debug_assert_eq!(t.ki, 1);
+        let n = out.len();
+        let a = _mm256_set1_epi64x(t.a_word as i64);
+        let m48 = _mm256_set1_epi64x(mask(48) as i64);
+        let mut g = 0usize;
+        while g + 4 <= n {
+            let pv = _mm256_loadu_si256(p.as_ptr().add(g) as *const __m256i);
+            let nv = _mm256_loadu_si256(neg.as_ptr().add(g) as *const __m256i);
+            // A·B (both operands fit 32 bits; epu32 multiplies the low
+            // dwords of each 64-bit lane).
+            let prod = _mm256_mul_epu32(a, pv);
+            let mut c = _mm256_setzero_si256();
+            for s in 0..t.n_active {
+                let negw = _mm256_set1_epi64x(t.act_neg[s] as i64);
+                c = _mm256_add_epi64(c, _mm256_and_si256(nv, negw));
+                let sh = _mm256_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
+                let sh = _mm256_sll_epi64(sh, _mm_cvtsi32_si128(t.act_aoff[s] as i32));
+                c = _mm256_add_epi64(c, sh);
+            }
+            let res = _mm256_and_si256(_mm256_add_epi64(prod, c), m48);
+            _mm256_storeu_si256(out.as_mut_ptr().add(g) as *mut __m256i, res);
+            g += 4;
+        }
+        if g < n {
+            t.p_words_ki1(&p[g..n], &neg[g..n], &mut out[g..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{pack_approx, Layout};
+
+    fn all_inputs(v: u32) -> Vec<i64> {
+        let lim = 1i64 << (v - 1);
+        (-lim..lim).collect()
+    }
+
+    #[test]
+    fn batch_matches_engine_8bit_exhaustive() {
+        let l = Layout::for_bits(8).unwrap();
+        for ws in [[-100i64, 44, 15], [1, 1, 15], [0, -1, 0], [127, -128, 99]] {
+            let t = pack_approx(&l, &ws).unwrap();
+            let pt = PreparedTuple::prepare(&t);
+            let mut scalar = SdmmEngine::new();
+            let mut batch = BatchEngine::new();
+            let xs = all_inputs(8);
+            let lanes = BatchLanes::pack(&l, &xs);
+            let mut raw = vec![0u64; xs.len()];
+            batch.execute_raw_batch(&pt, &lanes, &mut raw);
+            for (g, &x) in xs.iter().enumerate() {
+                assert_eq!(raw[g], scalar.execute_raw(&t, &[x]), "ws={ws:?} x={x}");
+                assert_eq!(
+                    batch.execute_one(&pt, &[x]),
+                    t.expected_products(&[x]),
+                    "ws={ws:?} x={x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_engine_multi_input() {
+        for v in [6u32, 4] {
+            let l = Layout::for_bits(v).unwrap();
+            let lim = 1i64 << (v - 1);
+            let mut rng = crate::util::rng::Rng::new(40 + v as u64);
+            for _ in 0..200 {
+                let ws: Vec<i64> =
+                    (0..l.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                let t = pack_approx(&l, &ws).unwrap();
+                let pt = PreparedTuple::prepare(&t);
+                let mut scalar = SdmmEngine::new();
+                let mut batch = BatchEngine::new();
+                let inputs: Vec<i64> = (0..l.ki() * 16)
+                    .map(|_| rng.range_i64(-lim, lim - 1))
+                    .collect();
+                let lanes = BatchLanes::pack(&l, &inputs);
+                let mut raw = vec![0u64; lanes.groups()];
+                batch.execute_raw_batch(&pt, &lanes, &mut raw);
+                let want = scalar_raw_reference(&mut scalar, &t, &inputs);
+                assert_eq!(raw, want, "v={v} ws={ws:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_into_matches_unpack_all() {
+        let l = Layout::for_bits(6).unwrap();
+        let t = pack_approx(&l, &[-25, 31]).unwrap();
+        let pt = PreparedTuple::prepare(&t);
+        let mut batch = BatchEngine::new();
+        let inputs: Vec<i64> = vec![-32, 5, 0, -1, 31, -17];
+        let lanes = BatchLanes::pack(&l, &inputs);
+        let mut scratch = Vec::new();
+        let k = l.kw() * l.ki();
+        let mut out = vec![0i64; lanes.groups() * k];
+        batch.execute_batch_into(&pt, &lanes, &mut scratch, &mut out);
+        let mut scalar = SdmmEngine::new();
+        for (g, group) in inputs.chunks(l.ki()).enumerate() {
+            let want = scalar.execute(&t, group);
+            let flat: Vec<i64> = want.into_iter().flatten().collect();
+            assert_eq!(&out[g * k..(g + 1) * k], &flat[..], "group {g}");
+        }
+    }
+
+    #[test]
+    fn lane0_accumulation_matches_products() {
+        let l = Layout::for_bits(4).unwrap();
+        let t = pack_approx(&l, &[-8, 7]).unwrap();
+        let pt = PreparedTuple::prepare(&t);
+        let mut batch = BatchEngine::new();
+        let xs: Vec<i64> = (-8..8).collect();
+        let lanes = BatchLanes::pack_lane0(&l, &xs);
+        let mut scratch = Vec::new();
+        let mut acc = vec![0i64; 2 * xs.len()];
+        batch.accumulate_lane0(&pt, &lanes, &mut scratch, &mut acc, 0, xs.len(), 2);
+        for (g, &x) in xs.iter().enumerate() {
+            assert_eq!(acc[g], -8 * x, "slot 0, x={x}");
+            assert_eq!(acc[xs.len() + g], 7 * x, "slot 1, x={x}");
+        }
+    }
+
+    #[test]
+    fn a_sign_correction_edge_is_exact() {
+        // MW=7 in the top 8-bit slot sets A bit 24 — the a24 path.
+        let l = Layout::for_bits(8).unwrap();
+        let t = pack_approx(&l, &[1, 1, 15]).unwrap();
+        assert!(t.a_sign_correction());
+        let pt = PreparedTuple::prepare(&t);
+        let mut scalar = SdmmEngine::new();
+        let mut batch = BatchEngine::new();
+        let xs = all_inputs(8);
+        let lanes = BatchLanes::pack(&l, &xs);
+        let mut raw = vec![0u64; xs.len()];
+        batch.execute_raw_batch(&pt, &lanes, &mut raw);
+        for (g, &x) in xs.iter().enumerate() {
+            assert_eq!(raw[g], scalar.execute_raw(&t, &[x]), "x={x}");
+        }
+    }
+
+    #[test]
+    fn b_sign_correction_edge_is_exact() {
+        // v=4 layout, negative input in the top lane sets B bit 17.
+        let l = Layout::for_bits(4).unwrap();
+        let t = pack_approx(&l, &[5, -3]).unwrap();
+        let pt = PreparedTuple::prepare(&t);
+        let mut scalar = SdmmEngine::new();
+        let mut batch = BatchEngine::new();
+        for i3 in [-8i64, -1] {
+            let inputs = [3i64, -2, i3];
+            assert!((l.b_word(&inputs) >> 17) & 1 == 1, "edge not exercised");
+            let lanes = BatchLanes::pack(&l, &inputs);
+            let mut raw = vec![0u64; 1];
+            batch.execute_raw_batch(&pt, &lanes, &mut raw);
+            assert_eq!(raw[0], scalar.execute_raw(&t, &inputs));
+        }
+    }
+
+    #[test]
+    fn ops_counter_counts_groups() {
+        let l = Layout::for_bits(8).unwrap();
+        let t = pack_approx(&l, &[1, 2, 3]).unwrap();
+        let pt = PreparedTuple::prepare(&t);
+        let mut batch = BatchEngine::new();
+        let xs: Vec<i64> = (0..10).collect();
+        let lanes = BatchLanes::pack_lane0(&l, &xs);
+        let mut raw = vec![0u64; 10];
+        batch.execute_raw_batch(&pt, &lanes, &mut raw);
+        assert_eq!(batch.ops, 10);
+    }
+}

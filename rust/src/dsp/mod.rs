@@ -9,10 +9,19 @@
 //! post-processes the results; it is the processing element's compute
 //! stage (paper Fig. 5) minus the FPGA.
 
+//!
+//! For throughput workloads (layer-scale simulation, Table 2/6), the
+//! [`batch`] module evaluates many independent SDMM P words per call in
+//! plain unsigned `u64` arithmetic — bit-exact with [`SdmmEngine`] but
+//! without the per-op port bookkeeping; see its module docs for the
+//! identity that makes that sound.
+
+pub mod batch;
 mod dsp48;
 mod engine;
 mod generation;
 
+pub use batch::{scalar_raw_reference, BatchEngine, BatchLanes, PreparedTuple};
 pub use dsp48::{Dsp48E1, DspOp, DspStats};
 pub use engine::{MacUnit, SdmmEngine};
 pub use generation::{is_feasible_exact_on, DspGeneration};

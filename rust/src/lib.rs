@@ -36,6 +36,15 @@
 //! let mut engine = SdmmEngine::new();
 //! let products = engine.execute(&tuple, &[-77]);
 //! assert_eq!(products, tuple.expected_products(&[-77]));
+//!
+//! // Throughput path: the same tuple, many inputs per call on the
+//! // lane-parallel batch engine (bit-exact with the scalar engine).
+//! use sdmm::dsp::{BatchEngine, BatchLanes, PreparedTuple};
+//! let prepared = PreparedTuple::prepare(&tuple);
+//! let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]);
+//! let mut raw = vec![0u64; lanes.groups()];
+//! BatchEngine::new().execute_raw_batch(&prepared, &lanes, &mut raw);
+//! assert_eq!(raw[0], engine.execute_raw(&tuple, &[-77]));
 //! ```
 
 pub mod cnn;

@@ -199,6 +199,9 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.flag("artifacts", "artifacts");
+    if !sdmm::runtime::pjrt_enabled() {
+        bail!("this build has no PJRT backend — rebuild with `--features pjrt` (needs the xla bindings)");
+    }
     if !sdmm::runtime::artifacts_available(&dir) {
         bail!("artifacts missing in {dir:?} — run `make artifacts`");
     }

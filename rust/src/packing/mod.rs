@@ -11,9 +11,13 @@
 //!   replacement (Eq. 9, paper §3.3.4).
 //! * [`wrom`] — the on-chip dictionary: dedup packed weight tuples,
 //!   assign indices, produce the off-chip index stream (WRC compression).
+//! * [`plane`] — the layer-level packed-weight cache: a conv layer's
+//!   tuples built once (scalar + batch-engine forms) and shared by the
+//!   simulator, the CNN reference and the runtime.
 
 pub mod finetune;
 pub mod layout;
+pub mod plane;
 pub mod tuple;
 pub mod wrom;
 
@@ -21,5 +25,6 @@ pub use finetune::{
     bray_curtis, fine_tune_stream, fine_tune_tuple, is_feasible_exact, FineTuneReport,
 };
 pub use layout::Layout;
+pub use plane::{PackedPlane, PlaneTile};
 pub use tuple::{pack_approx, pack_exact, PackedTuple, Slot};
 pub use wrom::{Wrom, WromEntry, WromIndexStream};

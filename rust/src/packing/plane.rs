@@ -1,0 +1,411 @@
+//! Layer-level packed-weight cache (`PackedPlane`).
+//!
+//! The systolic-array simulator, the CNN reference and the runtime all
+//! used to re-pack conv weights into DSP tuples on the fly — per PE,
+//! per output-channel tile, every time a layer ran. Packing is
+//! weight-only work (the WROM insight, paper §4): it depends on the
+//! layer's weights and the port layout, never on the inputs, so one
+//! plane can be built once per layer and shared by every consumer and
+//! every worker thread.
+//!
+//! A plane is organized exactly like the weight-stationary mapping in
+//! `sa::array`: one [`PlaneTile`] per (channel group, output-channel
+//! tile of the DSP group size), each holding `taps ×
+//! tuples_per_tap` packed tuples in tap-major order (tap = `(ic·k +
+//! ky)·k + kx`), mirroring the chunking the scalar path applies
+//! (`kw`-sized chunks of the tile's channels, zero-padded tail). Both
+//! the [`PackedTuple`]s (scalar engine) and their
+//! [`PreparedTuple`] forms (batch engine) are stored, so the two
+//! execution paths consume one cache.
+
+use super::layout::Layout;
+use super::tuple::{pack_approx, PackedTuple};
+use crate::cnn::infer::Tensor3;
+use crate::cnn::zoo::ConvLayer;
+use crate::dsp::{BatchEngine, BatchLanes, PreparedTuple};
+use anyhow::Result;
+
+/// Packed weights for one output-channel tile of one channel group.
+#[derive(Clone, Debug)]
+pub struct PlaneTile {
+    /// Conv channel group this tile belongs to.
+    pub grp: usize,
+    /// First output channel (absolute index into the layer).
+    pub oc0: usize,
+    /// Output channels covered (≤ the plane's DSP group size).
+    pub gg: usize,
+    /// Tap-major tuples: `tuples[tap * tuples_per_tap + t]`.
+    pub tuples: Vec<PackedTuple>,
+    /// Batch-engine forms, same indexing.
+    pub prepared: Vec<PreparedTuple>,
+    /// `ceil(gg / kw)` tuples per tap.
+    pub tuples_per_tap: usize,
+}
+
+/// A whole conv layer's weights, packed once.
+#[derive(Clone, Debug)]
+pub struct PackedPlane {
+    pub layout: Layout,
+    /// Output channels per DSP group (paper group size g).
+    pub group: usize,
+    /// Weight taps per tile: `(in_ch / groups) * kernel²`.
+    pub taps: usize,
+    pub tiles: Vec<PlaneTile>,
+}
+
+impl PackedPlane {
+    /// Pack a layer's OIHW weights for the given layout and DSP group
+    /// size. Chunking is identical to the scalar simulator path (and
+    /// `MultiPackPe::load_weights`): each tile's channels are packed in
+    /// `kw`-sized chunks per tap, the final partial chunk zero-padded.
+    pub fn build(
+        layout: &Layout,
+        group: usize,
+        weights: &[i64],
+        layer: &ConvLayer,
+    ) -> Result<PackedPlane> {
+        Self::build_inner(layout, group, weights, layer, true)
+    }
+
+    /// Scalar-only build: skips the batch-engine [`PreparedTuple`]
+    /// forms (the scalar simulator path never reads them — roughly
+    /// halves packing cost). A plane built this way serves
+    /// [`tap_tuples`](Self::tap_tuples) only; `execute_conv` /
+    /// `tap_prepared` require a full [`build`](Self::build).
+    pub fn build_scalar(
+        layout: &Layout,
+        group: usize,
+        weights: &[i64],
+        layer: &ConvLayer,
+    ) -> Result<PackedPlane> {
+        Self::build_inner(layout, group, weights, layer, false)
+    }
+
+    fn build_inner(
+        layout: &Layout,
+        group: usize,
+        weights: &[i64],
+        layer: &ConvLayer,
+        with_prepared: bool,
+    ) -> Result<PackedPlane> {
+        assert_eq!(weights.len() as u64, layer.params(), "weight count");
+        assert!(group > 0, "DSP group size must be positive");
+        let icg = layer.in_ch / layer.groups;
+        let ocg = layer.out_ch / layer.groups;
+        let k = layer.kernel;
+        let kw = layout.kw();
+        let taps = icg * k * k;
+        let mut tiles = Vec::new();
+        let mut ws = vec![0i64; kw];
+        for grp in 0..layer.groups {
+            let mut oc_rel = 0;
+            while oc_rel < ocg {
+                let gg = group.min(ocg - oc_rel);
+                let tuples_per_tap = gg.div_ceil(kw);
+                let mut tuples = Vec::with_capacity(taps * tuples_per_tap);
+                for ic in 0..icg {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let mut j = 0;
+                            while j < gg {
+                                let take = kw.min(gg - j);
+                                for (t, w) in ws.iter_mut().enumerate() {
+                                    *w = if t < take {
+                                        let oc = grp * ocg + oc_rel + j + t;
+                                        weights[((oc * icg + ic) * k + ky) * k + kx]
+                                    } else {
+                                        0
+                                    };
+                                }
+                                tuples.push(pack_approx(layout, &ws)?);
+                                j += take;
+                            }
+                        }
+                    }
+                }
+                let prepared = if with_prepared {
+                    tuples.iter().map(PreparedTuple::prepare).collect()
+                } else {
+                    Vec::new()
+                };
+                tiles.push(PlaneTile {
+                    grp,
+                    oc0: grp * ocg + oc_rel,
+                    gg,
+                    tuples,
+                    prepared,
+                    tuples_per_tap,
+                });
+                oc_rel += gg;
+            }
+        }
+        Ok(PackedPlane {
+            layout: layout.clone(),
+            group,
+            taps,
+            tiles,
+        })
+    }
+
+    /// The scalar-engine tuples of one tap of one tile.
+    pub fn tap_tuples(&self, tile: usize, tap: usize) -> &[PackedTuple] {
+        let t = &self.tiles[tile];
+        let base = tap * t.tuples_per_tap;
+        &t.tuples[base..base + t.tuples_per_tap]
+    }
+
+    /// The batch-engine tuples of one tap of one tile.
+    pub fn tap_prepared(&self, tile: usize, tap: usize) -> &[PreparedTuple] {
+        let t = &self.tiles[tile];
+        let base = tap * t.tuples_per_tap;
+        &t.prepared[base..base + t.tuples_per_tap]
+    }
+
+    /// Total packed tuples across all tiles (cache-size accounting).
+    pub fn total_tuples(&self) -> usize {
+        self.tiles.iter().map(|t| t.tuples.len()).sum()
+    }
+
+    /// Execute the convolution this plane was built for on the batch
+    /// engine: lane-parallel over output pixels, thread-parallel over
+    /// output-channel tiles. Returns the output tensor plus the DSP-op
+    /// and multiplication counts the run stands in for (identical to
+    /// the scalar simulator's accounting). Bit-exact with
+    /// `conv2d_int(input, plane.effective_weights(layer), layer)`.
+    pub fn execute_conv(&self, input: &Tensor3, layer: &ConvLayer) -> (Tensor3, u64, u64) {
+        assert_eq!(input.c, layer.in_ch);
+        assert_eq!(input.h, layer.in_hw);
+        let o_hw = layer.out_hw();
+        let n_pix = o_hw * o_hw;
+        let icg = layer.in_ch / layer.groups;
+        let k = layer.kernel;
+        let kw = self.layout.kw();
+        // The plane stores no layer geometry beyond what packing fixed;
+        // catch a plane/layer mix-up before it silently mis-indexes.
+        assert_eq!(
+            self.taps,
+            icg * k * k,
+            "plane was packed for a different layer geometry"
+        );
+        assert_eq!(
+            self.tiles.iter().map(|t| t.gg).sum::<usize>(),
+            layer.out_ch,
+            "plane covers a different output-channel count"
+        );
+        assert!(
+            self.tiles.iter().all(|t| t.prepared.len() == t.tuples.len()),
+            "plane built without batch forms (use PackedPlane::build, not build_scalar)"
+        );
+        let results = crate::util::par::par_map(self.tiles.len(), |ti| {
+            let tile = &self.tiles[ti];
+            let mut engine = BatchEngine::new();
+            let mut acc = vec![0i64; tile.gg * n_pix];
+            let mut xs = vec![0i64; n_pix];
+            let mut lanes = BatchLanes::pack_lane0(&self.layout, &xs);
+            let mut scratch: Vec<u64> = Vec::with_capacity(n_pix);
+            let mut mults = 0u64;
+            for ic in 0..icg {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        gather_tap(input, layer, tile.grp * icg + ic, ky, kx, &mut xs);
+                        lanes.repack_lane0(&xs);
+                        let tap = (ic * k + ky) * k + kx;
+                        let prepared = self.tap_prepared(ti, tap);
+                        let mut j = 0;
+                        for pt in prepared {
+                            let take = kw.min(tile.gg - j);
+                            engine.accumulate_lane0(
+                                pt, &lanes, &mut scratch, &mut acc, j, n_pix, take,
+                            );
+                            mults += (take * n_pix) as u64;
+                            j += take;
+                        }
+                    }
+                }
+            }
+            (acc, engine.ops, mults)
+        });
+        let mut out = Tensor3::zeros(layer.out_ch, o_hw, o_hw);
+        let mut dsp_ops = 0u64;
+        let mut mults = 0u64;
+        for (tile, (acc, ops, m)) in self.tiles.iter().zip(results) {
+            for j in 0..tile.gg {
+                let dst = (tile.oc0 + j) * n_pix;
+                out.data[dst..dst + n_pix].copy_from_slice(&acc[j * n_pix..(j + 1) * n_pix]);
+            }
+            dsp_ops += ops;
+            mults += m;
+        }
+        (out, dsp_ops, mults)
+    }
+
+    /// The effective (approximated) weights the plane implements, in
+    /// OIHW order — the oracle for equivalence tests.
+    pub fn effective_weights(&self, layer: &ConvLayer) -> Vec<i64> {
+        let icg = layer.in_ch / layer.groups;
+        let k = layer.kernel;
+        let kw = self.layout.kw();
+        let mut out = vec![0i64; layer.params() as usize];
+        for tile in &self.tiles {
+            for ic in 0..icg {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let tap = (ic * k + ky) * k + kx;
+                        let base = tap * tile.tuples_per_tap;
+                        let mut j = 0;
+                        while j < tile.gg {
+                            let take = kw.min(tile.gg - j);
+                            let tuple = &tile.tuples[base + j / kw];
+                            let vals = tuple.values();
+                            for (t, &v) in vals.iter().take(take).enumerate() {
+                                let oc = tile.oc0 + j + t;
+                                out[((oc * icg + ic) * k + ky) * k + kx] = v;
+                            }
+                            j += take;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Gather one weight tap's input pixels over the output grid (zero for
+/// padding taps — the hardware streams the zero through the datapath).
+fn gather_tap(
+    input: &Tensor3,
+    layer: &ConvLayer,
+    c: usize,
+    ky: usize,
+    kx: usize,
+    xs: &mut [i64],
+) {
+    let o_hw = layer.out_hw();
+    for oy in 0..o_hw {
+        let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
+        let row_ok = iy >= 0 && iy < input.h as i64;
+        for ox in 0..o_hw {
+            let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
+            xs[oy * o_hw + ox] = if row_ok && ix >= 0 && ix < input.w as i64 {
+                input.at(c, iy as usize, ix as usize)
+            } else {
+                0
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::infer::approximate_weights;
+    use crate::util::rng::Rng;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new("t", 6, 4, 7, 3, 1, 1, 1)
+    }
+
+    #[test]
+    fn plane_geometry() {
+        let l = Layout::for_bits(8).unwrap();
+        let layer = layer();
+        let mut rng = Rng::new(9);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = PackedPlane::build(&l, 3, &w, &layer).unwrap();
+        // 7 output channels in groups of 3 -> tiles of 3, 3, 1.
+        assert_eq!(plane.tiles.len(), 3);
+        assert_eq!(
+            plane.tiles.iter().map(|t| t.gg).collect::<Vec<_>>(),
+            vec![3, 3, 1]
+        );
+        assert_eq!(plane.taps, 4 * 9);
+        for tile in &plane.tiles {
+            assert_eq!(tile.tuples.len(), plane.taps * tile.tuples_per_tap);
+            assert_eq!(tile.prepared.len(), tile.tuples.len());
+        }
+    }
+
+    #[test]
+    fn effective_weights_match_approximation() {
+        let l = Layout::for_bits(8).unwrap();
+        let layer = layer();
+        let mut rng = Rng::new(10);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = PackedPlane::build(&l, 3, &w, &layer).unwrap();
+        assert_eq!(plane.effective_weights(&layer), approximate_weights(&w, 8));
+    }
+
+    #[test]
+    fn execute_conv_matches_reference() {
+        for (v, group) in [(8u32, 3usize), (6, 4), (4, 6)] {
+            let l = Layout::for_bits(v).unwrap();
+            let layer = ConvLayer::new("t", 6, 4, 7, 3, 2, 1, 1);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(20 + v as u64);
+            let w: Vec<i64> =
+                (0..layer.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+            let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            let plane = PackedPlane::build(&l, group, &w, &layer).unwrap();
+            let (out, dsp_ops, mults) = plane.execute_conv(&input, &layer);
+            let golden = crate::cnn::infer::conv2d_int(
+                &input,
+                &approximate_weights(&w, v),
+                &layer,
+            );
+            assert_eq!(out, golden, "v={v}");
+            assert_eq!(mults, layer.macs(), "v={v}");
+            assert!(dsp_ops > 0 && dsp_ops <= mults);
+        }
+    }
+
+    #[test]
+    fn scalar_only_build_skips_batch_forms() {
+        let l = Layout::for_bits(8).unwrap();
+        let layer = layer();
+        let mut rng = Rng::new(12);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let full = PackedPlane::build(&l, 3, &w, &layer).unwrap();
+        let scalar = PackedPlane::build_scalar(&l, 3, &w, &layer).unwrap();
+        for (a, b) in full.tiles.iter().zip(&scalar.tiles) {
+            assert_eq!(a.tuples, b.tuples);
+            assert!(b.prepared.is_empty());
+        }
+        assert_eq!(
+            scalar.effective_weights(&layer),
+            full.effective_weights(&layer)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "different layer geometry")]
+    fn execute_conv_rejects_mismatched_layer() {
+        let l = Layout::for_bits(8).unwrap();
+        let layer3 = layer(); // 3x3 kernel
+        let mut rng = Rng::new(13);
+        let w: Vec<i64> = (0..layer3.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = PackedPlane::build(&l, 3, &w, &layer3).unwrap();
+        let layer1 = ConvLayer::new("t1", 6, 4, 7, 1, 1, 0, 1); // 1x1 kernel
+        let input = Tensor3::zeros(layer1.in_ch, layer1.in_hw, layer1.in_hw);
+        let _ = plane.execute_conv(&input, &layer1);
+    }
+
+    #[test]
+    fn grouped_layer_tiles_stay_in_group() {
+        let l = Layout::for_bits(4).unwrap();
+        let layer = ConvLayer::new("g", 4, 4, 6, 3, 1, 1, 2);
+        let mut rng = Rng::new(11);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-8, 7)).collect();
+        let plane = PackedPlane::build(&l, 6, &w, &layer).unwrap();
+        // ocg = 3 per group, group size 6 -> one tile per channel group.
+        assert_eq!(plane.tiles.len(), 2);
+        assert_eq!(plane.tiles[0].oc0, 0);
+        assert_eq!(plane.tiles[1].oc0, 3);
+        assert_eq!(plane.tiles[1].grp, 1);
+        // 4-bit weights are exact, so the plane reproduces them.
+        assert_eq!(plane.effective_weights(&layer), w);
+    }
+}

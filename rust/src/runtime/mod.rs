@@ -7,6 +7,11 @@
 //! * [`CnnModel`] — the serving wrapper: weights pre-staged, batched
 //!   `infer()`; quantize/approximate weight transforms for the Table 2
 //!   end-to-end path.
+//!
+//! PJRT execution requires the `pjrt` cargo feature (the `xla`
+//! bindings are not in the baseline vendored crate set); without it the
+//! exec layer compiles API-compatible stubs that error at run time, and
+//! all PJRT consumers skip via [`artifacts_available`].
 
 pub mod artifacts;
 pub mod exec;
@@ -19,8 +24,29 @@ pub use model::{CnnModel, WeightMode};
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";
 
-/// True when the artifacts are present (tests skip PJRT paths otherwise
-/// with a loud marker rather than failing).
+/// Was the crate built with the `pjrt` feature (real xla bindings
+/// rather than the erroring stubs)?
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// True when the AOT artifacts are present AND this build can execute
+/// them (`pjrt` feature). Every PJRT consumer — integration tests,
+/// benches, `report table2`, `sdmm serve` — gates on this and skips
+/// with a loud marker rather than failing, so a no-pjrt build never
+/// panics into the stub layer even with artifacts on disk.
 pub fn artifacts_available(dir: &str) -> bool {
-    std::path::Path::new(dir).join("manifest.json").exists()
+    pjrt_enabled() && std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifacts_gate_respects_pjrt_feature() {
+        if !super::pjrt_enabled() {
+            // Without the feature the stubs cannot execute anything, so
+            // the gate must be closed regardless of what's on disk.
+            assert!(!super::artifacts_available("artifacts"));
+        }
+    }
 }

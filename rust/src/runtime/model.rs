@@ -3,7 +3,7 @@
 //! Table 2 end-to-end delta.
 
 use super::artifacts::Artifacts;
-use super::exec::{literal_f32, Client, Executable};
+use super::exec::{literal_f32, Client, Executable, Literal};
 use crate::cnn::infer::approximate_weights;
 use crate::cnn::quant::{dequantize, quantize_symmetric};
 use anyhow::{Context, Result};
@@ -94,7 +94,7 @@ impl CnnModel {
     pub fn infer(&self, staged: &StagedWeights, x: &[f32]) -> Result<Vec<f32>> {
         let shape = [self.batch, 1, self.input_hw, self.input_hw];
         let x_lit = literal_f32(x, &shape).context("input literal")?;
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(staged.lits.len() + 1);
+        let mut args: Vec<Literal> = Vec::with_capacity(staged.lits.len() + 1);
         for l in &staged.lits {
             args.push(l.clone());
         }
@@ -124,5 +124,5 @@ impl CnnModel {
 /// Weight literals staged for repeated execution.
 pub struct StagedWeights {
     pub mode: WeightMode,
-    lits: Vec<xla::Literal>,
+    lits: Vec<Literal>,
 }

@@ -20,8 +20,8 @@ use super::pe::PeArch;
 use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
 use crate::dsp::{MacUnit, SdmmEngine};
-use crate::packing::{pack_approx, Layout, Wrom};
-use anyhow::Result;
+use crate::packing::{Layout, PackedPlane, Wrom};
+use anyhow::{bail, Result};
 
 /// Array configuration.
 #[derive(Clone, Debug)]
@@ -176,9 +176,25 @@ impl SystolicArray {
         }
     }
 
+    /// Pack a conv layer's weights for this array's layout/group size —
+    /// the cache [`run_conv`](Self::run_conv) and
+    /// [`run_conv_batch_with_plane`](Self::run_conv_batch_with_plane)
+    /// share (MultiPack only).
+    pub fn pack_plane(&self, layer: &ConvLayer, weights: &[i64]) -> Result<PackedPlane> {
+        let Some(layout) = self.layout.as_ref() else {
+            bail!("weight planes exist only for the MultiPack architecture");
+        };
+        PackedPlane::build(layout, self.g(), weights, layer)
+    }
+
     /// Functionally bit-accurate conv execution. Weights are quantized
     /// integers (OIHW); input is an integer tensor. Every product goes
-    /// through the DSP48E1 model. Returns the layer run with outputs.
+    /// through the DSP48E1 model (toggle statistics feed the power
+    /// model). Returns the layer run with outputs.
+    ///
+    /// For throughput (no toggle accounting) use
+    /// [`run_conv_batch`](Self::run_conv_batch) — bit-identical output,
+    /// lane- and thread-parallel.
     pub fn run_conv(&self, layer: &ConvLayer, weights: &[i64], input: &Tensor3) -> Result<LayerRun> {
         let mut est = self.estimate_layer(layer);
         let g = self.g();
@@ -193,119 +209,172 @@ impl SystolicArray {
         let mut dsp_ops = 0u64;
         let mut mults = 0u64;
 
-        // im2col semantics per channel group.
-        for grp in 0..layer.groups {
-            // output channel groups of g
-            let mut oc0 = 0;
-            while oc0 < ocg {
-                let gg = g.min(ocg - oc0);
-                // Weight-stationary: the packed tuples for this channel
-                // group are built ONCE per (ic, ky, kx) tap and reused
-                // for every output pixel — exactly like the hardware
-                // (and the perf-pass fix that removed the dominant
-                // re-packing cost; EXPERIMENTS.md §Perf).
-                let mut tap_tuples: Vec<Vec<crate::packing::PackedTuple>> = Vec::new();
-                if self.cfg.arch == PeArch::MultiPack {
-                    let layout = self.layout.as_ref().unwrap();
-                    let kw = self.kw();
-                    for ic in 0..icg {
-                        for ky in 0..kk {
-                            for kx in 0..kk {
-                                let mut tuples = Vec::new();
-                                let mut j = 0;
-                                while j < gg {
-                                    let take = kw.min(gg - j);
-                                    let mut ws: Vec<i64> = (0..take)
-                                        .map(|t| {
-                                            let oc = grp * ocg + oc0 + j + t;
-                                            weights[((oc * icg + ic) * kk + ky) * kk + kx]
-                                        })
-                                        .collect();
-                                    ws.resize(kw, 0);
-                                    tuples.push(pack_approx(layout, &ws)?);
-                                    j += take;
-                                }
-                                tap_tuples.push(tuples);
-                            }
-                        }
-                    }
-                }
-                for oy in 0..o_hw {
-                    for ox in 0..o_hw {
-                        let mut acc = vec![0i64; gg];
-                        for ic in 0..icg {
-                            for ky in 0..kk {
-                                for kx in 0..kk {
-                                    let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
-                                    let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
-                                    // padding taps stream a zero through
-                                    // the datapath (the hardware does
-                                    // multiply them), so they count as
-                                    // real multiplications
-                                    let x = if iy < 0
-                                        || iy >= input.h as i64
-                                        || ix < 0
-                                        || ix >= input.w as i64
-                                    {
-                                        0
-                                    } else {
-                                        input.at(grp * icg + ic, iy as usize, ix as usize)
-                                    };
-                                    let widx = |j: usize| {
-                                        let oc = grp * ocg + oc0 + j;
-                                        weights[((oc * icg + ic) * kk + ky) * kk + kx]
-                                    };
-                                    match self.cfg.arch {
-                                        PeArch::MultiPack => {
-                                            let layout = self.layout.as_ref().unwrap();
-                                            let kw = self.kw();
-                                            let ki = layout.ki();
-                                            let tuples =
-                                                &tap_tuples[(ic * kk + ky) * kk + kx];
-                                            // replicate x across the ki
-                                            // input lanes (same pixel)
-                                            let mut inputs = [0i64; 4];
-                                            inputs[..ki].fill(x);
-                                            let mut prods = [0i64; 8];
-                                            let mut j = 0;
-                                            for tuple in tuples {
-                                                let take = kw.min(gg - j);
-                                                engine.execute_into(
-                                                    tuple,
-                                                    &inputs[..ki],
-                                                    &mut prods[..kw * ki],
-                                                );
-                                                dsp_ops += 1;
-                                                for t in 0..take {
-                                                    acc[j + t] += prods[t * ki];
-                                                    mults += 1;
-                                                }
-                                                j += take;
-                                            }
-                                        }
-                                        PeArch::OneMac | PeArch::TwoMult => {
-                                            for (j, a) in acc.iter_mut().enumerate().take(gg) {
-                                                mac.clear();
-                                                *a += mac.mac(widx(j), x);
+        match self.cfg.arch {
+            PeArch::MultiPack => {
+                // Weight-stationary: the packed tuples are built ONCE
+                // per layer through the shared PackedPlane cache and
+                // reused for every output pixel — exactly like the
+                // hardware (EXPERIMENTS.md §Perf).
+                let layout = self.layout.as_ref().unwrap();
+                let kw = self.kw();
+                let ki = layout.ki();
+                // Scalar-only plane: the batch-engine forms would be
+                // packed and thrown away (and would pad the scalar
+                // side of the §Perf comparison).
+                let plane = PackedPlane::build_scalar(layout, g, weights, layer)?;
+                for (ti, tile) in plane.tiles.iter().enumerate() {
+                    for oy in 0..o_hw {
+                        for ox in 0..o_hw {
+                            let mut acc = [0i64; 8];
+                            for ic in 0..icg {
+                                for ky in 0..kk {
+                                    for kx in 0..kk {
+                                        let iy =
+                                            (oy * layer.stride + ky) as i64 - layer.pad as i64;
+                                        let ix =
+                                            (ox * layer.stride + kx) as i64 - layer.pad as i64;
+                                        // padding taps stream a zero
+                                        // through the datapath (the
+                                        // hardware does multiply them),
+                                        // so they count as real
+                                        // multiplications
+                                        let x = if iy < 0
+                                            || iy >= input.h as i64
+                                            || ix < 0
+                                            || ix >= input.w as i64
+                                        {
+                                            0
+                                        } else {
+                                            input.at(
+                                                tile.grp * icg + ic,
+                                                iy as usize,
+                                                ix as usize,
+                                            )
+                                        };
+                                        let tap = (ic * kk + ky) * kk + kx;
+                                        let tuples = plane.tap_tuples(ti, tap);
+                                        // replicate x across the ki
+                                        // input lanes (same pixel)
+                                        let mut inputs = [0i64; 4];
+                                        inputs[..ki].fill(x);
+                                        let mut prods = [0i64; 8];
+                                        let mut j = 0;
+                                        for tuple in tuples {
+                                            let take = kw.min(tile.gg - j);
+                                            engine.execute_into(
+                                                tuple,
+                                                &inputs[..ki],
+                                                &mut prods[..kw * ki],
+                                            );
+                                            dsp_ops += 1;
+                                            for t in 0..take {
+                                                acc[j + t] += prods[t * ki];
                                                 mults += 1;
                                             }
-                                            dsp_ops += gg.div_ceil(g) as u64 * 1;
+                                            j += take;
                                         }
                                     }
                                 }
                             }
-                        }
-                        for (j, &a) in acc.iter().enumerate() {
-                            out.set(grp * ocg + oc0 + j, oy, ox, a);
+                            for (j, &a) in acc.iter().take(tile.gg).enumerate() {
+                                out.set(tile.oc0 + j, oy, ox, a);
+                            }
                         }
                     }
                 }
-                oc0 += gg;
+            }
+            PeArch::OneMac | PeArch::TwoMult => {
+                for grp in 0..layer.groups {
+                    let mut oc0 = 0;
+                    while oc0 < ocg {
+                        let gg = g.min(ocg - oc0);
+                        for oy in 0..o_hw {
+                            for ox in 0..o_hw {
+                                let mut acc = [0i64; 8];
+                                for ic in 0..icg {
+                                    for ky in 0..kk {
+                                        for kx in 0..kk {
+                                            let iy = (oy * layer.stride + ky) as i64
+                                                - layer.pad as i64;
+                                            let ix = (ox * layer.stride + kx) as i64
+                                                - layer.pad as i64;
+                                            let x = if iy < 0
+                                                || iy >= input.h as i64
+                                                || ix < 0
+                                                || ix >= input.w as i64
+                                            {
+                                                0
+                                            } else {
+                                                input.at(
+                                                    grp * icg + ic,
+                                                    iy as usize,
+                                                    ix as usize,
+                                                )
+                                            };
+                                            for (j, a) in
+                                                acc.iter_mut().enumerate().take(gg)
+                                            {
+                                                let oc = grp * ocg + oc0 + j;
+                                                let w = weights
+                                                    [((oc * icg + ic) * kk + ky) * kk + kx];
+                                                mac.clear();
+                                                *a += mac.mac(w, x);
+                                                mults += 1;
+                                            }
+                                            dsp_ops += gg.div_ceil(g) as u64;
+                                        }
+                                    }
+                                }
+                                for (j, &a) in acc.iter().take(gg).enumerate() {
+                                    out.set(grp * ocg + oc0 + j, oy, ox, a);
+                                }
+                            }
+                        }
+                        oc0 += gg;
+                    }
+                }
             }
         }
         est.dsp_ops = dsp_ops;
         est.mults = mults;
         est.toggles = engine.stats();
+        est.output = Some(out);
+        Ok(est)
+    }
+
+    /// Batch-engine conv execution: bit-identical outputs and op
+    /// accounting to [`run_conv`](Self::run_conv) for the MultiPack
+    /// architecture, evaluated lane-parallel over output pixels and
+    /// thread-parallel over output-channel tiles (`util::par`). Toggle
+    /// statistics are not modelled — use the scalar path when feeding
+    /// the power model.
+    pub fn run_conv_batch(
+        &self,
+        layer: &ConvLayer,
+        weights: &[i64],
+        input: &Tensor3,
+    ) -> Result<LayerRun> {
+        let plane = self.pack_plane(layer, weights)?;
+        self.run_conv_batch_with_plane(layer, &plane, input)
+    }
+
+    /// [`run_conv_batch`](Self::run_conv_batch) with a caller-supplied
+    /// (reused) weight plane — the serving shape: pack once, run per
+    /// input.
+    pub fn run_conv_batch_with_plane(
+        &self,
+        layer: &ConvLayer,
+        plane: &PackedPlane,
+        input: &Tensor3,
+    ) -> Result<LayerRun> {
+        if self.cfg.arch != PeArch::MultiPack {
+            bail!("the batch path models the MultiPack architecture only");
+        }
+        let mut est = self.estimate_layer(layer);
+        let (out, dsp_ops, mults) = plane.execute_conv(input, layer);
+        est.dsp_ops = dsp_ops;
+        est.mults = mults;
+        est.toggles = Default::default();
         est.output = Some(out);
         Ok(est)
     }
@@ -366,6 +435,40 @@ mod tests {
         let golden = conv2d_int(&input, &w, &layer);
         assert_eq!(run.output.unwrap(), golden);
         assert_eq!(run.dsp_ops, layer.macs());
+    }
+
+    #[test]
+    fn batch_path_matches_scalar_path() {
+        for v in [8u32, 6, 4] {
+            let cfg = SaConfig::paper_prototype(v, PeArch::MultiPack);
+            let sa = SystolicArray::new(cfg).unwrap();
+            let (layer, w, input) = rand_setup(7 + v as u64, v);
+            let scalar = sa.run_conv(&layer, &w, &input).unwrap();
+            let batch = sa.run_conv_batch(&layer, &w, &input).unwrap();
+            assert_eq!(batch.output, scalar.output, "v={v}");
+            assert_eq!(batch.dsp_ops, scalar.dsp_ops, "v={v}");
+            assert_eq!(batch.mults, scalar.mults, "v={v}");
+        }
+    }
+
+    #[test]
+    fn batch_path_with_reused_plane() {
+        let cfg = SaConfig::paper_prototype(8, PeArch::MultiPack);
+        let sa = SystolicArray::new(cfg).unwrap();
+        let (layer, w, input) = rand_setup(21, 8);
+        let plane = sa.pack_plane(&layer, &w).unwrap();
+        let a = sa.run_conv_batch_with_plane(&layer, &plane, &input).unwrap();
+        let b = sa.run_conv_batch_with_plane(&layer, &plane, &input).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.output, sa.run_conv(&layer, &w, &input).unwrap().output);
+    }
+
+    #[test]
+    fn batch_path_rejects_non_mp() {
+        let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::OneMac)).unwrap();
+        let (layer, w, input) = rand_setup(5, 8);
+        assert!(sa.run_conv_batch(&layer, &w, &input).is_err());
+        assert!(sa.pack_plane(&layer, &w).is_err());
     }
 
     #[test]

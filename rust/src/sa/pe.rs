@@ -78,21 +78,19 @@ impl MultiPackPe {
 
     /// Multiply the stationary group with a batch of inputs
     /// (inputs.len() = layout.ki() per tuple execution). Returns the
-    /// products for every weight of the group against every input.
+    /// products for every weight of the group against every input
+    /// (non-allocating inner loop via `execute_into`).
     pub fn step(&mut self, inputs: &[i64]) -> Vec<i64> {
         let ki = self.layout.ki();
         assert_eq!(inputs.len(), ki);
-        let mut out = Vec::with_capacity(self.tuples.len() * self.layout.kw() * ki);
-        for t in &self.tuples {
-            let prods = self.engine.execute(t, inputs);
+        let kw = self.layout.kw();
+        let mut out = vec![0i64; self.tuples.len() * kw * ki];
+        for (ti, t) in self.tuples.iter().enumerate() {
+            self.engine
+                .execute_into(t, inputs, &mut out[ti * kw * ki..(ti + 1) * kw * ki]);
             self.stats.dsp_ops += 1;
-            for row in prods {
-                for p in row {
-                    out.push(p);
-                    self.stats.mults += 1;
-                }
-            }
         }
+        self.stats.mults += out.len() as u64;
         out
     }
 

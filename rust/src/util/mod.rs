@@ -15,11 +15,14 @@
 //! * [`bench`] — a micro-benchmark harness (warmup + timed iterations,
 //!   mean/p50/p99) used by the `cargo bench` targets.
 //! * [`json`] — a minimal JSON writer/reader for artifact manifests.
+//! * [`par`] — scoped-thread data parallelism (rayon substitute) for
+//!   the tiled conv / systolic-array hot paths.
 
 pub mod bench;
 pub mod bits;
 pub mod check;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 

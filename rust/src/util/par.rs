@@ -1,0 +1,162 @@
+//! Scoped-thread data parallelism for the simulator hot paths.
+//!
+//! The vendored crate set has no `rayon`, so this module provides the
+//! two shapes the tiled conv / systolic-array code needs on top of
+//! `std::thread::scope` (no unsafe, no allocation in the steady state):
+//!
+//! * [`par_map`] — dynamic work-stealing over `n` independent tile
+//!   indices, collecting owned per-tile results (the batch conv path:
+//!   one output-channel tile per work item).
+//! * [`par_chunks_mut`] — static partition of a mutable slice into
+//!   per-thread contiguous chunk ranges (the reference conv path: each
+//!   output channel owns a disjoint `o_hw * o_hw` span of the output).
+//!
+//! Both degrade to plain sequential loops when one thread is requested
+//! or available, so results are bit-identical regardless of thread
+//! count (integer work only — no float reassociation anywhere).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-thread budget: `SDMM_THREADS` env override (0 or unset =
+/// all available cores). Single knob shared by every parallel path so
+/// benches can pin scalar-vs-batch comparisons to known parallelism.
+pub fn num_threads() -> usize {
+    match std::env::var("SDMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Map `f` over `0..n` with dynamic scheduling across worker threads;
+/// returns results in index order. `f` must be pure per index (it runs
+/// concurrently from several threads).
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut collected: Vec<(usize, T)> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            collected.extend(h.join().expect("par_map worker panicked"));
+        }
+    });
+    collected.sort_unstable_by_key(|(i, _)| *i);
+    collected.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Split `data` into `chunk`-sized pieces and process them on worker
+/// threads; `f(chunk_index, chunk)` gets a mutable view of one piece.
+/// Chunks are distributed in contiguous runs (static partition), so a
+/// chunk is always touched by exactly one thread.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let n_chunks = data.len().div_ceil(chunk);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Contiguous runs of chunks per thread (ceil split so every chunk
+    // is covered and the last thread may run short).
+    let per_thread = n_chunks.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut chunk_base = 0usize;
+        while !rest.is_empty() {
+            let take = (per_thread * chunk).min(rest.len());
+            // mem::take detaches the slice from the loop variable so the
+            // split halves carry the full outer lifetime into the spawn.
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let base = chunk_base;
+            chunk_base += head.len().div_ceil(chunk);
+            let fr = &f;
+            s.spawn(move || {
+                for (i, c) in head.chunks_mut(chunk).enumerate() {
+                    fr(base + i, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(97, |i| i * i);
+        assert_eq!(out.len(), 97);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert!(par_map(0, |i| i).is_empty());
+        assert_eq!(par_map(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_chunk_once() {
+        let mut data = vec![0u64; 103]; // deliberately not a multiple of 8
+        par_chunks_mut(&mut data, 8, |idx, c| {
+            for v in c.iter_mut() {
+                *v += 1 + idx as u64;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1 + (i / 8) as u64, "element {i}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_sequential() {
+        let mut a = vec![0i64; 64];
+        let mut b = vec![0i64; 64];
+        let work = |idx: usize, c: &mut [i64]| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (idx * 1000 + j) as i64;
+            }
+        };
+        par_chunks_mut(&mut a, 16, work);
+        for (i, c) in b.chunks_mut(16).enumerate() {
+            work(i, c);
+        }
+        assert_eq!(a, b);
+    }
+}

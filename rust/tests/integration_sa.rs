@@ -43,6 +43,32 @@ fn mp_matches_golden_across_geometries() {
 }
 
 #[test]
+fn batch_engine_matches_scalar_across_geometries() {
+    // The lane-parallel batch path must agree with the port-accurate
+    // scalar path on outputs AND op accounting for every geometry
+    // (grouped, strided, padded, depthwise) at every bit width.
+    let geometries = [
+        ConvLayer::new("stride2", 8, 3, 6, 3, 2, 1, 1),
+        ConvLayer::new("1x1", 5, 8, 9, 1, 1, 0, 1),
+        ConvLayer::new("grouped", 6, 4, 6, 3, 1, 1, 2),
+        ConvLayer::new("depthwise", 6, 4, 4, 3, 1, 1, 4),
+        ConvLayer::new("5x5", 7, 2, 3, 5, 1, 2, 1),
+        ConvLayer::new("nopad", 6, 3, 3, 3, 1, 0, 1),
+    ];
+    for v in [8u32, 6, 4] {
+        let sa = SystolicArray::new(SaConfig::paper_prototype(v, PeArch::MultiPack)).unwrap();
+        for layer in &geometries {
+            let (w, input) = setup(layer, v, 15);
+            let scalar = sa.run_conv(layer, &w, &input).unwrap();
+            let batch = sa.run_conv_batch(layer, &w, &input).unwrap();
+            assert_eq!(batch.output, scalar.output, "v={v} layer={}", layer.name);
+            assert_eq!(batch.dsp_ops, scalar.dsp_ops, "v={v} layer={}", layer.name);
+            assert_eq!(batch.mults, scalar.mults, "v={v} layer={}", layer.name);
+        }
+    }
+}
+
+#[test]
 fn one_mac_is_exact_everywhere() {
     let layer = ConvLayer::new("t", 7, 3, 5, 3, 1, 1, 1);
     for v in [8u32, 6, 4] {
