@@ -1,20 +1,34 @@
 //! End-to-end benchmarks.
 //!
-//! Part 1 (always runs): a native 3-conv integer CNN through the
-//! systolic-array simulator, scalar engine vs batch engine with reused
-//! weight planes — the end-to-end half of the scalar-vs-batch
-//! comparison recorded in EXPERIMENTS.md §Perf.
+//! Part 1: a native 3-conv integer CNN through the systolic-array
+//! simulator, scalar engine vs batch engine with reused weight planes
+//! — the end-to-end half of the scalar-vs-batch comparison recorded in
+//! EXPERIMENTS.md §Perf.
 //!
 //! Part 2 (PJRT serving): the coordinator (dynamic batcher + worker
 //! thread + PJRT executable) under closed-loop load. Skips when the
 //! artifacts are missing or the `pjrt` feature is off.
+//!
+//! Part 3 (sharded serving, EXPERIMENTS.md §Serving): the multi-model
+//! `ServingRuntime` under closed-loop load over a mixed 8/6/4-bit
+//! model set, measuring throughput scaling across 1/2/4 shards. This
+//! part runs *instead of* parts 1–2 when invoked as
+//! `cargo bench --bench bench_e2e -- --serving` (so the CI smoke
+//! matrix runs each part exactly once). Intra-op parallelism is
+//! pinned to one thread (`SDMM_THREADS=1`) so the scaling measured is
+//! the shards', not the conv tiler's.
 
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
 use sdmm::cnn::zoo::ConvLayer;
+use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
 use sdmm::packing::PackedPlane;
+use sdmm::report::serving_summary;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::bench::BenchSuite;
 use sdmm::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn native_layers() -> Vec<ConvLayer> {
     vec![
@@ -87,10 +101,159 @@ fn bench_native(suite: &mut BenchSuite) {
 }
 
 fn main() {
+    let serving_only = std::env::args().any(|a| a == "--serving");
     let mut suite = BenchSuite::new("e2e");
-    bench_native(&mut suite);
-    serving(&mut suite);
+    if serving_only {
+        // Part 3 only (the dedicated CI smoke step); the plain
+        // invocation keeps parts 1–2 so the two steps never overlap.
+        bench_sharded_serving(&mut suite);
+    } else {
+        bench_native(&mut suite);
+        serving(&mut suite);
+    }
     suite.run();
+}
+
+/// Median wall-clock of `n` runs of `f` (seconds).
+fn median_secs<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[n / 2]
+}
+
+/// The mixed-precision model set: one 2-conv model per bit width,
+/// identical geometry, weights/inputs drawn in each width's range.
+fn mixed_specs() -> Vec<(ModelSpec, Tensor3)> {
+    [8u32, 6, 4]
+        .iter()
+        .map(|&v| {
+            let layers = vec![
+                ConvLayer::new("s1", 12, 8, 16, 3, 1, 1, 1),
+                ConvLayer::new("s2", 12, 16, 16, 3, 1, 1, 1),
+            ];
+            let spec = ModelSpec::random("mix", v, layers, 100 + v as u64);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(200 + v as u64);
+            let mut input = Tensor3::zeros(8, 12, 12);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            (spec, input)
+        })
+        .collect()
+}
+
+/// Closed-loop load: keep `conc` requests in flight, round-robin over
+/// the model set, until `requests` complete.
+fn closed_loop(rt: &ServingRuntime, work: &[(ModelKey, Tensor3)], requests: usize, conc: usize) {
+    let mut inflight = VecDeque::new();
+    let (mut sent, mut done) = (0usize, 0usize);
+    while done < requests {
+        while inflight.len() < conc && sent < requests {
+            let (key, x) = &work[sent % work.len()];
+            match rt.submit(key, x.clone()) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    sent += 1;
+                }
+                // Backpressure: drain a completion before retrying.
+                Err(_) => break,
+            }
+        }
+        if let Some(rx) = inflight.pop_front() {
+            rx.recv().unwrap().unwrap();
+            done += 1;
+        }
+    }
+}
+
+fn bench_sharded_serving(suite: &mut BenchSuite) {
+    // Pin intra-op parallelism so throughput scaling below measures the
+    // shards, not the conv tiler grabbing every core for one job.
+    std::env::set_var("SDMM_THREADS", "1");
+    println!("-- sharded serving (SDMM_THREADS=1, shard-level parallelism only) --");
+
+    let specs = mixed_specs();
+    let registry = Arc::new(ModelRegistry::new());
+    for (spec, _) in &specs {
+        registry.register(spec.clone()).unwrap();
+    }
+    println!(
+        "  registry: {} models (8/6/4-bit), {} packed tuples cached once, shared by all shards",
+        registry.len(),
+        registry.total_cached_tuples()
+    );
+    let work: Vec<(ModelKey, Tensor3)> =
+        specs.iter().map(|(s, x)| (s.key(), x.clone())).collect();
+
+    // Bit-exactness gate before timing: the 4-shard runtime must match
+    // the single-shard run_conv_batch reference on every model.
+    {
+        let rt = ServingRuntime::start(
+            Arc::clone(&registry),
+            ServingConfig {
+                shards: 4,
+                queue_capacity: 64,
+            },
+        )
+        .unwrap();
+        for (spec, input) in &specs {
+            let sa = SystolicArray::new(SaConfig::paper_prototype(
+                spec.v_bits,
+                PeArch::MultiPack,
+            ))
+            .unwrap();
+            let mut x = input.clone();
+            for (layer, w) in spec.layers.iter().zip(&spec.weights) {
+                let mut y = sa.run_conv_batch(layer, w, &x).unwrap().output.unwrap();
+                relu(&mut y);
+                x = requantize(&y, spec.v_bits).0;
+            }
+            let got = rt.infer(&spec.key(), input.clone()).unwrap();
+            assert_eq!(got.output, x, "serving path diverged ({})", spec.key());
+        }
+        rt.shutdown();
+    }
+
+    let fast = std::env::var("SDMM_BENCH_FAST").is_ok();
+    let requests = if fast { 18 } else { 72 };
+    let reps = if fast { 1 } else { 3 };
+    let conc = 8;
+    let mut thr = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let rt = ServingRuntime::start(
+            Arc::clone(&registry),
+            ServingConfig {
+                shards,
+                queue_capacity: 64,
+            },
+        )
+        .unwrap();
+        closed_loop(&rt, &work, 6, conc); // warm every worker
+        suite.bench(
+            &format!("serving {shards} shard(s), mixed 8/6/4-bit ({requests} req)"),
+            requests as f64,
+            || closed_loop(&rt, &work, requests, conc),
+        );
+        let t = median_secs(reps, || closed_loop(&rt, &work, requests, conc));
+        thr.push(requests as f64 / t);
+        print!("{}", serving_summary(&rt.snapshot()));
+        rt.shutdown();
+    }
+    println!(
+        "  -> serving throughput: 1 shard {:.1}/s, 2 shards {:.1}/s, 4 shards {:.1}/s — \
+         scaling 1->4 shards {:.2}x (host parallelism caps the ceiling)",
+        thr[0],
+        thr[1],
+        thr[2],
+        thr[2] / thr[0]
+    );
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -30,6 +30,11 @@ impl Tensor3 {
         }
     }
 
+    /// Shape as a `(c, h, w)` tuple (admission checks, error messages).
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
     #[inline]
     pub fn at(&self, c: usize, y: usize, x: usize) -> i64 {
         self.data[(c * self.h + y) * self.w + x]

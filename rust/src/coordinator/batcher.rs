@@ -16,7 +16,21 @@ use std::time::{Duration, Instant};
 /// Result of draining the submit queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QueueStatus {
+    /// The queue still accepts producers.
     Open,
+    /// The queue was closed; what the drain returned is final.
+    Closed,
+}
+
+/// Result of a bounded push ([`SubmitQueue::try_push_bounded`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The item was enqueued and the worker woken.
+    Queued,
+    /// The queue already held `cap` items — backpressure. The item was
+    /// dropped; submit again after completions drain.
+    Full,
+    /// The queue is closed; the item was dropped.
     Closed,
 }
 
@@ -36,6 +50,8 @@ struct SubmitState<T> {
 }
 
 impl<T> SubmitQueue<T> {
+    /// A fresh open queue behind an `Arc` (producers and the worker
+    /// share it by clone).
     #[allow(clippy::new_ret_no_self)]
     pub fn new() -> Arc<SubmitQueue<T>> {
         Arc::new(SubmitQueue {
@@ -59,6 +75,23 @@ impl<T> SubmitQueue<T> {
         true
     }
 
+    /// Bounded enqueue: refuse (without blocking) when the queue
+    /// already holds `cap` items — the backpressure primitive the
+    /// sharded serving runtime's admission layer builds on. Otherwise
+    /// identical to [`push`](Self::push).
+    pub fn try_push_bounded(&self, item: T, cap: usize) -> PushOutcome {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return PushOutcome::Closed;
+        }
+        if s.queue.len() >= cap {
+            return PushOutcome::Full;
+        }
+        s.queue.push_back(item);
+        self.cond.notify_one();
+        PushOutcome::Queued
+    }
+
     /// Close the queue: producers are refused from now on, the worker
     /// is woken to drain what remains.
     pub fn close(&self) {
@@ -67,10 +100,12 @@ impl<T> SubmitQueue<T> {
         self.cond.notify_all();
     }
 
+    /// Items currently queued (racy by nature — informational only).
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().queue.len()
     }
 
+    /// True when nothing is queued right now.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -110,9 +145,13 @@ impl<T> SubmitQueue<T> {
 /// Something that can run one fixed-size batch. `x` is
 /// [batch * item_len] row-major; returns [batch * out_len].
 pub trait BatchRunner {
+    /// Fixed batch size the runner executes.
     fn batch_size(&self) -> usize;
+    /// Flattened length of one input item.
     fn item_len(&self) -> usize;
+    /// Flattened length of one output item.
     fn out_len(&self) -> usize;
+    /// Execute one full batch (`batch_size * item_len` inputs).
     fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
 }
 
@@ -149,12 +188,14 @@ struct Pending<T> {
 pub struct Batcher<T> {
     policy: BatchPolicy,
     queue: Vec<Pending<T>>,
-    /// (flushed batches, padded slots) — observability counters.
+    /// Batches flushed so far (observability counter).
     pub batches: u64,
+    /// Tail-padding slots across those batches (observability counter).
     pub padded_slots: u64,
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher under the given policy.
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher {
             policy,
@@ -164,6 +205,7 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Queue one request (its deadline clock starts now).
     pub fn push(&mut self, x: Vec<f32>, tag: T) {
         self.queue.push(Pending {
             x,
@@ -172,10 +214,12 @@ impl<T> Batcher<T> {
         });
     }
 
+    /// Requests waiting to be flushed.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when no request is waiting.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -351,6 +395,77 @@ mod tests {
         let st = q.drain_wait(Some(Duration::from_millis(1)), &mut out);
         assert_eq!(st, QueueStatus::Open);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bounded_push_backpressure_and_recovery() {
+        let q = SubmitQueue::new();
+        assert_eq!(q.try_push_bounded(1u32, 2), PushOutcome::Queued);
+        assert_eq!(q.try_push_bounded(2, 2), PushOutcome::Queued);
+        // At capacity: refused without blocking, nothing enqueued.
+        assert_eq!(q.try_push_bounded(3, 2), PushOutcome::Full);
+        assert_eq!(q.len(), 2);
+        // Draining frees capacity again.
+        let mut out = Vec::new();
+        q.drain_wait(Some(Duration::from_millis(1)), &mut out);
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(q.try_push_bounded(3, 2), PushOutcome::Queued);
+        // Close wins over capacity checks.
+        q.close();
+        assert_eq!(q.try_push_bounded(4, 2), PushOutcome::Closed);
+    }
+
+    #[test]
+    fn shutdown_flush_preserves_fifo_order() {
+        // The shutdown contract the serving runtime relies on: items
+        // admitted before close() are all drained, in submission
+        // order, and the Closed status arrives *with* the final items
+        // (drain + status are read under one lock), never before.
+        let q = SubmitQueue::new();
+        for i in 0..5u32 {
+            assert!(q.push(i));
+        }
+        q.close();
+        assert!(!q.push(99), "post-close push must be refused");
+        let mut out = Vec::new();
+        let st = q.drain_wait(None, &mut out);
+        assert_eq!(st, QueueStatus::Closed);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        // Subsequent drains stay Closed and add nothing.
+        let st = q.drain_wait(Some(Duration::from_millis(1)), &mut out);
+        assert_eq!(st, QueueStatus::Closed);
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn close_during_concurrent_pushes_loses_nothing_admitted() {
+        // Producers race close(): every push that reported true must be
+        // delivered by the draining side exactly once.
+        let q: Arc<SubmitQueue<u32>> = SubmitQueue::new();
+        let producers: Vec<_> = (0..4u32)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut admitted = 0u32;
+                    for i in 0..100 {
+                        if q.push(p * 1000 + i) {
+                            admitted += 1;
+                        }
+                    }
+                    admitted
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(200));
+        q.close();
+        let admitted: u32 = producers.into_iter().map(|t| t.join().unwrap()).sum();
+        let mut out = Vec::new();
+        loop {
+            if q.drain_wait(None, &mut out) == QueueStatus::Closed {
+                break;
+            }
+        }
+        assert_eq!(out.len() as u32, admitted);
     }
 
     #[test]

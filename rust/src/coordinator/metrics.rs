@@ -1,0 +1,389 @@
+//! Serving-runtime observability: lock-free per-shard counters and a
+//! log₂-bucketed latency histogram.
+//!
+//! Every shard worker owns an `Arc<`[`ShardMetrics`]`>` shared with the
+//! admission layer: the admission side reads `queue_depth` for
+//! least-loaded shard selection and bounded-queue backpressure, the
+//! worker side records completions, drain-batch fill and end-to-end
+//! latency. All counters are atomics updated with relaxed ordering —
+//! they are monotonic observability data, never synchronization — so
+//! neither side ever takes a lock on the request path.
+//!
+//! [`RuntimeSnapshot`] is the plain-value export consumed by
+//! `report::serving_summary` and the serving benches/tests.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Number of log₂ latency buckets: bucket `i` holds samples whose
+/// nanosecond value has bit length `i` (bucket 47 also absorbs any
+/// larger outliers — 2^47 ns ≈ 39 hours, far beyond any request).
+pub const LATENCY_BUCKETS: usize = 48;
+
+/// A lock-free log₂-bucketed histogram over nanosecond samples.
+///
+/// Quantiles are approximate (resolved to the geometric midpoint of a
+/// power-of-two bucket, i.e. within ~1.5× of the true value) which is
+/// plenty for p50/p99 serving dashboards; the exact-quantile
+/// [`Summary`](crate::util::stats::Summary) stays the right tool for
+/// offline benches where a `Vec` of samples is affordable.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..LATENCY_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (nanoseconds). Lock-free; callable from any
+    /// thread.
+    pub fn record(&self, ns: u64) {
+        let idx = (64 - ns.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-value copy for reporting (the histogram itself keeps
+    /// absorbing samples).
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Clone for LatencyHistogram {
+    fn clone(&self) -> LatencyHistogram {
+        let s = self.snapshot();
+        LatencyHistogram {
+            buckets: s.buckets.into_iter().map(AtomicU64::new).collect(),
+            count: AtomicU64::new(s.count),
+            sum_ns: AtomicU64::new(s.sum_ns),
+        }
+    }
+}
+
+/// Plain-value view of a [`LatencyHistogram`] at one instant.
+#[derive(Clone, Debug, Default)]
+pub struct LatencySnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+}
+
+impl LatencySnapshot {
+    /// Samples in the snapshot.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in nanoseconds: the
+    /// geometric midpoint of the bucket holding the q-th sample.
+    /// Returns 0 when the snapshot is empty.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (self.count as f64 * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if i == 0 {
+                    0.0
+                } else {
+                    // bucket i covers [2^(i-1), 2^i): geometric midpoint
+                    1.5 * (1u64 << (i - 1)) as f64
+                };
+            }
+        }
+        // Unreachable when counts are consistent; fall back to the top.
+        1.5 * (1u64 << (LATENCY_BUCKETS - 2)) as f64
+    }
+
+    /// Approximate median latency (ns).
+    pub fn p50_ns(&self) -> f64 {
+        self.quantile_ns(0.50)
+    }
+
+    /// Approximate 99th-percentile latency (ns).
+    pub fn p99_ns(&self) -> f64 {
+        self.quantile_ns(0.99)
+    }
+}
+
+/// Per-shard serving counters (all lock-free; shared between the
+/// admission layer and the shard's worker thread).
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    jobs_ok: AtomicU64,
+    jobs_err: AtomicU64,
+    dsp_ops: AtomicU64,
+    mults: AtomicU64,
+    /// Worker wakes that drained at least one job.
+    batches: AtomicU64,
+    /// Jobs drained across those wakes (fill = batch_jobs / batches).
+    batch_jobs: AtomicU64,
+    /// Jobs admitted but not yet completed (queued + executing).
+    depth: AtomicUsize,
+    peak_depth: AtomicUsize,
+    latency: LatencyHistogram,
+}
+
+impl ShardMetrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> ShardMetrics {
+        ShardMetrics {
+            latency: LatencyHistogram::new(),
+            ..Default::default()
+        }
+    }
+
+    /// Jobs admitted but not yet completed (the admission layer's
+    /// least-loaded / backpressure signal).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Admission side: atomically claim one in-flight slot, refusing
+    /// when the shard is already at `cap`. The claim/bound check is a
+    /// single `fetch_add` (rolled back on refusal), so concurrent
+    /// submitters can never push the admitted depth past `cap` — the
+    /// property the backpressure contract advertises.
+    pub fn try_inc_depth(&self, cap: usize) -> bool {
+        let prev = self.depth.fetch_add(1, Ordering::Relaxed);
+        if prev >= cap {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        self.peak_depth.fetch_max(prev + 1, Ordering::Relaxed);
+        true
+    }
+
+    /// One job finished (or was withdrawn after a failed push).
+    pub fn dec_depth(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Worker side: one Condvar wake drained `n` jobs (`n` > 0).
+    pub fn record_drain(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_jobs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Worker side: one job completed successfully after `ns`
+    /// nanoseconds end-to-end, consuming the given op counts.
+    pub fn record_ok(&self, ns: u64, dsp_ops: u64, mults: u64) {
+        self.jobs_ok.fetch_add(1, Ordering::Relaxed);
+        self.dsp_ops.fetch_add(dsp_ops, Ordering::Relaxed);
+        self.mults.fetch_add(mults, Ordering::Relaxed);
+        self.latency.record(ns);
+    }
+
+    /// Worker side: one job failed after `ns` nanoseconds.
+    pub fn record_err(&self, ns: u64) {
+        self.jobs_err.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(ns);
+    }
+
+    /// Plain-value copy tagged with the shard index.
+    pub fn snapshot(&self, shard: usize) -> ShardSnapshot {
+        ShardSnapshot {
+            shard,
+            jobs_ok: self.jobs_ok.load(Ordering::Relaxed),
+            jobs_err: self.jobs_err.load(Ordering::Relaxed),
+            dsp_ops: self.dsp_ops.load(Ordering::Relaxed),
+            mults: self.mults.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_jobs: self.batch_jobs.load(Ordering::Relaxed),
+            queue_depth: self.depth.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+        }
+    }
+}
+
+/// Plain-value view of one shard's counters.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Shard index within the runtime.
+    pub shard: usize,
+    /// Jobs completed successfully.
+    pub jobs_ok: u64,
+    /// Jobs that completed with an error.
+    pub jobs_err: u64,
+    /// DSP block operations the completed jobs stand in for.
+    pub dsp_ops: u64,
+    /// Multiplications executed across completed jobs.
+    pub mults: u64,
+    /// Worker wakes that drained at least one job.
+    pub batches: u64,
+    /// Jobs drained across those wakes.
+    pub batch_jobs: u64,
+    /// Jobs admitted but not yet completed at snapshot time.
+    pub queue_depth: usize,
+    /// High-water mark of `queue_depth` over the shard's lifetime.
+    pub peak_depth: usize,
+    /// End-to-end latency distribution (admission → response).
+    pub latency: LatencySnapshot,
+}
+
+impl ShardSnapshot {
+    /// Mean jobs drained per Condvar wake — the batching worker's fill
+    /// ratio (1.0 = every wake served a single job; higher = wakes are
+    /// amortized over bursts).
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_jobs as f64 / self.batches as f64
+    }
+}
+
+/// Snapshot of every shard of a serving runtime at one instant.
+#[derive(Clone, Debug)]
+pub struct RuntimeSnapshot {
+    /// One entry per shard, in shard-index order.
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl RuntimeSnapshot {
+    /// Jobs completed successfully across all shards.
+    pub fn total_jobs(&self) -> u64 {
+        self.shards.iter().map(|s| s.jobs_ok).sum()
+    }
+
+    /// Failed jobs across all shards.
+    pub fn total_failed(&self) -> u64 {
+        self.shards.iter().map(|s| s.jobs_err).sum()
+    }
+
+    /// DSP ops across all shards.
+    pub fn total_dsp_ops(&self) -> u64 {
+        self.shards.iter().map(|s| s.dsp_ops).sum()
+    }
+
+    /// Multiplications across all shards.
+    pub fn total_mults(&self) -> u64 {
+        self.shards.iter().map(|s| s.mults).sum()
+    }
+
+    /// Smallest per-shard successful-job count — 0 means some shard
+    /// starved (the fairness tests assert this stays positive under
+    /// saturation).
+    pub fn min_shard_jobs(&self) -> u64 {
+        self.shards.iter().map(|s| s.jobs_ok).min().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(1000); // bucket 10, midpoint 1.5*512 = 768
+        }
+        h.record(1_000_000); // one outlier
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        let p50 = s.p50_ns();
+        assert!(p50 > 500.0 && p50 < 2000.0, "p50 {p50}");
+        // p99 lands on the 99th sample, still in the 1000ns bucket;
+        // quantile 1.0 reaches the outlier's bucket.
+        assert!(s.quantile_ns(1.0) > 500_000.0);
+        assert!((s.mean_ns() - (99.0 * 1000.0 + 1e6) / 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.snapshot().p50_ns(), 0.0);
+        assert_eq!(h.snapshot().mean_ns(), 0.0);
+        h.record(0);
+        assert_eq!(h.snapshot().quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn try_inc_depth_enforces_the_bound() {
+        let m = ShardMetrics::new();
+        assert!(m.try_inc_depth(2));
+        assert!(m.try_inc_depth(2));
+        // At the bound: refused, and depth is left untouched.
+        assert!(!m.try_inc_depth(2));
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.snapshot(0).peak_depth, 2, "refusal must not move the peak");
+        m.dec_depth();
+        assert!(m.try_inc_depth(2));
+    }
+
+    #[test]
+    fn shard_metrics_depth_and_fill() {
+        let m = ShardMetrics::new();
+        assert!(m.try_inc_depth(8));
+        assert!(m.try_inc_depth(8));
+        assert_eq!(m.depth(), 2);
+        m.record_drain(2);
+        m.record_ok(500, 10, 30);
+        m.dec_depth();
+        m.record_ok(700, 10, 30);
+        m.dec_depth();
+        let s = m.snapshot(3);
+        assert_eq!(s.shard, 3);
+        assert_eq!(s.jobs_ok, 2);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.peak_depth, 2);
+        assert_eq!(s.mults, 60);
+        assert!((s.mean_batch_fill() - 2.0).abs() < 1e-12);
+        assert_eq!(s.latency.count(), 2);
+    }
+
+    #[test]
+    fn runtime_snapshot_totals() {
+        let a = ShardMetrics::new();
+        let b = ShardMetrics::new();
+        a.record_ok(10, 1, 3);
+        a.record_ok(10, 1, 3);
+        b.record_ok(10, 2, 6);
+        let snap = RuntimeSnapshot {
+            shards: vec![a.snapshot(0), b.snapshot(1)],
+        };
+        assert_eq!(snap.total_jobs(), 3);
+        assert_eq!(snap.total_dsp_ops(), 4);
+        assert_eq!(snap.total_mults(), 12);
+        assert_eq!(snap.min_shard_jobs(), 1);
+        assert_eq!(snap.total_failed(), 0);
+    }
+}

@@ -8,25 +8,48 @@
 //!   approximate (Eq. 4) → pack → WROM + index stream. This is the
 //!   paper's "parameters are represented in a different format on
 //!   off-chip memory" step, producing everything the PE array needs.
+//! * [`registry`] — the multi-model registry: per-model
+//!   [`packing::PackedPlane`](crate::packing::PackedPlane) caches keyed
+//!   by (model, layer, bit-width), packed once at registration and
+//!   shared by every shard through `Arc`s.
+//! * [`shard`] — the sharded serving runtime: N independent systolic
+//!   shards, each with its own Condvar-woken batching worker, behind an
+//!   admission layer doing least-loaded shard selection and
+//!   bounded-queue backpressure. Mixed 8/6/4-bit models serve side by
+//!   side; outputs stay bit-exact with the single-shard batch path.
+//! * [`metrics`] — lock-free per-shard observability (latency
+//!   histograms, queue depth, drain-batch fill, DSP-op counters),
+//!   exported as plain-value snapshots for
+//!   [`report::serving_summary`](crate::report::serving_summary).
 //! * [`batcher`] — dynamic batching queue (size + deadline policy) in
 //!   front of the PJRT executable; requests are single images, the
 //!   executable runs fixed-size batches (tail padding).
-//! * [`server`] — worker thread owning the executable (PJRT handles are
-//!   not Sync), request/response channels, latency/throughput metrics.
+//! * [`server`] — single-executable worker thread owning a PJRT
+//!   executable (handles are not Sync), request/response channels,
+//!   latency/throughput metrics.
 //!
 //! Note on threading: the vendored crate set has no tokio; the
-//! coordinator uses std threads, a Condvar-signalled submit queue
-//! (producers wake the worker immediately; partial batches flush on the
-//! head-of-line deadline via `wait_timeout`) and per-request mpsc
-//! response channels — for a single-executable CPU backend the right
-//! shape anyway (one compute-bound worker, many cheap submitters).
+//! coordinator uses std threads and Condvar-signalled submit queues
+//! (producers wake a parked worker immediately; partial batches flush
+//! on the head-of-line deadline via `wait_timeout`) with per-request
+//! mpsc response channels. For compute-bound CPU workers that is the
+//! right shape anyway: few compute threads, many cheap submitters.
+#![warn(missing_docs)]
 
 pub mod batcher;
-pub mod runner;
+pub mod metrics;
 pub mod pipeline;
+pub mod registry;
+pub mod runner;
 pub mod server;
+pub mod shard;
 
-pub use batcher::{BatchPolicy, BatchRunner, Batcher, QueueStatus, SubmitQueue};
+pub use batcher::{BatchPolicy, BatchRunner, Batcher, PushOutcome, QueueStatus, SubmitQueue};
+pub use metrics::{
+    LatencyHistogram, LatencySnapshot, RuntimeSnapshot, ShardMetrics, ShardSnapshot,
+};
 pub use pipeline::{PackedNetwork, PackingPipeline, PackingReport};
+pub use registry::{ModelKey, ModelRegistry, ModelRun, ModelSpec, RegisteredModel};
 pub use runner::CnnRunner;
 pub use server::{InferenceServer, ServerMetrics};
+pub use shard::{AdmitError, InferOutput, ServingConfig, ServingRuntime};

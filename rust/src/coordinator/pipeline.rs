@@ -17,58 +17,80 @@ use anyhow::Result;
 /// manipulation with fine-tuning (the ablation baseline).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PipelineMode {
+    /// The paper's 3-bit-MW approximation (Eq. 4) — always packs.
     Approximate,
+    /// Exact manipulation with Bray-Curtis fine-tuning of infeasible
+    /// tuples (the ablation baseline, §3.3.4).
     ExactFineTuned,
 }
 
 /// The packing pipeline for one bit-width.
 #[derive(Clone, Debug)]
 pub struct PackingPipeline {
+    /// Port layout packed against.
     pub layout: Layout,
+    /// Approximate or exact+fine-tuned packing.
     pub mode: PipelineMode,
 }
 
 /// A fully packed network layer.
 #[derive(Clone, Debug)]
 pub struct PackedLayer {
+    /// Layer name (from the caller's network description).
     pub name: String,
+    /// Quantization scale the float weights were mapped with.
     pub quant: QuantParams,
     /// The weight values the hardware implements (post approx/tune).
     pub effective_weights: Vec<i64>,
+    /// Off-chip WROM index stream replacing the raw weights.
     pub stream: WromIndexStream,
 }
 
 /// A packed network: shared WROM + per-layer index streams.
 pub struct PackedNetwork {
+    /// The on-chip dictionary shared by every layer.
     pub wrom: Wrom,
+    /// Per-layer packing results, in network order.
     pub layers: Vec<PackedLayer>,
+    /// Mode the network was packed in.
     pub mode: PipelineMode,
-    /// Exact mode: tuples altered by fine-tuning / total tuples.
+    /// Exact mode: tuples altered by fine-tuning.
     pub tuned_tuples: u64,
+    /// Exact mode: total tuples considered.
     pub exact_tuples: u64,
 }
 
 /// Summary statistics of a packing run (report + EXPERIMENTS.md).
 #[derive(Clone, Debug)]
 pub struct PackingReport {
+    /// Weights packed across all layers.
     pub total_weights: usize,
+    /// Distinct WROM entries the network interned.
     pub wrom_entries: usize,
+    /// On-chip ROM size in bits.
     pub wrom_bits: u64,
+    /// Fixed off-chip index width per weight group (WRC format).
     pub index_bits_per_group: u32,
+    /// Off-chip footprint of the raw quantized weights (bits).
     pub original_bits: u64,
+    /// Off-chip footprint of the index stream (bits).
     pub compressed_bits: u64,
     /// Exact mode only: tuples altered by fine-tuning.
     pub tuned_tuples: u64,
+    /// Total packed tuples across all layers.
     pub total_tuples: u64,
 }
 
 impl PackingReport {
+    /// Compressed size as a percentage of the original (WRC: 66.7 % at
+    /// 8-bit).
     pub fn compression_percent(&self) -> f64 {
         self.compressed_bits as f64 / self.original_bits as f64 * 100.0
     }
 }
 
 impl PackingPipeline {
+    /// A pipeline for the given layout and mode.
     pub fn new(layout: Layout, mode: PipelineMode) -> Self {
         PackingPipeline { layout, mode }
     }
@@ -129,6 +151,7 @@ impl PackingPipeline {
 }
 
 impl PackedNetwork {
+    /// Aggregate WROM/compression statistics (Table 3 / Fig. 4 inputs).
     pub fn report(&self) -> PackingReport {
         let total_weights: usize = self.layers.iter().map(|l| l.stream.weight_count).sum();
         let total_tuples: u64 = self.layers.iter().map(|l| l.stream.tuples.len() as u64).sum();

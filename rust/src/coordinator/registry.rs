@@ -1,0 +1,491 @@
+//! Multi-model registry: per-model [`PackedPlane`] caches keyed by
+//! (model, layer, bit-width).
+//!
+//! The serving runtime's analogue of the WROM load (paper §4): packing
+//! a conv layer's weights into DSP tuples is weight-only work, so it
+//! happens exactly once — at registration — and every shard worker
+//! shares the resulting planes through `Arc`s. A model is addressed by
+//! [`ModelKey`] (name + bit-width), so the same network can be
+//! registered side by side at 8, 6 and 4 bits, mirroring the
+//! DSP-Packing observation that mixed-precision packings coexist on
+//! one fabric.
+//!
+//! Registration validates layer chaining and weight ranges up front;
+//! admission-time work is a hash lookup plus an `Arc` clone.
+
+use crate::cnn::infer::{relu, requantize, Tensor3};
+use crate::cnn::zoo::ConvLayer;
+use crate::packing::{Layout, PackedPlane};
+use crate::sa::{PeArch, SystolicArray};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Address of a registered model: name plus operand bit-width. The
+/// same logical network registered at two precisions is two entries.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+pub struct ModelKey {
+    /// Model name (caller-chosen, e.g. `"alexnet"`).
+    pub name: String,
+    /// Operand bit-width the model is packed for (8, 6 or 4).
+    pub v_bits: u32,
+}
+
+impl ModelKey {
+    /// Build a key from a name and bit-width.
+    pub fn new(name: &str, v_bits: u32) -> ModelKey {
+        ModelKey {
+            name: name.to_string(),
+            v_bits,
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}b", self.name, self.v_bits)
+    }
+}
+
+/// Everything needed to register one model: geometry plus quantized
+/// OIHW weights per conv layer. Weights must already be in the signed
+/// `v_bits` range (the registry packs them, it does not quantize).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Model name (becomes [`ModelKey::name`]).
+    pub name: String,
+    /// Operand bit-width (8, 6 or 4).
+    pub v_bits: u32,
+    /// Conv layers in execution order; consecutive layers must chain
+    /// (`out_ch`/`out_hw` of one feed `in_ch`/`in_hw` of the next).
+    pub layers: Vec<ConvLayer>,
+    /// Quantized OIHW weights, one `Vec` per layer
+    /// (`weights[i].len() == layers[i].params()`).
+    pub weights: Vec<Vec<i64>>,
+}
+
+impl ModelSpec {
+    /// Synthetic spec with seeded random weights in the `v_bits` range
+    /// — scaffolding for benches, tests and examples.
+    pub fn random(name: &str, v_bits: u32, layers: Vec<ConvLayer>, seed: u64) -> ModelSpec {
+        let mut rng = Rng::new(seed);
+        let lim = 1i64 << (v_bits - 1);
+        let weights = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        ModelSpec {
+            name: name.to_string(),
+            v_bits,
+            layers,
+            weights,
+        }
+    }
+
+    /// The key this spec registers under.
+    pub fn key(&self) -> ModelKey {
+        ModelKey::new(&self.name, self.v_bits)
+    }
+}
+
+/// Result of one full-model forward pass.
+#[derive(Clone, Debug)]
+pub struct ModelRun {
+    /// Final activation tensor (post-ReLU, requantized).
+    pub output: Tensor3,
+    /// DSP block operations the pass stands in for.
+    pub dsp_ops: u64,
+    /// Multiplications executed.
+    pub mults: u64,
+}
+
+/// A registered model: validated geometry plus one shared
+/// [`PackedPlane`] per layer. Cheap to clone through `Arc`; shard
+/// workers hold no per-model state beyond this.
+#[derive(Debug)]
+pub struct RegisteredModel {
+    /// The model's registry address.
+    pub key: ModelKey,
+    /// Conv layers in execution order.
+    pub layers: Vec<ConvLayer>,
+    /// Output channels per DSP group (paper group size g: 3/4/6).
+    pub group: usize,
+    planes: Vec<Arc<PackedPlane>>,
+}
+
+impl RegisteredModel {
+    /// The packed plane of one layer.
+    pub fn plane(&self, layer: usize) -> &Arc<PackedPlane> {
+        &self.planes[layer]
+    }
+
+    /// Expected input tensor shape `(c, h, w)`.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        let l = &self.layers[0];
+        (l.in_ch, l.in_hw, l.in_hw)
+    }
+
+    /// Total packed tuples cached for this model.
+    pub fn cached_tuples(&self) -> usize {
+        self.planes.iter().map(|p| p.total_tuples()).sum()
+    }
+
+    /// Run the full model on the batch engine through the given array
+    /// (which must be a MultiPack array at this model's bit-width):
+    /// per layer, conv through the shared plane, ReLU, then symmetric
+    /// requantization back to `v_bits` activations. Bit-exact with the
+    /// same sequence through `SystolicArray::run_conv_batch` on the
+    /// raw weights — the serving path adds no arithmetic of its own.
+    pub fn run(&self, sa: &SystolicArray, input: &Tensor3) -> Result<ModelRun> {
+        ensure!(
+            sa.cfg.v_bits == self.key.v_bits,
+            "array bit-width {} != model bit-width {}",
+            sa.cfg.v_bits,
+            self.key.v_bits
+        );
+        let (c, h, w) = self.input_shape();
+        ensure!(
+            input.shape() == (c, h, w),
+            "input shape {:?} != model input ({c}, {h}, {w})",
+            input.shape()
+        );
+        let mut x = input.clone();
+        let mut dsp_ops = 0u64;
+        let mut mults = 0u64;
+        for (layer, plane) in self.layers.iter().zip(&self.planes) {
+            let run = sa.run_conv_batch_with_plane(layer, plane, &x)?;
+            dsp_ops += run.dsp_ops;
+            mults += run.mults;
+            let mut y = run.output.expect("batch conv always returns output");
+            relu(&mut y);
+            x = requantize(&y, self.key.v_bits).0;
+        }
+        Ok(ModelRun {
+            output: x,
+            dsp_ops,
+            mults,
+        })
+    }
+}
+
+/// Key of one cached plane: (model name, layer index, bit-width).
+type PlaneKey = (String, usize, u32);
+
+#[derive(Default)]
+struct RegistryInner {
+    models: HashMap<ModelKey, Arc<RegisteredModel>>,
+    planes: HashMap<PlaneKey, Arc<PackedPlane>>,
+}
+
+/// Thread-safe model registry shared by the admission layer and every
+/// shard worker. Registration packs planes outside the lock; lookups
+/// are read-locked hash probes.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<RegistryInner>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Validate a spec, pack one [`PackedPlane`] per layer, and insert
+    /// the model. Re-registering an existing key replaces the model
+    /// and its cached planes atomically. Returns the registered model.
+    pub fn register(&self, spec: ModelSpec) -> Result<Arc<RegisteredModel>> {
+        let key = spec.key();
+        ensure!(!spec.layers.is_empty(), "model {key} has no layers");
+        ensure!(
+            spec.weights.len() == spec.layers.len(),
+            "model {key}: {} weight sets for {} layers",
+            spec.weights.len(),
+            spec.layers.len()
+        );
+        for pair in spec.layers.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            if a.out_ch != b.in_ch || a.out_hw() != b.in_hw {
+                bail!(
+                    "model {key}: layer {:?} ({} ch, {}x{}) does not feed {:?} ({} ch, {}x{})",
+                    a.name,
+                    a.out_ch,
+                    a.out_hw(),
+                    a.out_hw(),
+                    b.name,
+                    b.in_ch,
+                    b.in_hw,
+                    b.in_hw
+                );
+            }
+        }
+        let layout = Layout::for_bits(spec.v_bits)?;
+        let group = PeArch::MultiPack.mults_per_dsp(spec.v_bits);
+        // Pack every layer before taking the write lock: packing is the
+        // expensive part and must not serialize lookups.
+        let mut planes = Vec::with_capacity(spec.layers.len());
+        for (i, (layer, w)) in spec.layers.iter().zip(&spec.weights).enumerate() {
+            ensure!(
+                w.len() as u64 == layer.params(),
+                "model {key} layer {i}: {} weights for {} params",
+                w.len(),
+                layer.params()
+            );
+            let plane = PackedPlane::build(&layout, group, w, layer)
+                .with_context(|| format!("packing model {key} layer {i}"))?;
+            planes.push(Arc::new(plane));
+        }
+        let model = Arc::new(RegisteredModel {
+            key: key.clone(),
+            layers: spec.layers,
+            group,
+            planes: planes.clone(),
+        });
+        let mut inner = self.inner.write().unwrap();
+        // Drop every plane of the model being replaced first, so a
+        // re-registration with fewer layers leaves no stale entries.
+        inner
+            .planes
+            .retain(|(n, _, v), _| !(*n == key.name && *v == key.v_bits));
+        for (i, plane) in planes.into_iter().enumerate() {
+            inner
+                .planes
+                .insert((key.name.clone(), i, key.v_bits), plane);
+        }
+        inner.models.insert(key, Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Look up a model by key.
+    pub fn get(&self, key: &ModelKey) -> Option<Arc<RegisteredModel>> {
+        self.inner.read().unwrap().models.get(key).cloned()
+    }
+
+    /// Look up one cached plane by (model, layer, bit-width) — the
+    /// shared cache entry, identical `Arc` to the one inside the
+    /// registered model.
+    pub fn plane(&self, name: &str, layer: usize, v_bits: u32) -> Option<Arc<PackedPlane>> {
+        self.inner
+            .read()
+            .unwrap()
+            .planes
+            .get(&(name.to_string(), layer, v_bits))
+            .cloned()
+    }
+
+    /// Keys of every registered model.
+    pub fn keys(&self) -> Vec<ModelKey> {
+        self.inner.read().unwrap().models.keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().models.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total packed tuples across every cached plane (cache-size
+    /// accounting for the serving report).
+    pub fn total_cached_tuples(&self) -> usize {
+        self.inner
+            .read()
+            .unwrap()
+            .planes
+            .values()
+            .map(|p| p.total_tuples())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::infer::{approximate_weights, conv2d_int};
+    use crate::sa::SaConfig;
+
+    fn two_layer_spec(v_bits: u32, seed: u64) -> ModelSpec {
+        ModelSpec::random(
+            "t",
+            v_bits,
+            vec![
+                ConvLayer::new("c1", 6, 3, 5, 3, 1, 1, 1),
+                ConvLayer::new("c2", 6, 5, 4, 3, 1, 1, 1),
+            ],
+            seed,
+        )
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let model = reg.register(two_layer_spec(8, 1)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(model.input_shape(), (3, 6, 6));
+        assert_eq!(model.group, 3);
+        let got = reg.get(&ModelKey::new("t", 8)).unwrap();
+        assert_eq!(got.key, model.key);
+        assert!(reg.get(&ModelKey::new("t", 4)).is_none());
+        assert!(reg.get(&ModelKey::new("missing", 8)).is_none());
+    }
+
+    #[test]
+    fn plane_cache_shares_arcs() {
+        let reg = ModelRegistry::new();
+        let model = reg.register(two_layer_spec(8, 2)).unwrap();
+        for i in 0..2 {
+            let cached = reg.plane("t", i, 8).unwrap();
+            assert!(Arc::ptr_eq(&cached, model.plane(i)));
+        }
+        assert!(reg.plane("t", 2, 8).is_none());
+        assert_eq!(reg.total_cached_tuples(), model.cached_tuples());
+        assert!(model.cached_tuples() > 0);
+    }
+
+    #[test]
+    fn same_name_multiple_bit_widths_coexist() {
+        let reg = ModelRegistry::new();
+        for v in [8u32, 6, 4] {
+            reg.register(two_layer_spec(v, 10 + v as u64)).unwrap();
+        }
+        assert_eq!(reg.len(), 3);
+        for v in [8u32, 6, 4] {
+            let m = reg.get(&ModelKey::new("t", v)).unwrap();
+            assert_eq!(m.key.v_bits, v);
+            assert!(reg.plane("t", 0, v).is_some());
+        }
+    }
+
+    #[test]
+    fn register_rejects_bad_specs() {
+        let reg = ModelRegistry::new();
+        // no layers
+        assert!(reg
+            .register(ModelSpec {
+                name: "e".into(),
+                v_bits: 8,
+                layers: vec![],
+                weights: vec![],
+            })
+            .is_err());
+        // broken chaining: 5 out channels -> 7 in channels
+        let bad = ModelSpec::random(
+            "e",
+            8,
+            vec![
+                ConvLayer::new("c1", 6, 3, 5, 3, 1, 1, 1),
+                ConvLayer::new("c2", 6, 7, 4, 3, 1, 1, 1),
+            ],
+            3,
+        );
+        assert!(reg.register(bad).is_err());
+        // weight count mismatch
+        let mut short = two_layer_spec(8, 4);
+        short.weights[0].pop();
+        assert!(reg.register(short).is_err());
+        // unsupported bit width
+        let mut odd = two_layer_spec(8, 5);
+        odd.v_bits = 5;
+        assert!(reg.register(odd).is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn model_run_matches_manual_forward() {
+        for v in [8u32, 6, 4] {
+            let spec = two_layer_spec(v, 20 + v as u64);
+            let reg = ModelRegistry::new();
+            let model = reg.register(spec.clone()).unwrap();
+            let sa =
+                SystolicArray::new(SaConfig::paper_prototype(v, PeArch::MultiPack)).unwrap();
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(33 + v as u64);
+            let mut input = Tensor3::zeros(3, 6, 6);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            let run = model.run(&sa, &input).unwrap();
+            // reference: the pre-existing single-model path
+            let mut x = input.clone();
+            for (layer, w) in spec.layers.iter().zip(&spec.weights) {
+                let r = sa.run_conv_batch(layer, w, &x).unwrap();
+                let mut y = r.output.unwrap();
+                relu(&mut y);
+                x = requantize(&y, v).0;
+            }
+            assert_eq!(run.output, x, "v={v}");
+            assert_eq!(
+                run.mults,
+                spec.layers.iter().map(|l| l.macs()).sum::<u64>(),
+                "v={v}"
+            );
+            // and against the golden integer conv on effective weights
+            let mut g = input.clone();
+            for (i, layer) in spec.layers.iter().enumerate() {
+                let eff = approximate_weights(&spec.weights[i], v);
+                let mut y = conv2d_int(&g, &eff, layer);
+                relu(&mut y);
+                g = requantize(&y, v).0;
+            }
+            assert_eq!(run.output, g, "golden v={v}");
+        }
+    }
+
+    #[test]
+    fn model_run_rejects_mismatches() {
+        let reg = ModelRegistry::new();
+        let model = reg.register(two_layer_spec(8, 6)).unwrap();
+        let sa6 = SystolicArray::new(SaConfig::paper_prototype(6, PeArch::MultiPack)).unwrap();
+        let input = Tensor3::zeros(3, 6, 6);
+        assert!(model.run(&sa6, &input).is_err());
+        let sa8 = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+        let wrong = Tensor3::zeros(4, 6, 6);
+        assert!(model.run(&sa8, &wrong).is_err());
+    }
+
+    #[test]
+    fn reregister_replaces() {
+        let reg = ModelRegistry::new();
+        let a = reg.register(two_layer_spec(8, 7)).unwrap();
+        let b = reg.register(two_layer_spec(8, 8)).unwrap();
+        assert_eq!(reg.len(), 1);
+        let got = reg.get(&ModelKey::new("t", 8)).unwrap();
+        assert!(Arc::ptr_eq(&got, &b));
+        assert!(!Arc::ptr_eq(&got, &a));
+        // cache now points at the replacement's planes
+        assert!(Arc::ptr_eq(&reg.plane("t", 0, 8).unwrap(), b.plane(0)));
+    }
+
+    #[test]
+    fn reregister_with_fewer_layers_drops_stale_planes() {
+        let reg = ModelRegistry::new();
+        reg.register(two_layer_spec(8, 7)).unwrap();
+        assert!(reg.plane("t", 1, 8).is_some());
+        let one = ModelSpec::random(
+            "t",
+            8,
+            vec![ConvLayer::new("c1", 6, 3, 5, 3, 1, 1, 1)],
+            9,
+        );
+        let b = reg.register(one).unwrap();
+        // the old layer-1 plane is gone, not orphaned in the cache
+        assert!(reg.plane("t", 1, 8).is_none());
+        assert!(reg.plane("t", 0, 8).is_some());
+        assert_eq!(reg.total_cached_tuples(), b.cached_tuples());
+        // other bit-widths of the same name are untouched
+        reg.register(two_layer_spec(4, 10)).unwrap();
+        reg.register(ModelSpec::random(
+            "t",
+            8,
+            vec![ConvLayer::new("c1", 6, 3, 5, 3, 1, 1, 1)],
+            11,
+        ))
+        .unwrap();
+        assert!(reg.plane("t", 1, 4).is_some());
+    }
+}

@@ -15,6 +15,8 @@ pub struct CnnRunner {
 }
 
 impl CnnRunner {
+    /// Load artifacts, compile the executable on the CPU PJRT client
+    /// and stage the weight set for the given mode.
     pub fn load(artifacts_dir: &str, mode: WeightMode) -> Result<CnnRunner> {
         let client = crate::runtime::exec::Client::cpu()?;
         let artifacts = Artifacts::load(artifacts_dir)?;
@@ -23,6 +25,7 @@ impl CnnRunner {
         Ok(CnnRunner { model, staged })
     }
 
+    /// The loaded model (geometry and artifact metadata).
     pub fn model(&self) -> &CnnModel {
         &self.model
     }

@@ -23,17 +23,21 @@ struct Request {
 pub struct ServerMetrics {
     /// End-to-end latency per request (ns), enqueue → response sent.
     pub latency: Summary,
-    /// Executed batches and padded slots (batching efficiency).
+    /// Batches executed so far.
     pub batches: u64,
+    /// Tail-padding slots across those batches (batching efficiency).
     pub padded_slots: u64,
+    /// Requests answered.
     pub requests: u64,
 }
 
 impl ServerMetrics {
+    /// Requests per second over the given wall-clock window.
     pub fn throughput_per_sec(&self, wall: Duration) -> f64 {
         self.requests as f64 / wall.as_secs_f64()
     }
 
+    /// Fraction of executed batch slots that carried real requests.
     pub fn batch_occupancy(&self, batch_size: usize) -> f64 {
         if self.batches == 0 {
             return 0.0;
@@ -109,6 +113,7 @@ impl InferenceServer {
             .map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
+    /// Current metrics (the server keeps running).
     pub fn metrics(&self) -> ServerMetrics {
         self.metrics.lock().unwrap().clone()
     }

@@ -1,0 +1,476 @@
+//! The sharded multi-model serving runtime.
+//!
+//! Replaces the one-queue/one-array serving shape with N independent
+//! shards. Each shard owns its own [`SubmitQueue`] and a Condvar-woken
+//! batching worker thread; the worker keeps one `MultiPack`
+//! [`SystolicArray`] per bit-width it has seen and executes whole-model
+//! jobs through the registry's shared
+//! [`PackedPlane`](crate::packing::PackedPlane)s — so an 8-bit
+//! and a 4-bit model run back to back on the same shard with no
+//! repacking, and different shards serve different models truly in
+//! parallel.
+//!
+//! The admission layer in front of the shards does three things per
+//! request, all lock-free on the hot path:
+//!
+//! 1. **Validation** — model exists, input shape and value range match
+//!    (a malformed job is refused at the door, never inside a worker).
+//! 2. **Least-loaded selection** — the shard with the smallest
+//!    in-flight depth (queued + executing) wins; ties go to the lowest
+//!    index.
+//! 3. **Bounded-queue backpressure** — when even the least-loaded
+//!    shard is at `queue_capacity`, the caller gets
+//!    [`AdmitError::Backpressure`] instead of an unbounded queue.
+//!
+//! Shutdown is flush-then-join: queues close (producers are refused),
+//! workers drain what was admitted, every in-flight job completes
+//! exactly once, then threads join.
+//!
+//! Outputs are bit-exact with the single-shard
+//! [`run_conv_batch`](crate::sa::SystolicArray::run_conv_batch) path:
+//! sharding only changes *where* a job runs, never its arithmetic
+//! (asserted by `tests/integration_coordinator.rs` and the serving
+//! bench's pre-timing equivalence check).
+
+use super::batcher::{PushOutcome, QueueStatus, SubmitQueue};
+use super::metrics::{RuntimeSnapshot, ShardMetrics};
+use super::registry::{ModelKey, ModelRegistry};
+use crate::cnn::infer::Tensor3;
+use crate::sa::{PeArch, SaConfig, SystolicArray};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Runtime sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingConfig {
+    /// Independent shards (one worker thread + queue + array set each).
+    pub shards: usize,
+    /// Maximum in-flight jobs per shard (queued + executing); admission
+    /// beyond this returns [`AdmitError::Backpressure`].
+    pub queue_capacity: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            // One shard per worker thread the host grants us
+            // (SDMM_THREADS pins it, like every parallel path).
+            shards: crate::util::par::num_threads(),
+            queue_capacity: 256,
+        }
+    }
+}
+
+/// Why admission refused a request. Typed (rather than `anyhow`) so
+/// callers can distinguish retryable backpressure from permanent
+/// errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// No model registered under this key.
+    UnknownModel(String),
+    /// Input tensor shape does not match the model's first layer.
+    ShapeMismatch {
+        /// Shape the model expects, `(c, h, w)`.
+        expected: (usize, usize, usize),
+        /// Shape that was submitted.
+        got: (usize, usize, usize),
+    },
+    /// An input value falls outside the model's signed bit-width range.
+    InputOutOfRange {
+        /// The model's operand bit-width.
+        v_bits: u32,
+    },
+    /// Every shard is at capacity — retry after completions drain.
+    Backpressure {
+        /// The per-shard in-flight bound that was hit.
+        queue_capacity: usize,
+    },
+    /// The runtime is shutting down; no new work is accepted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::UnknownModel(k) => write!(f, "unknown model {k}"),
+            AdmitError::ShapeMismatch { expected, got } => write!(
+                f,
+                "input shape {:?} != model input {:?}",
+                got, expected
+            ),
+            AdmitError::InputOutOfRange { v_bits } => {
+                write!(f, "input exceeds signed {v_bits}-bit range")
+            }
+            AdmitError::Backpressure { queue_capacity } => {
+                write!(f, "all shards at capacity ({queue_capacity} in flight)")
+            }
+            AdmitError::ShuttingDown => write!(f, "serving runtime is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct InferOutput {
+    /// Final activation tensor of the model.
+    pub output: Tensor3,
+    /// DSP block operations the job stood in for.
+    pub dsp_ops: u64,
+    /// Multiplications executed.
+    pub mults: u64,
+    /// Shard that executed the job.
+    pub shard: usize,
+}
+
+/// One admitted job travelling through a shard queue.
+struct Job {
+    key: ModelKey,
+    input: Tensor3,
+    resp: mpsc::Sender<Result<InferOutput>>,
+    enqueued: Instant,
+}
+
+/// Handle to a running sharded serving runtime. Dropping it shuts the
+/// runtime down (flushing admitted work); [`shutdown`](Self::shutdown)
+/// does the same and returns the final metrics snapshot.
+pub struct ServingRuntime {
+    registry: Arc<ModelRegistry>,
+    queues: Vec<Arc<SubmitQueue<Job>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Vec<Arc<ShardMetrics>>,
+    config: ServingConfig,
+}
+
+impl ServingRuntime {
+    /// Start `config.shards` workers over the given registry.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use sdmm::cnn::infer::Tensor3;
+    /// use sdmm::cnn::zoo::ConvLayer;
+    /// use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
+    ///
+    /// let registry = Arc::new(ModelRegistry::new());
+    /// let layers = vec![ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1)];
+    /// registry.register(ModelSpec::random("tiny", 8, layers, 7)).unwrap();
+    ///
+    /// let runtime = ServingRuntime::start(
+    ///     Arc::clone(&registry),
+    ///     ServingConfig { shards: 2, queue_capacity: 8 },
+    /// ).unwrap();
+    /// let out = runtime.infer(&ModelKey::new("tiny", 8), Tensor3::zeros(2, 6, 6)).unwrap();
+    /// assert_eq!(out.output.c, 3);
+    /// let snap = runtime.shutdown();
+    /// assert_eq!(snap.total_jobs(), 1);
+    /// ```
+    pub fn start(registry: Arc<ModelRegistry>, config: ServingConfig) -> Result<ServingRuntime> {
+        anyhow::ensure!(config.shards > 0, "serving runtime needs at least one shard");
+        anyhow::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
+        let mut queues = Vec::with_capacity(config.shards);
+        let mut metrics = Vec::with_capacity(config.shards);
+        let mut workers = Vec::with_capacity(config.shards);
+        for shard in 0..config.shards {
+            let queue: Arc<SubmitQueue<Job>> = SubmitQueue::new();
+            let m = Arc::new(ShardMetrics::new());
+            let (q, reg, mm) = (Arc::clone(&queue), Arc::clone(&registry), Arc::clone(&m));
+            workers.push(std::thread::spawn(move || worker_loop(shard, q, reg, mm)));
+            queues.push(queue);
+            metrics.push(m);
+        }
+        Ok(ServingRuntime {
+            registry,
+            queues,
+            workers,
+            metrics,
+            config,
+        })
+    }
+
+    /// The registry this runtime serves from (models may be registered
+    /// while the runtime is live; workers pick them up on the next
+    /// lookup).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// The sizing the runtime was started with.
+    pub fn config(&self) -> &ServingConfig {
+        &self.config
+    }
+
+    /// Admit one inference: validate, pick the least-loaded shard,
+    /// enqueue (waking that shard's worker), and return the response
+    /// channel. Fails fast with a typed [`AdmitError`] instead of
+    /// queueing unboundedly.
+    pub fn submit(
+        &self,
+        key: &ModelKey,
+        input: Tensor3,
+    ) -> std::result::Result<mpsc::Receiver<Result<InferOutput>>, AdmitError> {
+        let model = self
+            .registry
+            .get(key)
+            .ok_or_else(|| AdmitError::UnknownModel(key.to_string()))?;
+        let expected = model.input_shape();
+        let got = input.shape();
+        if got != expected {
+            return Err(AdmitError::ShapeMismatch { expected, got });
+        }
+        let lim = 1i64 << (key.v_bits - 1);
+        if input.data.iter().any(|&x| x < -lim || x >= lim) {
+            return Err(AdmitError::InputOutOfRange { v_bits: key.v_bits });
+        }
+        // Least-loaded shard by in-flight depth; lowest index wins ties.
+        let mut shard = 0usize;
+        let mut best = usize::MAX;
+        for (i, m) in self.metrics.iter().enumerate() {
+            let d = m.depth();
+            if d < best {
+                best = d;
+                shard = i;
+            }
+        }
+        // Claim the slot atomically — the bound holds even when
+        // submitters race (the scan above is only a placement hint).
+        let m = &self.metrics[shard];
+        if !m.try_inc_depth(self.config.queue_capacity) {
+            return Err(AdmitError::Backpressure {
+                queue_capacity: self.config.queue_capacity,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            key: key.clone(),
+            input,
+            resp: tx,
+            enqueued: Instant::now(),
+        };
+        match self.queues[shard].try_push_bounded(job, self.config.queue_capacity) {
+            PushOutcome::Queued => Ok(rx),
+            PushOutcome::Full => {
+                m.dec_depth();
+                Err(AdmitError::Backpressure {
+                    queue_capacity: self.config.queue_capacity,
+                })
+            }
+            PushOutcome::Closed => {
+                m.dec_depth();
+                Err(AdmitError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Blocking convenience: submit and wait for the result.
+    pub fn infer(&self, key: &ModelKey, input: Tensor3) -> Result<InferOutput> {
+        let rx = self
+            .submit(key, input)
+            .map_err(|e| anyhow::anyhow!("admission refused: {e}"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("serving runtime dropped the request"))?
+    }
+
+    /// Current metrics across every shard.
+    pub fn snapshot(&self) -> RuntimeSnapshot {
+        RuntimeSnapshot {
+            shards: self
+                .metrics
+                .iter()
+                .enumerate()
+                .map(|(i, m)| m.snapshot(i))
+                .collect(),
+        }
+    }
+
+    /// Graceful shutdown: refuse new work, flush every admitted job,
+    /// join the workers, and return the final snapshot.
+    pub fn shutdown(mut self) -> RuntimeSnapshot {
+        self.stop();
+        self.snapshot()
+    }
+
+    fn stop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServingRuntime {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Per-worker array cache: one MultiPack simulator per bit-width seen.
+#[derive(Default)]
+struct ShardArrays {
+    by_bits: HashMap<u32, SystolicArray>,
+}
+
+impl ShardArrays {
+    fn array_for(&mut self, v_bits: u32) -> Result<&SystolicArray> {
+        if !self.by_bits.contains_key(&v_bits) {
+            let sa = SystolicArray::new(SaConfig::paper_prototype(v_bits, PeArch::MultiPack))?;
+            self.by_bits.insert(v_bits, sa);
+        }
+        Ok(self.by_bits.get(&v_bits).unwrap())
+    }
+}
+
+fn worker_loop(
+    shard: usize,
+    queue: Arc<SubmitQueue<Job>>,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<ShardMetrics>,
+) {
+    let mut arrays = ShardArrays::default();
+    let mut incoming: Vec<Job> = Vec::new();
+    loop {
+        // Park until work arrives or the queue closes; the drain and
+        // the status read happen under one lock, so a Closed status
+        // means `incoming` already holds everything that was admitted.
+        let status = queue.drain_wait(None, &mut incoming);
+        if !incoming.is_empty() {
+            metrics.record_drain(incoming.len());
+        }
+        for job in incoming.drain(..) {
+            let result = execute(shard, &mut arrays, &registry, &job);
+            let ns = job.enqueued.elapsed().as_nanos() as u64;
+            match &result {
+                Ok(out) => metrics.record_ok(ns, out.dsp_ops, out.mults),
+                Err(_) => metrics.record_err(ns),
+            }
+            metrics.dec_depth();
+            // A dropped receiver is the client's choice, not an error.
+            let _ = job.resp.send(result);
+        }
+        if status == QueueStatus::Closed {
+            break;
+        }
+    }
+}
+
+fn execute(
+    shard: usize,
+    arrays: &mut ShardArrays,
+    registry: &ModelRegistry,
+    job: &Job,
+) -> Result<InferOutput> {
+    // Re-resolved per job (not cached at admission) so a model replaced
+    // mid-flight serves its newest planes.
+    let model = registry
+        .get(&job.key)
+        .with_context(|| format!("model {} vanished after admission", job.key))?;
+    let sa = arrays.array_for(model.key.v_bits)?;
+    let run = model.run(sa, &job.input)?;
+    Ok(InferOutput {
+        output: run.output,
+        dsp_ops: run.dsp_ops,
+        mults: run.mults,
+        shard,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::zoo::ConvLayer;
+    use crate::coordinator::registry::ModelSpec;
+
+    fn small_registry() -> Arc<ModelRegistry> {
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register(ModelSpec::random(
+            "m",
+            8,
+            vec![ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1)],
+            11,
+        ))
+        .unwrap();
+        reg
+    }
+
+    #[test]
+    fn serves_and_reports() {
+        let rt = ServingRuntime::start(
+            small_registry(),
+            ServingConfig {
+                shards: 2,
+                queue_capacity: 8,
+            },
+        )
+        .unwrap();
+        let key = ModelKey::new("m", 8);
+        let out = rt.infer(&key, Tensor3::zeros(2, 6, 6)).unwrap();
+        assert_eq!((out.output.c, out.output.h), (3, 6));
+        assert!(out.shard < 2);
+        assert!(out.mults > 0);
+        let snap = rt.shutdown();
+        assert_eq!(snap.total_jobs(), 1);
+        assert_eq!(snap.total_failed(), 0);
+        assert_eq!(snap.total_mults(), out.mults);
+    }
+
+    #[test]
+    fn admission_validates() {
+        let rt = ServingRuntime::start(small_registry(), ServingConfig::default()).unwrap();
+        let missing = ModelKey::new("nope", 8);
+        assert!(matches!(
+            rt.submit(&missing, Tensor3::zeros(2, 6, 6)),
+            Err(AdmitError::UnknownModel(_))
+        ));
+        let key = ModelKey::new("m", 8);
+        assert!(matches!(
+            rt.submit(&key, Tensor3::zeros(3, 6, 6)),
+            Err(AdmitError::ShapeMismatch { .. })
+        ));
+        let mut hot = Tensor3::zeros(2, 6, 6);
+        hot.data[0] = 4096; // outside signed 8-bit
+        assert!(matches!(
+            rt.submit(&key, hot),
+            Err(AdmitError::InputOutOfRange { v_bits: 8 })
+        ));
+    }
+
+    #[test]
+    fn idle_shutdown_is_clean() {
+        let rt = ServingRuntime::start(
+            small_registry(),
+            ServingConfig {
+                shards: 4,
+                queue_capacity: 4,
+            },
+        )
+        .unwrap();
+        let snap = rt.shutdown();
+        assert_eq!(snap.shards.len(), 4);
+        assert_eq!(snap.total_jobs(), 0);
+    }
+
+    #[test]
+    fn rejects_zero_sized_configs() {
+        assert!(ServingRuntime::start(
+            small_registry(),
+            ServingConfig {
+                shards: 0,
+                queue_capacity: 4
+            }
+        )
+        .is_err());
+        assert!(ServingRuntime::start(
+            small_registry(),
+            ServingConfig {
+                shards: 1,
+                queue_capacity: 0
+            }
+        )
+        .is_err());
+    }
+}

@@ -51,9 +51,10 @@ use super::engine::SdmmEngine;
 use crate::packing::{Layout, PackedTuple};
 use crate::util::bits::{mask, sext, zext};
 
-/// Upper bounds across every supported layout (8-bit: 3×1, 6-bit: 2×2,
-/// 4-bit: 2×3 — see `packing::layout`).
+/// Maximum weight slots per tuple across every supported layout
+/// (8-bit: 3×1, 6-bit: 2×2, 4-bit: 2×3 — see `packing::layout`).
 pub const MAX_KW: usize = 3;
+/// Maximum input lanes per tuple across every supported layout.
 pub const MAX_KI: usize = 3;
 
 /// Input-independent constants of one packed tuple, hoisted out of the
@@ -84,6 +85,8 @@ pub struct PreparedTuple {
 }
 
 impl PreparedTuple {
+    /// Hoist a packed tuple's input-independent constants (done once
+    /// per tuple at plane-build time).
     pub fn prepare(t: &PackedTuple) -> PreparedTuple {
         let v = t.layout.v;
         let ki = t.layout.ki();
@@ -133,10 +136,12 @@ impl PreparedTuple {
         p
     }
 
+    /// Input lanes of the tuple's layout.
     pub fn ki(&self) -> usize {
         self.ki
     }
 
+    /// Weight slots of the tuple.
     pub fn kw(&self) -> usize {
         self.kw
     }
@@ -295,10 +300,12 @@ impl BatchLanes {
         }
     }
 
+    /// Input groups packed (one P word is produced per group).
     pub fn groups(&self) -> usize {
         self.groups
     }
 
+    /// Lanes per group.
     pub fn ki(&self) -> usize {
         self.ki
     }
@@ -314,6 +321,50 @@ impl BatchLanes {
 /// `tests/proptest_batch.rs` — but evaluated lane-parallel without the
 /// port-accurate model's toggle bookkeeping (use the scalar engine when
 /// feeding the power model).
+///
+/// What makes the batch path sound is the unconditional unsigned
+/// identity (DESIGN.md §3): with `A`, `B`, `C` the raw port words and
+/// `a24`/`b17` their sign bits,
+///
+/// ```text
+/// P = A·B + C + 2^43·a24·b17   (mod 2^48)
+/// ```
+///
+/// equals what the signed 25×18 silicon computes after the engine's
+/// two sign-correction additions. Checked directly against the
+/// port-accurate engine:
+///
+/// ```
+/// use sdmm::dsp::{BatchEngine, BatchLanes, PreparedTuple, SdmmEngine};
+/// use sdmm::packing::{pack_approx, Layout};
+///
+/// let layout = Layout::for_bits(8).unwrap();
+/// let tuple = pack_approx(&layout, &[-44, 127, 3]).unwrap();
+///
+/// // Batch path: many independent P words in one call.
+/// let prepared = PreparedTuple::prepare(&tuple);
+/// let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]);
+/// let mut raw = vec![0u64; lanes.groups()];
+/// BatchEngine::new().execute_raw_batch(&prepared, &lanes, &mut raw);
+///
+/// // Identity, evaluated by hand for the first input:
+/// let b = tuple.layout.b_word(&[-77]);
+/// let c = tuple.c_word(&[-77]);
+/// let (a24, b17) = ((tuple.a_word >> 24) & 1, (b >> 17) & 1);
+/// let p = tuple
+///     .a_word
+///     .wrapping_mul(b)
+///     .wrapping_add(c)
+///     .wrapping_add((a24 & b17) << 43)
+///     & ((1u64 << 48) - 1);
+/// assert_eq!(raw[0], p);
+///
+/// // And the port-accurate engine agrees for every input.
+/// let mut scalar = SdmmEngine::new();
+/// assert_eq!(raw[0], scalar.execute_raw(&tuple, &[-77]));
+/// assert_eq!(raw[1], scalar.execute_raw(&tuple, &[3]));
+/// assert_eq!(raw[2], scalar.execute_raw(&tuple, &[12]));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct BatchEngine {
     /// DSP ops this engine stands in for (one per tuple per group).
@@ -321,6 +372,7 @@ pub struct BatchEngine {
 }
 
 impl BatchEngine {
+    /// A fresh engine with a zero op counter.
     pub fn new() -> Self {
         Self::default()
     }
@@ -463,6 +515,7 @@ impl BatchEngine {
         tuple.v
     }
 
+    /// Zero the op counter.
     pub fn reset_stats(&mut self) {
         self.ops = 0;
     }

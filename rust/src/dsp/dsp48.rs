@@ -36,11 +36,15 @@ pub enum DspOp {
 /// the Vivado-SAIF analogue the paper uses for Fig. 10.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DspStats {
+    /// DSP operations executed.
     pub ops: u64,
-    /// Hamming distance accumulated on each port between consecutive ops.
+    /// Hamming distance accumulated on the A port between consecutive ops.
     pub a_toggles: u64,
+    /// Hamming distance accumulated on the B port.
     pub b_toggles: u64,
+    /// Hamming distance accumulated on the C port.
     pub c_toggles: u64,
+    /// Hamming distance accumulated on the P output.
     pub p_toggles: u64,
 }
 
@@ -54,13 +58,19 @@ pub struct Dsp48E1 {
     stats: DspStats,
 }
 
+/// A (multiplicand) port width.
 pub const A_BITS: u32 = 25;
+/// B (multiplier) port width.
 pub const B_BITS: u32 = 18;
+/// C (add) port width.
 pub const C_BITS: u32 = 48;
+/// D (pre-adder) port width.
 pub const D_BITS: u32 = 25;
+/// P (result) output width.
 pub const P_BITS: u32 = 48;
 
 impl Dsp48E1 {
+    /// A fresh primitive (P register cleared, no statistics).
     pub fn new() -> Self {
         Self::default()
     }
@@ -116,14 +126,17 @@ impl Dsp48E1 {
         self.p_reg = 0;
     }
 
+    /// Current P register bit pattern.
     pub fn p(&self) -> u64 {
         self.p_reg
     }
 
+    /// Activity statistics so far.
     pub fn stats(&self) -> DspStats {
         self.stats
     }
 
+    /// Zero the statistics and toggle baseline.
     pub fn reset_stats(&mut self) {
         self.stats = DspStats::default();
         self.prev = None;

@@ -17,6 +17,7 @@ pub struct SdmmEngine {
 }
 
 impl SdmmEngine {
+    /// A fresh engine over a fresh DSP48E1 model.
     pub fn new() -> Self {
         Self::default()
     }
@@ -57,10 +58,12 @@ impl SdmmEngine {
         self.dsp.exec(DspOp::MultAddC, tuple.a_word, b, c, 0)
     }
 
+    /// Toggle/op statistics of the underlying DSP model.
     pub fn stats(&self) -> super::DspStats {
         self.dsp.stats()
     }
 
+    /// Zero statistics and the correction counter.
     pub fn reset_stats(&mut self) {
         self.dsp.reset_stats();
         self.corrections = 0;
@@ -75,10 +78,12 @@ pub struct MacUnit {
 }
 
 impl MacUnit {
+    /// A fresh MAC unit.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Clear the accumulator (start of a new dot product).
     pub fn clear(&mut self) {
         self.dsp.clear_p();
     }
@@ -95,10 +100,12 @@ impl MacUnit {
         crate::util::bits::sext(p, 48)
     }
 
+    /// Current signed accumulator value.
     pub fn acc(&self) -> i64 {
         crate::util::bits::sext(self.dsp.p(), 48)
     }
 
+    /// Toggle/op statistics of the underlying DSP model.
     pub fn stats(&self) -> super::DspStats {
         self.dsp.stats()
     }

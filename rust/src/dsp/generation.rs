@@ -39,6 +39,7 @@ impl DspGeneration {
         self.a_bits()
     }
 
+    /// Display name ("DSP48E1" / "DSP48E2").
     pub const fn name(&self) -> &'static str {
         match self {
             DspGeneration::Dsp48E1 => "DSP48E1",

@@ -16,6 +16,8 @@
 //! without the per-op port bookkeeping; see its module docs for the
 //! identity that makes that sound.
 
+#![warn(missing_docs)]
+
 pub mod batch;
 mod dsp48;
 mod engine;

@@ -14,7 +14,11 @@
 //! * **Layer 3** (this crate): the packing pipeline (manipulation,
 //!   approximation, fine-tuning, WROM), a bit-accurate DSP48E1 +
 //!   systolic-array simulator, resource/power models, compression
-//!   codecs, the PJRT runtime and the batched inference coordinator.
+//!   codecs, the PJRT runtime, and the serving stack — a dynamic
+//!   batcher plus a sharded multi-model runtime
+//!   ([`coordinator::ServingRuntime`]) that serves mixed 8/6/4-bit
+//!   models from shared packed-weight caches
+//!   ([`coordinator::ModelRegistry`]) across N systolic shards.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduced paper tables/figures.

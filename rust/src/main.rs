@@ -7,7 +7,10 @@
 //! sdmm pack <w1,w2,..> [--bits N]       pack a tuple, show A/C words
 //! sdmm report <table1..table6|fig4|fig7|fig9|fig10|rom|all> [--artifacts DIR]
 //! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
-//!            [--bits N] [--artifacts DIR]     batched serving demo
+//!            [--bits N] [--artifacts DIR]     batched PJRT serving demo
+//! sdmm serve-sim [--shards N] [--requests N] [--concurrency C]
+//!            sharded multi-model serving demo on the simulator backend
+//!            (mixed 8/6/4-bit registry; no artifacts or PJRT needed)
 //! sdmm sim [--bits N] [--arch 1m|2m|mp]       systolic-array estimates
 //! ```
 
@@ -86,6 +89,7 @@ fn run() -> Result<()> {
         "pack" => cmd_pack(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "sim" => cmd_sim(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -105,6 +109,7 @@ fn print_usage() {
          sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
+         sdmm serve-sim [--shards N] [--requests N] [--concurrency C]\n\
          sdmm sim [--bits N] [--arch 1m|2m|mp]"
     );
 }
@@ -260,6 +265,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.batches,
         m.batch_occupancy(16) * 100.0
     );
+    Ok(())
+}
+
+/// Sharded multi-model serving demo on the simulator backend: register
+/// the same small CNN at 8, 6 and 4 bits, then push a closed loop of
+/// mixed-precision traffic through `ServingRuntime` and print the
+/// per-shard summary. Runs everywhere (no artifacts, no PJRT).
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use sdmm::cnn::infer::Tensor3;
+    use sdmm::cnn::zoo::ConvLayer;
+    use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
+    use sdmm::util::rng::Rng;
+    use std::sync::Arc;
+
+    let shards = args.flag_usize("shards", sdmm::util::par::num_threads())?;
+    let requests = args.flag_usize("requests", 96)?;
+    let concurrency = args.flag_usize("concurrency", 2 * shards.max(1))?;
+
+    let registry = Arc::new(ModelRegistry::new());
+    let mut work: Vec<(ModelKey, Tensor3)> = Vec::new();
+    for v in [8u32, 6, 4] {
+        let layers = vec![
+            ConvLayer::new("c1", 12, 8, 16, 3, 1, 1, 1),
+            ConvLayer::new("c2", 12, 16, 16, 3, 1, 1, 1),
+        ];
+        let spec = ModelSpec::random("demo", v, layers, 500 + v as u64);
+        let lim = 1i64 << (v - 1);
+        let mut rng = Rng::new(600 + v as u64);
+        let mut input = Tensor3::zeros(8, 12, 12);
+        input.data = (0..input.data.len())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let key = spec.key();
+        registry.register(spec)?;
+        work.push((key, input));
+    }
+    println!(
+        "registry: {} models (8/6/4-bit), {} packed tuples cached once",
+        registry.len(),
+        registry.total_cached_tuples()
+    );
+
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards,
+            queue_capacity: 256,
+        },
+    )?;
+    let t0 = Instant::now();
+    let mut inflight = std::collections::VecDeque::new();
+    let (mut sent, mut done) = (0usize, 0usize);
+    while done < requests {
+        while inflight.len() < concurrency && sent < requests {
+            let (key, x) = &work[sent % work.len()];
+            match rt.submit(key, x.clone()) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    sent += 1;
+                }
+                Err(_) => break, // backpressure: drain one first
+            }
+        }
+        if let Some(rx) = inflight.pop_front() {
+            rx.recv().context("runtime dropped request")??;
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = rt.shutdown();
+    println!(
+        "served {} mixed-precision requests on {shards} shard(s) in {:.3}s -> {:.0} req/s",
+        snap.total_jobs(),
+        wall.as_secs_f64(),
+        snap.total_jobs() as f64 / wall.as_secs_f64()
+    );
+    print!("{}", sdmm::report::serving_summary(&snap));
     Ok(())
 }
 

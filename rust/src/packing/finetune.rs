@@ -73,9 +73,13 @@ pub fn is_feasible_exact(layout: &Layout, weights: &[i64]) -> bool {
 /// Outcome of fine-tuning one tuple.
 #[derive(Clone, Debug)]
 pub struct FineTuneReport {
+    /// The tuple as quantized.
     pub original: Vec<i64>,
+    /// The nearest feasible replacement tuple.
     pub tuned: Vec<i64>,
+    /// Bray-Curtis distance between the two (Eq. 9).
     pub distance: f64,
+    /// True when the original already packed (no tuning needed).
     pub was_feasible: bool,
 }
 

@@ -21,9 +21,11 @@
 
 use anyhow::{bail, Result};
 
-/// DSP48E1 port widths (paper Fig. 1).
+/// DSP48E1 A (multiplicand) port width (paper Fig. 1).
 pub const A_PORT_BITS: u32 = 25;
+/// DSP48E1 B (multiplier) port width.
 pub const B_PORT_BITS: u32 = 18;
+/// DSP48E1 C (add) port width.
 pub const C_PORT_BITS: u32 = 48;
 /// Width of the approximated manipulated parameter (Eq. 4).
 pub const MW_A_BITS: u32 = 3;

@@ -15,6 +15,8 @@
 //!   tuples built once (scalar + batch-engine forms) and shared by the
 //!   simulator, the CNN reference and the runtime.
 
+#![warn(missing_docs)]
+
 pub mod finetune;
 pub mod layout;
 pub mod plane;

@@ -43,13 +43,43 @@ pub struct PlaneTile {
 }
 
 /// A whole conv layer's weights, packed once.
+///
+/// Build once per (layer, layout, group size), run per input — the
+/// serving-side analogue of the WROM load:
+///
+/// ```
+/// use sdmm::cnn::infer::{conv2d_int, Tensor3};
+/// use sdmm::cnn::zoo::ConvLayer;
+/// use sdmm::packing::{Layout, PackedPlane};
+///
+/// let layer = ConvLayer::new("demo", 4, 2, 3, 3, 1, 1, 1);
+/// let layout = Layout::for_bits(8).unwrap();
+/// let weights: Vec<i64> = (0..layer.params() as i64).map(|i| (i % 17) - 8).collect();
+///
+/// // Pack once (group size 3 = the paper's 8-bit mults/DSP)...
+/// let plane = PackedPlane::build(&layout, 3, &weights, &layer).unwrap();
+///
+/// // ...then run per input on the batch engine. The result is
+/// // bit-exact with the golden integer conv over the approximated
+/// // weights the plane implements.
+/// let mut input = Tensor3::zeros(2, 4, 4);
+/// for (i, v) in input.data.iter_mut().enumerate() {
+///     *v = (i as i64 % 11) - 5;
+/// }
+/// let (out, dsp_ops, mults) = plane.execute_conv(&input, &layer);
+/// assert_eq!(out, conv2d_int(&input, &plane.effective_weights(&layer), &layer));
+/// assert_eq!(mults, layer.macs());
+/// assert!(dsp_ops > 0 && dsp_ops < mults); // SDMM: ~3 mults per DSP op
+/// ```
 #[derive(Clone, Debug)]
 pub struct PackedPlane {
+    /// Port layout the tuples were packed against.
     pub layout: Layout,
     /// Output channels per DSP group (paper group size g).
     pub group: usize,
     /// Weight taps per tile: `(in_ch / groups) * kernel²`.
     pub taps: usize,
+    /// One tile per (channel group, output-channel tile).
     pub tiles: Vec<PlaneTile>,
 }
 

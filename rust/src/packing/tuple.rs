@@ -105,6 +105,7 @@ impl Slot {
 /// A tuple of weights packed for one DSP block.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PackedTuple {
+    /// Port layout the tuple was packed against.
     pub layout: Layout,
     /// One slot per weight (len = layout.kw()).
     pub slots: Vec<Slot>,

@@ -73,6 +73,7 @@ fn group_key(slots: &[Slot]) -> GroupKey {
 /// The WROM builder: dedups magnitude groups, assigns addresses.
 #[derive(Clone, Debug)]
 pub struct Wrom {
+    /// Port layout the ROM packs against.
     pub layout: Layout,
     /// Weights per off-chip index word (paper k: 3/4/6).
     pub group_size: usize,
@@ -94,6 +95,7 @@ pub struct WromIndexStream {
 }
 
 impl Wrom {
+    /// An empty ROM for the layout's paper group size.
     pub fn new(layout: Layout) -> Self {
         let group_size = paper_group_size(layout.v);
         debug_assert_eq!(group_size % layout.kw(), 0);
@@ -105,14 +107,17 @@ impl Wrom {
         }
     }
 
+    /// Distinct magnitude-group entries interned so far.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no group has been interned yet.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// The ROM entry at an address previously returned by interning.
     pub fn entry(&self, addr: u32) -> &WromEntry {
         &self.entries[addr as usize]
     }

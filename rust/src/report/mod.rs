@@ -7,9 +7,11 @@
 
 pub mod ablation;
 mod network;
+mod serving;
 mod tables;
 
 pub use network::network_summary;
+pub use serving::serving_summary;
 pub use tables::*;
 
 /// Render every report in paper order.

@@ -1,0 +1,70 @@
+//! Serving-runtime report: renders a [`RuntimeSnapshot`] as the
+//! per-shard table the serving bench and demos print (DESIGN.md §6).
+
+use crate::coordinator::RuntimeSnapshot;
+use crate::util::bench::fmt_ns;
+
+/// Format a runtime snapshot: one row per shard (jobs, failures,
+/// latency p50/p99, drain-batch fill, peak in-flight depth, DSP ops)
+/// plus a totals line. Pure formatting — callable on a live runtime's
+/// `snapshot()` or on the final snapshot `shutdown()` returns.
+pub fn serving_summary(snap: &RuntimeSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str("== serving runtime ==\n");
+    out.push_str(&format!(
+        "{:>5} {:>8} {:>6} {:>10} {:>10} {:>6} {:>6} {:>12} {:>12}\n",
+        "shard", "jobs", "fail", "p50", "p99", "fill", "peak", "dsp_ops", "mults"
+    ));
+    for s in &snap.shards {
+        out.push_str(&format!(
+            "{:>5} {:>8} {:>6} {:>10} {:>10} {:>6.2} {:>6} {:>12} {:>12}\n",
+            s.shard,
+            s.jobs_ok,
+            s.jobs_err,
+            fmt_ns(s.latency.p50_ns()),
+            fmt_ns(s.latency.p99_ns()),
+            s.mean_batch_fill(),
+            s.peak_depth,
+            s.dsp_ops,
+            s.mults,
+        ));
+    }
+    out.push_str(&format!(
+        "total jobs={} failed={} dsp_ops={} mults={} (SDMM packing: {:.2} mults/DSP op)\n",
+        snap.total_jobs(),
+        snap.total_failed(),
+        snap.total_dsp_ops(),
+        snap.total_mults(),
+        if snap.total_dsp_ops() == 0 {
+            0.0
+        } else {
+            snap.total_mults() as f64 / snap.total_dsp_ops() as f64
+        },
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ShardMetrics;
+
+    #[test]
+    fn renders_shards_and_totals() {
+        let a = ShardMetrics::new();
+        a.record_drain(2);
+        a.record_ok(1_500_000, 100, 300);
+        a.record_ok(2_500_000, 100, 300);
+        let b = ShardMetrics::new();
+        let snap = RuntimeSnapshot {
+            shards: vec![a.snapshot(0), b.snapshot(1)],
+        };
+        let text = serving_summary(&snap);
+        assert!(text.contains("== serving runtime =="));
+        assert!(text.contains("total jobs=2"));
+        assert!(text.contains("dsp_ops=200"));
+        assert!(text.contains("3.00 mults/DSP op"));
+        // one header + two shard rows + totals
+        assert_eq!(text.lines().count(), 5);
+    }
+}

@@ -12,6 +12,12 @@
 //! bindings are not in the baseline vendored crate set); without it the
 //! exec layer compiles API-compatible stubs that error at run time, and
 //! all PJRT consumers skip via [`artifacts_available`].
+//!
+//! This is one of two serving backends: PJRT executes the AOT-compiled
+//! float/quantized network, while the simulator-native
+//! [`coordinator::ServingRuntime`](crate::coordinator::ServingRuntime)
+//! serves bit-accurate SDMM models (no artifacts, no Python, mixed
+//! 8/6/4-bit) through the sharded batch-engine path.
 
 pub mod artifacts;
 pub mod exec;

@@ -26,10 +26,15 @@ use anyhow::{bail, Result};
 /// Array configuration.
 #[derive(Clone, Debug)]
 pub struct SaConfig {
+    /// PE rows (the reduction dimension K lies along rows).
     pub rows: usize,
+    /// PE columns (output channels lie along columns).
     pub cols: usize,
+    /// Operand bit width v (8, 6 or 4).
     pub v_bits: u32,
+    /// PE architecture (1M / 2M / MP).
     pub arch: PeArch,
+    /// Clock frequency in MHz (wall-clock conversions).
     pub freq_mhz: f64,
 }
 
@@ -67,21 +72,32 @@ impl SaConfig {
 /// Memory traffic counters in bits (Fig. 7 / off-chip analysis).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemTraffic {
+    /// Weight bits fetched from off-chip memory (WRC-compressed for MP).
     pub offchip_weight_bits: u64,
+    /// Input-memory reads (one per streamed pixel per row).
     pub imem_reads: u64,
+    /// Weight-memory reads (per-tile weight loads).
     pub wmem_reads: u64,
+    /// Partial-sum memory reads+writes (K-tile spills).
     pub pmem_rw: u64,
+    /// Output-memory writes (final accumulators).
     pub omem_writes: u64,
+    /// On-chip WROM decompression lookups.
     pub wrom_lookups: u64,
 }
 
 /// Result of simulating one conv layer.
 #[derive(Clone, Debug)]
 pub struct LayerRun {
+    /// Simulated cycles (weight loads + streaming + skew fill/drain).
     pub cycles: u64,
+    /// DSP block operations executed (MP shares one op across g mults).
     pub dsp_ops: u64,
+    /// Multiplications executed.
     pub mults: u64,
+    /// MAC count of the layer (the workload the run covered).
     pub macs: u64,
+    /// Memory traffic counters (Fig. 7 inputs).
     pub traffic: MemTraffic,
     /// Functional output (None for analytic estimates).
     pub output: Option<Tensor3>,
@@ -103,11 +119,13 @@ impl LayerRun {
 
 /// The simulator.
 pub struct SystolicArray {
+    /// Configuration the array was built with.
     pub cfg: SaConfig,
     layout: Option<Layout>, // MP only
 }
 
 impl SystolicArray {
+    /// Build an array (resolves the MP port layout for `cfg.v_bits`).
     pub fn new(cfg: SaConfig) -> Result<SystolicArray> {
         let layout = match cfg.arch {
             PeArch::MultiPack => Some(Layout::for_bits(cfg.v_bits)?),

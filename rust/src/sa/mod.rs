@@ -17,6 +17,8 @@
 //! loads, memory traffic) — the substrate for Tables 4/5 context,
 //! Fig. 7 break-even and Fig. 10 activity numbers.
 
+#![warn(missing_docs)]
+
 mod array;
 mod pe;
 

@@ -28,6 +28,7 @@ impl PeArch {
         }
     }
 
+    /// Short display name (the paper's 1M / 2M / MP labels).
     pub fn name(&self) -> &'static str {
         match self {
             PeArch::OneMac => "1M",
@@ -40,23 +41,30 @@ impl PeArch {
 /// Per-PE activity counters (feed the power model).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PeStats {
+    /// DSP block operations executed.
     pub dsp_ops: u64,
+    /// Multiplications executed.
     pub mults: u64,
+    /// LUT adder operations (post-processing accumulation).
     pub lut_adds: u64,
+    /// WROM decompression lookups.
     pub wrom_lookups: u64,
 }
 
 /// A multi-pack PE: holds one packed weight group (weight-stationary)
 /// and multiplies it with streamed inputs on the bit-accurate engine.
 pub struct MultiPackPe {
+    /// Port layout the PE packs against.
     pub layout: Layout,
     engine: SdmmEngine,
     /// One packed tuple per kw-chunk of the group.
     tuples: Vec<crate::packing::PackedTuple>,
+    /// Activity counters (power model input).
     pub stats: PeStats,
 }
 
 impl MultiPackPe {
+    /// A PE with no weights loaded yet.
     pub fn new(layout: Layout) -> Self {
         MultiPackPe {
             layout,
@@ -99,6 +107,7 @@ impl MultiPackPe {
         self.tuples.iter().flat_map(|t| t.values()).collect()
     }
 
+    /// Port toggle statistics of the underlying DSP model.
     pub fn toggle_stats(&self) -> crate::dsp::DspStats {
         self.engine.stats()
     }
@@ -108,10 +117,12 @@ impl MultiPackPe {
 pub struct OneMacPe {
     mac: MacUnit,
     weight: i64,
+    /// Activity counters (power model input).
     pub stats: PeStats,
 }
 
 impl OneMacPe {
+    /// A PE with weight 0 loaded.
     pub fn new() -> Self {
         OneMacPe {
             mac: MacUnit::new(),
@@ -120,10 +131,12 @@ impl OneMacPe {
         }
     }
 
+    /// Load the stationary weight.
     pub fn load_weight(&mut self, w: i64) {
         self.weight = w;
     }
 
+    /// One cycle: multiply the stationary weight with `input`.
     pub fn step(&mut self, input: i64) -> i64 {
         self.stats.dsp_ops += 1;
         self.stats.mults += 1;
@@ -131,6 +144,7 @@ impl OneMacPe {
         self.mac.mac(self.weight, input)
     }
 
+    /// Port toggle statistics of the underlying DSP model.
     pub fn toggle_stats(&self) -> crate::dsp::DspStats {
         self.mac.stats()
     }

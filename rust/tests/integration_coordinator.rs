@@ -1,10 +1,20 @@
-//! Integration: the packing pipeline + serving coordinator, including
-//! the PJRT-backed path when artifacts are available.
+//! Integration: the packing pipeline + serving coordinator — the
+//! dynamic batcher/PJRT path and the sharded multi-model
+//! `ServingRuntime` (bit-exactness vs the single-shard batch path,
+//! scheduler fairness under saturation, exactly-once completion,
+//! backpressure and shutdown-flush semantics).
 
+use sdmm::cnn::infer::{relu, requantize, Tensor3};
+use sdmm::cnn::zoo::ConvLayer;
 use sdmm::coordinator::pipeline::PipelineMode;
-use sdmm::coordinator::{BatchPolicy, BatchRunner, CnnRunner, InferenceServer, PackingPipeline};
+use sdmm::coordinator::{
+    AdmitError, BatchPolicy, BatchRunner, CnnRunner, InferenceServer, ModelRegistry, ModelSpec,
+    PackingPipeline, ServingConfig, ServingRuntime,
+};
 use sdmm::packing::Layout;
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 #[test]
@@ -96,6 +106,194 @@ fn coordinator_under_load_preserves_request_response_pairing() {
     let m = server.shutdown();
     assert_eq!(m.requests, n as u64);
     assert!(m.latency.p99() > 0.0);
+}
+
+/// Mixed-precision model set shared by the sharded-runtime tests: one
+/// 2-conv model per bit width, plus a seeded input per model.
+fn mixed_set() -> Vec<(ModelSpec, Tensor3)> {
+    [8u32, 6, 4]
+        .iter()
+        .map(|&v| {
+            let layers = vec![
+                ConvLayer::new("c1", 8, 4, 6, 3, 1, 1, 1),
+                ConvLayer::new("c2", 8, 6, 6, 3, 1, 1, 1),
+            ];
+            let spec = ModelSpec::random("net", v, layers, 300 + v as u64);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(400 + v as u64);
+            let mut input = Tensor3::zeros(4, 8, 8);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            (spec, input)
+        })
+        .collect()
+}
+
+/// The single-shard reference: the pre-existing `run_conv_batch` path
+/// (fresh packing, no registry, no sharding) with the same
+/// ReLU/requantize interleaving the runtime applies.
+fn reference_forward(spec: &ModelSpec, input: &Tensor3) -> Tensor3 {
+    let sa =
+        SystolicArray::new(SaConfig::paper_prototype(spec.v_bits, PeArch::MultiPack)).unwrap();
+    let mut x = input.clone();
+    for (layer, w) in spec.layers.iter().zip(&spec.weights) {
+        let mut y = sa.run_conv_batch(layer, w, &x).unwrap().output.unwrap();
+        relu(&mut y);
+        x = requantize(&y, spec.v_bits).0;
+    }
+    x
+}
+
+#[test]
+fn sharded_runtime_bit_exact_vs_single_shard_path() {
+    let set = mixed_set();
+    let registry = Arc::new(ModelRegistry::new());
+    for (spec, _) in &set {
+        registry.register(spec.clone()).unwrap();
+    }
+    for shards in [1usize, 4] {
+        let rt = ServingRuntime::start(
+            Arc::clone(&registry),
+            ServingConfig {
+                shards,
+                queue_capacity: 32,
+            },
+        )
+        .unwrap();
+        for (spec, input) in &set {
+            let want = reference_forward(spec, input);
+            // several times so the job lands on different shards
+            for _ in 0..3 {
+                let got = rt.infer(&spec.key(), input.clone()).unwrap();
+                assert_eq!(got.output, want, "{} on {shards} shard(s)", spec.key());
+                assert_eq!(
+                    got.mults,
+                    spec.layers.iter().map(|l| l.macs()).sum::<u64>(),
+                    "{}",
+                    spec.key()
+                );
+            }
+        }
+        let snap = rt.shutdown();
+        assert_eq!(snap.total_jobs(), 3 * set.len() as u64);
+        assert_eq!(snap.total_failed(), 0);
+    }
+}
+
+#[test]
+fn sharded_runtime_fairness_and_exactly_once_under_saturation() {
+    let set = mixed_set();
+    let registry = Arc::new(ModelRegistry::new());
+    for (spec, _) in &set {
+        registry.register(spec.clone()).unwrap();
+    }
+    let shards = 2usize;
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards,
+            queue_capacity: 64,
+        },
+    )
+    .unwrap();
+    // Saturate: submit the whole burst before reading any response, so
+    // admission sees real queue depths on every shard.
+    let n = 48usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let (spec, input) = &set[i % set.len()];
+            rt.submit(&spec.key(), input.clone()).unwrap()
+        })
+        .collect();
+    // Exactly once: every receiver yields exactly one response…
+    let mut shard_hits = vec![0u64; shards];
+    for rx in rxs {
+        let out = rx.recv().unwrap().unwrap();
+        shard_hits[out.shard] += 1;
+        // …and never a second one.
+        assert!(rx.recv().is_err(), "job answered twice");
+    }
+    let snap = rt.shutdown();
+    assert_eq!(snap.total_jobs(), n as u64, "completion count != submissions");
+    assert_eq!(snap.total_failed(), 0);
+    // No shard starves under saturation, and the per-shard metrics
+    // agree with what the responses reported.
+    for (i, s) in snap.shards.iter().enumerate() {
+        assert_eq!(s.jobs_ok, shard_hits[i], "shard {i} metrics drifted");
+        assert!(s.jobs_ok > 0, "shard {i} starved: {shard_hits:?}");
+    }
+    assert!(snap.min_shard_jobs() > 0);
+}
+
+#[test]
+fn sharded_runtime_backpressure_bounds_inflight() {
+    let set = mixed_set();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(set[0].0.clone()).unwrap();
+    let key = set[0].0.key();
+    let input = &set[0].1;
+    let cap = 2usize;
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 1,
+            queue_capacity: cap,
+        },
+    )
+    .unwrap();
+    // Burst far past capacity without draining: the admission layer
+    // must refuse with Backpressure rather than queue unboundedly.
+    let mut admitted = Vec::new();
+    let mut refused = 0usize;
+    for _ in 0..24 {
+        match rt.submit(&key, input.clone()) {
+            Ok(rx) => admitted.push(rx),
+            Err(AdmitError::Backpressure { queue_capacity }) => {
+                assert_eq!(queue_capacity, cap);
+                refused += 1;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(refused > 0, "burst of 24 into capacity 2 never backpressured");
+    // Everything admitted still completes (exactly once).
+    let n = admitted.len();
+    for rx in admitted {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap = rt.shutdown();
+    assert_eq!(snap.total_jobs(), n as u64);
+    assert!(snap.shards[0].peak_depth <= cap, "in-flight exceeded the bound");
+}
+
+#[test]
+fn sharded_runtime_shutdown_flushes_admitted_jobs() {
+    let set = mixed_set();
+    let registry = Arc::new(ModelRegistry::new());
+    for (spec, _) in &set {
+        registry.register(spec.clone()).unwrap();
+    }
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 2,
+            queue_capacity: 32,
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..12)
+        .map(|i| {
+            let (spec, input) = &set[i % set.len()];
+            rt.submit(&spec.key(), input.clone()).unwrap()
+        })
+        .collect();
+    // Shut down immediately: admitted jobs must flush, not drop.
+    let snap = rt.shutdown();
+    assert_eq!(snap.total_jobs(), 12);
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
 }
 
 #[test]
