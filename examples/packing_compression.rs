@@ -12,7 +12,7 @@ use sdmm::coordinator::pipeline::PipelineMode;
 use sdmm::packing::Layout;
 use sdmm::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdmm::error::Result<()> {
     let model = Model::build(ModelKind::Alexnet);
     let mut rng = Rng::new(7);
     // per-layer float weights (subsampled so the demo runs in seconds)

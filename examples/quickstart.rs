@@ -10,7 +10,7 @@ use sdmm::dsp::SdmmEngine;
 use sdmm::manip::{approximate_signed, manipulate};
 use sdmm::packing::{fine_tune_tuple, is_feasible_exact, pack_approx, Layout};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdmm::error::Result<()> {
     // --- Fig. 2: parameter manipulation -----------------------------
     // |W| = 44 = 2^2 * (1 + 2^1 * 5): the 6-bit multiply W*I becomes a
     // 3-bit multiply (MW=5) plus shift/concat.

@@ -15,10 +15,10 @@ use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
 use sdmm::runtime::{Artifacts, WeightMode};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdmm::error::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     if !sdmm::runtime::artifacts_available(&dir) {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        sdmm::bail!("artifacts missing — run `make artifacts` first");
     }
     let art = Artifacts::load(&dir)?;
     let xs = art.f32("eval_x")?;

@@ -11,7 +11,7 @@ use sdmm::resources::area::array_area;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdmm::error::Result<()> {
     // AlexNet conv3 geometry, spatially scaled (13->9) so the
     // bit-accurate run finishes in seconds.
     let layer = ConvLayer::new("conv3-mini", 9, 32, 48, 3, 1, 1, 1);

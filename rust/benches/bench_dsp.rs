@@ -57,7 +57,7 @@ fn main() {
         // EXPERIMENTS.md §Perf table)
         let prepared: Vec<PreparedTuple> = tuples.iter().map(PreparedTuple::prepare).collect();
         let flat: Vec<i64> = inputs.iter().flatten().copied().collect();
-        let lanes = BatchLanes::pack(&layout, &flat);
+        let lanes = BatchLanes::pack(&layout, &flat).unwrap();
         let mut bengine = BatchEngine::new();
         let mut raw = vec![0u64; lanes.groups()];
         let mut ti = 0;

@@ -18,10 +18,10 @@
 //! pinned to one thread (`SDMM_THREADS=1`) so the scaling measured is
 //! the shards', not the conv tiler's.
 
+use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
 use sdmm::cnn::zoo::ConvLayer;
 use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
-use sdmm::packing::PackedPlane;
 use sdmm::report::serving_summary;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::bench::BenchSuite;
@@ -38,21 +38,6 @@ fn native_layers() -> Vec<ConvLayer> {
     ]
 }
 
-/// Run the native network; `conv` executes one conv layer.
-fn forward(
-    layers: &[ConvLayer],
-    input: &Tensor3,
-    mut conv: impl FnMut(usize, &Tensor3) -> Tensor3,
-) -> Tensor3 {
-    let mut x = input.clone();
-    for i in 0..layers.len() {
-        let mut y = conv(i, &x);
-        relu(&mut y);
-        x = requantize(&y, 8).0;
-    }
-    x
-}
-
 fn bench_native(suite: &mut BenchSuite) {
     let layers = native_layers();
     let mut rng = Rng::new(17);
@@ -64,39 +49,33 @@ fn bench_native(suite: &mut BenchSuite) {
     input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
     let macs: u64 = layers.iter().map(|l| l.macs()).sum();
 
-    let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
-    let planes: Vec<PackedPlane> = layers
-        .iter()
-        .zip(&weights)
-        .map(|(l, w)| sa.pack_plane(l, w).unwrap())
-        .collect();
+    // One compile through the api facade; every backend below shares
+    // the resulting planes.
+    // skip_stats: benches never read the per-layer error sweep.
+    let model = Compiler::for_bits(8)
+        .unwrap()
+        .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() })
+        .pack_model("bench-e2e", &layers, &weights)
+        .unwrap();
+    let mut scalar = ScalarExec::new();
+    let mut batch = BatchExec::new();
+    let mut systolic = SystolicExec::new();
 
-    // identical outputs before timing
-    let out_scalar = forward(&layers, &input, |i, x| {
-        sa.run_conv(&layers[i], &weights[i], x).unwrap().output.unwrap()
-    });
-    let out_batch = forward(&layers, &input, |i, x| {
-        sa.run_conv_batch_with_plane(&layers[i], &planes[i], x)
-            .unwrap()
-            .output
-            .unwrap()
-    });
-    assert_eq!(out_scalar, out_batch, "e2e paths diverged");
+    // identical outputs before timing (the facade's core guarantee)
+    let out_scalar = scalar.run(&model, &input).unwrap();
+    let out_batch = batch.run(&model, &input).unwrap();
+    let out_sys = systolic.run(&model, &input).unwrap();
+    assert_eq!(out_scalar.output, out_batch.output, "e2e paths diverged");
+    assert_eq!(out_batch.output, out_sys.output, "systolic path diverged");
 
-    suite.bench("native 3-conv e2e (scalar engine)", macs as f64, || {
-        forward(&layers, &input, |i, x| {
-            sa.run_conv(&layers[i], &weights[i], x).unwrap().output.unwrap()
-        })
-        .data[0]
+    suite.bench("native 3-conv e2e (ScalarExec, port-accurate)", macs as f64, || {
+        scalar.run(&model, &input).unwrap().output.data[0]
     });
-    suite.bench("native 3-conv e2e (batch engine + planes)", macs as f64, || {
-        forward(&layers, &input, |i, x| {
-            sa.run_conv_batch_with_plane(&layers[i], &planes[i], x)
-                .unwrap()
-                .output
-                .unwrap()
-        })
-        .data[0]
+    suite.bench("native 3-conv e2e (BatchExec, lane-parallel)", macs as f64, || {
+        batch.run(&model, &input).unwrap().output.data[0]
+    });
+    suite.bench("native 3-conv e2e (SystolicExec, array model)", macs as f64, || {
+        systolic.run(&model, &input).unwrap().output.data[0]
     });
 }
 
@@ -182,7 +161,14 @@ fn bench_sharded_serving(suite: &mut BenchSuite) {
     let specs = mixed_specs();
     let registry = Arc::new(ModelRegistry::new());
     for (spec, _) in &specs {
-        registry.register(spec.clone()).unwrap();
+        // Compile through the api facade, admit the compiled planes —
+        // the registration path every caller shares now.
+        let compiled = Compiler::for_bits(spec.v_bits)
+            .unwrap()
+            .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() })
+            .pack_model(&spec.name, &spec.layers, &spec.weights)
+            .unwrap();
+        registry.register_compiled(&compiled).unwrap();
     }
     println!(
         "  registry: {} models (8/6/4-bit), {} packed tuples cached once, shared by all shards",

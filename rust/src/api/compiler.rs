@@ -1,0 +1,305 @@
+//! The typestate compile pipeline: `Compiler::for_bits` →
+//! [`approximate`](Compiler::approximate) → [`pack`](Compiler::pack).
+
+use super::model::{CompiledLayer, CompiledModel};
+use crate::cnn::zoo::ConvLayer;
+use crate::error::{Result, SdmmError};
+use crate::manip::approximation_error_table;
+use crate::packing::{pack_approx, pack_exact, Layout, PackedPlane, PackedTuple};
+use crate::sa::PeArch;
+use std::sync::Arc;
+
+/// How weights map onto representable SDMM magnitudes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ApproxMode {
+    /// The paper's Eq. 4 approximation: every weight moves to the
+    /// nearest `2^s(1 + 2^n·MW)` with a 3-bit MW. Always packs; the
+    /// mode every execution backend supports.
+    #[default]
+    Nearest,
+    /// Exact manipulation (no approximation, variable-width MW fields,
+    /// paper §3.3.3). Packs single tuples only — a tuple that does not
+    /// fit the A port is refused with [`SdmmError::TupleOverflow`]
+    /// (the condition fine-tuning repairs), and conv layers/planes are
+    /// not supported.
+    Exact,
+}
+
+/// Approximation policy for the compile pipeline (the argument of
+/// [`Compiler::approximate`]). Today this is the [`ApproxMode`] plus a
+/// switch for per-layer error statistics; packing-scheme extensions
+/// (DSP-Packing-style overpacking, alternative sign handling) slot in
+/// here without touching call sites.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ApproxPolicy {
+    /// Weight-approximation mode.
+    pub mode: ApproxMode,
+    /// Skip the per-layer [`ErrorStats`](crate::manip::ErrorStats)
+    /// sweep (they cost one `approximate_signed` pass per weight).
+    pub skip_stats: bool,
+}
+
+impl ApproxPolicy {
+    /// The paper's nearest-value approximation with error stats.
+    pub fn nearest() -> ApproxPolicy {
+        ApproxPolicy::default()
+    }
+
+    /// Exact manipulation (tuple-level packing only).
+    pub fn exact() -> ApproxPolicy {
+        ApproxPolicy {
+            mode: ApproxMode::Exact,
+            ..ApproxPolicy::default()
+        }
+    }
+}
+
+/// Typestate marker: the compiler has a layout but no approximation
+/// policy yet — only [`Compiler::approximate`] leads out of this state,
+/// so an unconfigured compiler cannot pack (enforced at compile time).
+#[derive(Clone, Copy, Debug)]
+pub struct NeedsPolicy(());
+
+/// Typestate marker: the compiler is fully configured and can pack.
+#[derive(Clone, Copy, Debug)]
+pub struct Ready {
+    policy: ApproxPolicy,
+}
+
+/// The front door of the crate's compile pipeline (see
+/// [`crate::api`]): resolves the port layout for a bit width, fixes the
+/// approximation policy, and packs weights into [`CompiledLayer`]s /
+/// [`CompiledModel`]s that any [`Executor`](super::Executor) runs.
+///
+/// The two-state typestate (`Compiler<NeedsPolicy>` →
+/// `Compiler<Ready>`) makes "pack before choosing a policy" a type
+/// error rather than a runtime panic.
+#[derive(Clone, Debug)]
+pub struct Compiler<S> {
+    layout: Layout,
+    group: usize,
+    state: S,
+}
+
+impl Compiler<NeedsPolicy> {
+    /// Start a compile for `v`-bit operands (8, 6 or 4). Fails with
+    /// [`SdmmError::UnsupportedBitWidth`] for anything else.
+    pub fn for_bits(v: u32) -> Result<Compiler<NeedsPolicy>> {
+        Self::for_bits_wc(v, v)
+    }
+
+    /// Start a compile with distinct weight (`c`) and input (`v`) bit
+    /// widths (the paper's Table 2 (W,I) grid).
+    pub fn for_bits_wc(c: u32, v: u32) -> Result<Compiler<NeedsPolicy>> {
+        let layout = Layout::for_bits_wc(c, v)?;
+        let group = PeArch::MultiPack.mults_per_dsp(v);
+        Ok(Compiler {
+            layout,
+            group,
+            state: NeedsPolicy(()),
+        })
+    }
+
+    /// Fix the approximation policy, unlocking the packing methods.
+    pub fn approximate(self, policy: ApproxPolicy) -> Compiler<Ready> {
+        Compiler {
+            layout: self.layout,
+            group: self.group,
+            state: Ready { policy },
+        }
+    }
+}
+
+impl<S> Compiler<S> {
+    /// Override the DSP group size (output channels per DSP block).
+    /// Defaults to the paper's multiplies-per-DSP (3/4/6 for 8/6/4
+    /// bits). Fails with [`SdmmError::InvalidConfig`] for zero.
+    pub fn with_group(mut self, group: usize) -> Result<Compiler<S>> {
+        if group == 0 {
+            return Err(SdmmError::InvalidConfig(
+                "DSP group size must be positive".into(),
+            ));
+        }
+        self.group = group;
+        Ok(self)
+    }
+
+    /// The resolved port layout.
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// The DSP group size packed layers will use.
+    pub fn group(&self) -> usize {
+        self.group
+    }
+}
+
+impl Compiler<Ready> {
+    /// The policy this compiler packs with.
+    pub fn policy(&self) -> ApproxPolicy {
+        self.state.policy
+    }
+
+    /// Pack one tuple of signed weights (`weights.len()` =
+    /// `layout.kw()`) — the facade over
+    /// [`pack_approx`](crate::packing::pack_approx) /
+    /// [`pack_exact`](crate::packing::pack_exact), honoring the policy
+    /// mode.
+    pub fn pack_tuple(&self, weights: &[i64]) -> Result<PackedTuple> {
+        match self.state.policy.mode {
+            ApproxMode::Nearest => pack_approx(&self.layout, weights),
+            ApproxMode::Exact => pack_exact(&self.layout, weights),
+        }
+    }
+
+    /// Pack one conv layer's OIHW weights into a [`CompiledLayer`]:
+    /// the shared [`PackedPlane`] (scalar + batch-engine tuple forms)
+    /// plus the layer's approximation [`ErrorStats`].
+    ///
+    /// [`ErrorStats`]: crate::manip::ErrorStats
+    pub fn pack(&self, layer: &ConvLayer, weights: &[i64]) -> Result<CompiledLayer> {
+        if self.state.policy.mode == ApproxMode::Exact {
+            return Err(SdmmError::UnsupportedBackend(
+                "conv planes pack in Nearest mode only (exact mode packs single tuples)".into(),
+            ));
+        }
+        let plane = PackedPlane::build(&self.layout, self.group, weights, layer)?;
+        let stats = if self.state.policy.skip_stats {
+            approximation_error_table(&[], self.layout.c)
+        } else {
+            approximation_error_table(weights, self.layout.c)
+        };
+        Ok(CompiledLayer {
+            layer: layer.clone(),
+            plane: Arc::new(plane),
+            stats,
+        })
+    }
+
+    /// Pack a whole network: validates layer chaining and weight-set
+    /// counts, then packs every layer via [`pack`](Self::pack). The
+    /// resulting [`CompiledModel`] owns one plane per layer and is what
+    /// every [`Executor`](super::Executor) — including the sharded
+    /// serving runtime — consumes.
+    pub fn pack_model(
+        &self,
+        name: &str,
+        layers: &[ConvLayer],
+        weights: &[Vec<i64>],
+    ) -> Result<CompiledModel> {
+        if layers.is_empty() {
+            return Err(SdmmError::InvalidModel(format!("model {name} has no layers")));
+        }
+        if weights.len() != layers.len() {
+            return Err(SdmmError::InvalidModel(format!(
+                "model {name}: {} weight sets for {} layers",
+                weights.len(),
+                layers.len()
+            )));
+        }
+        // Fail fast on broken chaining before paying for any packing.
+        let refs: Vec<&ConvLayer> = layers.iter().collect();
+        super::model::validate_chaining(name, &refs)?;
+        let compiled: Vec<CompiledLayer> = layers
+            .iter()
+            .zip(weights)
+            .enumerate()
+            .map(|(i, (l, w))| {
+                self.pack(l, w).map_err(|e| {
+                    // Keep the typed source (match via SdmmError::root)
+                    // while saying which layer of which model failed.
+                    e.in_context(format!("packing model {name} layer {i} ({:?})", l.name))
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(CompiledModel {
+            name: name.to_string(),
+            v_bits: self.layout.v,
+            group: self.group,
+            layers: compiled,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn for_bits_rejects_unknown_widths() {
+        for v in [0u32, 1, 2, 3, 5, 7, 9, 16, 32] {
+            assert!(matches!(
+                Compiler::for_bits(v),
+                Err(SdmmError::UnsupportedBitWidth { v: got }) if got == v
+            ));
+        }
+    }
+
+    #[test]
+    fn paper_group_sizes() {
+        for (v, g) in [(8u32, 3usize), (6, 4), (4, 6)] {
+            assert_eq!(Compiler::for_bits(v).unwrap().group(), g, "v={v}");
+        }
+    }
+
+    #[test]
+    fn pack_tuple_honors_policy_mode() {
+        let nearest = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        let t = nearest.pack_tuple(&[23, -23, 44]).unwrap();
+        assert_eq!(t.values(), vec![22, -22, 44]); // approximated
+        let exact = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::exact());
+        let t = exact.pack_tuple(&[7, 64, -96]).unwrap();
+        assert_eq!(t.values(), vec![7, 64, -96]); // preserved
+        assert!(matches!(
+            exact.pack_tuple(&[127, 127, 127]),
+            Err(SdmmError::TupleOverflow(_))
+        ));
+    }
+
+    #[test]
+    fn pack_reports_out_of_range_weight() {
+        let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        let layer = ConvLayer::new("t", 6, 2, 3, 3, 1, 1, 1);
+        let mut w: Vec<i64> = vec![0; layer.params() as usize];
+        w[5] = 300;
+        assert!(matches!(
+            c.pack(&layer, &w),
+            Err(SdmmError::WeightOutOfRange { weight: 300, c_bits: 8 })
+        ));
+    }
+
+    #[test]
+    fn pack_model_validates_chaining() {
+        let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        assert!(matches!(
+            c.pack_model("m", &[], &[]),
+            Err(SdmmError::InvalidModel(_))
+        ));
+        let layers = [
+            ConvLayer::new("c1", 6, 3, 5, 3, 1, 1, 1),
+            ConvLayer::new("c2", 6, 7, 4, 3, 1, 1, 1), // 5 out ch -> 7 in ch
+        ];
+        let mut rng = Rng::new(1);
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+            .collect();
+        assert!(matches!(
+            c.pack_model("m", &layers, &weights),
+            Err(SdmmError::InvalidModel(_))
+        ));
+    }
+
+    #[test]
+    fn compiled_layer_carries_error_stats() {
+        let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        let layer = ConvLayer::new("t", 6, 2, 3, 3, 1, 1, 1);
+        let mut rng = Rng::new(3);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let cl = c.pack(&layer, &w).unwrap();
+        assert_eq!(cl.stats.count, layer.params());
+        assert!(cl.stats.changed > 0); // 8-bit weights do approximate
+    }
+}

@@ -1,0 +1,235 @@
+//! The [`Executor`] trait and the four shipped backends.
+//!
+//! Every backend consumes the same [`CompiledModel`] and produces
+//! bit-identical outputs and op accounting — swapping executors changes
+//! *where and how fast* a model runs, never its arithmetic
+//! (`tests/api_facade.rs` asserts this property over random 8/6/4-bit
+//! layers).
+
+use super::model::{CompiledLayer, CompiledModel};
+use crate::cnn::infer::{relu, requantize, Tensor3};
+use crate::coordinator::{ModelRegistry, RuntimeSnapshot, ServingConfig, ServingRuntime};
+use crate::dsp::SdmmEngine;
+use crate::error::{Result, SdmmError};
+use crate::sa::{PeArch, SaConfig, SystolicArray};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Result of one full forward pass through an executor.
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    /// Final activation tensor (post-ReLU, requantized).
+    pub output: Tensor3,
+    /// DSP block operations the pass stands in for.
+    pub dsp_ops: u64,
+    /// Multiplications executed.
+    pub mults: u64,
+}
+
+/// An execution backend for compiled models.
+///
+/// Implementations are interchangeable: given the same
+/// [`CompiledModel`] and input they return bit-identical
+/// [`ExecOutput`]s. A new backend registers by implementing this trait
+/// over the model's shared [`PackedPlane`](crate::packing::PackedPlane)s
+/// — see DESIGN.md §7 for the contract.
+pub trait Executor {
+    /// Short stable backend name (reports, error messages).
+    fn name(&self) -> &'static str;
+
+    /// Run one full forward pass: per layer, conv through the packed
+    /// plane, ReLU, then symmetric requantization back to `v_bits`
+    /// activations. Validates the input (shape + operand range) with
+    /// typed errors before touching the datapath.
+    fn run(&mut self, model: &CompiledModel, input: &Tensor3) -> Result<ExecOutput>;
+}
+
+/// Shared forward-pass skeleton: validate, then fold `conv` over the
+/// layers with the ReLU + requantize glue every backend agrees on.
+fn forward(
+    model: &CompiledModel,
+    input: &Tensor3,
+    mut conv: impl FnMut(&CompiledLayer, &Tensor3) -> Result<(Tensor3, u64, u64)>,
+) -> Result<ExecOutput> {
+    model.validate_structure()?;
+    model.validate_input(input)?;
+    let mut x = input.clone();
+    let mut dsp_ops = 0u64;
+    let mut mults = 0u64;
+    for cl in &model.layers {
+        let (mut y, ops, m) = conv(cl, &x)?;
+        dsp_ops += ops;
+        mults += m;
+        relu(&mut y);
+        x = requantize(&y, model.v_bits).0;
+    }
+    Ok(ExecOutput {
+        output: x,
+        dsp_ops,
+        mults,
+    })
+}
+
+/// Port-accurate scalar backend: every product goes through the
+/// bit-accurate DSP48E1 model one tuple at a time. The slowest backend
+/// and the only one that accumulates toggle statistics — the power
+/// model's input.
+#[derive(Default)]
+pub struct ScalarExec {
+    engine: SdmmEngine,
+}
+
+impl ScalarExec {
+    /// A fresh scalar backend over a fresh DSP model.
+    pub fn new() -> ScalarExec {
+        ScalarExec::default()
+    }
+
+    /// Toggle/op statistics accumulated so far (power model input).
+    pub fn stats(&self) -> crate::dsp::DspStats {
+        self.engine.stats()
+    }
+}
+
+impl Executor for ScalarExec {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn run(&mut self, model: &CompiledModel, input: &Tensor3) -> Result<ExecOutput> {
+        forward(model, input, |cl, x| {
+            Ok(cl.plane.execute_conv_scalar(x, &cl.layer, &mut self.engine))
+        })
+    }
+}
+
+/// Lane-parallel batch backend: the throughput engine
+/// ([`BatchEngine`](crate::dsp::BatchEngine)), lane-parallel over
+/// output pixels and thread-parallel over output-channel tiles.
+#[derive(Clone, Debug, Default)]
+pub struct BatchExec;
+
+impl BatchExec {
+    /// A fresh batch backend.
+    pub fn new() -> BatchExec {
+        BatchExec
+    }
+}
+
+impl Executor for BatchExec {
+    fn name(&self) -> &'static str {
+        "batch"
+    }
+
+    fn run(&mut self, model: &CompiledModel, input: &Tensor3) -> Result<ExecOutput> {
+        model.validate_batch_forms()?;
+        forward(model, input, |cl, x| Ok(cl.plane.execute_conv(x, &cl.layer)))
+    }
+}
+
+/// Systolic-array backend: the batch datapath wrapped in the array
+/// simulator's cycle/traffic accounting. Keeps one MultiPack
+/// [`SystolicArray`] per bit width it has seen (the shard-worker
+/// caching shape).
+#[derive(Default)]
+pub struct SystolicExec {
+    arrays: HashMap<u32, SystolicArray>,
+}
+
+impl SystolicExec {
+    /// A fresh systolic backend with an empty array cache.
+    pub fn new() -> SystolicExec {
+        SystolicExec::default()
+    }
+
+    fn array_for(&mut self, v_bits: u32) -> Result<&SystolicArray> {
+        if !self.arrays.contains_key(&v_bits) {
+            let sa = SystolicArray::new(SaConfig::paper_prototype(v_bits, PeArch::MultiPack))?;
+            self.arrays.insert(v_bits, sa);
+        }
+        Ok(self.arrays.get(&v_bits).unwrap())
+    }
+}
+
+impl Executor for SystolicExec {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn run(&mut self, model: &CompiledModel, input: &Tensor3) -> Result<ExecOutput> {
+        model.validate_batch_forms()?;
+        let sa = self.array_for(model.v_bits)?;
+        forward(model, input, |cl, x| {
+            let run = sa.run_conv_batch_with_plane(&cl.layer, &cl.plane, x)?;
+            let out = run
+                .output
+                .ok_or_else(|| SdmmError::Runtime("batch conv returned no output".into()))?;
+            Ok((out, run.dsp_ops, run.mults))
+        })
+    }
+}
+
+/// Sharded serving backend: compiled models admit into a
+/// [`ModelRegistry`] (`Arc`-sharing their planes — no repacking) and
+/// execute through the [`ServingRuntime`]'s least-loaded shard workers.
+pub struct ServingExec {
+    registry: Arc<ModelRegistry>,
+    runtime: ServingRuntime,
+}
+
+impl ServingExec {
+    /// Start a serving backend with its own registry and runtime.
+    pub fn start(config: ServingConfig) -> Result<ServingExec> {
+        let registry = Arc::new(ModelRegistry::new());
+        let runtime = ServingRuntime::start(Arc::clone(&registry), config)?;
+        Ok(ServingExec { registry, runtime })
+    }
+
+    /// The registry models admit into (shared with the shard workers).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Graceful shutdown: flush admitted work and return the final
+    /// per-shard metrics snapshot.
+    pub fn shutdown(self) -> RuntimeSnapshot {
+        self.runtime.shutdown()
+    }
+}
+
+impl Executor for ServingExec {
+    fn name(&self) -> &'static str {
+        "serving"
+    }
+
+    fn run(&mut self, model: &CompiledModel, input: &Tensor3) -> Result<ExecOutput> {
+        model.validate_structure()?;
+        model.validate_input(input)?;
+        let key = model.key();
+        // Admit (or re-admit) the compiled model; registration clones
+        // the plane Arcs, so a model already present is a cheap
+        // pointer-comparison away. Every layer's plane is compared —
+        // a model that shares only a prefix with the registered one
+        // must re-register, or later layers would serve stale planes.
+        let stale = match self.registry.get(&key) {
+            Some(reg) => {
+                reg.layers.len() != model.layers.len()
+                    || model
+                        .layers
+                        .iter()
+                        .enumerate()
+                        .any(|(i, l)| !Arc::ptr_eq(reg.plane(i), &l.plane))
+            }
+            None => true,
+        };
+        if stale {
+            self.registry.register_compiled(model)?;
+        }
+        let out = self.runtime.infer(&key, input.clone())?;
+        Ok(ExecOutput {
+            output: out.output,
+            dsp_ops: out.dsp_ops,
+            mults: out.mults,
+        })
+    }
+}

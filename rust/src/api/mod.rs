@@ -1,0 +1,72 @@
+//! The unified compile-and-execute facade of the crate.
+//!
+//! The paper's flow — manipulate → approximate → pack → SDMM execute
+//! (Kalali & van Leuken 2021) — used to be hand-wired by every caller.
+//! This module is the one front door: compilation is a typestate
+//! pipeline, execution is a trait, and every backend consumes the same
+//! compiled artifact.
+//!
+//! ```text
+//! Compiler::for_bits(8)?            resolve the port layout (typed error
+//!   .approximate(ApproxPolicy)      fix the approximation policy
+//!   .pack_model(name, layers, ws)?  pack planes once -> CompiledModel
+//!                                   (owns PackedPlanes + ErrorStats)
+//!
+//! CompiledModel ──run──> Executor (interchangeable, bit-exact):
+//!   ScalarExec    port-accurate DSP48E1, toggle stats (power model)
+//!   BatchExec     lane-parallel batch engine (throughput)
+//!   SystolicExec  batch datapath + array cycle/traffic accounting
+//!   ServingExec   sharded multi-model runtime (registry + shards)
+//! ```
+//!
+//! Compile one 8-bit layer and run it on three backends — outputs and
+//! op accounting are bit-identical:
+//!
+//! ```
+//! use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
+//! use sdmm::cnn::infer::Tensor3;
+//! use sdmm::cnn::zoo::ConvLayer;
+//!
+//! let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+//! let weights: Vec<i64> = (0..layer.params() as i64).map(|i| (i % 17) - 8).collect();
+//!
+//! let model = Compiler::for_bits(8)?
+//!     .approximate(ApproxPolicy::nearest())
+//!     .pack_model("demo", &[layer], &[weights])?;
+//!
+//! let mut input = Tensor3::zeros(2, 6, 6);
+//! for (i, v) in input.data.iter_mut().enumerate() {
+//!     *v = (i as i64 % 11) - 5;
+//! }
+//!
+//! let a = ScalarExec::new().run(&model, &input)?;
+//! let b = BatchExec::new().run(&model, &input)?;
+//! let c = SystolicExec::new().run(&model, &input)?;
+//! assert_eq!(a.output, b.output);
+//! assert_eq!(b.output, c.output);
+//! assert_eq!((a.dsp_ops, a.mults), (b.dsp_ops, b.mults));
+//! assert_eq!((b.dsp_ops, b.mults), (c.dsp_ops, c.mults));
+//! # Ok::<(), sdmm::error::SdmmError>(())
+//! ```
+//!
+//! ## Registering a new backend
+//!
+//! A backend is anything that can turn a
+//! [`PackedPlane`](crate::packing::PackedPlane) and an input tensor
+//! into conv accumulators: implement [`Executor`] (usually by handing a
+//! per-layer conv closure to the shared forward skeleton the shipped
+//! backends use) and return typed [`SdmmError`](crate::error::SdmmError)s
+//! for anything it cannot run. Nothing else in the crate needs to know
+//! the backend exists — `Compiler` output is backend-agnostic, and the
+//! equivalence property test (`tests/api_facade.rs`) is the acceptance
+//! bar: same model, same input, bit-identical output.
+
+#![warn(missing_docs)]
+
+pub mod compiler;
+pub mod exec;
+pub mod model;
+
+pub use compiler::{ApproxMode, ApproxPolicy, Compiler, NeedsPolicy, Ready};
+pub use exec::{BatchExec, ExecOutput, Executor, ScalarExec, ServingExec, SystolicExec};
+pub use model::{CompiledLayer, CompiledModel};

@@ -1,0 +1,193 @@
+//! Compiled artifacts: [`CompiledLayer`] and [`CompiledModel`].
+
+use crate::cnn::infer::Tensor3;
+use crate::cnn::zoo::ConvLayer;
+use crate::coordinator::ModelKey;
+use crate::error::{Result, SdmmError};
+use crate::manip::ErrorStats;
+use crate::packing::PackedPlane;
+use std::sync::Arc;
+
+/// Check that consecutive layers chain (`out_ch`/`out_hw` of one feed
+/// `in_ch`/`in_hw` of the next) — shared by `Compiler::pack_model`
+/// (fail-fast before packing) and [`CompiledModel::validate_structure`].
+pub(crate) fn validate_chaining(model: &str, layers: &[&ConvLayer]) -> Result<()> {
+    for pair in layers.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        if a.out_ch != b.in_ch || a.out_hw() != b.in_hw {
+            return Err(SdmmError::InvalidModel(format!(
+                "model {model}: layer {:?} ({} ch, {hw}x{hw}) does not feed {:?} ({} ch, {}x{})",
+                a.name,
+                a.out_ch,
+                b.name,
+                b.in_ch,
+                b.in_hw,
+                b.in_hw,
+                hw = a.out_hw(),
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// One conv layer compiled for SDMM execution: the layer geometry, the
+/// shared packed-weight plane (scalar + batch tuple forms, the WROM
+/// analogue), and the approximation error statistics of the layer's
+/// weights.
+#[derive(Clone, Debug)]
+pub struct CompiledLayer {
+    /// Conv geometry the plane was packed for.
+    pub layer: ConvLayer,
+    /// The packed weights, shared by every executor through the `Arc`
+    /// (registering the model in a serving registry clones the `Arc`,
+    /// never repacks).
+    pub plane: Arc<PackedPlane>,
+    /// Approximation error of this layer's weights (empty when the
+    /// policy skipped stats).
+    pub stats: ErrorStats,
+}
+
+impl CompiledLayer {
+    /// The effective (approximated) OIHW weights the plane implements.
+    pub fn effective_weights(&self) -> Vec<i64> {
+        self.plane.effective_weights(&self.layer)
+    }
+}
+
+/// A whole network compiled once: the unit of work every
+/// [`Executor`](super::Executor) accepts, and the unit of admission for
+/// the serving registry.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    /// Model name (becomes the serving [`ModelKey`] name).
+    pub name: String,
+    /// Operand bit width the model was compiled for.
+    pub v_bits: u32,
+    /// Output channels per DSP group (paper group size g).
+    pub group: usize,
+    /// Compiled layers in execution order.
+    pub layers: Vec<CompiledLayer>,
+}
+
+impl CompiledModel {
+    /// The serving-registry key of this model.
+    pub fn key(&self) -> ModelKey {
+        ModelKey::new(&self.name, self.v_bits)
+    }
+
+    /// Expected input tensor shape `(c, h, w)`.
+    ///
+    /// Panics on a hand-assembled model with no layers;
+    /// [`validate_input`](Self::validate_input) (which every executor
+    /// calls first) refuses such a model with a typed error instead.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        let l = &self.layers[0].layer;
+        (l.in_ch, l.in_hw, l.in_hw)
+    }
+
+    /// Validate an input tensor against the model: shape and signed
+    /// operand range. Every executor runs this before touching the
+    /// datapath, so all backends refuse malformed inputs with the same
+    /// typed errors.
+    pub fn validate_input(&self, input: &Tensor3) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(SdmmError::InvalidModel(format!(
+                "model {} has no layers",
+                self.name
+            )));
+        }
+        // Hand-assembled models can carry any v_bits; reject widths the
+        // range check below cannot even express (shift overflow).
+        if !(2..=16).contains(&self.v_bits) {
+            return Err(SdmmError::UnsupportedBitWidth { v: self.v_bits });
+        }
+        let expected = self.input_shape();
+        let got = input.shape();
+        if got != expected {
+            return Err(SdmmError::ShapeMismatch { expected, got });
+        }
+        let lim = 1i64 << (self.v_bits - 1);
+        if input.data.iter().any(|&x| x < -lim || x >= lim) {
+            return Err(SdmmError::InputOutOfRange { v_bits: self.v_bits });
+        }
+        Ok(())
+    }
+
+    /// Validate the model's structural invariants: non-empty, a sane
+    /// bit width, chained layers, and every plane packed for its
+    /// layer's geometry at the model's bit width. `Compiler`-produced
+    /// models always pass; hand-assembled ones (the fields are public)
+    /// are refused with typed errors here — every executor and
+    /// [`register_compiled`](crate::coordinator::ModelRegistry::register_compiled)
+    /// runs this before touching the datapath, so a malformed model can
+    /// never trip an internal assert mid-conv.
+    pub fn validate_structure(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(SdmmError::InvalidModel(format!(
+                "model {} has no layers",
+                self.name
+            )));
+        }
+        if !(2..=16).contains(&self.v_bits) {
+            return Err(SdmmError::UnsupportedBitWidth { v: self.v_bits });
+        }
+        let refs: Vec<&ConvLayer> = self.layers.iter().map(|l| &l.layer).collect();
+        validate_chaining(&self.name, &refs)?;
+        for (i, cl) in self.layers.iter().enumerate() {
+            let l = &cl.layer;
+            if cl.plane.layout.v != self.v_bits {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {} layer {i}: plane packed at {} bits, model compiled at {} bits",
+                    self.name, cl.plane.layout.v, self.v_bits
+                )));
+            }
+            let taps = (l.in_ch / l.groups) * l.kernel * l.kernel;
+            let covered: usize = cl.plane.tiles.iter().map(|t| t.gg).sum();
+            if cl.plane.taps != taps || covered != l.out_ch {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {} layer {i}: plane packed for a different geometry \
+                     ({} taps / {} channels vs layer {taps} / {})",
+                    self.name,
+                    cl.plane.taps,
+                    covered,
+                    l.out_ch
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Check that every plane carries the batch-engine tuple forms —
+    /// required by the batch/systolic/serving backends (a plane from
+    /// [`PackedPlane::build_scalar`](crate::packing::PackedPlane::build_scalar)
+    /// serves the scalar backend only).
+    pub fn validate_batch_forms(&self) -> Result<()> {
+        for (i, cl) in self.layers.iter().enumerate() {
+            if cl.plane.tiles.iter().any(|t| t.prepared.len() != t.tuples.len()) {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {} layer {i}: plane built without batch forms \
+                     (use PackedPlane::build, not build_scalar)",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total packed tuples cached across the model's planes.
+    pub fn cached_tuples(&self) -> usize {
+        self.layers.iter().map(|l| l.plane.total_tuples()).sum()
+    }
+
+    /// MAC count of one forward pass.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.layer.macs()).sum()
+    }
+
+    /// Worst per-layer mean-square approximation error (a one-number
+    /// compile-quality summary; per-layer detail sits on
+    /// [`CompiledLayer::stats`]).
+    pub fn worst_layer_mse(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.mse).fold(0.0, f64::max)
+    }
+}

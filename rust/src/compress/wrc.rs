@@ -64,7 +64,7 @@ pub struct WrcResult {
 /// layout. `prune_sparsity` follows Deep Compression's conv-layer
 /// sparsity (~65% for conv layers; FC layers prune harder but Table 3
 /// is conv-only).
-pub fn wrc_compress(layout: &Layout, weights: &[i64], prune_sparsity: f64) -> anyhow::Result<WrcResult> {
+pub fn wrc_compress(layout: &Layout, weights: &[i64], prune_sparsity: f64) -> crate::error::Result<WrcResult> {
     let c = layout.c as u64;
     let original_bits = weights.len() as u64 * c;
 

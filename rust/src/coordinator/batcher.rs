@@ -152,7 +152,7 @@ pub trait BatchRunner {
     /// Flattened length of one output item.
     fn out_len(&self) -> usize;
     /// Execute one full batch (`batch_size * item_len` inputs).
-    fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
+    fn run(&mut self, x: &[f32]) -> crate::error::Result<Vec<f32>>;
 }
 
 /// Batching policy.
@@ -250,7 +250,7 @@ impl<T> Batcher<T> {
     pub fn flush<R: BatchRunner>(
         &mut self,
         runner: &mut R,
-    ) -> anyhow::Result<Vec<(T, Vec<f32>, Duration)>> {
+    ) -> crate::error::Result<Vec<(T, Vec<f32>, Duration)>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
@@ -260,7 +260,7 @@ impl<T> Batcher<T> {
         let bsz = runner.batch_size();
         let mut x = vec![0f32; bsz * item_len];
         for (i, r) in reqs.iter().enumerate() {
-            anyhow::ensure!(r.x.len() == item_len, "request item length");
+            crate::ensure!(r.x.len() == item_len, "request item length");
             x[i * item_len..(i + 1) * item_len].copy_from_slice(&r.x);
         }
         self.batches += 1;
@@ -301,7 +301,7 @@ mod tests {
         fn out_len(&self) -> usize {
             1
         }
-        fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn run(&mut self, x: &[f32]) -> crate::error::Result<Vec<f32>> {
             self.calls += 1;
             Ok(x.chunks(3).map(|c| c.iter().sum()).collect())
         }

@@ -11,7 +11,7 @@
 use crate::cnn::quant::{quantize_symmetric, QuantParams};
 use crate::cnn::zoo::ConvLayer;
 use crate::packing::{fine_tune_stream, Layout, PackedPlane, Wrom, WromIndexStream};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Pipeline mode: the paper's approximation (fixed 3-bit MW) or exact
 /// manipulation with fine-tuning (the ablation baseline).

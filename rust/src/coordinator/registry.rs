@@ -13,12 +13,13 @@
 //! Registration validates layer chaining and weight ranges up front;
 //! admission-time work is a hash lookup plus an `Arc` clone.
 
+use crate::api::{ApproxPolicy, CompiledModel, Compiler};
 use crate::cnn::infer::{relu, requantize, Tensor3};
 use crate::cnn::zoo::ConvLayer;
-use crate::packing::{Layout, PackedPlane};
-use crate::sa::{PeArch, SystolicArray};
+use crate::error::{Result, SdmmError};
+use crate::packing::PackedPlane;
+use crate::sa::SystolicArray;
 use crate::util::rng::Rng;
-use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
@@ -138,18 +139,19 @@ impl RegisteredModel {
     /// same sequence through `SystolicArray::run_conv_batch` on the
     /// raw weights — the serving path adds no arithmetic of its own.
     pub fn run(&self, sa: &SystolicArray, input: &Tensor3) -> Result<ModelRun> {
-        ensure!(
-            sa.cfg.v_bits == self.key.v_bits,
-            "array bit-width {} != model bit-width {}",
-            sa.cfg.v_bits,
-            self.key.v_bits
-        );
-        let (c, h, w) = self.input_shape();
-        ensure!(
-            input.shape() == (c, h, w),
-            "input shape {:?} != model input ({c}, {h}, {w})",
-            input.shape()
-        );
+        if sa.cfg.v_bits != self.key.v_bits {
+            return Err(SdmmError::InvalidConfig(format!(
+                "array bit-width {} != model bit-width {}",
+                sa.cfg.v_bits, self.key.v_bits
+            )));
+        }
+        let expected = self.input_shape();
+        if input.shape() != expected {
+            return Err(SdmmError::ShapeMismatch {
+                expected,
+                got: input.shape(),
+            });
+        }
         let mut x = input.clone();
         let mut dsp_ops = 0u64;
         let mut mults = 0u64;
@@ -195,51 +197,48 @@ impl ModelRegistry {
     /// Validate a spec, pack one [`PackedPlane`] per layer, and insert
     /// the model. Re-registering an existing key replaces the model
     /// and its cached planes atomically. Returns the registered model.
+    ///
+    /// This is a thin wrapper over the [`crate::api`] compile pipeline:
+    /// the spec goes through [`Compiler::pack_model`] (which owns all
+    /// validation and packing) and the result admits via
+    /// [`register_compiled`](Self::register_compiled).
     pub fn register(&self, spec: ModelSpec) -> Result<Arc<RegisteredModel>> {
-        let key = spec.key();
-        ensure!(!spec.layers.is_empty(), "model {key} has no layers");
-        ensure!(
-            spec.weights.len() == spec.layers.len(),
-            "model {key}: {} weight sets for {} layers",
-            spec.weights.len(),
-            spec.layers.len()
-        );
-        for pair in spec.layers.windows(2) {
-            let (a, b) = (&pair[0], &pair[1]);
-            if a.out_ch != b.in_ch || a.out_hw() != b.in_hw {
-                bail!(
-                    "model {key}: layer {:?} ({} ch, {}x{}) does not feed {:?} ({} ch, {}x{})",
-                    a.name,
-                    a.out_ch,
-                    a.out_hw(),
-                    a.out_hw(),
-                    b.name,
-                    b.in_ch,
-                    b.in_hw,
-                    b.in_hw
-                );
-            }
-        }
-        let layout = Layout::for_bits(spec.v_bits)?;
-        let group = PeArch::MultiPack.mults_per_dsp(spec.v_bits);
-        // Pack every layer before taking the write lock: packing is the
-        // expensive part and must not serialize lookups.
-        let mut planes = Vec::with_capacity(spec.layers.len());
-        for (i, (layer, w)) in spec.layers.iter().zip(&spec.weights).enumerate() {
-            ensure!(
-                w.len() as u64 == layer.params(),
-                "model {key} layer {i}: {} weights for {} params",
-                w.len(),
-                layer.params()
-            );
-            let plane = PackedPlane::build(&layout, group, w, layer)
-                .with_context(|| format!("packing model {key} layer {i}"))?;
-            planes.push(Arc::new(plane));
-        }
+        // skip_stats: the registry keeps only layers/planes, so the
+        // per-weight error sweep would be computed and thrown away.
+        let policy = ApproxPolicy {
+            skip_stats: true,
+            ..ApproxPolicy::nearest()
+        };
+        let compiled = Compiler::for_bits(spec.v_bits)?
+            .approximate(policy)
+            .pack_model(&spec.name, &spec.layers, &spec.weights)?;
+        self.register_compiled(&compiled)
+    }
+
+    /// Admit a model compiled through the [`crate::api`] facade: the
+    /// compiled planes are shared by `Arc` — registration never
+    /// repacks. Packing happened outside the lock (at compile time), so
+    /// admission is a short write-locked map update, exactly like
+    /// [`register`](Self::register).
+    pub fn register_compiled(&self, compiled: &CompiledModel) -> Result<Arc<RegisteredModel>> {
+        // CompiledModel fields are public, so a hand-assembled model can
+        // violate the invariants pack_model enforces. Re-validate at the
+        // door — a malformed model must be refused here, not abort a
+        // shard worker on the plane/layer geometry asserts mid-conv.
+        // Shard workers run the batch engine, so the batch forms are
+        // required too (a scalar-only plane would trip their assert).
+        compiled.validate_structure()?;
+        compiled.validate_batch_forms()?;
+        let key = compiled.key();
+        let planes: Vec<Arc<PackedPlane>> = compiled
+            .layers
+            .iter()
+            .map(|l| Arc::clone(&l.plane))
+            .collect();
         let model = Arc::new(RegisteredModel {
             key: key.clone(),
-            layers: spec.layers,
-            group,
+            layers: compiled.layers.iter().map(|l| l.layer.clone()).collect(),
+            group: compiled.group,
             planes: planes.clone(),
         });
         let mut inner = self.inner.write().unwrap();
@@ -306,7 +305,7 @@ impl ModelRegistry {
 mod tests {
     use super::*;
     use crate::cnn::infer::{approximate_weights, conv2d_int};
-    use crate::sa::SaConfig;
+    use crate::sa::{PeArch, SaConfig};
 
     fn two_layer_spec(v_bits: u32, seed: u64) -> ModelSpec {
         ModelSpec::random(

@@ -3,7 +3,7 @@
 
 use super::batcher::BatchRunner;
 use crate::runtime::{Artifacts, CnnModel, WeightMode};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Runs fixed-size batches through the PJRT executable with a staged
 /// weight set. Construct *inside* the server worker thread via

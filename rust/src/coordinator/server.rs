@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 /// A submitted request: the flattened image and the response channel.
 struct Request {
     x: Vec<f32>,
-    resp: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    resp: mpsc::Sender<crate::error::Result<Vec<f32>>>,
 }
 
 /// Aggregated server metrics (shared with the caller).
@@ -67,7 +67,7 @@ impl InferenceServer {
     pub fn start_factory<R, F>(factory: F, policy: BatchPolicy) -> Self
     where
         R: BatchRunner + 'static,
-        F: FnOnce() -> anyhow::Result<R> + Send + 'static,
+        F: FnOnce() -> crate::error::Result<R> + Send + 'static,
     {
         let queue: Arc<SubmitQueue<Request>> = SubmitQueue::new();
         let queue_w = Arc::clone(&queue);
@@ -81,7 +81,7 @@ impl InferenceServer {
                 loop {
                     let status = queue_w.drain_wait(None, &mut incoming);
                     for req in incoming.drain(..) {
-                        let _ = req.resp.send(Err(anyhow::anyhow!("runner init failed: {e}")));
+                        let _ = req.resp.send(Err(crate::error::SdmmError::Runtime(format!("runner init failed: {e}"))));
                     }
                     if status == QueueStatus::Closed {
                         break;
@@ -98,7 +98,7 @@ impl InferenceServer {
 
     /// Submit one image; returns the receiver for its logits. The
     /// Condvar push wakes the worker immediately.
-    pub fn submit(&self, x: Vec<f32>) -> mpsc::Receiver<anyhow::Result<Vec<f32>>> {
+    pub fn submit(&self, x: Vec<f32>) -> mpsc::Receiver<crate::error::Result<Vec<f32>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         // If the queue is already closed the request is dropped and the
         // receiver reports a disconnected server.
@@ -107,10 +107,10 @@ impl InferenceServer {
     }
 
     /// Blocking convenience: submit and wait.
-    pub fn infer(&self, x: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+    pub fn infer(&self, x: Vec<f32>) -> crate::error::Result<Vec<f32>> {
         self.submit(x)
             .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            .map_err(|_| crate::error::SdmmError::Runtime("server dropped request".into()))?
     }
 
     /// Current metrics (the server keeps running).
@@ -144,7 +144,7 @@ fn worker_loop<R: BatchRunner>(
     queue: Arc<SubmitQueue<Request>>,
     metrics: Arc<Mutex<ServerMetrics>>,
 ) {
-    let mut batcher: Batcher<(mpsc::Sender<anyhow::Result<Vec<f32>>>, Instant)> =
+    let mut batcher: Batcher<(mpsc::Sender<crate::error::Result<Vec<f32>>>, Instant)> =
         Batcher::new(policy);
     let mut incoming: Vec<Request> = Vec::new();
     let mut open = true;
@@ -205,7 +205,7 @@ mod tests {
         fn out_len(&self) -> usize {
             2
         }
-        fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn run(&mut self, x: &[f32]) -> crate::error::Result<Vec<f32>> {
             Ok(x.iter().map(|v| v * 2.0).collect())
         }
     }

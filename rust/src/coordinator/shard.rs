@@ -37,7 +37,7 @@ use super::metrics::{RuntimeSnapshot, ShardMetrics};
 use super::registry::{ModelKey, ModelRegistry};
 use crate::cnn::infer::Tensor3;
 use crate::sa::{PeArch, SaConfig, SystolicArray};
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -169,8 +169,8 @@ impl ServingRuntime {
     /// assert_eq!(snap.total_jobs(), 1);
     /// ```
     pub fn start(registry: Arc<ModelRegistry>, config: ServingConfig) -> Result<ServingRuntime> {
-        anyhow::ensure!(config.shards > 0, "serving runtime needs at least one shard");
-        anyhow::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
+        crate::ensure!(config.shards > 0, "serving runtime needs at least one shard");
+        crate::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
         let mut queues = Vec::with_capacity(config.shards);
         let mut metrics = Vec::with_capacity(config.shards);
         let mut workers = Vec::with_capacity(config.shards);
@@ -269,9 +269,9 @@ impl ServingRuntime {
     pub fn infer(&self, key: &ModelKey, input: Tensor3) -> Result<InferOutput> {
         let rx = self
             .submit(key, input)
-            .map_err(|e| anyhow::anyhow!("admission refused: {e}"))?;
+            .map_err(crate::error::SdmmError::Admission)?;
         rx.recv()
-            .map_err(|_| anyhow::anyhow!("serving runtime dropped the request"))?
+            .map_err(|_| crate::error::SdmmError::Runtime("serving runtime dropped the request".into()))?
     }
 
     /// Current metrics across every shard.

@@ -48,6 +48,7 @@
 //! bit-exact reference either way.
 
 use super::engine::SdmmEngine;
+use crate::error::{Result, SdmmError};
 use crate::packing::{Layout, PackedTuple};
 use crate::util::bits::{mask, sext, zext};
 
@@ -240,11 +241,19 @@ pub struct BatchLanes {
 }
 
 impl BatchLanes {
-    /// Pack `inputs` as consecutive ki-sized groups
-    /// (`inputs.len() % layout.ki() == 0`).
-    pub fn pack(layout: &Layout, inputs: &[i64]) -> BatchLanes {
+    /// Pack `inputs` as consecutive ki-sized groups. Fails with a typed
+    /// [`SdmmError::NotAMultiple`] when `inputs.len()` is not a
+    /// multiple of `layout.ki()` (a malformed request must refuse, not
+    /// abort the worker that packs it).
+    pub fn pack(layout: &Layout, inputs: &[i64]) -> Result<BatchLanes> {
         let ki = layout.ki();
-        assert_eq!(inputs.len() % ki, 0, "inputs not a multiple of ki");
+        if inputs.len() % ki != 0 {
+            return Err(SdmmError::NotAMultiple {
+                what: "batch input lanes",
+                len: inputs.len(),
+                multiple_of: ki,
+            });
+        }
         let mut lanes = BatchLanes {
             ki,
             groups: inputs.len() / ki,
@@ -253,7 +262,7 @@ impl BatchLanes {
             neg: Vec::with_capacity(inputs.len()),
         };
         lanes.extend(inputs);
-        lanes
+        Ok(lanes)
     }
 
     /// Single-lane packing: lane 0 carries `xs`, the remaining ki−1
@@ -343,7 +352,7 @@ impl BatchLanes {
 ///
 /// // Batch path: many independent P words in one call.
 /// let prepared = PreparedTuple::prepare(&tuple);
-/// let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]);
+/// let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]).unwrap();
 /// let mut raw = vec![0u64; lanes.groups()];
 /// BatchEngine::new().execute_raw_batch(&prepared, &lanes, &mut raw);
 ///
@@ -602,7 +611,7 @@ mod tests {
             let mut scalar = SdmmEngine::new();
             let mut batch = BatchEngine::new();
             let xs = all_inputs(8);
-            let lanes = BatchLanes::pack(&l, &xs);
+            let lanes = BatchLanes::pack(&l, &xs).unwrap();
             let mut raw = vec![0u64; xs.len()];
             batch.execute_raw_batch(&pt, &lanes, &mut raw);
             for (g, &x) in xs.iter().enumerate() {
@@ -632,7 +641,7 @@ mod tests {
                 let inputs: Vec<i64> = (0..l.ki() * 16)
                     .map(|_| rng.range_i64(-lim, lim - 1))
                     .collect();
-                let lanes = BatchLanes::pack(&l, &inputs);
+                let lanes = BatchLanes::pack(&l, &inputs).unwrap();
                 let mut raw = vec![0u64; lanes.groups()];
                 batch.execute_raw_batch(&pt, &lanes, &mut raw);
                 let want = scalar_raw_reference(&mut scalar, &t, &inputs);
@@ -648,7 +657,7 @@ mod tests {
         let pt = PreparedTuple::prepare(&t);
         let mut batch = BatchEngine::new();
         let inputs: Vec<i64> = vec![-32, 5, 0, -1, 31, -17];
-        let lanes = BatchLanes::pack(&l, &inputs);
+        let lanes = BatchLanes::pack(&l, &inputs).unwrap();
         let mut scratch = Vec::new();
         let k = l.kw() * l.ki();
         let mut out = vec![0i64; lanes.groups() * k];
@@ -688,7 +697,7 @@ mod tests {
         let mut scalar = SdmmEngine::new();
         let mut batch = BatchEngine::new();
         let xs = all_inputs(8);
-        let lanes = BatchLanes::pack(&l, &xs);
+        let lanes = BatchLanes::pack(&l, &xs).unwrap();
         let mut raw = vec![0u64; xs.len()];
         batch.execute_raw_batch(&pt, &lanes, &mut raw);
         for (g, &x) in xs.iter().enumerate() {
@@ -707,7 +716,7 @@ mod tests {
         for i3 in [-8i64, -1] {
             let inputs = [3i64, -2, i3];
             assert!((l.b_word(&inputs) >> 17) & 1 == 1, "edge not exercised");
-            let lanes = BatchLanes::pack(&l, &inputs);
+            let lanes = BatchLanes::pack(&l, &inputs).unwrap();
             let mut raw = vec![0u64; 1];
             batch.execute_raw_batch(&pt, &lanes, &mut raw);
             assert_eq!(raw[0], scalar.execute_raw(&t, &inputs));

@@ -1,0 +1,327 @@
+//! One error type for the whole crate.
+//!
+//! Every fallible path in the library — packing, the DSP engines, the
+//! systolic array, the runtime, the serving stack and the `sdmm::api`
+//! facade — returns [`SdmmError`] through the crate-wide [`Result`]
+//! alias. The enum is hand-rolled in `thiserror` style (the vendored
+//! crate set has no proc-macro error crates): typed variants for the
+//! conditions callers dispatch on (unsupported bit width, out-of-range
+//! operands, shape mismatches, admission refusals), string-carrying
+//! variants for the long tail.
+//!
+//! Input-validation failures that used to `panic!` (tuple arity,
+//! lane-packing arity, plane/weight-count mismatches) are typed errors
+//! now, so a malformed request degrades into a refusal instead of
+//! aborting a shard worker.
+
+#![warn(missing_docs)]
+
+use crate::coordinator::AdmitError;
+
+/// Crate-wide result alias: `Result<T, SdmmError>`.
+pub type Result<T, E = SdmmError> = std::result::Result<T, E>;
+
+/// The one error type of the crate (see the module docs).
+#[derive(Debug)]
+pub enum SdmmError {
+    /// No packing layout ships for this operand bit width (8, 6 and 4
+    /// are the paper's formats).
+    UnsupportedBitWidth {
+        /// The requested operand bit width.
+        v: u32,
+    },
+    /// A weight falls outside the signed `c_bits` range the layout
+    /// packs (the closed range `[-2^(c-1), 2^(c-1)]`; see
+    /// [`pack_approx`](crate::packing::pack_approx)).
+    WeightOutOfRange {
+        /// The offending weight value.
+        weight: i64,
+        /// The layout's weight bit width.
+        c_bits: u32,
+    },
+    /// An input value falls outside the signed `v_bits` operand range.
+    InputOutOfRange {
+        /// The operand bit width of the layout or model.
+        v_bits: u32,
+    },
+    /// A slice has the wrong element count for the operation (tuple
+    /// arity, lane-group arity, per-layer weight counts, ...).
+    ArityMismatch {
+        /// What was being counted (e.g. `"tuple weights"`).
+        what: &'static str,
+        /// The count that was supplied.
+        got: usize,
+        /// The count the operation requires.
+        expected: usize,
+    },
+    /// A slice length must be a whole number of fixed-size groups and
+    /// is not (e.g. batch input lanes vs the layout's `ki`).
+    NotAMultiple {
+        /// What was being grouped (e.g. `"batch input lanes"`).
+        what: &'static str,
+        /// The length that was supplied.
+        len: usize,
+        /// The group size the length must be a multiple of.
+        multiple_of: usize,
+    },
+    /// A tensor's `(c, h, w)` shape does not match what the consumer
+    /// was compiled for.
+    ShapeMismatch {
+        /// Shape the consumer expects.
+        expected: (usize, usize, usize),
+        /// Shape that was supplied.
+        got: (usize, usize, usize),
+    },
+    /// An exact-mode tuple does not fit the DSP port widths — the
+    /// condition fine-tuning (paper §3.3.4) exists to repair.
+    TupleOverflow(String),
+    /// The requested execution path does not support this workload
+    /// (e.g. the batch path on a non-MultiPack array).
+    UnsupportedBackend(String),
+    /// A model spec failed validation (layer chaining, empty model,
+    /// weight-set counts).
+    InvalidModel(String),
+    /// A configuration value is out of range (shard counts, queue
+    /// capacities, DSP group sizes).
+    InvalidConfig(String),
+    /// The serving admission layer refused the request.
+    Admission(AdmitError),
+    /// An underlying I/O operation failed.
+    Io(std::io::Error),
+    /// Text (JSON manifest, CLI argument, artifact metadata) failed to
+    /// parse.
+    Parse(String),
+    /// A runtime backend (PJRT, server worker) failed.
+    Runtime(String),
+    /// Uncategorized error with a human-readable message.
+    Msg(String),
+    /// A structured error wrapped with human context (where it
+    /// happened), preserving the typed source for callers that walk
+    /// [`std::error::Error::source`].
+    Context {
+        /// What was being attempted (e.g. `"packing model m layer 2"`).
+        context: String,
+        /// The underlying typed error.
+        source: Box<SdmmError>,
+    },
+}
+
+impl SdmmError {
+    /// Build an uncategorized [`SdmmError::Msg`] from any message.
+    pub fn msg(m: impl Into<String>) -> SdmmError {
+        SdmmError::Msg(m.into())
+    }
+
+    /// Wrap this error with context, keeping the typed source intact
+    /// (unlike the [`Context`] trait, which flattens foreign errors
+    /// into [`SdmmError::Msg`]).
+    pub fn in_context(self, context: impl Into<String>) -> SdmmError {
+        SdmmError::Context {
+            context: context.into(),
+            source: Box::new(self),
+        }
+    }
+
+    /// The innermost typed error, unwrapping any [`SdmmError::Context`]
+    /// layers — what callers should match on.
+    pub fn root(&self) -> &SdmmError {
+        match self {
+            SdmmError::Context { source, .. } => source.root(),
+            other => other,
+        }
+    }
+}
+
+impl std::fmt::Display for SdmmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SdmmError::UnsupportedBitWidth { v } => {
+                write!(f, "no packing layout for {v}-bit operands (paper formats: 8, 6, 4)")
+            }
+            SdmmError::WeightOutOfRange { weight, c_bits } => {
+                write!(f, "weight {weight} out of signed {c_bits}-bit range")
+            }
+            SdmmError::InputOutOfRange { v_bits } => {
+                write!(f, "input exceeds signed {v_bits}-bit range")
+            }
+            SdmmError::ArityMismatch { what, got, expected } => {
+                write!(f, "{what}: got {got}, expected {expected}")
+            }
+            SdmmError::NotAMultiple { what, len, multiple_of } => {
+                write!(f, "{what}: length {len} is not a multiple of {multiple_of}")
+            }
+            SdmmError::ShapeMismatch { expected, got } => {
+                write!(f, "input shape {got:?} != expected shape {expected:?}")
+            }
+            SdmmError::TupleOverflow(m) => write!(f, "tuple does not fit: {m}"),
+            SdmmError::UnsupportedBackend(m) => write!(f, "unsupported backend: {m}"),
+            SdmmError::InvalidModel(m) => write!(f, "invalid model: {m}"),
+            SdmmError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            SdmmError::Admission(e) => write!(f, "admission refused: {e}"),
+            SdmmError::Io(e) => write!(f, "i/o: {e}"),
+            SdmmError::Parse(m) => write!(f, "parse: {m}"),
+            SdmmError::Runtime(m) => write!(f, "runtime: {m}"),
+            SdmmError::Msg(m) => f.write_str(m),
+            SdmmError::Context { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for SdmmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SdmmError::Io(e) => Some(e),
+            SdmmError::Admission(e) => Some(e),
+            SdmmError::Context { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SdmmError {
+    fn from(e: std::io::Error) -> Self {
+        SdmmError::Io(e)
+    }
+}
+
+impl From<AdmitError> for SdmmError {
+    fn from(e: AdmitError) -> Self {
+        SdmmError::Admission(e)
+    }
+}
+
+impl From<std::sync::mpsc::RecvError> for SdmmError {
+    fn from(_: std::sync::mpsc::RecvError) -> Self {
+        SdmmError::Runtime("response channel disconnected".into())
+    }
+}
+
+impl From<std::num::ParseIntError> for SdmmError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        SdmmError::Parse(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for SdmmError {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        SdmmError::Parse(e.to_string())
+    }
+}
+
+impl From<String> for SdmmError {
+    fn from(m: String) -> Self {
+        SdmmError::Msg(m)
+    }
+}
+
+impl From<&str> for SdmmError {
+    fn from(m: &str) -> Self {
+        SdmmError::Msg(m.to_string())
+    }
+}
+
+/// Attach human context to an error or a missing value, `anyhow`-style:
+/// `file.read().context("loading manifest")?` or
+/// `map.get(k).with_context(|| format!("{k} missing"))?`.
+///
+/// Context flattens the source into an [`SdmmError::Msg`] — it is meant
+/// for boundaries (CLI, artifact loading) where the message is the
+/// product; typed variants should be returned directly on paths callers
+/// dispatch on.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| SdmmError::Msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| SdmmError::Msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| SdmmError::Msg(c.to_string()))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| SdmmError::Msg(f().to_string()))
+    }
+}
+
+/// Return early with an [`SdmmError::Msg`] built from format arguments
+/// (the `anyhow::bail!` shape, producing the crate error type).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::SdmmError::Msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an [`SdmmError::Msg`] unless the condition holds
+/// (the `anyhow::ensure!` shape, producing the crate error type).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::error::SdmmError::Msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_variants_display() {
+        let e = SdmmError::UnsupportedBitWidth { v: 5 };
+        assert!(e.to_string().contains("5-bit"));
+        let e = SdmmError::WeightOutOfRange { weight: 300, c_bits: 8 };
+        assert!(e.to_string().contains("300"));
+        let e = SdmmError::ShapeMismatch {
+            expected: (3, 6, 6),
+            got: (4, 6, 6),
+        };
+        assert!(e.to_string().contains("(4, 6, 6)"));
+    }
+
+    #[test]
+    fn context_wraps_results_and_options() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("loading manifest").unwrap_err();
+        assert!(e.to_string().contains("loading manifest"));
+        assert!(e.to_string().contains("gone"));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn bail_and_ensure_produce_msg() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(matches!(f(12), Err(SdmmError::Msg(m)) if m.contains("12")));
+        assert!(matches!(f(7), Err(SdmmError::Msg(m)) if m == "unlucky 7"));
+    }
+
+    #[test]
+    fn admission_errors_convert() {
+        let e: SdmmError = AdmitError::ShuttingDown.into();
+        assert!(matches!(e, SdmmError::Admission(AdmitError::ShuttingDown)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

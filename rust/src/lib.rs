@@ -25,6 +25,50 @@
 //!
 //! ## Quick tour
 //!
+//! The front door is [`api`]: a typestate compile pipeline
+//! (`Compiler::for_bits` → `.approximate(policy)` → `.pack_model(..)`)
+//! whose output runs unchanged on every execution backend. Compile one
+//! 8-bit layer once, run it on the port-accurate scalar engine, the
+//! lane-parallel batch engine and the systolic-array simulator —
+//! outputs and op accounting are bit-identical:
+//!
+//! ```
+//! use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
+//! use sdmm::cnn::infer::Tensor3;
+//! use sdmm::cnn::zoo::ConvLayer;
+//!
+//! let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+//! let weights: Vec<i64> = (0..layer.params() as i64).map(|i| (i % 251) - 125).collect();
+//!
+//! // Compile once: resolve the 8-bit port layout, fix the paper's
+//! // nearest-value approximation, pack the weight plane (+ per-layer
+//! // approximation error stats).
+//! let model = Compiler::for_bits(8)?
+//!     .approximate(ApproxPolicy::nearest())
+//!     .pack_model("demo", &[layer], &[weights])?;
+//! assert!(model.layers[0].stats.changed > 0); // e.g. -123 -> -120
+//!
+//! // Run anywhere: every Executor is interchangeable and bit-exact.
+//! let mut input = Tensor3::zeros(2, 6, 6);
+//! for (i, v) in input.data.iter_mut().enumerate() {
+//!     *v = (i as i64 % 11) - 5;
+//! }
+//! let scalar = ScalarExec::new().run(&model, &input)?;
+//! let batch = BatchExec::new().run(&model, &input)?;
+//! let systolic = SystolicExec::new().run(&model, &input)?;
+//! assert_eq!(scalar.output, batch.output);
+//! assert_eq!(batch.output, systolic.output);
+//! assert_eq!((scalar.dsp_ops, scalar.mults), (batch.dsp_ops, batch.mults));
+//! assert_eq!((batch.dsp_ops, batch.mults), (systolic.dsp_ops, systolic.mults));
+//!
+//! // Errors are one typed enum across the whole crate.
+//! use sdmm::error::SdmmError;
+//! assert!(matches!(Compiler::for_bits(5), Err(SdmmError::UnsupportedBitWidth { v: 5 })));
+//! # Ok::<(), SdmmError>(())
+//! ```
+//!
+//! The paper-level primitives stay available underneath the facade:
+//!
 //! ```
 //! use sdmm::manip::manipulate;
 //! use sdmm::packing::{pack_approx, Layout};
@@ -45,16 +89,18 @@
 //! // lane-parallel batch engine (bit-exact with the scalar engine).
 //! use sdmm::dsp::{BatchEngine, BatchLanes, PreparedTuple};
 //! let prepared = PreparedTuple::prepare(&tuple);
-//! let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]);
+//! let lanes = BatchLanes::pack(&layout, &[-77, 3, 12]).unwrap();
 //! let mut raw = vec![0u64; lanes.groups()];
 //! BatchEngine::new().execute_raw_batch(&prepared, &lanes, &mut raw);
 //! assert_eq!(raw[0], engine.execute_raw(&tuple, &[-77]));
 //! ```
 
+pub mod api;
 pub mod cnn;
 pub mod compress;
 pub mod coordinator;
 pub mod dsp;
+pub mod error;
 pub mod manip;
 pub mod packing;
 pub mod report;

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! sdmm manip <value> [--bits N]         decompose/approximate one value
-//! sdmm pack <w1,w2,..> [--bits N]       pack a tuple, show A/C words
+//! sdmm pack <w1,w2,..> [--bits N] [--mode approx|exact]  pack a tuple, show A/C words
 //! sdmm report <table1..table6|fig4|fig7|fig9|fig10|rom|all> [--artifacts DIR]
 //! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
 //!            [--bits N] [--artifacts DIR]     batched PJRT serving demo
@@ -14,17 +14,18 @@
 //! sdmm sim [--bits N] [--arch 1m|2m|mp]       systolic-array estimates
 //! ```
 
-use anyhow::{bail, Context, Result};
+use sdmm::api::{ApproxMode, ApproxPolicy, Compiler};
+use sdmm::bail;
 use sdmm::coordinator::{BatchPolicy, CnnRunner, InferenceServer};
+use sdmm::error::{Context, Result};
 use sdmm::manip::{approximate_signed, manipulate};
-use sdmm::packing::{pack_approx, Layout};
 use sdmm::runtime::WeightMode;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use std::time::Instant;
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -105,7 +106,7 @@ fn print_usage() {
          \n\
          usage:\n\
          sdmm manip <value> [--bits N]\n\
-         sdmm pack <w1,w2,...> [--bits N]\n\
+         sdmm pack <w1,w2,...> [--bits N] [--mode approx|exact]\n\
          sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
@@ -147,8 +148,19 @@ fn cmd_pack(args: &Args) -> Result<()> {
         .map(|t| t.trim().parse::<i64>().map_err(Into::into))
         .collect::<Result<_>>()?;
     let bits = args.flag_u32("bits", 8)?;
-    let layout = Layout::for_bits(bits)?;
-    let tuple = pack_approx(&layout, &ws)?;
+    let mode = match args.flag("mode", "approx").as_str() {
+        "approx" => ApproxMode::Nearest,
+        "exact" => ApproxMode::Exact,
+        other => bail!("unknown pack mode {other:?} (approx|exact)"),
+    };
+    // One front door: layout resolution, policy, packing — all through
+    // the api compile pipeline.
+    let compiler = Compiler::for_bits(bits)?.approximate(ApproxPolicy {
+        mode,
+        ..ApproxPolicy::default()
+    });
+    let layout = compiler.layout();
+    let tuple = compiler.pack_tuple(&ws)?;
     println!(
         "layout: v={bits} kw={} ki={} (k={} mults/DSP)",
         layout.kw(),
@@ -297,8 +309,20 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         input.data = (0..input.data.len())
             .map(|_| rng.range_i64(-lim, lim - 1))
             .collect();
-        let key = spec.key();
-        registry.register(spec)?;
+        // Compile through the api facade (planes + per-layer error
+        // stats), then admit the compiled model — registration shares
+        // the plane Arcs, it never repacks.
+        let compiled = Compiler::for_bits(v)?
+            .approximate(ApproxPolicy::nearest())
+            .pack_model(&spec.name, &spec.layers, &spec.weights)?;
+        println!(
+            "compiled {}@{v}b: {} tuples, worst layer MSE {:.3} LSB^2",
+            spec.name,
+            compiled.cached_tuples(),
+            compiled.worst_layer_mse()
+        );
+        let key = compiled.key();
+        registry.register_compiled(&compiled)?;
         work.push((key, input));
     }
     println!(

@@ -19,7 +19,8 @@
 //! | 6 | 2×2   | 0,18      | 0,9       | 9          |
 //! | 4 | 2×3   | 0,21      | 0,7,14    | 7          |
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::{Result, SdmmError};
 
 /// DSP48E1 A (multiplicand) port width (paper Fig. 1).
 pub const A_PORT_BITS: u32 = 25;
@@ -61,7 +62,7 @@ impl Layout {
             8 => (vec![0, 11, 22], vec![0]),
             6 => (vec![0, 18], vec![0, 9]),
             4 => (vec![0, 21], vec![0, 7, 14]),
-            _ => bail!("unsupported input bit width v={v} (supported: 4, 6, 8)"),
+            _ => return Err(SdmmError::UnsupportedBitWidth { v }),
         };
         let l = Layout {
             v,

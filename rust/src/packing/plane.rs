@@ -22,8 +22,8 @@ use super::layout::Layout;
 use super::tuple::{pack_approx, PackedTuple};
 use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
-use crate::dsp::{BatchEngine, BatchLanes, PreparedTuple};
-use anyhow::Result;
+use crate::dsp::{BatchEngine, BatchLanes, PreparedTuple, SdmmEngine};
+use crate::error::{Result, SdmmError};
 
 /// Packed weights for one output-channel tile of one channel group.
 #[derive(Clone, Debug)]
@@ -118,8 +118,18 @@ impl PackedPlane {
         layer: &ConvLayer,
         with_prepared: bool,
     ) -> Result<PackedPlane> {
-        assert_eq!(weights.len() as u64, layer.params(), "weight count");
-        assert!(group > 0, "DSP group size must be positive");
+        if weights.len() as u64 != layer.params() {
+            return Err(SdmmError::ArityMismatch {
+                what: "layer weights",
+                got: weights.len(),
+                expected: layer.params() as usize,
+            });
+        }
+        if group == 0 {
+            return Err(SdmmError::InvalidConfig(
+                "DSP group size must be positive".into(),
+            ));
+        }
         let icg = layer.in_ch / layer.groups;
         let ocg = layer.out_ch / layer.groups;
         let k = layer.kernel;
@@ -265,6 +275,92 @@ impl PackedPlane {
             }
             dsp_ops += ops;
             mults += m;
+        }
+        (out, dsp_ops, mults)
+    }
+
+    /// Execute the convolution on the port-accurate scalar
+    /// [`SdmmEngine`]: every product goes through the DSP48E1 model
+    /// (toggle statistics accumulate on the caller's engine — the power
+    /// model's input). Bit-identical outputs and op accounting to
+    /// [`execute_conv`](Self::execute_conv); one tuple per DSP op.
+    ///
+    /// This is the one scalar conv loop in the crate: the systolic
+    /// array's [`run_conv`](crate::sa::SystolicArray::run_conv) and the
+    /// facade's [`ScalarExec`](crate::api::ScalarExec) both execute
+    /// through it.
+    pub fn execute_conv_scalar(
+        &self,
+        input: &Tensor3,
+        layer: &ConvLayer,
+        engine: &mut SdmmEngine,
+    ) -> (Tensor3, u64, u64) {
+        assert_eq!(input.c, layer.in_ch);
+        assert_eq!(input.h, layer.in_hw);
+        let o_hw = layer.out_hw();
+        let icg = layer.in_ch / layer.groups;
+        let kk = layer.kernel;
+        let kw = self.layout.kw();
+        let ki = self.layout.ki();
+        let mut out = Tensor3::zeros(layer.out_ch, o_hw, o_hw);
+        let mut dsp_ops = 0u64;
+        let mut mults = 0u64;
+        for (ti, tile) in self.tiles.iter().enumerate() {
+            // Heap accumulator sized to the tile: group sizes are not
+            // bounded by the paper's 3/4/6 (Compiler::with_group), so a
+            // fixed small array would be an overflow panic waiting.
+            let mut acc = vec![0i64; tile.gg];
+            for oy in 0..o_hw {
+                for ox in 0..o_hw {
+                    acc.fill(0);
+                    for ic in 0..icg {
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
+                                let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
+                                // padding taps stream a zero through the
+                                // datapath (the hardware does multiply
+                                // them), so they count as real
+                                // multiplications
+                                let x = if iy < 0
+                                    || iy >= input.h as i64
+                                    || ix < 0
+                                    || ix >= input.w as i64
+                                {
+                                    0
+                                } else {
+                                    input.at(tile.grp * icg + ic, iy as usize, ix as usize)
+                                };
+                                let tap = (ic * kk + ky) * kk + kx;
+                                let tuples = self.tap_tuples(ti, tap);
+                                // replicate x across the ki input lanes
+                                // (same pixel)
+                                let mut inputs = [0i64; 4];
+                                inputs[..ki].fill(x);
+                                let mut prods = [0i64; 8];
+                                let mut j = 0;
+                                for tuple in tuples {
+                                    let take = kw.min(tile.gg - j);
+                                    engine.execute_into(
+                                        tuple,
+                                        &inputs[..ki],
+                                        &mut prods[..kw * ki],
+                                    );
+                                    dsp_ops += 1;
+                                    for t in 0..take {
+                                        acc[j + t] += prods[t * ki];
+                                        mults += 1;
+                                    }
+                                    j += take;
+                                }
+                            }
+                        }
+                    }
+                    for (j, &a) in acc.iter().enumerate() {
+                        out.set(tile.oc0 + j, oy, ox, a);
+                    }
+                }
+            }
         }
         (out, dsp_ops, mults)
     }

@@ -18,8 +18,8 @@
 
 use super::layout::{Layout, A_PORT_BITS, MW_A_BITS};
 use crate::manip::{approximate_signed, manipulate};
+use crate::error::{Result, SdmmError};
 use crate::util::bits::{mask, sext, zext};
-use anyhow::{bail, Result};
 
 /// One weight slot of a packed tuple.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -125,11 +125,11 @@ pub struct PackedTuple {
 /// the paper's fine-tuning step exists to provide in exact mode.
 pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
     if weights.len() != layout.kw() {
-        bail!(
-            "tuple arity {} != layout weight slots {}",
-            weights.len(),
-            layout.kw()
-        );
+        return Err(SdmmError::ArityMismatch {
+            what: "tuple weights",
+            got: weights.len(),
+            expected: layout.kw(),
+        });
     }
     let c = layout.c;
     let max_mag = 1i64 << (c - 1);
@@ -138,7 +138,7 @@ pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
         // itself may round 2^(c-1)-1 up to the power of two (127 -> 128),
         // which the hardware implements exactly (MW=0, s=c-1).
         if w < -max_mag || w > max_mag {
-            bail!("weight {w} out of signed {c}-bit range");
+            return Err(SdmmError::WeightOutOfRange { weight: w, c_bits: c });
         }
     }
     let slots: Vec<Slot> = weights.iter().map(|&w| Slot::from_signed(w, c)).collect();
@@ -162,14 +162,16 @@ pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
 /// single-input layouts (the paper's Eq. 8 form).
 pub fn pack_exact(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
     if layout.ki() != 1 {
-        bail!("exact mode requires a single-input layout");
+        return Err(SdmmError::UnsupportedBackend(
+            "exact mode requires a single-input layout".into(),
+        ));
     }
     if weights.len() != layout.kw() {
-        bail!(
-            "tuple arity {} != layout weight slots {}",
-            weights.len(),
-            layout.kw()
-        );
+        return Err(SdmmError::ArityMismatch {
+            what: "tuple weights",
+            got: weights.len(),
+            expected: layout.kw(),
+        });
     }
     let slots: Vec<Slot> = weights.iter().map(|&w| Slot::from_signed_exact(w)).collect();
     // Variable-width placement: slot j occupies product bits
@@ -185,10 +187,14 @@ pub fn pack_exact(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
     }
     let a_need = a_offsets.last().unwrap() + slots.last().unwrap().mw_width;
     if a_need > A_PORT_BITS {
-        bail!("tuple does not fit: A word needs {a_need} > {A_PORT_BITS} bits (fine-tuning required)");
+        return Err(SdmmError::TupleOverflow(format!(
+            "A word needs {a_need} > {A_PORT_BITS} bits (fine-tuning required)"
+        )));
     }
     if off > 48 {
-        bail!("tuple does not fit: product needs {off} > 48 bits");
+        return Err(SdmmError::TupleOverflow(format!(
+            "product needs {off} > 48 bits"
+        )));
     }
     let mut a_word = 0u64;
     for (j, slot) in slots.iter().enumerate() {

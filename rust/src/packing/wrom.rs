@@ -20,6 +20,7 @@
 
 use super::layout::Layout;
 use super::tuple::{pack_approx, PackedTuple, Slot};
+use crate::error::{Result, SdmmError};
 use std::collections::HashMap;
 
 /// The paper's multiplications-per-DSP (= weights per off-chip index
@@ -145,17 +146,18 @@ impl Wrom {
 
     /// Intern a signed weight group (len = group_size): returns
     /// (rom_address, sign_bits) plus the packed per-A-word tuples.
-    pub fn intern(&mut self, weights: &[i64]) -> anyhow::Result<(u32, u32, Vec<PackedTuple>)> {
-        anyhow::ensure!(
-            weights.len() == self.group_size,
-            "group arity {} != {}",
-            weights.len(),
-            self.group_size
-        );
+    pub fn intern(&mut self, weights: &[i64]) -> Result<(u32, u32, Vec<PackedTuple>)> {
+        if weights.len() != self.group_size {
+            return Err(SdmmError::ArityMismatch {
+                what: "WROM group weights",
+                got: weights.len(),
+                expected: self.group_size,
+            });
+        }
         let packed: Vec<PackedTuple> = weights
             .chunks(self.layout.kw())
             .map(|chunk| pack_approx(&self.layout, chunk))
-            .collect::<anyhow::Result<_>>()?;
+            .collect::<Result<_>>()?;
         let slots: Vec<Slot> = packed.iter().flat_map(|t| t.slots.iter().copied()).collect();
         let key = group_key(&slots);
         let addr = match self.index.get(&key) {
@@ -188,7 +190,7 @@ impl Wrom {
     /// Compress a full weight stream into the index stream, building the
     /// ROM as a side effect. The stream is chunked into groups (tail
     /// zero-padded), matching the weight-stationary loading order.
-    pub fn compress_stream(&mut self, weights: &[i64]) -> anyhow::Result<WromIndexStream> {
+    pub fn compress_stream(&mut self, weights: &[i64]) -> Result<WromIndexStream> {
         let g = self.group_size;
         let mut tuples = Vec::with_capacity(weights.len().div_ceil(g));
         for chunk in weights.chunks(g) {

@@ -101,7 +101,7 @@ pub fn table2(artifacts_dir: &str) -> String {
 }
 
 /// The PJRT end-to-end Table 2 rows: (w_bits, err_quant, err_approx).
-pub fn table2_e2e(artifacts_dir: &str) -> anyhow::Result<Vec<(u32, f64, f64)>> {
+pub fn table2_e2e(artifacts_dir: &str) -> crate::error::Result<Vec<(u32, f64, f64)>> {
     use crate::runtime::{exec, Artifacts, CnnModel, WeightMode};
     let a = Artifacts::load(artifacts_dir)?;
     let client = exec::Client::cpu()?;

@@ -2,7 +2,8 @@
 //! format written by python/compile/aot.py::BinWriter).
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result, SdmmError};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -41,7 +42,7 @@ impl Artifacts {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let manifest = Json::parse(&text).context("manifest parse")?;
         let weights_name = manifest
             .get("weights")
             .and_then(|j| j.as_str())
@@ -52,13 +53,13 @@ impl Artifacts {
         for t in manifest
             .get("tensors")
             .and_then(|j| j.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing tensors[]"))?
+            .ok_or_else(|| SdmmError::msg("manifest missing tensors[]"))?
         {
             let entry = TensorEntry {
                 name: t
                     .get("name")
                     .and_then(|j| j.as_str())
-                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .ok_or_else(|| SdmmError::msg("tensor missing name"))?
                     .to_string(),
                 dtype: t
                     .get("dtype")
@@ -86,7 +87,7 @@ impl Artifacts {
     pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
         self.tensors
             .get(name)
-            .ok_or_else(|| anyhow!("tensor {name:?} not in manifest"))
+            .ok_or_else(|| SdmmError::msg(format!("tensor {name:?} not in manifest")))
     }
 
     /// Read an f32 tensor by name.
@@ -124,7 +125,7 @@ impl Artifacts {
             .get("hlo")
             .and_then(|h| h.get(key))
             .and_then(|j| j.as_str())
-            .ok_or_else(|| anyhow!("manifest hlo.{key} missing"))?;
+            .ok_or_else(|| SdmmError::msg(format!("manifest hlo.{key} missing")))?;
         Ok(self.dir.join(name))
     }
 
@@ -132,7 +133,7 @@ impl Artifacts {
         self.manifest
             .get(key)
             .and_then(|j| j.as_usize())
-            .ok_or_else(|| anyhow!("manifest {key} missing"))
+            .ok_or_else(|| SdmmError::msg(format!("manifest {key} missing")))
     }
 
     pub fn meta_f64(&self, key: &str) -> Option<f64> {

@@ -13,7 +13,7 @@
 //! artifacts are absent, so the default build keeps the full test
 //! surface minus the PJRT integration paths.
 
-use anyhow::Result;
+use crate::error::Result;
 use std::path::Path;
 
 #[cfg(feature = "pjrt")]
@@ -25,7 +25,7 @@ pub use stub::*;
 #[cfg(feature = "pjrt")]
 mod real {
     use super::*;
-    use anyhow::Context;
+    use crate::error::Context;
     use std::sync::Arc;
 
     /// Staged host tensor handed to the executable.
@@ -75,54 +75,56 @@ mod real {
         /// Execute with pre-built literals; returns the elements of the
         /// result tuple (jax lowering uses return_tuple=True).
         pub fn execute(&self, args: &[Literal]) -> Result<Vec<Literal>> {
-            let result = self.exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
-            Ok(result.to_tuple()?)
+            let result = self.exe.execute::<Literal>(args).context("pjrt execute")?[0][0]
+                .to_literal_sync()
+                .context("pjrt literal sync")?;
+            result.to_tuple().context("pjrt result tuple")
         }
 
         /// Execute and read the single f32 output.
         pub fn execute_f32(&self, args: &[Literal]) -> Result<Vec<f32>> {
             let mut outs = self.execute(args)?;
-            anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
-            Ok(outs.pop().unwrap().to_vec::<f32>()?)
+            crate::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+            outs.pop().unwrap().to_vec::<f32>().context("pjrt f32 readback")
         }
 
         /// Execute and read the single i32 output.
         pub fn execute_i32(&self, args: &[Literal]) -> Result<Vec<i32>> {
             let mut outs = self.execute(args)?;
-            anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
-            Ok(outs.pop().unwrap().to_vec::<i32>()?)
+            crate::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+            outs.pop().unwrap().to_vec::<i32>().context("pjrt i32 readback")
         }
     }
 
     /// Build an f32 literal of the given shape.
     pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        anyhow::ensure!(
+        crate::ensure!(
             data.len() == shape.iter().product::<usize>(),
             "literal shape mismatch: {} vs {:?}",
             data.len(),
             shape
         );
-        Ok(Literal::vec1(data).reshape(&dims)?)
+        Literal::vec1(data).reshape(&dims).context("pjrt literal reshape")
     }
 
     /// Build an i32 literal of the given shape.
     pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        anyhow::ensure!(
+        crate::ensure!(
             data.len() == shape.iter().product::<usize>(),
             "literal shape mismatch: {} vs {:?}",
             data.len(),
             shape
         );
-        Ok(Literal::vec1(data).reshape(&dims)?)
+        Literal::vec1(data).reshape(&dims).context("pjrt literal reshape")
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
 mod stub {
     use super::*;
-    use anyhow::bail;
+    use crate::bail;
 
     const MSG: &str =
         "built without the `pjrt` feature — enable it (and the xla bindings \
@@ -138,7 +140,7 @@ mod stub {
 
     impl Client {
         pub fn cpu() -> Result<Client> {
-            bail!(MSG);
+            bail!("{}", MSG);
         }
 
         pub fn platform(&self) -> String {
@@ -153,27 +155,27 @@ mod stub {
 
     impl Executable {
         pub fn load(_client: &Client, _path: impl AsRef<Path>) -> Result<Executable> {
-            bail!(MSG);
+            bail!("{}", MSG);
         }
 
         pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Literal>> {
-            bail!(MSG);
+            bail!("{}", MSG);
         }
 
         pub fn execute_f32(&self, _args: &[Literal]) -> Result<Vec<f32>> {
-            bail!(MSG);
+            bail!("{}", MSG);
         }
 
         pub fn execute_i32(&self, _args: &[Literal]) -> Result<Vec<i32>> {
-            bail!(MSG);
+            bail!("{}", MSG);
         }
     }
 
     pub fn literal_f32(_data: &[f32], _shape: &[usize]) -> Result<Literal> {
-        bail!(MSG);
+        bail!("{}", MSG);
     }
 
     pub fn literal_i32(_data: &[i32], _shape: &[usize]) -> Result<Literal> {
-        bail!(MSG);
+        bail!("{}", MSG);
     }
 }

@@ -6,7 +6,7 @@ use super::artifacts::Artifacts;
 use super::exec::{literal_f32, Client, Executable, Literal};
 use crate::cnn::infer::approximate_weights;
 use crate::cnn::quant::{dequantize, quantize_symmetric};
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// Which weights the executable is fed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -20,8 +20,8 @@ use super::pe::PeArch;
 use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
 use crate::dsp::{MacUnit, SdmmEngine};
+use crate::error::{Result, SdmmError};
 use crate::packing::{Layout, PackedPlane, Wrom};
-use anyhow::{bail, Result};
 
 /// Array configuration.
 #[derive(Clone, Debug)]
@@ -144,11 +144,6 @@ impl SystolicArray {
         self.layout.as_ref().map(|l| l.ki()).unwrap_or(1)
     }
 
-    /// Weights per DSP A-word load (kw for MP else 1).
-    fn kw(&self) -> usize {
-        self.layout.as_ref().map(|l| l.kw()).unwrap_or(1)
-    }
-
     /// Analytic cycle/traffic estimate for a conv layer (no functional
     /// execution — used for the zoo-scale reports).
     pub fn estimate_layer(&self, layer: &ConvLayer) -> LayerRun {
@@ -200,7 +195,9 @@ impl SystolicArray {
     /// share (MultiPack only).
     pub fn pack_plane(&self, layer: &ConvLayer, weights: &[i64]) -> Result<PackedPlane> {
         let Some(layout) = self.layout.as_ref() else {
-            bail!("weight planes exist only for the MultiPack architecture");
+            return Err(SdmmError::UnsupportedBackend(
+                "weight planes exist only for the MultiPack architecture".into(),
+            ));
         };
         PackedPlane::build(layout, self.g(), weights, layer)
     }
@@ -220,7 +217,7 @@ impl SystolicArray {
         let icg = layer.in_ch / layer.groups;
         let ocg = layer.out_ch / layer.groups;
         let kk = layer.kernel;
-        let mut out = Tensor3::zeros(layer.out_ch, o_hw, o_hw);
+        let out;
 
         let mut engine = SdmmEngine::new();
         let mut mac = MacUnit::new();
@@ -232,76 +229,19 @@ impl SystolicArray {
                 // Weight-stationary: the packed tuples are built ONCE
                 // per layer through the shared PackedPlane cache and
                 // reused for every output pixel — exactly like the
-                // hardware (EXPERIMENTS.md §Perf).
+                // hardware (EXPERIMENTS.md §Perf). Scalar-only plane:
+                // the batch-engine forms would be packed and thrown
+                // away (and would pad the scalar side of the §Perf
+                // comparison).
                 let layout = self.layout.as_ref().unwrap();
-                let kw = self.kw();
-                let ki = layout.ki();
-                // Scalar-only plane: the batch-engine forms would be
-                // packed and thrown away (and would pad the scalar
-                // side of the §Perf comparison).
                 let plane = PackedPlane::build_scalar(layout, g, weights, layer)?;
-                for (ti, tile) in plane.tiles.iter().enumerate() {
-                    for oy in 0..o_hw {
-                        for ox in 0..o_hw {
-                            let mut acc = [0i64; 8];
-                            for ic in 0..icg {
-                                for ky in 0..kk {
-                                    for kx in 0..kk {
-                                        let iy =
-                                            (oy * layer.stride + ky) as i64 - layer.pad as i64;
-                                        let ix =
-                                            (ox * layer.stride + kx) as i64 - layer.pad as i64;
-                                        // padding taps stream a zero
-                                        // through the datapath (the
-                                        // hardware does multiply them),
-                                        // so they count as real
-                                        // multiplications
-                                        let x = if iy < 0
-                                            || iy >= input.h as i64
-                                            || ix < 0
-                                            || ix >= input.w as i64
-                                        {
-                                            0
-                                        } else {
-                                            input.at(
-                                                tile.grp * icg + ic,
-                                                iy as usize,
-                                                ix as usize,
-                                            )
-                                        };
-                                        let tap = (ic * kk + ky) * kk + kx;
-                                        let tuples = plane.tap_tuples(ti, tap);
-                                        // replicate x across the ki
-                                        // input lanes (same pixel)
-                                        let mut inputs = [0i64; 4];
-                                        inputs[..ki].fill(x);
-                                        let mut prods = [0i64; 8];
-                                        let mut j = 0;
-                                        for tuple in tuples {
-                                            let take = kw.min(tile.gg - j);
-                                            engine.execute_into(
-                                                tuple,
-                                                &inputs[..ki],
-                                                &mut prods[..kw * ki],
-                                            );
-                                            dsp_ops += 1;
-                                            for t in 0..take {
-                                                acc[j + t] += prods[t * ki];
-                                                mults += 1;
-                                            }
-                                            j += take;
-                                        }
-                                    }
-                                }
-                            }
-                            for (j, &a) in acc.iter().take(tile.gg).enumerate() {
-                                out.set(tile.oc0 + j, oy, ox, a);
-                            }
-                        }
-                    }
-                }
+                let (o, ops, m) = plane.execute_conv_scalar(input, layer, &mut engine);
+                out = o;
+                dsp_ops = ops;
+                mults = m;
             }
             PeArch::OneMac | PeArch::TwoMult => {
+                let mut o = Tensor3::zeros(layer.out_ch, o_hw, o_hw);
                 for grp in 0..layer.groups {
                     let mut oc0 = 0;
                     while oc0 < ocg {
@@ -344,13 +284,14 @@ impl SystolicArray {
                                     }
                                 }
                                 for (j, &a) in acc.iter().take(gg).enumerate() {
-                                    out.set(grp * ocg + oc0 + j, oy, ox, a);
+                                    o.set(grp * ocg + oc0 + j, oy, ox, a);
                                 }
                             }
                         }
                         oc0 += gg;
                     }
                 }
+                out = o;
             }
         }
         est.dsp_ops = dsp_ops;
@@ -386,7 +327,9 @@ impl SystolicArray {
         input: &Tensor3,
     ) -> Result<LayerRun> {
         if self.cfg.arch != PeArch::MultiPack {
-            bail!("the batch path models the MultiPack architecture only");
+            return Err(SdmmError::UnsupportedBackend(
+                "the batch path models the MultiPack architecture only".into(),
+            ));
         }
         let mut est = self.estimate_layer(layer);
         let (out, dsp_ops, mults) = plane.execute_conv(input, layer);

@@ -1,8 +1,8 @@
 //! Processing-element architectures (paper Fig. 5 and Fig. 8).
 
 use crate::dsp::{MacUnit, SdmmEngine};
+use crate::error::Result;
 use crate::packing::{pack_approx, Layout};
-use anyhow::Result;
 
 /// The three PE architectures the paper compares.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -7,10 +7,12 @@
 //! the failing predicate on "smaller" values produced by the caller's
 //! generator when given a shrink level.
 
+use crate::error::SdmmError;
 use crate::util::rng::Rng;
 
 /// Run `cases` randomized property cases. `gen` produces an input from
-/// the RNG; `prop` returns `Err(description)` on violation.
+/// the RNG; `prop` returns an `Err` (any
+/// `SdmmError`; `"text".into()` still works) on violation.
 ///
 /// Panics (test failure) with a reproducible report on first violation.
 pub fn check<T: std::fmt::Debug>(
@@ -18,7 +20,7 @@ pub fn check<T: std::fmt::Debug>(
     cases: u32,
     seed: u64,
     mut gen: impl FnMut(&mut Rng) -> T,
-    mut prop: impl FnMut(&T) -> Result<(), String>,
+    mut prop: impl FnMut(&T) -> Result<(), SdmmError>,
 ) {
     let mut rng = Rng::new(seed);
     for case in 0..cases {
@@ -35,7 +37,7 @@ pub fn check<T: std::fmt::Debug>(
 pub fn check_exhaustive<T: std::fmt::Debug, I: IntoIterator<Item = T>>(
     name: &str,
     inputs: I,
-    mut prop: impl FnMut(&T) -> Result<(), String>,
+    mut prop: impl FnMut(&T) -> Result<(), SdmmError>,
 ) {
     for (i, input) in inputs.into_iter().enumerate() {
         if let Err(msg) = prop(&input) {

@@ -4,8 +4,15 @@
 //! the Python AOT path and read by the Rust runtime, and for report
 //! output. Supports the full JSON data model; numbers are f64.
 
+use crate::error::{Result, SdmmError};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Build a typed parse error (every parser failure is
+/// [`SdmmError::Parse`]).
+fn perr(m: impl Into<String>) -> SdmmError {
+    SdmmError::Parse(m.into())
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -51,7 +58,7 @@ impl Json {
     }
 
     /// Parse a JSON document.
-    pub fn parse(s: &str) -> Result<Json, String> {
+    pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser {
             bytes: s.as_bytes(),
             pos: 0,
@@ -60,7 +67,7 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            return Err(format!("trailing data at byte {}", p.pos));
+            return Err(perr(format!("trailing data at byte {}", p.pos)));
         }
         Ok(v)
     }
@@ -144,30 +151,30 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), String> {
+    fn expect(&mut self, b: u8) -> Result<()> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
         } else {
-            Err(format!(
+            Err(perr(format!(
                 "expected '{}' at byte {} (found {:?})",
                 b as char,
                 self.pos,
                 self.peek().map(|c| c as char)
-            ))
+            )))
         }
     }
 
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             Ok(v)
         } else {
-            Err(format!("bad literal at byte {}", self.pos))
+            Err(perr(format!("bad literal at byte {}", self.pos)))
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek() {
             Some(b'n') => self.literal("null", Json::Null),
@@ -177,16 +184,16 @@ impl<'a> Parser<'a> {
             Some(b'[') => self.array(),
             Some(b'{') => self.object(),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {:?} at byte {}", other, self.pos)),
+            other => Err(perr(format!("unexpected {:?} at byte {}", other, self.pos))),
         }
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err("unterminated string".into()),
+                None => return Err(perr("unterminated string")),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(s);
@@ -206,23 +213,23 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .bytes
                                 .get(self.pos + 1..self.pos + 5)
-                                .ok_or("bad \\u escape")?;
+                                .ok_or_else(|| perr("bad \\u escape"))?;
                             let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                std::str::from_utf8(hex).map_err(|e| perr(e.to_string()))?,
                                 16,
                             )
-                            .map_err(|e| e.to_string())?;
+                            .map_err(|e| perr(e.to_string()))?;
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.pos += 4;
                         }
-                        other => return Err(format!("bad escape {other:?}")),
+                        other => return Err(perr(format!("bad escape {other:?}"))),
                     }
                     self.pos += 1;
                 }
                 Some(_) => {
                     // advance one UTF-8 char
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
-                        .map_err(|e| e.to_string())?;
+                        .map_err(|e| perr(e.to_string()))?;
                     let c = rest.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();
@@ -231,7 +238,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -240,13 +247,13 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let txt = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        let txt = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| perr(e.to_string()))?;
         txt.parse::<f64>()
             .map(Json::Num)
-            .map_err(|e| format!("bad number {txt:?}: {e}"))
+            .map_err(|e| perr(format!("bad number {txt:?}: {e}")))
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -265,12 +272,12 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(items));
                 }
-                other => return Err(format!("expected ',' or ']' found {other:?}")),
+                other => return Err(perr(format!("expected ',' or ']' found {other:?}"))),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -294,7 +301,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(map));
                 }
-                other => return Err(format!("expected ',' or '}}' found {other:?}")),
+                other => return Err(perr(format!("expected ',' or '}}' found {other:?}"))),
             }
         }
     }

@@ -1,0 +1,287 @@
+//! Facade tests: the four `Executor` backends are interchangeable and
+//! bit-exact, and every failure path is a typed `SdmmError` — never a
+//! panic.
+//!
+//! The equivalence property runs randomized 8/6/4-bit layers through
+//! `ScalarExec`, `BatchExec`, `SystolicExec` and `ServingExec` and
+//! requires bit-identical outputs *and* op accounting, plus agreement
+//! with the golden integer convolution over the approximated weights.
+
+use sdmm::api::{
+    ApproxPolicy, BatchExec, CompiledModel, Compiler, Executor, ScalarExec, ServingExec,
+    SystolicExec,
+};
+use sdmm::cnn::infer::{approximate_weights, conv2d_int, relu, requantize, Tensor3};
+use sdmm::cnn::zoo::ConvLayer;
+use sdmm::coordinator::ServingConfig;
+use sdmm::dsp::BatchLanes;
+use sdmm::error::SdmmError;
+use sdmm::packing::{pack_approx, Layout};
+use sdmm::util::check::check;
+use sdmm::util::rng::Rng;
+
+/// Random small conv layer + in-range weights + input at width `v`.
+fn random_case(r: &mut Rng, v: u32) -> (ConvLayer, Vec<i64>, Tensor3) {
+    let in_hw = 4 + r.below(4) as usize; // 4..8
+    let in_ch = 1 + r.below(4) as usize; // 1..5
+    let out_ch = 1 + r.below(7) as usize; // 1..8
+    let kernel = if r.bool(0.5) { 3 } else { 1 };
+    let pad = if kernel == 3 && r.bool(0.5) { 1 } else { 0 };
+    let layer = ConvLayer::new("p", in_hw, in_ch, out_ch, kernel, 1, pad, 1);
+    let lim = 1i64 << (v - 1);
+    let weights: Vec<i64> = (0..layer.params()).map(|_| r.range_i64(-lim, lim - 1)).collect();
+    let mut input = Tensor3::zeros(in_ch, in_hw, in_hw);
+    input.data = (0..input.data.len()).map(|_| r.range_i64(-lim, lim - 1)).collect();
+    (layer, weights, input)
+}
+
+/// Golden reference: integer conv over the approximated weights, then
+/// the facade's ReLU + requantize glue.
+fn golden(layer: &ConvLayer, weights: &[i64], input: &Tensor3, v: u32) -> Tensor3 {
+    let mut y = conv2d_int(input, &approximate_weights(weights, v), layer);
+    relu(&mut y);
+    requantize(&y, v).0
+}
+
+fn compile(layer: &ConvLayer, weights: &[i64], v: u32) -> CompiledModel {
+    Compiler::for_bits(v)
+        .unwrap()
+        .approximate(ApproxPolicy::nearest())
+        .pack_model("prop", &[layer.clone()], &[weights.to_vec()])
+        .unwrap()
+}
+
+#[test]
+fn prop_all_executors_bit_identical() {
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 2,
+        queue_capacity: 16,
+    })
+    .unwrap();
+    for v in [8u32, 6, 4] {
+        let mut scalar = ScalarExec::new();
+        let mut batch = BatchExec::new();
+        let mut systolic = SystolicExec::new();
+        check(
+            "executors-bit-identical",
+            10,
+            700 + v as u64,
+            |r| random_case(r, v),
+            |(layer, weights, input)| {
+                let model = compile(layer, weights, v);
+                let a = scalar.run(&model, input)?;
+                let b = batch.run(&model, input)?;
+                let c = systolic.run(&model, input)?;
+                let d = serving.run(&model, input)?;
+                let want = golden(layer, weights, input, v);
+                for (name, out) in [("scalar", &a), ("batch", &b), ("systolic", &c), ("serving", &d)]
+                {
+                    if out.output != want {
+                        return Err(format!("{name} output != golden conv (v={v})").into());
+                    }
+                }
+                if (a.dsp_ops, a.mults) != (b.dsp_ops, b.mults)
+                    || (b.dsp_ops, b.mults) != (c.dsp_ops, c.mults)
+                    || (c.dsp_ops, c.mults) != (d.dsp_ops, d.mults)
+                {
+                    return Err(format!(
+                        "op accounting diverged (v={v}): scalar ({}, {}), batch ({}, {}), \
+                         systolic ({}, {}), serving ({}, {})",
+                        a.dsp_ops, a.mults, b.dsp_ops, b.mults, c.dsp_ops, c.mults, d.dsp_ops,
+                        d.mults
+                    )
+                    .into());
+                }
+                if a.mults != layer.macs() {
+                    return Err(format!("mults {} != layer macs {}", a.mults, layer.macs()).into());
+                }
+                Ok(())
+            },
+        );
+    }
+    let snap = serving.shutdown();
+    assert!(snap.total_jobs() > 0);
+    assert_eq!(snap.total_failed(), 0);
+}
+
+#[test]
+fn unsupported_bit_width_is_typed() {
+    for v in [0u32, 5, 7, 12] {
+        assert!(matches!(
+            Compiler::for_bits(v),
+            Err(SdmmError::UnsupportedBitWidth { v: got }) if got == v
+        ));
+        // The same error propagates through layout lookup and serving
+        // admission instead of aborting a worker.
+        assert!(matches!(
+            Layout::for_bits(v),
+            Err(SdmmError::UnsupportedBitWidth { .. })
+        ));
+    }
+}
+
+#[test]
+fn out_of_range_weight_is_typed() {
+    let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+    assert!(matches!(
+        c.pack_tuple(&[129, 0, 0]),
+        Err(SdmmError::WeightOutOfRange { weight: 129, c_bits: 8 })
+    ));
+    let layout = Layout::for_bits(8).unwrap();
+    assert!(matches!(
+        pack_approx(&layout, &[0, -300, 0]),
+        Err(SdmmError::WeightOutOfRange { weight: -300, c_bits: 8 })
+    ));
+    // wrong arity is typed too (used to be the panic path)
+    assert!(matches!(
+        pack_approx(&layout, &[1, 2]),
+        Err(SdmmError::ArityMismatch { got: 2, expected: 3, .. })
+    ));
+}
+
+#[test]
+fn batch_lane_arity_is_typed_not_a_panic() {
+    let layout = Layout::for_bits(4).unwrap(); // ki = 3
+    assert!(matches!(
+        BatchLanes::pack(&layout, &[1, 2, 3, 4]),
+        Err(SdmmError::NotAMultiple { len: 4, multiple_of: 3, .. })
+    ));
+    assert!(BatchLanes::pack(&layout, &[1, 2, 3, 4, 5, 6]).is_ok());
+}
+
+#[test]
+fn pack_model_keeps_typed_source_behind_context() {
+    let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+    let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+    let mut w = vec![0i64; layer.params() as usize];
+    w[7] = 300;
+    let err = c.pack_model("m", &[layer], &[w]).unwrap_err();
+    // the message says where, the root stays dispatchable
+    assert!(err.to_string().contains("packing model m layer 0"));
+    assert!(matches!(
+        err.root(),
+        SdmmError::WeightOutOfRange { weight: 300, c_bits: 8 }
+    ));
+}
+
+#[test]
+fn registry_rejects_hand_assembled_scalar_only_planes() {
+    use sdmm::coordinator::ModelRegistry;
+    use sdmm::packing::PackedPlane;
+    let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+    let w = vec![1i64; layer.params() as usize];
+    let layout = Layout::for_bits(8).unwrap();
+    let plane = PackedPlane::build_scalar(&layout, 3, &w, &layer).unwrap();
+    let model = CompiledModel {
+        name: "hand".into(),
+        v_bits: 8,
+        group: 3,
+        layers: vec![sdmm::api::CompiledLayer {
+            layer,
+            plane: std::sync::Arc::new(plane),
+            stats: sdmm::manip::approximation_error_table(&[], 8),
+        }],
+    };
+    // a scalar-only plane would panic a shard worker mid-conv; the
+    // registry must refuse it at the door instead
+    let reg = ModelRegistry::new();
+    assert!(matches!(
+        reg.register_compiled(&model),
+        Err(SdmmError::InvalidModel(_))
+    ));
+}
+
+#[test]
+fn shape_and_range_mismatches_are_typed_on_every_executor() {
+    let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+    let weights: Vec<i64> = vec![1; layer.params() as usize];
+    let model = compile(&layer, &weights, 8);
+
+    let wrong_shape = Tensor3::zeros(3, 6, 6);
+    let mut hot = Tensor3::zeros(2, 6, 6);
+    hot.data[0] = 4096; // outside signed 8-bit
+
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 1,
+        queue_capacity: 4,
+    })
+    .unwrap();
+    let mut scalar = ScalarExec::new();
+    let mut batch = BatchExec::new();
+    let mut systolic = SystolicExec::new();
+    let execs: [&mut dyn Executor; 4] = [&mut scalar, &mut batch, &mut systolic, &mut serving];
+    for e in execs {
+        assert!(
+            matches!(
+                e.run(&model, &wrong_shape),
+                Err(SdmmError::ShapeMismatch {
+                    expected: (2, 6, 6),
+                    got: (3, 6, 6)
+                })
+            ),
+            "{} shape mismatch not typed",
+            e.name()
+        );
+        assert!(
+            matches!(
+                e.run(&model, &hot),
+                Err(SdmmError::InputOutOfRange { v_bits: 8 })
+            ),
+            "{} range violation not typed",
+            e.name()
+        );
+    }
+}
+
+#[test]
+fn registry_admission_propagates_layout_errors() {
+    use sdmm::coordinator::{ModelRegistry, ModelSpec};
+    let reg = ModelRegistry::new();
+    let mut spec = ModelSpec::random(
+        "odd",
+        8,
+        vec![ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1)],
+        9,
+    );
+    spec.v_bits = 5; // no layout for 5-bit operands
+    assert!(matches!(
+        reg.register(spec),
+        Err(SdmmError::UnsupportedBitWidth { v: 5 })
+    ));
+    assert!(reg.is_empty());
+}
+
+#[test]
+fn exact_policy_packs_tuples_but_not_planes() {
+    let exact = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::exact());
+    assert_eq!(exact.pack_tuple(&[7, 64, -96]).unwrap().values(), vec![7, 64, -96]);
+    let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+    let w = vec![1i64; layer.params() as usize];
+    assert!(matches!(
+        exact.pack(&layer, &w),
+        Err(SdmmError::UnsupportedBackend(_))
+    ));
+}
+
+#[test]
+fn serving_exec_reuses_registered_planes() {
+    let layer = ConvLayer::new("c1", 6, 2, 3, 3, 1, 1, 1);
+    let mut rng = Rng::new(77);
+    let weights: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+    let model = compile(&layer, &weights, 8);
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 1,
+        queue_capacity: 4,
+    })
+    .unwrap();
+    let input = Tensor3::zeros(2, 6, 6);
+    serving.run(&model, &input).unwrap();
+    let registered = serving.registry().get(&model.key()).unwrap();
+    // the registry shares the compiled plane, it does not repack
+    assert!(std::sync::Arc::ptr_eq(registered.plane(0), &model.layers[0].plane));
+    serving.run(&model, &input).unwrap();
+    let again = serving.registry().get(&model.key()).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&registered, &again));
+    let snap = serving.shutdown();
+    assert_eq!(snap.total_jobs(), 2);
+}

@@ -81,7 +81,7 @@ impl BatchRunner for SumRunner {
     fn out_len(&self) -> usize {
         1
     }
-    fn run(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+    fn run(&mut self, x: &[f32]) -> sdmm::error::Result<Vec<f32>> {
         Ok(x.chunks(8).map(|c| c.iter().sum()).collect())
     }
 }

@@ -10,6 +10,7 @@
 //! top-lane input).
 
 use sdmm::dsp::{scalar_raw_reference, BatchEngine, BatchLanes, PreparedTuple, SdmmEngine};
+use sdmm::error::SdmmError;
 use sdmm::packing::{pack_approx, Layout};
 use sdmm::util::check::check;
 
@@ -19,17 +20,17 @@ fn raw_equal(
     inputs: &[i64],
     scalar: &mut SdmmEngine,
     batch: &mut BatchEngine,
-) -> Result<(), String> {
-    let t = pack_approx(layout, ws).map_err(|e| e.to_string())?;
+) -> Result<(), SdmmError> {
+    let t = pack_approx(layout, ws)?;
     let pt = PreparedTuple::prepare(&t);
-    let lanes = BatchLanes::pack(layout, inputs);
+    let lanes = BatchLanes::pack(layout, inputs)?;
     let mut raw = vec![0u64; lanes.groups()];
     batch.execute_raw_batch(&pt, &lanes, &mut raw);
     let want = scalar_raw_reference(scalar, &t, inputs);
     if raw == want {
         Ok(())
     } else {
-        Err(format!("raw P words diverge: {raw:?} != {want:?}"))
+        Err(format!("raw P words diverge: {raw:?} != {want:?}").into())
     }
 }
 
@@ -105,9 +106,9 @@ fn prop_batch_products_equal_scalar_execute() {
                 (ws, is)
             },
             |(ws, is)| {
-                let t = pack_approx(&layout, ws).map_err(|e| e.to_string())?;
+                let t = pack_approx(&layout, ws)?;
                 let pt = PreparedTuple::prepare(&t);
-                let lanes = BatchLanes::pack(&layout, is);
+                let lanes = BatchLanes::pack(&layout, is)?;
                 let k = kw * ki;
                 let mut got = vec![0i64; lanes.groups() * k];
                 batch.execute_batch_into(&pt, &lanes, &mut scratch, &mut got);
@@ -118,13 +119,14 @@ fn prop_batch_products_equal_scalar_execute() {
                         return Err(format!(
                             "group {g}: {:?} != {want:?}",
                             &got[g * k..(g + 1) * k]
-                        ));
+                        )
+                        .into());
                     }
                     // and the oracle products
                     let oracle: Vec<i64> =
                         t.expected_products(group).into_iter().flatten().collect();
                     if want != oracle {
-                        return Err(format!("scalar engine vs oracle: {want:?} != {oracle:?}"));
+                        return Err(format!("scalar engine vs oracle: {want:?} != {oracle:?}").into());
                     }
                 }
                 Ok(())
@@ -160,9 +162,9 @@ fn prop_a_sign_correction_edge_bit_exact() {
             (ws, is)
         },
         |(ws, is)| {
-            let t = pack_approx(&layout, ws).map_err(|e| e.to_string())?;
+            let t = pack_approx(&layout, ws)?;
             if !t.a_sign_correction() {
-                return Err(format!("edge not exercised for {ws:?}"));
+                return Err(format!("edge not exercised for {ws:?}").into());
             }
             raw_equal(&layout, ws, is, &mut scalar, &mut batch)
         },
@@ -197,7 +199,7 @@ fn prop_b_sign_correction_edge_bit_exact() {
         |(ws, is)| {
             for group in is.chunks(3) {
                 if (layout.b_word(group) >> 17) & 1 != 1 {
-                    return Err(format!("edge not exercised for {group:?}"));
+                    return Err(format!("edge not exercised for {group:?}").into());
                 }
             }
             raw_equal(&layout, ws, is, &mut scalar, &mut batch)
@@ -225,7 +227,7 @@ fn prop_lane0_accumulation_equals_weight_times_input() {
                 (ws, xs)
             },
             |(ws, xs)| {
-                let t = pack_approx(&layout, ws).map_err(|e| e.to_string())?;
+                let t = pack_approx(&layout, ws)?;
                 let vals = t.values();
                 let pt = PreparedTuple::prepare(&t);
                 let lanes = BatchLanes::pack_lane0(&layout, xs);
@@ -238,7 +240,8 @@ fn prop_lane0_accumulation_equals_weight_times_input() {
                             return Err(format!(
                                 "slot {j} input {x}: {got} != {}",
                                 wv * x
-                            ));
+                            )
+                            .into());
                         }
                     }
                 }

@@ -19,7 +19,7 @@ fn prop_manipulation_is_exact_decomposition() {
             if m.value() == w && (m.mw == 0 || m.mw % 2 == 1) {
                 Ok(())
             } else {
-                Err(format!("{m:?} != {w}"))
+                Err(format!("{m:?} != {w}").into())
             }
         },
     );
@@ -46,7 +46,7 @@ fn prop_approximation_minimizes_distance() {
             let mw = sdmm::manip::APPROX_MW[mw_idx as usize] as u64;
             let competitor = (1 + (mw << n)) << s;
             if competitor <= 128 && competitor.abs_diff(mag) < a.abs_error() {
-                Err(format!("{competitor} closer to {mag} than {}", a.approx))
+                Err(format!("{competitor} closer to {mag} than {}", a.approx).into())
             } else {
                 Ok(())
             }
@@ -73,13 +73,13 @@ fn prop_sdmm_identity_8bit() {
             )
         },
         |&(ws, i)| {
-            let t = pack_approx(&layout, &ws).map_err(|e| e.to_string())?;
+            let t = pack_approx(&layout, &ws)?;
             let got = t.unpack_all(engine.execute_raw(&t, &[i]), &[i]);
             let want = t.expected_products(&[i]);
             if got == want {
                 Ok(())
             } else {
-                Err(format!("{got:?} != {want:?}"))
+                Err(format!("{got:?} != {want:?}").into())
             }
         },
     );
@@ -103,13 +103,13 @@ fn prop_sdmm_identity_multi_input() {
                 (ws, is)
             },
             |(ws, is)| {
-                let t = pack_approx(&layout, ws).map_err(|e| e.to_string())?;
+                let t = pack_approx(&layout, ws)?;
                 let got = t.unpack_all(engine.execute_raw(&t, is), is);
                 let want = t.expected_products(is);
                 if got == want {
                     Ok(())
                 } else {
-                    Err(format!("{got:?} != {want:?}"))
+                    Err(format!("{got:?} != {want:?}").into())
                 }
             },
         );
@@ -139,7 +139,7 @@ fn prop_fine_tuning_produces_feasible_nearby_tuples() {
                 return Err("feasible tuple was altered".into());
             }
             if rep.distance > 0.2 {
-                return Err(format!("tuned too far: BC {}", rep.distance));
+                return Err(format!("tuned too far: BC {}", rep.distance).into());
             }
             for (o, t) in ws.iter().zip(&rep.tuned) {
                 if o.signum() != t.signum() && *o != 0 {
@@ -166,7 +166,7 @@ fn prop_bray_curtis_metric_properties() {
             let d = bray_curtis(u, v);
             let d2 = bray_curtis(v, u);
             if d < 0.0 || d > 1.0 {
-                return Err(format!("out of range: {d}"));
+                return Err(format!("out of range: {d}").into());
             }
             if (d - d2).abs() > 1e-12 {
                 return Err("not symmetric".into());
@@ -194,7 +194,7 @@ fn prop_approximation_monotone_under_scaling() {
             if a2.approx == 2 * a1.approx {
                 Ok(())
             } else {
-                Err(format!("{} vs {}", a1.approx, a2.approx))
+                Err(format!("{} vs {}", a1.approx, a2.approx).into())
             }
         },
     );
