@@ -20,7 +20,7 @@ fn main() {
 
     let (bytes, _, book) = huffman_encode(&ws);
     suite.bench("huffman decode 64k weights", n as f64, || {
-        huffman_decode(&bytes, ws.len(), &book).len()
+        huffman_decode(&bytes, ws.len(), &book).unwrap().len()
     });
 
     suite.bench("prune 64k weights (65%)", n as f64, || {

@@ -81,16 +81,90 @@ fn bench_native(suite: &mut BenchSuite) {
 
 fn main() {
     let serving_only = std::env::args().any(|a| a == "--serving");
+    let coldstart_only = std::env::args().any(|a| a == "--coldstart");
     let mut suite = BenchSuite::new("e2e");
     if serving_only {
         // Part 3 only (the dedicated CI smoke step); the plain
         // invocation keeps parts 1–2 so the two steps never overlap.
         bench_sharded_serving(&mut suite);
+    } else if coldstart_only {
+        // Part 4 only: artifact cold-load admission vs repack-from-weights.
+        bench_coldstart(&mut suite);
     } else {
         bench_native(&mut suite);
         serving(&mut suite);
     }
     suite.run();
+}
+
+/// Part 4 (`-- --coldstart`): registry admission cost, repacking from
+/// raw weights vs cold-loading a compiled artifact (WROM stream decode,
+/// no re-approximation). Asserts bit-exact serving from the artifact
+/// before timing; numbers recorded in EXPERIMENTS.md §Compression.
+fn bench_coldstart(suite: &mut BenchSuite) {
+    use sdmm::api::CompressionPolicy;
+
+    let layers = vec![
+        ConvLayer::new("k1", 16, 8, 24, 3, 1, 1, 1),
+        ConvLayer::new("k2", 16, 24, 24, 3, 1, 1, 1),
+        ConvLayer::new("k3", 16, 24, 24, 3, 1, 1, 1),
+    ];
+    let mut rng = Rng::new(91);
+    let weights: Vec<Vec<i64>> = layers
+        .iter()
+        .map(|l| {
+            (0..l.params())
+                .map(|_| rng.laplace(5.0).round().clamp(-128.0, 127.0) as i64)
+                .collect()
+        })
+        .collect();
+    let params: u64 = layers.iter().map(|l| l.params()).sum();
+    let compiled = Compiler::for_bits(8)
+        .unwrap()
+        .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() })
+        .compress(CompressionPolicy::Wrc)
+        .pack_model("cold", &layers, &weights)
+        .unwrap();
+    let dir = std::env::temp_dir().join(format!("sdmm-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let info = compiled.save(&dir).unwrap();
+    println!(
+        "-- coldstart: artifact {} bytes, {} WROM entries, stream {} --",
+        info.bytes,
+        info.wrom_entries,
+        info.rate.unwrap()
+    );
+
+    // Bit-exactness gate: the cold-loaded registry must serve
+    // identically to the in-process-compiled one.
+    {
+        let warm = ModelRegistry::new();
+        warm.register_compiled(&compiled).unwrap();
+        let cold = ModelRegistry::new();
+        let cold_model = cold.register_from_artifact(&dir).unwrap();
+        let sa = SystolicArray::new(SaConfig::paper_prototype(8, PeArch::MultiPack)).unwrap();
+        let mut input = Tensor3::zeros(8, 16, 16);
+        input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+        let a = warm.get(&compiled.key()).unwrap().run(&sa, &input).unwrap();
+        let b = cold_model.run(&sa, &input).unwrap();
+        assert_eq!(a.output, b.output, "cold-loaded artifact diverged");
+    }
+
+    let spec = ModelSpec {
+        name: "cold".into(),
+        v_bits: 8,
+        layers: layers.clone(),
+        weights: weights.clone(),
+    };
+    suite.bench("registry admission: repack from raw weights", params as f64, || {
+        ModelRegistry::new().register(spec.clone()).unwrap().cached_tuples()
+    });
+    suite.bench(
+        "registry admission: cold-load artifact (WROM stream decode)",
+        params as f64,
+        || ModelRegistry::new().register_from_artifact(&dir).unwrap().cached_tuples(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Median wall-clock of `n` runs of `f` (seconds).

@@ -1,11 +1,15 @@
 //! The typestate compile pipeline: `Compiler::for_bits` →
-//! [`approximate`](Compiler::approximate) → [`pack`](Compiler::pack).
+//! [`approximate`](Compiler::approximate) →
+//! [`compress`](Compiler::compress) → [`pack`](Compiler::pack).
 
 use super::model::{CompiledLayer, CompiledModel};
 use crate::cnn::zoo::ConvLayer;
+use crate::compress::{
+    prune_magnitude, CompressedPlane, CompressionPolicy, DEFAULT_PRUNE_SPARSITY,
+};
 use crate::error::{Result, SdmmError};
 use crate::manip::approximation_error_table;
-use crate::packing::{pack_approx, pack_exact, Layout, PackedPlane, PackedTuple};
+use crate::packing::{pack_approx, pack_exact, Layout, PackedPlane, PackedTuple, Wrom};
 use crate::sa::PeArch;
 use std::sync::Arc;
 
@@ -61,9 +65,13 @@ impl ApproxPolicy {
 pub struct NeedsPolicy(());
 
 /// Typestate marker: the compiler is fully configured and can pack.
+/// Carries the approximation policy plus the (optional) off-chip
+/// compression stage fixed by [`Compiler::compress`].
 #[derive(Clone, Copy, Debug)]
 pub struct Ready {
     policy: ApproxPolicy,
+    compression: CompressionPolicy,
+    prune_sparsity: f64,
 }
 
 /// The front door of the crate's compile pipeline (see
@@ -101,11 +109,17 @@ impl Compiler<NeedsPolicy> {
     }
 
     /// Fix the approximation policy, unlocking the packing methods.
+    /// Compression defaults to [`CompressionPolicy::None`]; chain
+    /// [`compress`](Compiler::compress) to change it.
     pub fn approximate(self, policy: ApproxPolicy) -> Compiler<Ready> {
         Compiler {
             layout: self.layout,
             group: self.group,
-            state: Ready { policy },
+            state: Ready {
+                policy,
+                compression: CompressionPolicy::None,
+                prune_sparsity: DEFAULT_PRUNE_SPARSITY,
+            },
         }
     }
 }
@@ -141,6 +155,38 @@ impl Compiler<Ready> {
         self.state.policy
     }
 
+    /// Fix the off-chip compression policy — the third pipeline stage.
+    /// Under a compressing policy, [`pack_model`](Self::pack_model)
+    /// additionally builds one model-wide [`Wrom`] and a
+    /// [`CompressedPlane`] per layer (the representation
+    /// `CompiledModel::save` persists); under
+    /// [`CompressionPolicy::PruneWrcHuffman`] the weights are
+    /// magnitude-pruned *before* packing, so the compiled model itself
+    /// is the pruned network.
+    pub fn compress(mut self, policy: CompressionPolicy) -> Compiler<Ready> {
+        self.state.compression = policy;
+        self
+    }
+
+    /// Override the prune sparsity used by
+    /// [`CompressionPolicy::PruneWrcHuffman`] (default
+    /// [`DEFAULT_PRUNE_SPARSITY`]). Fails with
+    /// [`SdmmError::InvalidConfig`] outside `[0, 1)`.
+    pub fn with_prune_sparsity(mut self, sparsity: f64) -> Result<Compiler<Ready>> {
+        if !(0.0..1.0).contains(&sparsity) {
+            return Err(SdmmError::InvalidConfig(format!(
+                "prune sparsity {sparsity} outside [0, 1)"
+            )));
+        }
+        self.state.prune_sparsity = sparsity;
+        Ok(self)
+    }
+
+    /// The compression policy packed models will store under.
+    pub fn compression(&self) -> CompressionPolicy {
+        self.state.compression
+    }
+
     /// Pack one tuple of signed weights (`weights.len()` =
     /// `layout.kw()`) — the facade over
     /// [`pack_approx`](crate::packing::pack_approx) /
@@ -174,14 +220,19 @@ impl Compiler<Ready> {
             layer: layer.clone(),
             plane: Arc::new(plane),
             stats,
+            compressed: None,
         })
     }
 
     /// Pack a whole network: validates layer chaining and weight-set
-    /// counts, then packs every layer via [`pack`](Self::pack). The
-    /// resulting [`CompiledModel`] owns one plane per layer and is what
-    /// every [`Executor`](super::Executor) — including the sharded
-    /// serving runtime — consumes.
+    /// counts, then packs every layer via [`pack`](Self::pack). Under a
+    /// compressing policy (see [`compress`](Self::compress)) the weights
+    /// are optionally pruned first, and the result additionally owns the
+    /// off-chip representation: one model-wide [`Wrom`] plus a
+    /// [`CompressedPlane`] per layer. The resulting [`CompiledModel`]
+    /// owns one plane per layer and is what every
+    /// [`Executor`](super::Executor) — including the sharded serving
+    /// runtime — consumes.
     pub fn pack_model(
         &self,
         name: &str,
@@ -201,9 +252,23 @@ impl Compiler<Ready> {
         // Fail fast on broken chaining before paying for any packing.
         let refs: Vec<&ConvLayer> = layers.iter().collect();
         super::model::validate_chaining(name, &refs)?;
-        let compiled: Vec<CompiledLayer> = layers
+        // PruneWrcHuffman transforms the network before packing: the
+        // plane the model serves IS the pruned network (Deep
+        // Compression's train-prune-deploy shape, paper Table 3).
+        let pruned: Option<Vec<Vec<i64>>> = if self.state.compression.prunes() {
+            Some(
+                weights
+                    .iter()
+                    .map(|w| prune_magnitude(w, self.state.prune_sparsity).pruned)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let effective: &[Vec<i64>] = pruned.as_deref().unwrap_or(weights);
+        let mut compiled: Vec<CompiledLayer> = layers
             .iter()
-            .zip(weights)
+            .zip(effective)
             .enumerate()
             .map(|(i, (l, w))| {
                 self.pack(l, w).map_err(|e| {
@@ -213,10 +278,34 @@ impl Compiler<Ready> {
                 })
             })
             .collect::<Result<_>>()?;
+        // Off-chip representation: intern every layer's plane into one
+        // shared WROM first (the address field width depends on the
+        // final entry count), then encode each layer's stream.
+        let wrom = if self.state.compression.compresses() {
+            let mut wrom = Wrom::new(self.layout.clone());
+            let mut streams = Vec::with_capacity(compiled.len());
+            for cl in &compiled {
+                streams.push(cl.plane.to_index_stream(&mut wrom)?);
+            }
+            for (cl, stream) in compiled.iter_mut().zip(streams) {
+                let original_bits = cl.layer.params() * self.layout.c as u64;
+                cl.compressed = Some(CompressedPlane::build(
+                    self.state.compression,
+                    stream,
+                    &wrom,
+                    original_bits,
+                )?);
+            }
+            Some(Arc::new(wrom))
+        } else {
+            None
+        };
         Ok(CompiledModel {
             name: name.to_string(),
             v_bits: self.layout.v,
             group: self.group,
+            compression: self.state.compression,
+            wrom,
             layers: compiled,
         })
     }
@@ -290,6 +379,76 @@ mod tests {
             c.pack_model("m", &layers, &weights),
             Err(SdmmError::InvalidModel(_))
         ));
+    }
+
+    #[test]
+    fn compress_stage_defaults_to_none() {
+        let c = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        assert_eq!(c.compression(), CompressionPolicy::None);
+        let layer = ConvLayer::new("t", 6, 2, 3, 3, 1, 1, 1);
+        let w: Vec<i64> = vec![1; layer.params() as usize];
+        let m = c.pack_model("m", &[layer], &[w]).unwrap();
+        assert_eq!(m.compression, CompressionPolicy::None);
+        assert!(m.wrom.is_none());
+        assert!(m.layers[0].compressed.is_none());
+    }
+
+    #[test]
+    fn compress_stage_builds_streams_and_rates() {
+        let layers = [
+            ConvLayer::new("c1", 6, 3, 6, 3, 1, 1, 1),
+            ConvLayer::new("c2", 6, 6, 6, 3, 1, 1, 1),
+        ];
+        let mut rng = Rng::new(5);
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+            .collect();
+        let m = Compiler::for_bits(8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(CompressionPolicy::Wrc)
+            .pack_model("m", &layers, &weights)
+            .unwrap();
+        assert_eq!(m.compression, CompressionPolicy::Wrc);
+        let wrom = m.wrom.as_ref().expect("compressed model owns a WROM");
+        assert!(!wrom.is_empty());
+        for cl in &m.layers {
+            let cp = cl.compressed.as_ref().expect("per-layer compressed plane");
+            assert_eq!(cp.policy, CompressionPolicy::Wrc);
+            assert!(cp.groups() > 0);
+            // out_ch 6 is a whole number of 8-bit groups: exact guarantee
+            assert!((cp.rate.percent() - 66.67).abs() < 0.5, "{:?}", cp.rate);
+        }
+    }
+
+    #[test]
+    fn prune_policy_prunes_before_packing() {
+        let layer = ConvLayer::new("c1", 6, 4, 6, 3, 1, 1, 1);
+        let mut rng = Rng::new(6);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let m = Compiler::for_bits(8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(CompressionPolicy::PruneWrcHuffman)
+            .with_prune_sparsity(0.7)
+            .unwrap()
+            .pack_model("m", &[layer.clone()], &[w])
+            .unwrap();
+        let eff = m.layers[0].effective_weights();
+        let zeros = eff.iter().filter(|&&v| v == 0).count();
+        assert!(
+            zeros as f64 >= 0.6 * eff.len() as f64,
+            "{zeros}/{} zeros after 70% pruning",
+            eff.len()
+        );
+        assert!(m.layers[0].compressed.as_ref().unwrap().zero_rle.is_some());
+        // sparsity outside [0,1) is refused
+        assert!(Compiler::for_bits(8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .with_prune_sparsity(1.5)
+            .is_err());
     }
 
     #[test]

@@ -9,14 +9,22 @@
 //! ```text
 //! Compiler::for_bits(8)?            resolve the port layout (typed error
 //!   .approximate(ApproxPolicy)      fix the approximation policy
+//!   .compress(CompressionPolicy)    fix the off-chip storage format
 //!   .pack_model(name, layers, ws)?  pack planes once -> CompiledModel
-//!                                   (owns PackedPlanes + ErrorStats)
+//!                                   (owns PackedPlanes + ErrorStats +
+//!                                    CompressedPlanes + shared WROM)
 //!
 //! CompiledModel ──run──> Executor (interchangeable, bit-exact):
 //!   ScalarExec    port-accurate DSP48E1, toggle stats (power model)
 //!   BatchExec     lane-parallel batch engine (throughput)
 //!   SystolicExec  batch datapath + array cycle/traffic accounting
 //!   ServingExec   sharded multi-model runtime (registry + shards)
+//!
+//! CompiledModel::save / ::load      versioned on-disk artifact
+//!   (sdmm-model.bin + manifest, DESIGN.md §8): the WROM entry table +
+//!   per-layer WRC index streams; ModelRegistry::register_from_artifact
+//!   cold-loads it — index streams decode straight into WROM-backed
+//!   planes, nothing is repacked.
 //! ```
 //!
 //! Compile one 8-bit layer and run it on three backends — outputs and
@@ -67,6 +75,7 @@ pub mod compiler;
 pub mod exec;
 pub mod model;
 
+pub use crate::compress::{CompressedPlane, CompressionPolicy};
 pub use compiler::{ApproxMode, ApproxPolicy, Compiler, NeedsPolicy, Ready};
 pub use exec::{BatchExec, ExecOutput, Executor, ScalarExec, ServingExec, SystolicExec};
 pub use model::{CompiledLayer, CompiledModel};

@@ -2,10 +2,12 @@
 
 use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
+use crate::compress::{CompressedPlane, CompressionPolicy, CompressionRate};
 use crate::coordinator::ModelKey;
 use crate::error::{Result, SdmmError};
 use crate::manip::ErrorStats;
-use crate::packing::PackedPlane;
+use crate::packing::{PackedPlane, Wrom};
+use std::path::Path;
 use std::sync::Arc;
 
 /// Check that consecutive layers chain (`out_ch`/`out_hw` of one feed
@@ -45,6 +47,11 @@ pub struct CompiledLayer {
     /// Approximation error of this layer's weights (empty when the
     /// policy skipped stats).
     pub stats: ErrorStats,
+    /// The layer's off-chip form — WRC index stream plus the policy's
+    /// transport coding — when the model was compiled with a
+    /// compressing [`CompressionPolicy`]; `None` otherwise. This is
+    /// what [`CompiledModel::save`] persists per layer.
+    pub compressed: Option<CompressedPlane>,
 }
 
 impl CompiledLayer {
@@ -65,6 +72,11 @@ pub struct CompiledModel {
     pub v_bits: u32,
     /// Output channels per DSP group (paper group size g).
     pub group: usize,
+    /// Off-chip compression policy the model was compiled under.
+    pub compression: CompressionPolicy,
+    /// The model-wide WROM the per-layer index streams address
+    /// (`Some` exactly when `compression` compresses).
+    pub wrom: Option<Arc<Wrom>>,
     /// Compiled layers in execution order.
     pub layers: Vec<CompiledLayer>,
 }
@@ -133,6 +145,25 @@ impl CompiledModel {
         }
         let refs: Vec<&ConvLayer> = self.layers.iter().map(|l| &l.layer).collect();
         validate_chaining(&self.name, &refs)?;
+        if self.compression.compresses() {
+            if self.wrom.is_none() {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {}: compiled under {} but carries no WROM",
+                    self.name, self.compression
+                )));
+            }
+            if let Some((i, _)) = self
+                .layers
+                .iter()
+                .enumerate()
+                .find(|(_, l)| l.compressed.is_none())
+            {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {} layer {i}: compiled under {} but has no compressed plane",
+                    self.name, self.compression
+                )));
+            }
+        }
         for (i, cl) in self.layers.iter().enumerate() {
             let l = &cl.layer;
             if cl.plane.layout.v != self.v_bits {
@@ -189,5 +220,46 @@ impl CompiledModel {
     /// [`CompiledLayer::stats`]).
     pub fn worst_layer_mse(&self) -> f64 {
         self.layers.iter().map(|l| l.stats.mse).fold(0.0, f64::max)
+    }
+
+    /// Aggregate off-chip compression rate across the model's layers
+    /// (`None` when compiled with [`CompressionPolicy::None`]).
+    pub fn compression_rate(&self) -> Option<CompressionRate> {
+        if !self.compression.compresses() {
+            return None;
+        }
+        let mut compressed = 0u64;
+        let mut original = 0u64;
+        for cl in &self.layers {
+            let cp = cl.compressed.as_ref()?;
+            compressed += cp.rate.compressed_bits;
+            original += cp.rate.original_bits;
+        }
+        Some(crate::compress::rate(compressed, original))
+    }
+
+    /// Serialize this model as a versioned artifact
+    /// (`<dir>/sdmm-model.bin` + `<dir>/manifest.json`, DESIGN.md §8):
+    /// the WROM entry table plus each layer's compressed index stream —
+    /// or raw effective weights under [`CompressionPolicy::None`].
+    /// [`load`](Self::load) round-trips it bit-exactly.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<crate::runtime::store::ArtifactInfo> {
+        crate::runtime::store::save_model(self, dir.as_ref())
+    }
+
+    /// Load a model saved by [`save`](Self::save): a validating
+    /// streaming read that decodes index streams straight into
+    /// WROM-backed planes — no weight is re-approximated or re-packed.
+    /// Corruption (truncation, bit flips, inconsistent geometry) is a
+    /// typed [`SdmmError::CorruptArtifact`], never a panic.
+    ///
+    /// Per-layer approximation [`ErrorStats`] are **not** stored in the
+    /// artifact (they are a compile-time report over the *original*
+    /// weights, which the compressed form deliberately no longer
+    /// carries): loaded models have empty stats, exactly like a model
+    /// compiled with `skip_stats`. Gate on compile-time stats before
+    /// [`save`](Self::save), not after a cold load.
+    pub fn load(dir: impl AsRef<Path>) -> Result<CompiledModel> {
+        crate::runtime::store::load_model(dir.as_ref())
     }
 }

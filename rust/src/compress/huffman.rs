@@ -1,11 +1,21 @@
 //! Canonical Huffman coding over i64 symbol streams.
 //!
-//! Used for the `H`, `WRC + H` and `P + WRC + H` columns of Table 3.
-//! The implementation is a complete, self-contained encoder/decoder:
-//! frequency count → package-merge-free heap construction → canonical
-//! code assignment → bit-packed emission; decode walks the canonical
-//! table. Round-trip equality is property-tested.
+//! Used for the `H`, `WRC + H` and `P + WRC + H` columns of Table 3,
+//! and by the compressed model artifacts (`runtime::store`) to code the
+//! WROM address stream. The implementation is a complete,
+//! self-contained encoder/decoder: frequency count → package-merge-free
+//! heap construction → canonical code assignment → bit-packed emission;
+//! decode walks the canonical table and returns typed
+//! [`SdmmError::CorruptArtifact`] errors on truncated or impossible
+//! streams (it never panics on malformed input). Round-trip equality is
+//! property-tested.
+//!
+//! Because the code is *canonical*, a book is fully determined by its
+//! `(symbol, code length)` pairs — [`HuffmanCode::lengths`] /
+//! [`HuffmanCode::from_lengths`] are the (de)serialization hooks the
+//! artifact format uses.
 
+use crate::error::{Result, SdmmError};
 use std::collections::HashMap;
 
 /// A canonical Huffman code book.
@@ -46,6 +56,31 @@ impl HuffmanCode {
     /// included in every Table 3 rate we report).
     pub fn table_bits(&self, symbol_bits: u32) -> u64 {
         self.codes.len() as u64 * (symbol_bits as u64 + 5)
+    }
+
+    /// The `(symbol, code length)` pairs in canonical order — together
+    /// with [`from_lengths`](Self::from_lengths) this round-trips the
+    /// book exactly (canonical codes are determined by lengths alone),
+    /// which is how the model-artifact format serializes it.
+    pub fn lengths(&self) -> Vec<(i64, u32)> {
+        self.canonical.iter().map(|&(len, sym)| (sym, len)).collect()
+    }
+
+    /// Rebuild a book from `(symbol, code length)` pairs (the inverse of
+    /// [`lengths`](Self::lengths)). Order does not matter — canonical
+    /// assignment sorts by `(length, symbol)`.
+    pub fn from_lengths(lengths: Vec<(i64, u32)>) -> HuffmanCode {
+        canonicalize(lengths)
+    }
+
+    /// Number of distinct symbols in the book.
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// True when the book codes no symbol (empty input stream).
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
     }
 }
 
@@ -115,12 +150,24 @@ fn canonicalize(mut lengths: Vec<(i64, u32)>) -> HuffmanCode {
 /// Encode a stream; returns (bit-packed bytes, bit count, code book).
 pub fn huffman_encode(stream: &[i64]) -> (Vec<u8>, u64, HuffmanCode) {
     let book = HuffmanCode::build(stream);
+    let (bytes, total_bits) = huffman_encode_with(stream, &book)
+        .expect("a book built from this stream covers every symbol");
+    (bytes, total_bits, book)
+}
+
+/// Encode a stream with an *existing* book — the artifact writer path:
+/// the book built at compile time is the one serialized, so the stored
+/// payload and the recorded rate agree by construction rather than by
+/// re-derivation. A symbol the book does not cover is a typed error.
+pub fn huffman_encode_with(stream: &[i64], book: &HuffmanCode) -> Result<(Vec<u8>, u64)> {
     let mut bytes = Vec::new();
     let mut acc = 0u64;
     let mut nbits = 0u32;
     let mut total_bits = 0u64;
     for s in stream {
-        let (code, len) = book.codes[s];
+        let &(code, len) = book.codes.get(s).ok_or_else(|| {
+            SdmmError::CorruptArtifact(format!("symbol {s} missing from the Huffman book"))
+        })?;
         total_bits += len as u64;
         // append MSB-first
         for i in (0..len).rev() {
@@ -136,11 +183,22 @@ pub fn huffman_encode(stream: &[i64]) -> (Vec<u8>, u64, HuffmanCode) {
     if nbits > 0 {
         bytes.push((acc << (8 - nbits)) as u8);
     }
-    (bytes, total_bits, book)
+    Ok((bytes, total_bits))
 }
 
-/// Decode `count` symbols.
-pub fn huffman_decode(bytes: &[u8], count: usize, book: &HuffmanCode) -> Vec<i64> {
+/// Decode `count` symbols. Malformed input — a stream that runs out of
+/// bits mid-code, or a bit pattern no canonical code matches — yields a
+/// typed [`SdmmError::CorruptArtifact`], never a panic (this is the
+/// artifact cold-load path).
+pub fn huffman_decode(bytes: &[u8], count: usize, book: &HuffmanCode) -> Result<Vec<i64>> {
+    if count == 0 {
+        return Ok(Vec::new());
+    }
+    if book.canonical.is_empty() {
+        return Err(SdmmError::CorruptArtifact(
+            "huffman stream with an empty code book".into(),
+        ));
+    }
     // Rebuild first-code tables for canonical decode.
     // first_code[len], first_index[len]
     let max_len = book.canonical.iter().map(|&(l, _)| l).max().unwrap_or(0);
@@ -169,12 +227,23 @@ pub fn huffman_decode(bytes: &[u8], count: usize, book: &HuffmanCode) -> Vec<i64
 
     let mut out = Vec::with_capacity(count);
     let mut bitpos = 0usize;
-    let read_bit = |pos: usize| -> u64 { ((bytes[pos / 8] >> (7 - pos % 8)) & 1) as u64 };
+    let total_bits = bytes.len() * 8;
     while out.len() < count {
         let mut code = 0u64;
         let mut len = 0u32;
         loop {
-            code = (code << 1) | read_bit(bitpos);
+            if len >= max_len {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "huffman stream: no code matches within the book's max length {max_len}"
+                )));
+            }
+            if bitpos >= total_bits {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "huffman stream truncated: {} of {count} symbols decoded",
+                    out.len()
+                )));
+            }
+            code = (code << 1) | ((bytes[bitpos / 8] >> (7 - bitpos % 8)) & 1) as u64;
             bitpos += 1;
             len += 1;
             let l = len as usize;
@@ -185,10 +254,9 @@ pub fn huffman_decode(bytes: &[u8], count: usize, book: &HuffmanCode) -> Vec<i64
                     break;
                 }
             }
-            assert!(len <= max_len, "corrupt huffman stream");
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -204,7 +272,7 @@ mod tests {
             .collect();
         let (bytes, bits, book) = huffman_encode(&stream);
         assert!(bits <= bytes.len() as u64 * 8);
-        let back = huffman_decode(&bytes, stream.len(), &book);
+        let back = huffman_decode(&bytes, stream.len(), &book).unwrap();
         assert_eq!(back, stream);
     }
 
@@ -213,7 +281,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let stream: Vec<i64> = (0..2000).map(|_| rng.range_i64(-128, 127)).collect();
         let (bytes, _, book) = huffman_encode(&stream);
-        assert_eq!(huffman_decode(&bytes, stream.len(), &book), stream);
+        assert_eq!(huffman_decode(&bytes, stream.len(), &book).unwrap(), stream);
     }
 
     #[test]
@@ -221,7 +289,49 @@ mod tests {
         let stream = vec![42i64; 100];
         let (bytes, bits, book) = huffman_encode(&stream);
         assert_eq!(bits, 100); // 1 bit per symbol
-        assert_eq!(huffman_decode(&bytes, 100, &book), stream);
+        assert_eq!(huffman_decode(&bytes, 100, &book).unwrap(), stream);
+    }
+
+    #[test]
+    fn truncated_stream_is_typed_not_a_panic() {
+        let mut rng = Rng::new(14);
+        let stream: Vec<i64> = (0..500).map(|_| rng.laplace(3.0).round() as i64).collect();
+        let (bytes, _, book) = huffman_encode(&stream);
+        // ask for more symbols than the bytes can possibly hold
+        let err = huffman_decode(&bytes[..bytes.len() / 4], stream.len(), &book).unwrap_err();
+        assert!(matches!(err, crate::error::SdmmError::CorruptArtifact(_)), "{err}");
+        // empty book with a non-zero count is refused, not indexed
+        let empty = HuffmanCode::build(&[]);
+        assert!(matches!(
+            huffman_decode(&[0xff], 1, &empty),
+            Err(crate::error::SdmmError::CorruptArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn encode_with_matches_encode_and_rejects_unknown_symbols() {
+        let mut rng = Rng::new(16);
+        let stream: Vec<i64> = (0..2000).map(|_| rng.laplace(2.5).round() as i64).collect();
+        let (bytes, bits, book) = huffman_encode(&stream);
+        let (bytes2, bits2) = huffman_encode_with(&stream, &book).unwrap();
+        assert_eq!((bytes, bits), (bytes2, bits2));
+        // a symbol the book does not cover is a typed refusal
+        assert!(matches!(
+            huffman_encode_with(&[i64::MAX], &book),
+            Err(crate::error::SdmmError::CorruptArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn lengths_round_trip_the_book() {
+        let mut rng = Rng::new(15);
+        let stream: Vec<i64> = (0..3000).map(|_| rng.laplace(4.0).round() as i64).collect();
+        let (bytes, _, book) = huffman_encode(&stream);
+        let rebuilt = HuffmanCode::from_lengths(book.lengths());
+        assert_eq!(rebuilt.codes, book.codes);
+        assert_eq!(rebuilt.len(), book.len());
+        // the rebuilt book decodes the original emission bit-exactly
+        assert_eq!(huffman_decode(&bytes, stream.len(), &rebuilt).unwrap(), stream);
     }
 
     #[test]

@@ -9,16 +9,22 @@
 //!   (`H` column).
 //! * [`prune`] — magnitude pruning + run-length sparse encoding, the
 //!   Deep-Compression-style `P` stage of the `P + WRC + H` column.
+//! * [`plane`] — [`CompressionPolicy`] (the compile pipeline's
+//!   compression stage) and [`CompressedPlane`] (a conv layer's packed
+//!   plane in its stored, off-chip form — what model artifacts persist
+//!   and the registry cold-load decodes).
 //!
 //! All rates are reported the paper's way: `compressed / original`
 //! in percent (smaller = better), alongside the equivalent `N×` factor.
 
 pub mod huffman;
+pub mod plane;
 pub mod prune;
 pub mod wrc;
 
-pub use huffman::{huffman_decode, huffman_encode, HuffmanCode};
-pub use prune::{prune_magnitude, rle_encode_sparse, PruneResult};
+pub use huffman::{huffman_decode, huffman_encode, huffman_encode_with, HuffmanCode};
+pub use plane::{CompressedPlane, CompressionPolicy, DEFAULT_PRUNE_SPARSITY};
+pub use prune::{prune_magnitude, rle_decode_sparse, rle_encode_sparse, PruneResult};
 pub use wrc::{wrc_compress, CompressionRate, WrcResult};
 
 /// Compression rate helper: `compressed_bits / original_bits`.

@@ -1,0 +1,369 @@
+//! The off-chip representation of a compiled model: [`CompressionPolicy`]
+//! (the compile pipeline's compression stage) and [`CompressedPlane`]
+//! (one conv layer's packed plane in its stored form).
+//!
+//! This is the paper's deployment story made concrete (§5, Table 3):
+//! SDMM parameters live in a *different format off-chip* — per weight
+//! group only a WROM address plus sign bits (WRC, a guaranteed
+//! 33%/25%/16.7% reduction), optionally Huffman-coded (`WRC + H`) and
+//! preceded by magnitude pruning (`P + WRC + H`). A `CompressedPlane`
+//! is what `CompiledModel::save` writes into the `sdmm-model.bin`
+//! artifact and what the registry cold-load decodes back into
+//! WROM-backed planes without repacking (DESIGN.md §8).
+
+use super::huffman::{huffman_encode, HuffmanCode};
+use super::prune::rle_encode_sparse;
+use super::wrc::CompressionRate;
+use crate::error::{Result, SdmmError};
+use crate::packing::{Wrom, WromIndexStream};
+
+/// Default conv-layer prune sparsity for
+/// [`CompressionPolicy::PruneWrcHuffman`] (Deep Compression's ~65%
+/// conv-layer figure, the one Table 3 assumes).
+pub const DEFAULT_PRUNE_SPARSITY: f64 = 0.65;
+
+/// How a compiled model stores its parameters off-chip — the third
+/// stage of the compile pipeline
+/// (`Compiler::for_bits(v)?.approximate(p).compress(policy)`), matching
+/// Table 3's columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompressionPolicy {
+    /// Raw packed planes only; the artifact stores plain effective
+    /// weights (the baseline — no off-chip compression).
+    #[default]
+    None,
+    /// Weight Representation Change: per group a fixed-width
+    /// `{WROM address, sign bits}` word — the paper's guaranteed
+    /// 66.6%/75%/83.3% of raw for 8/6/4-bit.
+    Wrc,
+    /// WRC with the address stream canonical-Huffman coded
+    /// (Table 3's `WRC + H` column); sign bits stay raw (near-uniform).
+    WrcHuffman,
+    /// Magnitude pruning *before packing* (the model itself is pruned),
+    /// then WRC with an RLE map over all-zero groups and Huffman over
+    /// the surviving addresses (Table 3's `P + WRC + H` column).
+    PruneWrcHuffman,
+}
+
+impl CompressionPolicy {
+    /// Short stable name (manifest field, reports, CLI output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionPolicy::None => "none",
+            CompressionPolicy::Wrc => "wrc",
+            CompressionPolicy::WrcHuffman => "wrc+h",
+            CompressionPolicy::PruneWrcHuffman => "p+wrc+h",
+        }
+    }
+
+    /// Parse a policy name (CLI `--policy`, manifest round-trip).
+    /// Accepts the canonical [`name`](Self::name) forms plus the
+    /// spelled-out CLI aliases.
+    pub fn parse(s: &str) -> Result<CompressionPolicy> {
+        match s {
+            "none" | "raw" => Ok(CompressionPolicy::None),
+            "wrc" => Ok(CompressionPolicy::Wrc),
+            "wrc+h" | "wrc-huffman" | "wrch" => Ok(CompressionPolicy::WrcHuffman),
+            "p+wrc+h" | "prune-wrc-huffman" | "pwrch" => Ok(CompressionPolicy::PruneWrcHuffman),
+            other => Err(SdmmError::Parse(format!(
+                "unknown compression policy {other:?} \
+                 (none|wrc|wrc-huffman|prune-wrc-huffman)"
+            ))),
+        }
+    }
+
+    /// Stable on-disk tag (artifact header byte).
+    pub fn tag(&self) -> u8 {
+        match self {
+            CompressionPolicy::None => 0,
+            CompressionPolicy::Wrc => 1,
+            CompressionPolicy::WrcHuffman => 2,
+            CompressionPolicy::PruneWrcHuffman => 3,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag); unknown tags are a typed
+    /// [`SdmmError::CorruptArtifact`].
+    pub fn from_tag(tag: u8) -> Result<CompressionPolicy> {
+        match tag {
+            0 => Ok(CompressionPolicy::None),
+            1 => Ok(CompressionPolicy::Wrc),
+            2 => Ok(CompressionPolicy::WrcHuffman),
+            3 => Ok(CompressionPolicy::PruneWrcHuffman),
+            other => Err(SdmmError::CorruptArtifact(format!(
+                "unknown compression policy tag {other}"
+            ))),
+        }
+    }
+
+    /// True for every policy that stores an index stream (everything
+    /// but [`CompressionPolicy::None`]).
+    pub fn compresses(&self) -> bool {
+        !matches!(self, CompressionPolicy::None)
+    }
+
+    /// True when the policy prunes weights before packing (the model's
+    /// effective weights change, not just their storage).
+    pub fn prunes(&self) -> bool {
+        matches!(self, CompressionPolicy::PruneWrcHuffman)
+    }
+}
+
+impl std::fmt::Display for CompressionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Is the stream group at `(addr, signs)` the all-zero magnitude group?
+/// (Shared by the rate accounting here and the artifact writer, so the
+/// RLE map and the stored non-zero stream can never disagree.)
+pub(crate) fn is_zero_group(wrom: &Wrom, addr: u32, signs: u32) -> bool {
+    signs == 0
+        && (addr as usize) < wrom.len()
+        && wrom.entry(addr).slots.iter().all(|s| s.zero)
+}
+
+/// One conv layer's packed plane in its off-chip (artifact) form: the
+/// WRC index stream plus the policy's transport coding, and the rate it
+/// achieves against the raw quantized weights.
+#[derive(Clone, Debug)]
+pub struct CompressedPlane {
+    /// Policy this plane was encoded under (never
+    /// [`CompressionPolicy::None`]).
+    pub policy: CompressionPolicy,
+    /// `(WROM address, sign bits)` per paper-sized weight group, over
+    /// the plane's canonical tuple order (the form
+    /// [`PackedPlane::to_index_stream`](crate::packing::PackedPlane::to_index_stream)
+    /// produces).
+    pub stream: WromIndexStream,
+    /// Canonical Huffman book over the stored address symbols
+    /// (`WrcHuffman` / `PruneWrcHuffman`; `None` for plain `Wrc`).
+    pub huffman: Option<HuffmanCode>,
+    /// `PruneWrcHuffman`: interleaved `(zero-run, marker)` RLE symbols
+    /// over the group stream (4-bit runs, marker 1 = one stored
+    /// non-zero group follows, 0 = run-overflow filler).
+    pub zero_rle: Option<Vec<i64>>,
+    /// Groups whose `(address, signs)` are physically stored — all of
+    /// them except under `PruneWrcHuffman`, where all-zero groups live
+    /// only in the RLE map.
+    pub stored_groups: usize,
+    /// Off-chip footprint vs the raw quantized weights (Table 3's
+    /// accounting: payload + code books; the on-chip WROM is costed
+    /// separately, Fig. 7).
+    pub rate: CompressionRate,
+}
+
+impl CompressedPlane {
+    /// Encode a layer's index stream under `policy`. `wrom` is the
+    /// model-wide ROM the stream's addresses point into (fully built —
+    /// the address field width depends on the final entry count);
+    /// `original_bits` is the layer's raw footprint
+    /// (`params × c_bits`).
+    pub fn build(
+        policy: CompressionPolicy,
+        stream: WromIndexStream,
+        wrom: &Wrom,
+        original_bits: u64,
+    ) -> Result<CompressedPlane> {
+        if !policy.compresses() {
+            return Err(SdmmError::InvalidConfig(
+                "CompressedPlane::build needs a compressing policy".into(),
+            ));
+        }
+        for &(addr, _) in &stream.tuples {
+            if addr as usize >= wrom.len() {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "index stream address {addr} outside the {}-entry WROM",
+                    wrom.len()
+                )));
+            }
+        }
+        let gs = wrom.group_size as u64;
+        let index_bits = wrom.index_bits_actual() as u64;
+        let addr_bits = (index_bits - gs) as u32;
+        let n_groups = stream.tuples.len() as u64;
+        match policy {
+            CompressionPolicy::None => unreachable!("checked above"),
+            CompressionPolicy::Wrc => Ok(CompressedPlane {
+                policy,
+                stored_groups: stream.tuples.len(),
+                stream,
+                huffman: None,
+                zero_rle: None,
+                rate: super::rate(n_groups * index_bits, original_bits),
+            }),
+            CompressionPolicy::WrcHuffman => {
+                let addrs: Vec<i64> =
+                    stream.tuples.iter().map(|&(a, _)| a as i64).collect();
+                let (_, h_bits, book) = huffman_encode(&addrs);
+                let bits = h_bits + book.table_bits(addr_bits) + n_groups * gs;
+                Ok(CompressedPlane {
+                    policy,
+                    stored_groups: stream.tuples.len(),
+                    stream,
+                    huffman: Some(book),
+                    zero_rle: None,
+                    rate: super::rate(bits, original_bits),
+                })
+            }
+            CompressionPolicy::PruneWrcHuffman => {
+                // 1 = group physically stored, 0 = all-zero group
+                // (lives in the RLE map only).
+                let indicator: Vec<i64> = stream
+                    .tuples
+                    .iter()
+                    .map(|&(a, s)| i64::from(!is_zero_group(wrom, a, s)))
+                    .collect();
+                let (rle, _) = rle_encode_sparse(&indicator, 4, 0);
+                let nz_addrs: Vec<i64> = stream
+                    .tuples
+                    .iter()
+                    .zip(&indicator)
+                    .filter(|&(_, &ind)| ind != 0)
+                    .map(|(&(a, _), _)| a as i64)
+                    .collect();
+                let (_, h_bits, book) = huffman_encode(&nz_addrs);
+                let nz = nz_addrs.len() as u64;
+                // 5 bits per RLE pair: 4-bit run + 1-bit marker.
+                let bits = (rle.len() as u64 / 2) * 5
+                    + h_bits
+                    + book.table_bits(addr_bits)
+                    + nz * gs;
+                Ok(CompressedPlane {
+                    policy,
+                    stored_groups: nz as usize,
+                    stream,
+                    huffman: Some(book),
+                    zero_rle: Some(rle),
+                    rate: super::rate(bits, original_bits),
+                })
+            }
+        }
+    }
+
+    /// Reassemble a plane from parts the artifact reader already holds
+    /// (decoded stream, stored book/RLE map, payload bit counts) — the
+    /// cold-load path must not re-run `huffman_encode` just to recover
+    /// the rate. The caller (`runtime::store`) guarantees the parts
+    /// came from one consistent payload; `CompressedPlane::build` is
+    /// the validating front door for everything else.
+    pub(crate) fn from_parts(
+        policy: CompressionPolicy,
+        stream: WromIndexStream,
+        huffman: Option<HuffmanCode>,
+        zero_rle: Option<Vec<i64>>,
+        stored_groups: usize,
+        compressed_bits: u64,
+        original_bits: u64,
+    ) -> CompressedPlane {
+        CompressedPlane {
+            policy,
+            stream,
+            huffman,
+            zero_rle,
+            stored_groups,
+            rate: super::rate(compressed_bits, original_bits),
+        }
+    }
+
+    /// Weight groups in the stream (stored + RLE-elided).
+    pub fn groups(&self) -> usize {
+        self.stream.tuples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::Layout;
+    use crate::util::rng::Rng;
+
+    fn laplacian(n: usize, bits: u32, seed: u64) -> Vec<i64> {
+        let mut rng = Rng::new(seed);
+        let lim = (1i64 << (bits - 1)) - 1;
+        let b = (lim as f64 / 127.0).max(0.6);
+        (0..n)
+            .map(|_| rng.laplace(b).round().clamp(-(lim + 1) as f64, lim as f64) as i64)
+            .collect()
+    }
+
+    fn stream_for(ws: &[i64], bits: u32) -> (Wrom, WromIndexStream) {
+        let mut wrom = Wrom::new(Layout::for_bits(bits).unwrap());
+        let stream = wrom.compress_stream(ws).unwrap();
+        (wrom, stream)
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            CompressionPolicy::None,
+            CompressionPolicy::Wrc,
+            CompressionPolicy::WrcHuffman,
+            CompressionPolicy::PruneWrcHuffman,
+        ] {
+            assert_eq!(CompressionPolicy::parse(p.name()).unwrap(), p);
+            assert_eq!(CompressionPolicy::from_tag(p.tag()).unwrap(), p);
+        }
+        assert!(CompressionPolicy::parse("gzip").is_err());
+        assert!(CompressionPolicy::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn wrc_rate_matches_guarantee() {
+        for (bits, pct) in [(8u32, 66.67), (6, 75.0), (4, 83.33)] {
+            let ws = laplacian(12 * 500, bits, 70);
+            let (wrom, stream) = stream_for(&ws, bits);
+            let cp = CompressedPlane::build(
+                CompressionPolicy::Wrc,
+                stream,
+                &wrom,
+                ws.len() as u64 * bits as u64,
+            )
+            .unwrap();
+            assert!(
+                (cp.rate.percent() - pct).abs() < 0.5,
+                "bits={bits}: {} vs {pct}",
+                cp.rate.percent()
+            );
+            assert!(cp.huffman.is_none() && cp.zero_rle.is_none());
+            assert_eq!(cp.stored_groups, cp.groups());
+        }
+    }
+
+    #[test]
+    fn huffman_policy_beats_wrc_on_peaky_weights() {
+        let ws = laplacian(30_000, 8, 71);
+        let (wrom, stream) = stream_for(&ws, 8);
+        let raw = ws.len() as u64 * 8;
+        let wrc =
+            CompressedPlane::build(CompressionPolicy::Wrc, stream.clone(), &wrom, raw).unwrap();
+        let wh = CompressedPlane::build(CompressionPolicy::WrcHuffman, stream, &wrom, raw)
+            .unwrap();
+        assert!(wh.rate.percent() < wrc.rate.percent(), "{:?} vs {:?}", wh.rate, wrc.rate);
+        assert!(wh.huffman.is_some());
+    }
+
+    #[test]
+    fn pruned_policy_maps_zero_groups() {
+        // Pre-pruned stream: mostly zeros, as the compiler produces
+        // under PruneWrcHuffman.
+        let mut ws = laplacian(9000, 8, 72);
+        for (i, w) in ws.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                *w = 0;
+            }
+        }
+        let (wrom, stream) = stream_for(&ws, 8);
+        let raw = ws.len() as u64 * 8;
+        let wrc =
+            CompressedPlane::build(CompressionPolicy::Wrc, stream.clone(), &wrom, raw).unwrap();
+        let p = CompressedPlane::build(CompressionPolicy::PruneWrcHuffman, stream, &wrom, raw)
+            .unwrap();
+        assert!(p.zero_rle.is_some());
+        assert!(p.stored_groups < p.groups());
+        // eliding zero groups + coding only surviving addresses beats
+        // the fixed-width format comfortably on a mostly-zero stream
+        assert!(p.rate.percent() < wrc.rate.percent(), "{:?} vs {:?}", p.rate, wrc.rate);
+    }
+}

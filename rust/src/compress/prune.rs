@@ -4,7 +4,11 @@
 //! Weights below a magnitude threshold (chosen to hit a target sparsity)
 //! are zeroed. The sparse stream is stored Deep-Compression style:
 //! non-zero values plus run lengths of zeros (4-bit runs with overflow
-//! markers, as in Han et al. 2015).
+//! markers, as in Han et al. 2015). The decoder returns typed
+//! [`SdmmError::CorruptArtifact`] errors on truncated streams — it is
+//! part of the model-artifact cold-load path (`runtime::store`).
+
+use crate::error::{Result, SdmmError};
 
 /// Result of pruning a weight stream.
 #[derive(Clone, Debug)]
@@ -80,14 +84,31 @@ pub fn rle_encode_sparse(stream: &[i64], run_bits: u32, value_bits: u32) -> (Vec
 }
 
 /// Decode the (run, value) stream back to the dense form (inverse of
-/// `rle_encode_sparse`); `len` is the original length.
-pub fn rle_decode_sparse(symbols: &[i64], run_bits: u32, len: usize) -> Vec<i64> {
+/// `rle_encode_sparse`); `len` is the original length. A stream that
+/// ends before `len` values are recovered (or whose final pair is
+/// incomplete) is refused with [`SdmmError::CorruptArtifact`].
+pub fn rle_decode_sparse(symbols: &[i64], run_bits: u32, len: usize) -> Result<Vec<i64>> {
     let max_run = (1i64 << run_bits) - 1;
     let mut out = Vec::with_capacity(len);
     let mut it = symbols.chunks(2);
     while out.len() < len {
-        let pair = it.next().expect("truncated RLE stream");
+        let pair = it.next().ok_or_else(|| {
+            SdmmError::CorruptArtifact(format!(
+                "RLE stream truncated: {} of {len} values decoded",
+                out.len()
+            ))
+        })?;
+        if pair.len() != 2 {
+            return Err(SdmmError::CorruptArtifact(
+                "RLE stream ends mid-pair (run without value)".into(),
+            ));
+        }
         let (run, val) = (pair[0], pair[1]);
+        if !(0..=max_run).contains(&run) {
+            return Err(SdmmError::CorruptArtifact(format!(
+                "RLE run {run} outside the {run_bits}-bit field"
+            )));
+        }
         for _ in 0..run {
             out.push(0);
         }
@@ -97,7 +118,7 @@ pub fn rle_decode_sparse(symbols: &[i64], run_bits: u32, len: usize) -> Vec<i64>
     }
     // A trailing (run, 0) pads exactly to len; trim defensively.
     out.truncate(len);
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -132,7 +153,7 @@ mod tests {
         let ws: Vec<i64> = (0..5000).map(|_| rng.laplace(8.0).round() as i64).collect();
         let pruned = prune_magnitude(&ws, 0.85).pruned;
         let (sym, _) = rle_encode_sparse(&pruned, 4, 8);
-        let back = rle_decode_sparse(&sym, 4, pruned.len());
+        let back = rle_decode_sparse(&sym, 4, pruned.len()).unwrap();
         assert_eq!(back, pruned);
     }
 
@@ -142,7 +163,27 @@ mod tests {
         s.push(7);
         s.extend(vec![0i64; 40]);
         let (sym, _) = rle_encode_sparse(&s, 4, 8);
-        assert_eq!(rle_decode_sparse(&sym, 4, s.len()), s);
+        assert_eq!(rle_decode_sparse(&sym, 4, s.len()).unwrap(), s);
+    }
+
+    #[test]
+    fn rle_truncation_is_typed_not_a_panic() {
+        let mut s = vec![0i64; 40];
+        s.push(9);
+        s.extend(vec![0i64; 40]);
+        s.push(-3);
+        let (sym, _) = rle_encode_sparse(&s, 4, 8);
+        // drop the final pair: the decoder must refuse, not expect()-panic
+        let err = rle_decode_sparse(&sym[..sym.len() - 2], 4, s.len()).unwrap_err();
+        assert!(matches!(err, crate::error::SdmmError::CorruptArtifact(_)), "{err}");
+        // a dangling run with no value is refused too
+        let err = rle_decode_sparse(&sym[..sym.len() - 1], 4, s.len()).unwrap_err();
+        assert!(matches!(err, crate::error::SdmmError::CorruptArtifact(_)), "{err}");
+        // an impossible run value is refused
+        assert!(matches!(
+            rle_decode_sparse(&[99, 0], 4, 5),
+            Err(crate::error::SdmmError::CorruptArtifact(_))
+        ));
     }
 
     #[test]
@@ -159,6 +200,6 @@ mod tests {
     fn all_zero_stream() {
         let s = vec![0i64; 33];
         let (sym, _) = rle_encode_sparse(&s, 4, 8);
-        assert_eq!(rle_decode_sparse(&sym, 4, 33), s);
+        assert_eq!(rle_decode_sparse(&sym, 4, 33).unwrap(), s);
     }
 }

@@ -10,8 +10,9 @@
 
 use crate::cnn::quant::{quantize_symmetric, QuantParams};
 use crate::cnn::zoo::ConvLayer;
-use crate::packing::{fine_tune_stream, Layout, PackedPlane, Wrom, WromIndexStream};
+use crate::compress::CompressionRate;
 use crate::error::Result;
+use crate::packing::{fine_tune_stream, Layout, PackedPlane, Wrom, WromIndexStream};
 
 /// Pipeline mode: the paper's approximation (fixed 3-bit MW) or exact
 /// manipulation with fine-tuning (the ablation baseline).
@@ -71,10 +72,11 @@ pub struct PackingReport {
     pub wrom_bits: u64,
     /// Fixed off-chip index width per weight group (WRC format).
     pub index_bits_per_group: u32,
-    /// Off-chip footprint of the raw quantized weights (bits).
-    pub original_bits: u64,
-    /// Off-chip footprint of the index stream (bits).
-    pub compressed_bits: u64,
+    /// Off-chip index stream vs raw quantized weights — the shared
+    /// [`compress::CompressionRate`](crate::compress::CompressionRate)
+    /// accounting every compression consumer uses (no hand-rolled
+    /// percentages).
+    pub rate: CompressionRate,
     /// Exact mode only: tuples altered by fine-tuning.
     pub tuned_tuples: u64,
     /// Total packed tuples across all layers.
@@ -83,9 +85,9 @@ pub struct PackingReport {
 
 impl PackingReport {
     /// Compressed size as a percentage of the original (WRC: 66.7 % at
-    /// 8-bit).
+    /// 8-bit) — delegates to [`CompressionRate::percent`].
     pub fn compression_percent(&self) -> f64 {
-        self.compressed_bits as f64 / self.original_bits as f64 * 100.0
+        self.rate.percent()
     }
 }
 
@@ -161,8 +163,10 @@ impl PackedNetwork {
             wrom_entries: self.wrom.len(),
             wrom_bits: self.wrom.rom_bits(),
             index_bits_per_group: self.wrom.index_bits_fixed(),
-            original_bits: total_weights as u64 * c,
-            compressed_bits: total_tuples * self.wrom.index_bits_fixed() as u64,
+            rate: crate::compress::rate(
+                total_tuples * self.wrom.index_bits_fixed() as u64,
+                total_weights as u64 * c,
+            ),
             tuned_tuples: self.tuned_tuples,
             total_tuples,
         }

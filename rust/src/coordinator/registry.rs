@@ -256,6 +256,23 @@ impl ModelRegistry {
         Ok(model)
     }
 
+    /// Cold-load admission: read a compiled-model artifact
+    /// (`sdmm-model.bin` + manifest, written by
+    /// [`CompiledModel::save`](crate::api::CompiledModel::save)) and
+    /// admit it. The index streams decode straight into WROM-backed
+    /// planes ([`Wrom::decode_group`](crate::packing::Wrom::decode_group))
+    /// — *nothing is repacked or re-approximated* — so a served
+    /// cold-loaded model is bit-exact with the in-process-compiled one
+    /// (`tests/artifact_roundtrip.rs`), and admission cost is decode +
+    /// map insert rather than a full recompile.
+    pub fn register_from_artifact(
+        &self,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Arc<RegisteredModel>> {
+        let compiled = crate::runtime::store::load_model(dir.as_ref())?;
+        self.register_compiled(&compiled)
+    }
+
     /// Look up a model by key.
     pub fn get(&self, key: &ModelKey) -> Option<Arc<RegisteredModel>> {
         self.inner.read().unwrap().models.get(key).cloned()

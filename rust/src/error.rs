@@ -84,6 +84,11 @@ pub enum SdmmError {
     /// A configuration value is out of range (shard counts, queue
     /// capacities, DSP group sizes).
     InvalidConfig(String),
+    /// A serialized model artifact or compressed stream failed
+    /// validation (bad magic, checksum mismatch, truncated payload,
+    /// out-of-range WROM address, impossible Huffman code) — the
+    /// cold-load path refuses it with this instead of panicking.
+    CorruptArtifact(String),
     /// The serving admission layer refused the request.
     Admission(AdmitError),
     /// An underlying I/O operation failed.
@@ -157,6 +162,7 @@ impl std::fmt::Display for SdmmError {
             SdmmError::UnsupportedBackend(m) => write!(f, "unsupported backend: {m}"),
             SdmmError::InvalidModel(m) => write!(f, "invalid model: {m}"),
             SdmmError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            SdmmError::CorruptArtifact(m) => write!(f, "corrupt artifact: {m}"),
             SdmmError::Admission(e) => write!(f, "admission refused: {e}"),
             SdmmError::Io(e) => write!(f, "i/o: {e}"),
             SdmmError::Parse(m) => write!(f, "parse: {m}"),

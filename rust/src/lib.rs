@@ -20,6 +20,16 @@
 //!   models from shared packed-weight caches
 //!   ([`coordinator::ModelRegistry`]) across N systolic shards.
 //!
+//! Compiled models are deployable: the pipeline's
+//! [`compress`](api::Compiler::compress) stage fixes a
+//! [`CompressionPolicy`](api::CompressionPolicy) (the paper's WRC /
+//! `WRC+H` / `P+WRC+H` off-chip formats, Table 3),
+//! [`CompiledModel::save`](api::CompiledModel::save) persists the
+//! versioned `sdmm-model.bin` artifact, and
+//! [`ModelRegistry::register_from_artifact`](coordinator::ModelRegistry::register_from_artifact)
+//! cold-loads it — index streams decode straight into WROM-backed
+//! planes, bit-exact, with nothing repacked (DESIGN.md §8).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduced paper tables/figures.
 //!

@@ -5,12 +5,18 @@
 //! ```text
 //! sdmm manip <value> [--bits N]         decompose/approximate one value
 //! sdmm pack <w1,w2,..> [--bits N] [--mode approx|exact]  pack a tuple, show A/C words
+//! sdmm compile [--bits N] [--policy none|wrc|wrc-huffman|prune-wrc-huffman]
+//!            [--out DIR] [--sparsity F] [--seed S]
+//!            compile a demo CNN under a compression policy, write the
+//!            sdmm-model.bin artifact, reload it and verify bit-exactness
 //! sdmm report <table1..table6|fig4|fig7|fig9|fig10|rom|all> [--artifacts DIR]
 //! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
 //!            [--bits N] [--artifacts DIR]     batched PJRT serving demo
 //! sdmm serve-sim [--shards N] [--requests N] [--concurrency C]
+//!            [--from-artifact DIR]
 //!            sharded multi-model serving demo on the simulator backend
-//!            (mixed 8/6/4-bit registry; no artifacts or PJRT needed)
+//!            (mixed 8/6/4-bit registry; with --from-artifact the model
+//!            cold-loads from a compiled artifact — no repacking)
 //! sdmm sim [--bits N] [--arch 1m|2m|mp]       systolic-array estimates
 //! ```
 
@@ -88,6 +94,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "manip" => cmd_manip(&args),
         "pack" => cmd_pack(&args),
+        "compile" => cmd_compile(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "serve-sim" => cmd_serve_sim(&args),
@@ -107,10 +114,12 @@ fn print_usage() {
          usage:\n\
          sdmm manip <value> [--bits N]\n\
          sdmm pack <w1,w2,...> [--bits N] [--mode approx|exact]\n\
+         sdmm compile [--bits N] [--policy none|wrc|wrc-huffman|prune-wrc-huffman]\n\
+         \x20            [--out DIR] [--sparsity F] [--seed S]\n\
          sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
-         sdmm serve-sim [--shards N] [--requests N] [--concurrency C]\n\
+         sdmm serve-sim [--shards N] [--requests N] [--concurrency C] [--from-artifact DIR]\n\
          sdmm sim [--bits N] [--arch 1m|2m|mp]"
     );
 }
@@ -183,6 +192,97 @@ fn cmd_pack(args: &Args) -> Result<()> {
         "products for I={example_inputs:?}: {:?}",
         engine.execute(&tuple, &example_inputs)
     );
+    Ok(())
+}
+
+/// Compile a demo CNN (Laplacian "trained-net" weights) under a
+/// compression policy, persist the artifact, then reload and prove the
+/// round trip bit-exact — the whole deployment story in one verb:
+/// compile once, ship the paper's compressed representation, serve from
+/// it (`serve-sim --from-artifact`).
+fn cmd_compile(args: &Args) -> Result<()> {
+    use sdmm::api::{BatchExec, CompiledModel, CompressionPolicy, Executor};
+    use sdmm::cnn::infer::Tensor3;
+    use sdmm::cnn::zoo::ConvLayer;
+    use sdmm::util::rng::Rng;
+
+    let bits = args.flag_u32("bits", 8)?;
+    let policy = CompressionPolicy::parse(&args.flag("policy", "wrc"))?;
+    let out = args.flag("out", "sdmm-artifact");
+    let sparsity: f64 = args.flag("sparsity", "0.65").parse()?;
+    let seed = args.flag_usize("seed", 42)? as u64;
+
+    // Resolve the layout first: an unsupported --bits value must be the
+    // typed UnsupportedBitWidth refusal, not a shift panic below.
+    let compiler = Compiler::for_bits(bits)?
+        .approximate(ApproxPolicy::nearest())
+        .compress(policy)
+        .with_prune_sparsity(sparsity)?;
+
+    // Demo network; out_ch = 12 is a whole number of DSP groups at
+    // every bit width (3/4/6), so the WRC rate shows the exact
+    // guarantee. Laplacian weights match the trained-net regime the
+    // Huffman columns assume (report::table3 uses the same recipe).
+    let layers = vec![
+        ConvLayer::new("c1", 12, 6, 12, 3, 1, 1, 1),
+        ConvLayer::new("c2", 12, 12, 12, 3, 1, 1, 1),
+    ];
+    let lim = (1i64 << (bits - 1)) - 1;
+    let b = (lim as f64 / 25.0).max(0.6);
+    let mut rng = Rng::new(seed);
+    let weights: Vec<Vec<i64>> = layers
+        .iter()
+        .map(|l| {
+            (0..l.params())
+                .map(|_| rng.laplace(b).round().clamp(-(lim + 1) as f64, lim as f64) as i64)
+                .collect()
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let model = compiler.pack_model("demo", &layers, &weights)?;
+    println!(
+        "compiled demo@{bits}b under {policy} in {:.1} ms ({} tuples, worst layer MSE {:.3} LSB^2)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        model.cached_tuples(),
+        model.worst_layer_mse()
+    );
+    for (i, cl) in model.layers.iter().enumerate() {
+        if let Some(cp) = &cl.compressed {
+            println!(
+                "  layer {i} ({}): {} groups ({} stored), off-chip {}",
+                cl.layer.name,
+                cp.groups(),
+                cp.stored_groups,
+                cp.rate
+            );
+        }
+    }
+
+    let info = model.save(&out)?;
+    println!(
+        "wrote {} ({} bytes, {} WROM entries) + {}",
+        info.bin_path.display(),
+        info.bytes,
+        info.wrom_entries,
+        info.manifest_path.display()
+    );
+    if let Some(rate) = info.rate {
+        println!("off-chip parameter stream: {rate} of raw (paper Table 3 accounting)");
+    }
+
+    // Reload and verify: the cold-loaded model must run bit-exact.
+    let loaded = CompiledModel::load(&out)?;
+    let (c, h, w) = model.input_shape();
+    let mut input = Tensor3::zeros(c, h, w);
+    let ilim = 1i64 << (bits - 1);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-ilim, ilim - 1)).collect();
+    let a = BatchExec::new().run(&model, &input)?;
+    let b2 = BatchExec::new().run(&loaded, &input)?;
+    if a.output != b2.output || (a.dsp_ops, a.mults) != (b2.dsp_ops, b2.mults) {
+        bail!("round-trip mismatch: loaded artifact diverged from the in-memory model");
+    }
+    println!("round-trip OK: save -> load -> run is bit-exact ({policy})");
     Ok(())
 }
 
@@ -284,10 +384,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the same small CNN at 8, 6 and 4 bits, then push a closed loop of
 /// mixed-precision traffic through `ServingRuntime` and print the
 /// per-shard summary. Runs everywhere (no artifacts, no PJRT).
+///
+/// With `--from-artifact DIR` the registry instead cold-loads a
+/// compiled-model artifact (`sdmm compile`): index streams decode
+/// straight into WROM-backed planes — no repacking, no refinetuning —
+/// and the loaded model serves the whole run.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     use sdmm::cnn::infer::Tensor3;
     use sdmm::cnn::zoo::ConvLayer;
-    use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
+    use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec};
     use sdmm::util::rng::Rng;
     use std::sync::Arc;
 
@@ -297,6 +402,26 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 
     let registry = Arc::new(ModelRegistry::new());
     let mut work: Vec<(ModelKey, Tensor3)> = Vec::new();
+    if let Some(dir) = args.flags.get("from-artifact") {
+        let t0 = Instant::now();
+        let model = registry.register_from_artifact(dir)?;
+        println!(
+            "cold-loaded {} from {dir} in {:.1} ms ({} tuples decoded from the WROM stream, \
+             zero repacking)",
+            model.key,
+            t0.elapsed().as_secs_f64() * 1e3,
+            model.cached_tuples()
+        );
+        let (c, h, w) = model.input_shape();
+        let lim = 1i64 << (model.key.v_bits - 1);
+        let mut rng = Rng::new(601);
+        let mut input = Tensor3::zeros(c, h, w);
+        input.data = (0..input.data.len())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        work.push((model.key.clone(), input));
+        return serve_sim_loop(registry, work, shards, requests, concurrency);
+    }
     for v in [8u32, 6, 4] {
         let layers = vec![
             ConvLayer::new("c1", 12, 8, 16, 3, 1, 1, 1),
@@ -330,6 +455,20 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         registry.len(),
         registry.total_cached_tuples()
     );
+    serve_sim_loop(registry, work, shards, requests, concurrency)
+}
+
+/// The closed-loop serving drive shared by both `serve-sim` admission
+/// paths (in-process compile and artifact cold-load).
+fn serve_sim_loop(
+    registry: std::sync::Arc<sdmm::coordinator::ModelRegistry>,
+    work: Vec<(sdmm::coordinator::ModelKey, sdmm::cnn::infer::Tensor3)>,
+    shards: usize,
+    requests: usize,
+    concurrency: usize,
+) -> Result<()> {
+    use sdmm::coordinator::{ServingConfig, ServingRuntime};
+    use std::sync::Arc;
 
     let rt = ServingRuntime::start(
         Arc::clone(&registry),

@@ -20,6 +20,7 @@
 
 use super::layout::Layout;
 use super::tuple::{pack_approx, PackedTuple};
+use super::wrom::{Wrom, WromIndexStream};
 use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
 use crate::dsp::{BatchEngine, BatchLanes, PreparedTuple, SdmmEngine};
@@ -177,6 +178,147 @@ impl PackedPlane {
                     tuples_per_tap,
                 });
                 oc_rel += gg;
+            }
+        }
+        Ok(PackedPlane {
+            layout: layout.clone(),
+            group,
+            taps,
+            tiles,
+        })
+    }
+
+    /// Compress this plane into its off-chip form: the plane's tuples in
+    /// canonical order (tile-major, tap-major, `kw`-chunk), regrouped
+    /// into paper-sized weight groups and interned into `wrom` — the
+    /// WRC representation a model artifact stores (`runtime::store`).
+    /// The exact inverse is [`from_index_stream`](Self::from_index_stream).
+    ///
+    /// The approximation is idempotent, so interning the plane's
+    /// *effective* weights reproduces the plane's own slots bit-exactly;
+    /// the stream's tail group is zero-padded when the tuple count is
+    /// not a whole number of groups.
+    pub fn to_index_stream(&self, wrom: &mut Wrom) -> Result<WromIndexStream> {
+        if wrom.layout != self.layout {
+            return Err(SdmmError::InvalidConfig(format!(
+                "WROM packed for {}-bit operands, plane for {}-bit",
+                wrom.layout.v, self.layout.v
+            )));
+        }
+        let kw = self.layout.kw();
+        let mut values = Vec::with_capacity(self.total_tuples() * kw);
+        for tile in &self.tiles {
+            for tuple in &tile.tuples {
+                values.extend(tuple.values());
+            }
+        }
+        wrom.compress_stream(&values)
+    }
+
+    /// Rebuild a plane from its off-chip index stream — the cold-load
+    /// path: every tuple is decoded straight from the WROM entry table
+    /// ([`Wrom::decode_group`]), *no weight is re-approximated or
+    /// re-packed*. Bit-exact inverse of
+    /// [`to_index_stream`](Self::to_index_stream) for a plane built at
+    /// the same layout and group size.
+    pub fn from_index_stream(
+        layout: &Layout,
+        group: usize,
+        layer: &ConvLayer,
+        wrom: &Wrom,
+        stream: &WromIndexStream,
+    ) -> Result<PackedPlane> {
+        if wrom.layout != *layout {
+            return Err(SdmmError::InvalidConfig(format!(
+                "WROM packed for {}-bit operands, plane load expects {}-bit",
+                wrom.layout.v, layout.v
+            )));
+        }
+        let per_group = wrom.group_size / layout.kw();
+        let mut tuples = Vec::with_capacity(stream.tuples.len() * per_group);
+        for &(addr, signs) in &stream.tuples {
+            tuples.extend(wrom.decode_group(addr, signs)?);
+        }
+        Self::from_tuples(layout, group, layer, tuples)
+    }
+
+    /// Tuples a plane of this geometry holds (the tile walk of
+    /// [`build`](Self::build) in count form) — the one place the
+    /// expected stream length is defined; the artifact reader uses it
+    /// to pin group counts before any allocation.
+    pub fn expected_tuple_count(layout: &Layout, group: usize, layer: &ConvLayer) -> usize {
+        let icg = layer.in_ch / layer.groups;
+        let ocg = layer.out_ch / layer.groups;
+        let taps = icg * layer.kernel * layer.kernel;
+        let kw = layout.kw();
+        let mut per_group = 0usize;
+        let mut oc_rel = 0;
+        while oc_rel < ocg {
+            let gg = group.min(ocg - oc_rel);
+            per_group += taps * gg.div_ceil(kw);
+            oc_rel += gg;
+        }
+        per_group * layer.groups
+    }
+
+    /// Assemble a plane from pre-decoded tuples in canonical order (the
+    /// tail may carry stream-padding zero tuples, which are validated
+    /// and dropped). Geometry mismatches — too few tuples for the
+    /// layer, or non-zero spill beyond it — are typed
+    /// [`SdmmError::CorruptArtifact`] refusals.
+    pub fn from_tuples(
+        layout: &Layout,
+        group: usize,
+        layer: &ConvLayer,
+        tuples: Vec<PackedTuple>,
+    ) -> Result<PackedPlane> {
+        if group == 0 {
+            return Err(SdmmError::InvalidConfig(
+                "DSP group size must be positive".into(),
+            ));
+        }
+        let icg = layer.in_ch / layer.groups;
+        let ocg = layer.out_ch / layer.groups;
+        let k = layer.kernel;
+        let kw = layout.kw();
+        let taps = icg * k * k;
+        let mut tiles = Vec::new();
+        let mut it = tuples.into_iter();
+        for grp in 0..layer.groups {
+            let mut oc_rel = 0;
+            while oc_rel < ocg {
+                let gg = group.min(ocg - oc_rel);
+                let tuples_per_tap = gg.div_ceil(kw);
+                let want = taps * tuples_per_tap;
+                let tile_tuples: Vec<PackedTuple> = it.by_ref().take(want).collect();
+                if tile_tuples.len() != want {
+                    return Err(SdmmError::CorruptArtifact(format!(
+                        "index stream too short for layer {:?}: tile at channel {} needs \
+                         {want} tuples, got {}",
+                        layer.name,
+                        grp * ocg + oc_rel,
+                        tile_tuples.len()
+                    )));
+                }
+                let prepared = tile_tuples.iter().map(PreparedTuple::prepare).collect();
+                tiles.push(PlaneTile {
+                    grp,
+                    oc0: grp * ocg + oc_rel,
+                    gg,
+                    tuples: tile_tuples,
+                    prepared,
+                    tuples_per_tap,
+                });
+                oc_rel += gg;
+            }
+        }
+        // Whatever remains must be the stream's tail-group zero padding.
+        for tuple in it {
+            if tuple.slots.iter().any(|s| !s.zero) {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "index stream longer than layer {:?} geometry (non-zero spill)",
+                    layer.name
+                )));
             }
         }
         Ok(PackedPlane {
@@ -517,6 +659,57 @@ mod tests {
         let layer1 = ConvLayer::new("t1", 6, 4, 7, 1, 1, 0, 1); // 1x1 kernel
         let input = Tensor3::zeros(layer1.in_ch, layer1.in_hw, layer1.in_hw);
         let _ = plane.execute_conv(&input, &layer1);
+    }
+
+    #[test]
+    fn index_stream_round_trip_is_bit_exact() {
+        for (v, group) in [(8u32, 3usize), (6, 4), (4, 6)] {
+            let l = Layout::for_bits(v).unwrap();
+            // 7 output channels: forces a partial tail tile (gg < group)
+            let layer = ConvLayer::new("t", 6, 4, 7, 3, 1, 1, 1);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(60 + v as u64);
+            let w: Vec<i64> =
+                (0..layer.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+            let plane = PackedPlane::build(&l, group, &w, &layer).unwrap();
+            // the count helper and the build walk agree by construction
+            assert_eq!(
+                PackedPlane::expected_tuple_count(&l, group, &layer),
+                plane.total_tuples()
+            );
+            let mut wrom = Wrom::new(l.clone());
+            let stream = plane.to_index_stream(&mut wrom).unwrap();
+            let back =
+                PackedPlane::from_index_stream(&l, group, &layer, &wrom, &stream).unwrap();
+            assert_eq!(back.taps, plane.taps);
+            assert_eq!(back.tiles.len(), plane.tiles.len());
+            for (a, b) in plane.tiles.iter().zip(&back.tiles) {
+                assert_eq!(a.tuples, b.tuples, "v={v}");
+                assert_eq!((a.grp, a.oc0, a.gg, a.tuples_per_tap), (b.grp, b.oc0, b.gg, b.tuples_per_tap));
+                assert_eq!(a.prepared.len(), b.prepared.len());
+            }
+            assert_eq!(back.effective_weights(&layer), plane.effective_weights(&layer));
+        }
+    }
+
+    #[test]
+    fn from_index_stream_rejects_wrong_geometry() {
+        let l = Layout::for_bits(8).unwrap();
+        let layer = layer();
+        let mut rng = Rng::new(61);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let plane = PackedPlane::build(&l, 3, &w, &layer).unwrap();
+        let mut wrom = Wrom::new(l.clone());
+        let mut stream = plane.to_index_stream(&mut wrom).unwrap();
+        // too short: drop the second half of the groups
+        stream.tuples.truncate(stream.tuples.len() / 2);
+        assert!(matches!(
+            PackedPlane::from_index_stream(&l, 3, &layer, &wrom, &stream),
+            Err(SdmmError::CorruptArtifact(_))
+        ));
+        // bit-width mismatch between plane layout and WROM is refused
+        let l6 = Layout::for_bits(6).unwrap();
+        assert!(PackedPlane::from_index_stream(&l6, 4, &layer, &wrom, &stream).is_err());
     }
 
     #[test]

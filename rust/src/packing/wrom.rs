@@ -18,10 +18,26 @@
 //! A-words (kw = 2 weight slots each — the multi-input layouts,
 //! DESIGN.md §3) that the PE consumes over consecutive B-word batches.
 
-use super::layout::Layout;
+use super::layout::{Layout, MW_A_BITS};
 use super::tuple::{pack_approx, PackedTuple, Slot};
 use crate::error::{Result, SdmmError};
 use std::collections::HashMap;
+
+/// The explicit zero slot (paper is silent on 0; the post-processing
+/// gates it) — the form `Slot::from_signed(0, _)` produces, shared by
+/// the decode paths so reconstructed tuples compare equal to packed
+/// ones.
+fn zero_slot() -> Slot {
+    Slot {
+        zero: true,
+        negative: false,
+        mw: 0,
+        mw_width: MW_A_BITS,
+        n: 0,
+        s: 0,
+        magnitude: 0,
+    }
+}
 
 /// The paper's multiplications-per-DSP (= weights per off-chip index
 /// word) for a bit width.
@@ -239,6 +255,142 @@ impl Wrom {
         let d = crate::manip::representable_magnitudes(max_mag).len() as u64 + 1;
         d.pow(paper_group_size(layout.v) as u32)
     }
+
+    /// All interned entries in address order (the model-artifact writer
+    /// serializes exactly this table; addresses are the indices).
+    pub fn entries(&self) -> &[WromEntry] {
+        &self.entries
+    }
+
+    /// Bits per off-chip group index actually needed: the paper's fixed
+    /// format ([`index_bits_fixed`](Self::index_bits_fixed)), widened
+    /// only if the interned entry count has outgrown the paper's
+    /// address space (possible for adversarially uniform weights; real
+    /// networks stay within it, §3.2).
+    pub fn index_bits_actual(&self) -> u32 {
+        self.index_bits_fixed()
+            .max(self.addr_bits() + self.group_size as u32)
+    }
+
+    /// Address of the all-zero magnitude group, if one was interned —
+    /// the artifact's pruned-stream decoder fills RLE-elided groups
+    /// with it.
+    pub fn zero_addr(&self) -> Option<u32> {
+        let zeros = vec![zero_slot(); self.group_size];
+        self.index.get(&group_key(&zeros)).copied()
+    }
+
+    /// Decode one off-chip `(address, sign bits)` group back into its
+    /// packed per-A-word tuples — the PE's decompression path (paper
+    /// Fig. 5), and how the artifact cold-load rebuilds
+    /// [`PackedPlane`](super::PackedPlane)s *without repacking*: slots
+    /// come straight from the ROM entry, signs from the index word, and
+    /// the A word is rebuilt from the layout's fixed MW offsets.
+    ///
+    /// Malformed input (address out of range, sign bits beyond the
+    /// group, a sign on a zero slot) yields a typed
+    /// [`SdmmError::CorruptArtifact`].
+    pub fn decode_group(&self, addr: u32, signs: u32) -> Result<Vec<PackedTuple>> {
+        let entry = self.entries.get(addr as usize).ok_or_else(|| {
+            SdmmError::CorruptArtifact(format!(
+                "WROM address {addr} out of range ({} entries)",
+                self.entries.len()
+            ))
+        })?;
+        if (signs as u64) >> self.group_size != 0 {
+            return Err(SdmmError::CorruptArtifact(format!(
+                "sign bits {signs:#x} exceed the {}-weight group",
+                self.group_size
+            )));
+        }
+        let kw = self.layout.kw();
+        let mut out = Vec::with_capacity(self.group_size / kw);
+        for (ci, chunk) in entry.slots.chunks(kw).enumerate() {
+            let mut slots = Vec::with_capacity(kw);
+            let mut a_word = 0u64;
+            for (j, slot) in chunk.iter().enumerate() {
+                let negative = (signs >> (ci * kw + j)) & 1 == 1;
+                if slot.zero && negative {
+                    return Err(SdmmError::CorruptArtifact(
+                        "sign bit set on a zero weight slot".into(),
+                    ));
+                }
+                slots.push(Slot { negative, ..*slot });
+                a_word |= slot.mw << self.layout.a_offsets[j];
+            }
+            out.push(PackedTuple {
+                layout: self.layout.clone(),
+                slots,
+                a_word,
+                a_offsets: self.layout.a_offsets.clone(),
+                slot_widths: vec![self.layout.slot_width; kw],
+            });
+        }
+        Ok(out)
+    }
+
+    /// Rebuild a ROM from a deserialized entry table (the artifact
+    /// cold-load path). Addresses are preserved (entry `i` keeps
+    /// address `i`); the magnitude-group dedup index is reconstructed.
+    /// Every entry is validated — slot count, `magnitude =
+    /// 2^s(1 + 2^n·MW)` consistency, shift ranges, magnitude-only form
+    /// (no signs), and no duplicate groups — with typed
+    /// [`SdmmError::CorruptArtifact`] refusals.
+    pub fn from_entries(layout: Layout, entries: Vec<WromEntry>) -> Result<Wrom> {
+        let group_size = paper_group_size(layout.v);
+        let kw = layout.kw();
+        let mut index = HashMap::with_capacity(entries.len());
+        for (i, entry) in entries.iter().enumerate() {
+            if entry.slots.len() != group_size {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "WROM entry {i}: {} slots, expected {group_size}",
+                    entry.slots.len()
+                )));
+            }
+            if entry.a_words.len() != group_size / kw {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "WROM entry {i}: {} A words, expected {}",
+                    entry.a_words.len(),
+                    group_size / kw
+                )));
+            }
+            for slot in &entry.slots {
+                if slot.negative {
+                    return Err(SdmmError::CorruptArtifact(format!(
+                        "WROM entry {i} carries a sign (ROM stores magnitudes only)"
+                    )));
+                }
+                if slot.n > 16 || slot.s > 16 || slot.mw > 7 || slot.mw_width != MW_A_BITS {
+                    return Err(SdmmError::CorruptArtifact(format!(
+                        "WROM entry {i}: slot fields out of range (mw={}, n={}, s={})",
+                        slot.mw, slot.n, slot.s
+                    )));
+                }
+                let expect = if slot.zero {
+                    0
+                } else {
+                    (1u64 + (slot.mw << slot.n)) << slot.s
+                };
+                if slot.magnitude != expect || (!slot.zero && expect > 1 << (layout.c - 1)) {
+                    return Err(SdmmError::CorruptArtifact(format!(
+                        "WROM entry {i}: magnitude {} inconsistent with 2^{}(1+2^{}*{})",
+                        slot.magnitude, slot.s, slot.n, slot.mw
+                    )));
+                }
+            }
+            if index.insert(group_key(&entry.slots), i as u32).is_some() {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "WROM entry {i} duplicates an earlier magnitude group"
+                )));
+            }
+        }
+        Ok(Wrom {
+            layout,
+            group_size,
+            entries,
+            index,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -344,6 +496,74 @@ mod tests {
         w.intern(&[1, 2, 3]).unwrap();
         // 25 (one A word) + 3 slots * (2*4 shift bits + 1 zero flag).
         assert_eq!(w.entry(0).bits(&w.layout), 25 + 3 * 9);
+    }
+
+    #[test]
+    fn decode_group_reconstructs_packed_tuples() {
+        for v in [8u32, 6, 4] {
+            let layout = Layout::for_bits(v).unwrap();
+            let mut w = Wrom::new(layout.clone());
+            let lim = 1i64 << (v - 1);
+            let mut rng = crate::util::rng::Rng::new(40 + v as u64);
+            for _ in 0..50 {
+                let ws: Vec<i64> =
+                    (0..w.group_size).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                let (addr, signs, packed) = w.intern(&ws).unwrap();
+                let decoded = w.decode_group(addr, signs).unwrap();
+                assert_eq!(decoded, packed, "v={v} ws={ws:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_group_rejects_garbage() {
+        let mut w = wrom8();
+        let (addr, _, _) = w.intern(&[5, -7, 0]).unwrap();
+        // out-of-range address
+        assert!(w.decode_group(addr + 1, 0).is_err());
+        // sign bits beyond the 3-weight group
+        assert!(w.decode_group(addr, 0b1000).is_err());
+        // sign on the zero slot (slot 2)
+        assert!(w.decode_group(addr, 0b100).is_err());
+        // valid signs decode fine
+        assert!(w.decode_group(addr, 0b011).is_ok());
+    }
+
+    #[test]
+    fn from_entries_round_trips_and_validates() {
+        let mut w = wrom8();
+        let mut rng = crate::util::rng::Rng::new(50);
+        for _ in 0..40 {
+            let ws: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+            w.intern(&ws).unwrap();
+        }
+        let rebuilt = Wrom::from_entries(w.layout.clone(), w.entries().to_vec()).unwrap();
+        assert_eq!(rebuilt.len(), w.len());
+        for addr in 0..w.len() as u32 {
+            assert_eq!(rebuilt.entry(addr), w.entry(addr));
+            assert_eq!(
+                rebuilt.decode_group(addr, 0).unwrap(),
+                w.decode_group(addr, 0).unwrap()
+            );
+        }
+        // duplicate entries are refused
+        let mut dup = w.entries().to_vec();
+        dup.push(dup[0].clone());
+        assert!(Wrom::from_entries(w.layout.clone(), dup).is_err());
+        // inconsistent magnitude is refused
+        let mut bad = w.entries().to_vec();
+        bad[0].slots[0].magnitude = bad[0].slots[0].magnitude.wrapping_add(1);
+        assert!(Wrom::from_entries(w.layout.clone(), bad).is_err());
+    }
+
+    #[test]
+    fn zero_addr_found_after_interning_zero_group() {
+        let mut w = wrom8();
+        assert!(w.zero_addr().is_none());
+        w.intern(&[3, -4, 5]).unwrap();
+        let (za, signs, _) = w.intern(&[0, 0, 0]).unwrap();
+        assert_eq!(signs, 0);
+        assert_eq!(w.zero_addr(), Some(za));
     }
 
     #[test]

@@ -180,6 +180,17 @@ pub fn table3() -> String {
             );
         }
     }
+    // The same CompressionRate accounting backs the deployable path:
+    // `sdmm compile --policy wrc|wrc-huffman|prune-wrc-huffman` stores
+    // exactly these streams in a model artifact (DESIGN.md §8).
+    let guaranteed = [8u32, 6, 4]
+        .map(|b| {
+            let wrom = Wrom::new(Layout::for_bits(b).unwrap());
+            let raw_bits = wrom.group_size as u64 * wrom.layout.c as u64;
+            format!("{b}b {}", crate::compress::rate(wrom.index_bits_fixed() as u64, raw_bits))
+        })
+        .join("  ");
+    let _ = writeln!(s, "guaranteed WRC formats: {guaranteed}");
     s
 }
 

@@ -1,5 +1,12 @@
-//! Artifact reader: manifest.json + weights.bin (the custom binary
-//! format written by python/compile/aot.py::BinWriter).
+//! Float-tensor artifact reader: manifest.json + weights.bin (the
+//! custom binary format written by python/compile/aot.py::BinWriter).
+//!
+//! This is the *import frontend* — raw f32/i32 tensors from the Python
+//! AOT path, consumed by the PJRT runtime and by anything that wants to
+//! quantize-and-compile a trained network. The SDMM-native compiled
+//! form (packed planes + compressed index streams) is the separate
+//! [`store`](crate::runtime::store) format, which serves without
+//! repacking.
 
 use crate::util::json::Json;
 use crate::bail;

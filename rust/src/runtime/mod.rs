@@ -2,7 +2,14 @@
 //! (HLO text + weights + manifest) and execute them from the Rust hot
 //! path. Python never runs at serve time.
 //!
-//! * [`Artifacts`] — the manifest + weights reader.
+//! * [`Artifacts`] — the float/quantized manifest + weights reader
+//!   (the *import frontend*: raw tensors produced by the Python AOT
+//!   path, before any SDMM compilation).
+//! * [`store`] — the SDMM-native compiled-model artifact
+//!   (`sdmm-model.bin` + manifest, DESIGN.md §8): WROM entry table +
+//!   per-layer compressed index streams, written by
+//!   `CompiledModel::save` and cold-loaded without repacking by
+//!   `CompiledModel::load` / `ModelRegistry::register_from_artifact`.
 //! * [`Executable`] — one compiled HLO module on the CPU PJRT client.
 //! * [`CnnModel`] — the serving wrapper: weights pre-staged, batched
 //!   `infer()`; quantize/approximate weight transforms for the Table 2
@@ -22,10 +29,12 @@
 pub mod artifacts;
 pub mod exec;
 pub mod model;
+pub mod store;
 
 pub use artifacts::{Artifacts, TensorEntry};
 pub use exec::Executable;
 pub use model::{CnnModel, WeightMode};
+pub use store::{load_model, save_model, ArtifactInfo};
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";

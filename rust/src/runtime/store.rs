@@ -1,0 +1,988 @@
+//! The versioned compiled-model artifact format: `sdmm-model.bin` +
+//! `manifest.json` (DESIGN.md §8).
+//!
+//! This is the paper's off-chip representation made durable: the
+//! artifact stores the model-wide WROM entry table (the on-chip
+//! dictionary, §4) plus each layer's index stream in the form the
+//! compile pipeline's [`CompressionPolicy`] selected — fixed-width
+//! `{address, signs}` words (WRC), a Huffman-coded address stream
+//! (`WRC + H`), or a zero-group RLE map over a pruned stream
+//! (`P + WRC + H`). Loading decodes index streams straight into
+//! WROM-backed [`PackedPlane`]s through [`Wrom::decode_group`] —
+//! *no weight is re-approximated or re-packed* — so
+//! `save → load → run` is bit-exact with the in-memory compiled model
+//! (asserted by `tests/artifact_roundtrip.rs`).
+//!
+//! The reader is a validating streaming parse: a FNV-1a checksum
+//! footer gates the whole file, then every field is bounds- and
+//! consistency-checked, so truncation, bit flips and fabricated
+//! headers degrade into typed [`SdmmError::CorruptArtifact`] refusals
+//! — never a panic and never an over-allocation.
+//!
+//! Not stored: per-layer approximation `ErrorStats` (a compile-time
+//! report over the original weights — loaded models carry empty
+//! stats, like a `skip_stats` compile; see `CompiledModel::load`).
+//!
+//! Binary layout (little-endian scalars, MSB-first bit-packed
+//! streams):
+//!
+//! ```text
+//! magic "SDMM" | version u16 | policy u8 | reserved u8
+//! v_bits u8 | c_bits u8 | group u16 | name (u16 len + utf8) | layers u32
+//! [policy != none]  WROM: group_size u8, addr_bits u8, entries u32,
+//!                   then per entry group_size x (zero u8, mw u8, n u8, s u8)
+//! per layer:        name, 7 x u32 geometry, weight_count u64, payload
+//!   none:           weight_count x i32 effective weights
+//!   wrc:            groups u32, bit-packed (addr:addr_bits, signs:group_size)
+//!   wrc+h:          groups u32, book, addr bits u64 + bytes, sign bitstream
+//!   p+wrc+h:        groups u32, RLE pairs u32 + 5-bit pairs, nz u32,
+//!                   book, addr bits u64 + bytes, nz sign bitstream
+//! footer:           fnv1a64 u64 over everything before it
+//! ```
+
+use crate::api::{CompiledLayer, CompiledModel};
+use crate::cnn::zoo::ConvLayer;
+use crate::compress::{
+    huffman_decode, huffman_encode_with, rle_decode_sparse, CompressedPlane, CompressionPolicy,
+    CompressionRate, HuffmanCode,
+};
+use crate::error::{Context, Result, SdmmError};
+use crate::manip::approximation_error_table;
+use crate::packing::layout::MW_A_BITS;
+use crate::packing::wrom::paper_group_size;
+use crate::packing::{Layout, PackedPlane, Slot, Wrom, WromEntry, WromIndexStream};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// File name of the binary inside an artifact directory.
+pub const BIN_NAME: &str = "sdmm-model.bin";
+/// File name of the manifest inside an artifact directory.
+pub const MANIFEST_NAME: &str = "manifest.json";
+
+const MAGIC: &[u8; 4] = b"SDMM";
+const VERSION: u16 = 1;
+
+/// Summary of one written artifact (returned by
+/// [`CompiledModel::save`]).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// Path of the written binary (`sdmm-model.bin`).
+    pub bin_path: PathBuf,
+    /// Path of the written manifest (`manifest.json`).
+    pub manifest_path: PathBuf,
+    /// Binary size in bytes (header + WROM table + streams + footer).
+    pub bytes: u64,
+    /// WROM entries serialized (0 under [`CompressionPolicy::None`]).
+    pub wrom_entries: usize,
+    /// Aggregate off-chip stream rate across layers (`None` under
+    /// [`CompressionPolicy::None`]).
+    pub rate: Option<CompressionRate>,
+}
+
+fn corrupt(m: impl Into<String>) -> SdmmError {
+    SdmmError::CorruptArtifact(m.into())
+}
+
+/// FNV-1a 64 over a byte slice (the artifact's integrity footer; no
+/// hashing crates in the vendored set).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Intern a layer name as `&'static str`. `ConvLayer::name` is a
+/// static string (the zoo is const-built); loaded artifacts leak each
+/// *distinct* name exactly once, so repeated cold-loads of the same
+/// model cost nothing.
+fn intern_name(s: &str) -> &'static str {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static NAMES: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
+    let mut map = NAMES.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    if let Some(&interned) = map.get(s) {
+        return interned;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    map.insert(s.to_string(), leaked);
+    leaked
+}
+
+// ---- little helpers: scalar emit ----
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    let len = u16::try_from(s.len())
+        .map_err(|_| SdmmError::InvalidModel(format!("name longer than 64 KiB: {s:.32}...")))?;
+    put_u16(buf, len);
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+// ---- MSB-first bit packing (same bit order as the Huffman coder) ----
+
+#[derive(Default)]
+struct BitWriter {
+    bytes: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn push(&mut self, value: u64, bits: u32) {
+        debug_assert!(bits == 64 || value >> bits == 0);
+        for i in (0..bits).rev() {
+            self.acc = (self.acc << 1) | ((value >> i) & 1);
+            self.nbits += 1;
+            if self.nbits == 8 {
+                self.bytes.push(self.acc as u8);
+                self.acc = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.bytes.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        self.bytes
+    }
+}
+
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    fn read(&mut self, bits: u32) -> Result<u64> {
+        let end = self
+            .pos
+            .checked_add(bits as usize)
+            .ok_or_else(|| corrupt("bitstream position overflow"))?;
+        if end > self.bytes.len() * 8 {
+            return Err(corrupt("bitstream truncated"));
+        }
+        let mut v = 0u64;
+        for _ in 0..bits {
+            v = (v << 1) | ((self.bytes[self.pos / 8] >> (7 - self.pos % 8)) & 1) as u64;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+}
+
+// ---- the validating streaming byte reader ----
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| corrupt("length field overflows the artifact"))?;
+        if end > self.buf.len() {
+            return Err(corrupt(format!(
+                "artifact truncated: need {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| corrupt("name is not valid UTF-8"))
+    }
+}
+
+// ---- Huffman code book (canonical: lengths fully determine it) ----
+
+fn write_book(buf: &mut Vec<u8>, book: &HuffmanCode) {
+    let lengths = book.lengths();
+    put_u32(buf, lengths.len() as u32);
+    for (sym, len) in lengths {
+        put_u32(buf, sym as u32);
+        buf.push(len as u8);
+    }
+}
+
+fn read_book(r: &mut Reader<'_>, max_symbol: usize) -> Result<HuffmanCode> {
+    let n = r.u32()? as usize;
+    if n > max_symbol {
+        return Err(corrupt(format!(
+            "Huffman book with {n} symbols for a {max_symbol}-entry address space"
+        )));
+    }
+    let bytes = r.take(n.checked_mul(5).ok_or_else(|| corrupt("book size overflow"))?)?;
+    let mut lengths = Vec::with_capacity(n);
+    for rec in bytes.chunks_exact(5) {
+        let sym = u32::from_le_bytes(rec[..4].try_into().unwrap());
+        let len = rec[4] as u32;
+        if sym as usize >= max_symbol || len == 0 || len > 63 {
+            return Err(corrupt(format!("Huffman book entry (sym {sym}, len {len}) invalid")));
+        }
+        lengths.push((sym as i64, len));
+    }
+    Ok(HuffmanCode::from_lengths(lengths))
+}
+
+// ---- writer ----
+
+/// Serialize a compiled model under `dir` (created if missing) as
+/// `sdmm-model.bin` + `manifest.json`. The preferred entry point is
+/// [`CompiledModel::save`].
+pub fn save_model(model: &CompiledModel, dir: &Path) -> Result<ArtifactInfo> {
+    model.validate_structure()?;
+    // Mirror of the reader's hard bounds, so everything written can be
+    // read back.
+    if model.name.len() > 256 || model.layers.iter().any(|l| l.layer.name.len() > 256) {
+        return Err(SdmmError::InvalidModel(
+            "model/layer names longer than 256 bytes are not serializable".into(),
+        ));
+    }
+    if model.layers.len() > 4096 {
+        return Err(SdmmError::InvalidModel(format!(
+            "{} layers exceed the artifact format's 4096-layer bound",
+            model.layers.len()
+        )));
+    }
+    let layout = &model.layers[0].plane.layout;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u16(&mut buf, VERSION);
+    buf.push(model.compression.tag());
+    buf.push(0);
+    buf.push(layout.v as u8);
+    buf.push(layout.c as u8);
+    let group = u16::try_from(model.group)
+        .map_err(|_| SdmmError::InvalidModel(format!("group size {} too large", model.group)))?;
+    put_u16(&mut buf, group);
+    put_str(&mut buf, &model.name)?;
+    put_u32(&mut buf, model.layers.len() as u32);
+
+    let mut addr_bits = 0u32;
+    if model.compression.compresses() {
+        // validate_structure guaranteed the WROM and per-layer streams.
+        let wrom = model.wrom.as_ref().unwrap();
+        addr_bits = wrom.index_bits_actual() - wrom.group_size as u32;
+        buf.push(wrom.group_size as u8);
+        buf.push(addr_bits as u8);
+        put_u32(&mut buf, wrom.len() as u32);
+        for entry in wrom.entries() {
+            for slot in &entry.slots {
+                if slot.mw > 7 || slot.n > 16 || slot.s > 16 {
+                    return Err(SdmmError::InvalidModel(
+                        "WROM entry is not in 3-bit-MW approximation form".into(),
+                    ));
+                }
+                buf.push(slot.zero as u8);
+                buf.push(slot.mw as u8);
+                buf.push(slot.n as u8);
+                buf.push(slot.s as u8);
+            }
+        }
+    }
+
+    for cl in &model.layers {
+        write_layer(&mut buf, model, cl, addr_bits)?;
+    }
+
+    let checksum = fnv1a64(&buf);
+    put_u64(&mut buf, checksum);
+
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact directory {dir:?}"))?;
+    let bin_path = dir.join(BIN_NAME);
+    std::fs::write(&bin_path, &buf).with_context(|| format!("writing {bin_path:?}"))?;
+    let rate = model.compression_rate();
+    let manifest_path = dir.join(MANIFEST_NAME);
+    std::fs::write(&manifest_path, manifest_text(model, buf.len() as u64, checksum, &rate))
+        .with_context(|| format!("writing {manifest_path:?}"))?;
+    Ok(ArtifactInfo {
+        bin_path,
+        manifest_path,
+        bytes: buf.len() as u64,
+        wrom_entries: model.wrom.as_ref().map_or(0, |w| w.len()),
+        rate,
+    })
+}
+
+fn write_layer(
+    buf: &mut Vec<u8>,
+    model: &CompiledModel,
+    cl: &CompiledLayer,
+    addr_bits: u32,
+) -> Result<()> {
+    let l = &cl.layer;
+    put_str(buf, l.name)?;
+    for dim in [l.in_hw, l.in_ch, l.out_ch, l.kernel, l.stride, l.pad, l.groups] {
+        let v = u32::try_from(dim)
+            .map_err(|_| SdmmError::InvalidModel(format!("layer dimension {dim} too large")))?;
+        put_u32(buf, v);
+    }
+    put_u64(buf, l.params());
+    if model.compression == CompressionPolicy::None {
+        for w in cl.effective_weights() {
+            let v = i32::try_from(w)
+                .map_err(|_| SdmmError::InvalidModel(format!("weight {w} exceeds i32")))?;
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        return Ok(());
+    }
+    let wrom = model.wrom.as_ref().unwrap();
+    let gs = wrom.group_size as u32;
+    let cp = cl.compressed.as_ref().unwrap();
+    put_u32(buf, cp.stream.tuples.len() as u32);
+    // The book and RLE map come straight from the CompressedPlane built
+    // at compile time — the writer serializes them, it never re-derives
+    // them, so the stored payload and the recorded rate agree by
+    // construction. (CompiledLayer fields are public: a hand-assembled
+    // plane missing its parts is a typed refusal, not an unwrap.)
+    let missing =
+        |what: &str| SdmmError::InvalidModel(format!("{} plane without {what}", cp.policy));
+    match model.compression {
+        CompressionPolicy::None => unreachable!("handled above"),
+        CompressionPolicy::Wrc => {
+            let mut bw = BitWriter::default();
+            for &(addr, signs) in &cp.stream.tuples {
+                bw.push(addr as u64, addr_bits);
+                bw.push(signs as u64, gs);
+            }
+            buf.extend_from_slice(&bw.finish());
+        }
+        CompressionPolicy::WrcHuffman => {
+            let book = cp.huffman.as_ref().ok_or_else(|| missing("a Huffman book"))?;
+            let addrs: Vec<i64> = cp.stream.tuples.iter().map(|&(a, _)| a as i64).collect();
+            let (hbytes, hbits) = huffman_encode_with(&addrs, book)?;
+            write_book(buf, book);
+            put_u64(buf, hbits);
+            buf.extend_from_slice(&hbytes);
+            let mut bw = BitWriter::default();
+            for &(_, signs) in &cp.stream.tuples {
+                bw.push(signs as u64, gs);
+            }
+            buf.extend_from_slice(&bw.finish());
+        }
+        CompressionPolicy::PruneWrcHuffman => {
+            let book = cp.huffman.as_ref().ok_or_else(|| missing("a Huffman book"))?;
+            let rle = cp.zero_rle.as_ref().ok_or_else(|| missing("a zero-group RLE map"))?;
+            put_u32(buf, (rle.len() / 2) as u32);
+            let mut bw = BitWriter::default();
+            for pair in rle.chunks_exact(2) {
+                bw.push(pair[0] as u64, 4);
+                bw.push(u64::from(pair[1] != 0), 1);
+            }
+            buf.extend_from_slice(&bw.finish());
+            // Which groups are physically stored is defined by the RLE
+            // map itself (1 = stored) — decode it rather than keeping a
+            // second copy of the zero-group predicate in sync.
+            let indicator = rle_decode_sparse(rle, 4, cp.stream.tuples.len())?;
+            let stored: Vec<(u32, u32)> = cp
+                .stream
+                .tuples
+                .iter()
+                .zip(&indicator)
+                .filter(|&(_, &ind)| ind != 0)
+                .map(|(&t, _)| t)
+                .collect();
+            put_u32(buf, stored.len() as u32);
+            let addrs: Vec<i64> = stored.iter().map(|&(a, _)| a as i64).collect();
+            let (hbytes, hbits) = huffman_encode_with(&addrs, book)?;
+            write_book(buf, book);
+            put_u64(buf, hbits);
+            buf.extend_from_slice(&hbytes);
+            let mut bw = BitWriter::default();
+            for &(_, signs) in &stored {
+                bw.push(signs as u64, gs);
+            }
+            buf.extend_from_slice(&bw.finish());
+        }
+    }
+    Ok(())
+}
+
+/// Render the manifest through `util::json` (proper string escaping,
+/// integer-clean numbers) rather than hand-formatted text.
+fn manifest_text(
+    model: &CompiledModel,
+    bytes: u64,
+    checksum: u64,
+    rate: &Option<CompressionRate>,
+) -> String {
+    let weights: u64 = model.layers.iter().map(|l| l.layer.params()).sum();
+    let (orig, comp, pct) = match rate {
+        Some(r) => (r.original_bits, r.compressed_bits, r.percent()),
+        None => (0, 0, 100.0),
+    };
+    let layout = &model.layers[0].plane.layout;
+    let fields: [(&str, Json); 16] = [
+        ("format", Json::Str("sdmm-model".into())),
+        ("version", Json::Num(VERSION as f64)),
+        ("bin", Json::Str(BIN_NAME.into())),
+        ("name", Json::Str(model.name.clone())),
+        ("v_bits", Json::Num(layout.v as f64)),
+        ("c_bits", Json::Num(layout.c as f64)),
+        ("group", Json::Num(model.group as f64)),
+        ("policy", Json::Str(model.compression.name().into())),
+        ("layers", Json::Num(model.layers.len() as f64)),
+        ("weights", Json::Num(weights as f64)),
+        (
+            "wrom_entries",
+            Json::Num(model.wrom.as_ref().map_or(0, |w| w.len()) as f64),
+        ),
+        ("bytes", Json::Num(bytes as f64)),
+        ("original_bits", Json::Num(orig as f64)),
+        ("compressed_bits", Json::Num(comp as f64)),
+        ("compression_percent", Json::Num(pct)),
+        ("checksum", Json::Str(format!("{checksum:016x}"))),
+    ];
+    let m = fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    let mut out = Json::Obj(m).to_string();
+    out.push('\n');
+    out
+}
+
+// ---- reader ----
+
+/// Load a model artifact from `dir` (the inverse of [`save_model`]).
+/// The preferred entry point is [`CompiledModel::load`].
+pub fn load_model(dir: &Path) -> Result<CompiledModel> {
+    let manifest_path = dir.join(MANIFEST_NAME);
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?}"))?;
+    let manifest = Json::parse(&text).context("artifact manifest parse")?;
+    let format = manifest.get("format").and_then(|j| j.as_str()).unwrap_or("");
+    if format != "sdmm-model" {
+        return Err(corrupt(format!(
+            "manifest format {format:?} is not \"sdmm-model\" (PJRT float artifacts load \
+             through runtime::Artifacts instead)"
+        )));
+    }
+    let bin_name = manifest
+        .get("bin")
+        .and_then(|j| j.as_str())
+        .unwrap_or(BIN_NAME)
+        .to_string();
+    // The manifest is untrusted input: the bin field must stay a plain
+    // file name inside the artifact directory (no path traversal).
+    if bin_name.is_empty() || bin_name.contains(['/', '\\']) || bin_name.contains("..") {
+        return Err(corrupt(format!(
+            "manifest bin {bin_name:?} is not a plain file name"
+        )));
+    }
+    let bin_path = dir.join(&bin_name);
+    let bytes = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path:?}"))?;
+    let (model, checksum) = parse_model(&bytes)?;
+    // Manifest cross-checks: the two files must describe one model.
+    let m_name = manifest.get("name").and_then(|j| j.as_str()).unwrap_or("");
+    let m_policy = manifest.get("policy").and_then(|j| j.as_str()).unwrap_or("");
+    let m_v = manifest.get("v_bits").and_then(|j| j.as_usize()).unwrap_or(0);
+    let m_layers = manifest.get("layers").and_then(|j| j.as_usize()).unwrap_or(0);
+    let m_sum = manifest.get("checksum").and_then(|j| j.as_str()).unwrap_or("");
+    if m_name != model.name
+        || m_policy != model.compression.name()
+        || m_v != model.v_bits as usize
+        || m_layers != model.layers.len()
+    {
+        return Err(corrupt(format!(
+            "manifest disagrees with binary: manifest says {m_name:?}@{m_v}b {m_policy} \
+             x{m_layers}, binary says {:?}@{}b {} x{}",
+            model.name,
+            model.v_bits,
+            model.compression.name(),
+            model.layers.len()
+        )));
+    }
+    if m_sum != format!("{checksum:016x}") {
+        return Err(corrupt("manifest checksum disagrees with binary footer"));
+    }
+    Ok(model)
+}
+
+fn parse_model(bytes: &[u8]) -> Result<(CompiledModel, u64)> {
+    if bytes.len() < 12 {
+        return Err(corrupt(format!("artifact too short ({} bytes)", bytes.len())));
+    }
+    let (body, foot) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(foot.try_into().unwrap());
+    let computed = fnv1a64(body);
+    if stored != computed {
+        return Err(corrupt(format!(
+            "checksum mismatch: footer {stored:016x}, computed {computed:016x} \
+             (truncated or bit-flipped artifact)"
+        )));
+    }
+    let mut r = Reader::new(body);
+    if r.take(4)? != MAGIC {
+        return Err(corrupt("bad magic (not an sdmm-model artifact)"));
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        return Err(corrupt(format!(
+            "artifact version {version} unsupported (this build reads v{VERSION})"
+        )));
+    }
+    let policy = CompressionPolicy::from_tag(r.u8()?)?;
+    let _reserved = r.u8()?;
+    let v_bits = r.u8()? as u32;
+    let c_bits = r.u8()? as u32;
+    let layout = Layout::for_bits_wc(c_bits, v_bits)?;
+    let group = r.u16()? as usize;
+    if group == 0 {
+        return Err(corrupt("zero DSP group size"));
+    }
+    let name = r.string()?;
+    if name.len() > 256 {
+        return Err(corrupt(format!("model name longer than 256 bytes ({})", name.len())));
+    }
+    let layer_count = r.u32()? as usize;
+    if layer_count == 0 || layer_count > 4096 {
+        return Err(corrupt(format!("implausible layer count {layer_count}")));
+    }
+
+    let mut addr_bits = 0u32;
+    let wrom = if policy.compresses() {
+        let gs = r.u8()? as usize;
+        if gs != paper_group_size(v_bits) {
+            return Err(corrupt(format!(
+                "group size {gs} does not match the {v_bits}-bit format's {}",
+                paper_group_size(v_bits)
+            )));
+        }
+        addr_bits = r.u8()? as u32;
+        if addr_bits == 0 || addr_bits > 32 {
+            return Err(corrupt(format!("address width {addr_bits} out of range")));
+        }
+        let entry_count = r.u32()? as usize;
+        // 4 bytes per slot: bounds the allocation via the buffer length.
+        let raw = r.take(
+            entry_count
+                .checked_mul(gs * 4)
+                .ok_or_else(|| corrupt("WROM size overflow"))?,
+        )?;
+        let kw = layout.kw();
+        let mut entries = Vec::with_capacity(entry_count);
+        for rec in raw.chunks_exact(gs * 4) {
+            let mut slots = Vec::with_capacity(gs);
+            for f in rec.chunks_exact(4) {
+                let (zero, mw, n, s) = (f[0], f[1] as u64, f[2] as u32, f[3] as u32);
+                if zero > 1 {
+                    return Err(corrupt("WROM slot flags byte invalid"));
+                }
+                let zero = zero == 1;
+                if zero && (mw != 0 || n != 0 || s != 0) {
+                    return Err(corrupt("WROM zero slot carries shift fields"));
+                }
+                if !zero && (mw > 7 || n > 16 || s > 16) {
+                    return Err(corrupt(format!(
+                        "WROM slot fields out of range (mw={mw}, n={n}, s={s})"
+                    )));
+                }
+                let magnitude = if zero { 0 } else { (1u64 + (mw << n)) << s };
+                slots.push(Slot {
+                    zero,
+                    negative: false,
+                    mw,
+                    mw_width: MW_A_BITS,
+                    n,
+                    s,
+                    magnitude,
+                });
+            }
+            let a_words = slots
+                .chunks(kw)
+                .map(|chunk| {
+                    let mut a = 0u64;
+                    for (j, slot) in chunk.iter().enumerate() {
+                        a |= slot.mw << layout.a_offsets[j];
+                    }
+                    a
+                })
+                .collect();
+            entries.push(WromEntry { a_words, slots });
+        }
+        Some(Wrom::from_entries(layout.clone(), entries)?)
+    } else {
+        None
+    };
+
+    let mut layers = Vec::with_capacity(layer_count.min(1024));
+    for li in 0..layer_count {
+        let lname = r.string()?;
+        // Names are interned as &'static str (a deliberate, deduped
+        // leak) — bound what a hostile artifact can make us keep.
+        if lname.len() > 256 {
+            return Err(corrupt(format!(
+                "layer {li}: name longer than 256 bytes ({})",
+                lname.len()
+            )));
+        }
+        let mut geo = [0usize; 7];
+        for g in geo.iter_mut() {
+            *g = r.u32()? as usize;
+        }
+        let [in_hw, in_ch, out_ch, kernel, stride, pad, groups] = geo;
+        // Per-dimension bounds FIRST: `ConvLayer::params()`/`macs()`
+        // multiply these in u64, so unbounded u32 dims could overflow
+        // (debug panic / release wrap) before the weight-count check.
+        // Bounded as below, params ≤ 2^20·2^20·2^16 = 2^56 — safe.
+        if in_hw > 1 << 16
+            || in_ch > 1 << 20
+            || out_ch > 1 << 20
+            || kernel > 1 << 8
+            || stride > 1 << 8
+            || pad > 1 << 8
+        {
+            return Err(corrupt(format!("layer {li}: implausible conv dimensions {geo:?}")));
+        }
+        if groups == 0
+            || in_ch == 0
+            || out_ch == 0
+            || kernel == 0
+            || stride == 0
+            || in_hw == 0
+            || in_ch % groups != 0
+            || out_ch % groups != 0
+            || in_hw + 2 * pad < kernel
+        {
+            return Err(corrupt(format!("layer {li}: impossible conv geometry {geo:?}")));
+        }
+        let layer = ConvLayer::new(
+            intern_name(&lname),
+            in_hw,
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            pad,
+            groups,
+        );
+        let weight_count = r.u64()?;
+        if weight_count != layer.params() {
+            return Err(corrupt(format!(
+                "layer {li}: {weight_count} weights stored for a {}-parameter geometry",
+                layer.params()
+            )));
+        }
+        // Largest real conv layers are a few million parameters; a
+        // fabricated multi-billion-weight geometry must not drive
+        // allocations.
+        if weight_count > 1 << 26 {
+            return Err(corrupt(format!("layer {li}: implausible size ({weight_count} weights)")));
+        }
+        let (plane, compressed) = match (&wrom, policy) {
+            (None, _) => {
+                let raw = r.take(
+                    (weight_count as usize)
+                        .checked_mul(4)
+                        .ok_or_else(|| corrupt("weight payload overflow"))?,
+                )?;
+                let ws: Vec<i64> = raw
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes(b.try_into().unwrap()) as i64)
+                    .collect();
+                // pack_approx re-validates the weight range with typed
+                // errors; approximation is idempotent on effective
+                // weights, so this rebuild is bit-exact.
+                (PackedPlane::build(&layout, group, &ws, &layer)?, None)
+            }
+            (Some(wrom), policy) => {
+                let parts = read_stream(&mut r, wrom, addr_bits, group, &layout, &layer, policy)?;
+                let plane =
+                    PackedPlane::from_index_stream(&layout, group, &layer, wrom, &parts.stream)?;
+                // Reassemble from the payload just read — the cold-load
+                // path never re-runs the Huffman/RLE encoders.
+                let cp = CompressedPlane::from_parts(
+                    policy,
+                    parts.stream,
+                    parts.huffman,
+                    parts.zero_rle,
+                    parts.stored_groups,
+                    parts.payload_bits,
+                    weight_count * c_bits as u64,
+                );
+                (plane, Some(cp))
+            }
+        };
+        layers.push(CompiledLayer {
+            layer,
+            plane: Arc::new(plane),
+            stats: approximation_error_table(&[], c_bits),
+            compressed,
+        });
+    }
+    if r.remaining() != 0 {
+        return Err(corrupt(format!("{} trailing bytes after the last layer", r.remaining())));
+    }
+    let model = CompiledModel {
+        name,
+        v_bits,
+        group,
+        compression: policy,
+        wrom: wrom.map(Arc::new),
+        layers,
+    };
+    model.validate_structure()?;
+    Ok((model, stored))
+}
+
+/// One layer's decoded payload: the index stream plus the transport
+/// parts read alongside it (book, RLE map, bit counts) — everything
+/// `CompressedPlane::from_parts` needs, so the cold-load path never
+/// re-runs an encoder.
+struct StreamParts {
+    stream: WromIndexStream,
+    huffman: Option<HuffmanCode>,
+    zero_rle: Option<Vec<i64>>,
+    stored_groups: usize,
+    payload_bits: u64,
+}
+
+/// Read one layer's index stream in the policy's stored form.
+fn read_stream(
+    r: &mut Reader<'_>,
+    wrom: &Wrom,
+    addr_bits: u32,
+    group: usize,
+    layout: &Layout,
+    layer: &ConvLayer,
+    policy: CompressionPolicy,
+) -> Result<StreamParts> {
+    let gs = wrom.group_size;
+    let group_count = r.u32()? as usize;
+    let tuples_needed = PackedPlane::expected_tuple_count(layout, group, layer);
+    let expected = (tuples_needed * layout.kw()).div_ceil(gs);
+    if group_count != expected {
+        return Err(corrupt(format!(
+            "layer {:?}: {group_count} stored groups, geometry needs {expected}",
+            layer.name
+        )));
+    }
+    // The true value count of the stream (what compress_stream records):
+    // the plane's tuples, excluding any tail-group padding.
+    let stream_weights = tuples_needed * layout.kw();
+    let mut tuples = Vec::with_capacity(group_count.min(1 << 20));
+    let (huffman, zero_rle, stored_groups, payload_bits) = match policy {
+        CompressionPolicy::None => unreachable!("caller dispatches on a compressing policy"),
+        CompressionPolicy::Wrc => {
+            let total_bits = group_count * (addr_bits as usize + gs);
+            let raw = r.take(total_bits.div_ceil(8))?;
+            let mut br = BitReader::new(raw);
+            for _ in 0..group_count {
+                let addr = br.read(addr_bits)? as u32;
+                let signs = br.read(gs as u32)? as u32;
+                tuples.push((addr, signs));
+            }
+            (None, None, group_count, total_bits as u64)
+        }
+        CompressionPolicy::WrcHuffman => {
+            let book = read_book(r, wrom.len())?;
+            let hbits = r.u64()?;
+            let hbytes = r.take((hbits as usize).div_ceil(8))?;
+            let addrs = huffman_decode(hbytes, group_count, &book)?;
+            let sraw = r.take((group_count * gs).div_ceil(8))?;
+            let mut br = BitReader::new(sraw);
+            for a in addrs {
+                let addr = u32::try_from(a).map_err(|_| corrupt("negative address symbol"))?;
+                let signs = br.read(gs as u32)? as u32;
+                tuples.push((addr, signs));
+            }
+            let bits = hbits + book.table_bits(addr_bits) + (group_count * gs) as u64;
+            (Some(book), None, group_count, bits)
+        }
+        CompressionPolicy::PruneWrcHuffman => {
+            let pair_count = r.u32()? as usize;
+            if pair_count > group_count {
+                return Err(corrupt(format!(
+                    "RLE map with {pair_count} pairs for {group_count} groups"
+                )));
+            }
+            let praw = r.take((pair_count * 5).div_ceil(8))?;
+            let mut br = BitReader::new(praw);
+            let mut rle = Vec::with_capacity(pair_count * 2);
+            for _ in 0..pair_count {
+                rle.push(br.read(4)? as i64);
+                rle.push(br.read(1)? as i64);
+            }
+            let indicator = rle_decode_sparse(&rle, 4, group_count)?;
+            let nz_count = r.u32()? as usize;
+            let expect_nz = indicator.iter().filter(|&&x| x != 0).count();
+            if nz_count != expect_nz {
+                return Err(corrupt(format!(
+                    "{nz_count} stored groups but the RLE map marks {expect_nz}"
+                )));
+            }
+            let book = read_book(r, wrom.len())?;
+            let hbits = r.u64()?;
+            let hbytes = r.take((hbits as usize).div_ceil(8))?;
+            let addrs = huffman_decode(hbytes, nz_count, &book)?;
+            let sraw = r.take((nz_count * gs).div_ceil(8))?;
+            let mut sbr = BitReader::new(sraw);
+            let zero_addr = if indicator.iter().any(|&x| x == 0) {
+                wrom.zero_addr().ok_or_else(|| {
+                    corrupt("pruned stream marks zero groups but the WROM has no zero entry")
+                })?
+            } else {
+                0
+            };
+            let mut it = addrs.into_iter();
+            for ind in &indicator {
+                if *ind == 0 {
+                    tuples.push((zero_addr, 0));
+                } else {
+                    let a = it
+                        .next()
+                        .ok_or_else(|| corrupt("stored group stream shorter than RLE map"))?;
+                    let addr =
+                        u32::try_from(a).map_err(|_| corrupt("negative address symbol"))?;
+                    let signs = sbr.read(gs as u32)? as u32;
+                    tuples.push((addr, signs));
+                }
+            }
+            let bits = (rle.len() as u64 / 2) * 5
+                + hbits
+                + book.table_bits(addr_bits)
+                + (nz_count * gs) as u64;
+            (Some(book), Some(rle), nz_count, bits)
+        }
+    };
+    Ok(StreamParts {
+        stream: WromIndexStream {
+            tuples,
+            weight_count: stream_weights,
+        },
+        huffman,
+        zero_rle,
+        stored_groups,
+        payload_bits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ApproxPolicy, BatchExec, Compiler, Executor};
+    use crate::cnn::infer::Tensor3;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bit_writer_reader_round_trip() {
+        let mut bw = BitWriter::default();
+        let fields: [(u64, u32); 6] = [(0x155, 13), (5, 3), (0, 1), (1, 1), (0x3fff, 14), (9, 6)];
+        for &(v, b) in &fields {
+            bw.push(v, b);
+        }
+        let bytes = bw.finish();
+        let mut br = BitReader::new(&bytes);
+        for &(v, b) in &fields {
+            assert_eq!(br.read(b).unwrap(), v);
+        }
+        // reading past the end is a typed error
+        assert!(br.read(32).is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // pinned so the on-disk format never silently changes
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"SDMM"), fnv1a64(b"SDMM"));
+        assert_ne!(fnv1a64(b"SDMM"), fnv1a64(b"SDMN"));
+    }
+
+    #[test]
+    fn intern_name_dedups() {
+        let a = intern_name("conv1-test-store");
+        let b = intern_name("conv1-test-store");
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn save_load_smoke_wrc() {
+        let dir = std::env::temp_dir().join(format!(
+            "sdmm-store-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let layers = [
+            ConvLayer::new("s1", 6, 3, 6, 3, 1, 1, 1),
+            ConvLayer::new("s2", 6, 6, 6, 3, 1, 1, 1),
+        ];
+        let mut rng = Rng::new(8);
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+            .collect();
+        let model = Compiler::for_bits(8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(CompressionPolicy::Wrc)
+            .pack_model("smoke", &layers, &weights)
+            .unwrap();
+        let info = save_model(&model, &dir).unwrap();
+        assert!(info.bytes > 0 && info.wrom_entries > 0);
+        let loaded = load_model(&dir).unwrap();
+        assert_eq!(loaded.name, "smoke");
+        assert_eq!(loaded.compression, CompressionPolicy::Wrc);
+        let mut input = Tensor3::zeros(3, 6, 6);
+        input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+        let a = BatchExec::new().run(&model, &input).unwrap();
+        let b = BatchExec::new().run(&loaded, &input).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!((a.dsp_ops, a.mults), (b.dsp_ops, b.mults));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

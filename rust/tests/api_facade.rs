@@ -176,10 +176,13 @@ fn registry_rejects_hand_assembled_scalar_only_planes() {
         name: "hand".into(),
         v_bits: 8,
         group: 3,
+        compression: sdmm::api::CompressionPolicy::None,
+        wrom: None,
         layers: vec![sdmm::api::CompiledLayer {
             layer,
             plane: std::sync::Arc::new(plane),
             stats: sdmm::manip::approximation_error_table(&[], 8),
+            compressed: None,
         }],
     };
     // a scalar-only plane would panic a shard worker mid-conv; the
