@@ -17,6 +17,11 @@
 //! matrix runs each part exactly once). Intra-op parallelism is
 //! pinned to one thread (`SDMM_THREADS=1`) so the scaling measured is
 //! the shards', not the conv tiler's.
+//!
+//! Part 5 (`-- --network`): whole-network inference through the
+//! `api::network` pipeline (NetworkPlan + InferenceSession) on all
+//! four executor backends, gated bit-identical against the exact
+//! scalar reference before timing.
 
 use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
@@ -82,6 +87,7 @@ fn bench_native(suite: &mut BenchSuite) {
 fn main() {
     let serving_only = std::env::args().any(|a| a == "--serving");
     let coldstart_only = std::env::args().any(|a| a == "--coldstart");
+    let network_only = std::env::args().any(|a| a == "--network");
     let mut suite = BenchSuite::new("e2e");
     if serving_only {
         // Part 3 only (the dedicated CI smoke step); the plain
@@ -90,11 +96,90 @@ fn main() {
     } else if coldstart_only {
         // Part 4 only: artifact cold-load admission vs repack-from-weights.
         bench_coldstart(&mut suite);
+    } else if network_only {
+        // Part 5 only: whole-network inference through the
+        // NetworkPlan/InferenceSession pipeline on every backend.
+        bench_network(&mut suite);
     } else {
         bench_native(&mut suite);
         serving(&mut suite);
     }
     suite.run();
+}
+
+/// Part 5 (`-- --network`, EXPERIMENTS.md §Accuracy): end-to-end
+/// whole-network inference (tiny CNN: 3 conv + pool stages + FC head)
+/// through `NetworkPlan` + `InferenceSession` on all four executor
+/// backends. Outputs are gated bit-identical against the exact scalar
+/// reference before any timing, so the rows compare *where* the same
+/// arithmetic runs, never *what* it computes.
+fn bench_network(suite: &mut BenchSuite) {
+    use sdmm::api::{InferenceSession, NetworkPlan, ServingExec};
+    use sdmm::coordinator::ServingConfig;
+
+    let model = sdmm::cnn::zoo::tiny_cnn();
+    let mut rng = Rng::new(77);
+    let conv_w: Vec<Vec<i64>> = model
+        .convs
+        .iter()
+        .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+        .collect();
+    let fc_w: Vec<Vec<i64>> = model
+        .fcs
+        .iter()
+        .map(|&(i, o)| (0..i * o).map(|_| rng.range_i64(-128, 127)).collect())
+        .collect();
+    let l0 = &model.convs[0];
+    let mut input = Tensor3::zeros(l0.in_ch, l0.in_hw, l0.in_hw);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+
+    let compiler = Compiler::for_bits(8)
+        .unwrap()
+        .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() });
+    let plan = NetworkPlan::compile(&compiler, "bench-net", &model, &conv_w, &fc_w).unwrap();
+    let macs = plan.macs();
+    println!(
+        "-- network: {} stages + {} FC head(s), {} MACs/inference, {} cached tuples --",
+        plan.stages.len(),
+        plan.fcs.len(),
+        macs,
+        plan.cached_tuples()
+    );
+
+    let mut scalar = ScalarExec::new();
+    let mut batch = BatchExec::new();
+    let mut systolic = SystolicExec::new();
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 2,
+        queue_capacity: 16,
+    })
+    .unwrap();
+
+    // Bit-exactness gate before timing.
+    let golden = plan.reference().forward(&input).unwrap();
+    let a = InferenceSession::new(&plan, &mut scalar).infer(&input).unwrap();
+    let b = InferenceSession::new(&plan, &mut batch).infer(&input).unwrap();
+    let c = InferenceSession::new(&plan, &mut systolic).infer(&input).unwrap();
+    let d = InferenceSession::new(&plan, &mut serving).infer(&input).unwrap();
+    assert_eq!(a.logits, golden, "scalar network diverged from reference");
+    assert_eq!(b, a, "batch network diverged");
+    assert_eq!(c, a, "systolic network diverged");
+    assert_eq!(d, a, "serving network diverged");
+
+    suite.bench("network e2e (ScalarExec, port-accurate)", macs as f64, || {
+        InferenceSession::new(&plan, &mut scalar).infer(&input).unwrap().top1
+    });
+    suite.bench("network e2e (BatchExec, lane-parallel)", macs as f64, || {
+        InferenceSession::new(&plan, &mut batch).infer(&input).unwrap().top1
+    });
+    suite.bench("network e2e (SystolicExec, array model)", macs as f64, || {
+        InferenceSession::new(&plan, &mut systolic).infer(&input).unwrap().top1
+    });
+    suite.bench("network e2e (ServingExec, 2 shards)", macs as f64, || {
+        InferenceSession::new(&plan, &mut serving).infer(&input).unwrap().top1
+    });
+    let snap = serving.shutdown();
+    assert_eq!(snap.total_failed(), 0);
 }
 
 /// Part 4 (`-- --coldstart`): registry admission cost, repacking from

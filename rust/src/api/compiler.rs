@@ -187,6 +187,13 @@ impl Compiler<Ready> {
         self.state.compression
     }
 
+    /// The prune sparsity [`CompressionPolicy::PruneWrcHuffman`] packs
+    /// with (the network pipeline prunes FC weights with the same
+    /// value, so conv planes and FC heads transform consistently).
+    pub fn prune_sparsity(&self) -> f64 {
+        self.state.prune_sparsity
+    }
+
     /// Pack one tuple of signed weights (`weights.len()` =
     /// `layout.kw()`) — the facade over
     /// [`pack_approx`](crate::packing::pack_approx) /

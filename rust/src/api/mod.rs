@@ -20,6 +20,11 @@
 //!   SystolicExec  batch datapath + array cycle/traffic accounting
 //!   ServingExec   sharded multi-model runtime (registry + shards)
 //!
+//! NetworkPlan / InferenceSession    whole networks (conv + ReLU +
+//!   maxpool + FC + requantize schedule) compile into a stage pipeline
+//!   and run end-to-end on any backend, with per-stage ErrorStats and
+//!   48-bit-accumulator guards (see [`network`])
+//!
 //! CompiledModel::save / ::load      versioned on-disk artifact
 //!   (sdmm-model.bin + manifest, DESIGN.md §8): the WROM entry table +
 //!   per-layer WRC index streams; ModelRegistry::register_from_artifact
@@ -74,8 +79,12 @@
 pub mod compiler;
 pub mod exec;
 pub mod model;
+pub mod network;
 
 pub use crate::compress::{CompressedPlane, CompressionPolicy};
 pub use compiler::{ApproxMode, ApproxPolicy, Compiler, NeedsPolicy, Ready};
 pub use exec::{BatchExec, ExecOutput, Executor, ScalarExec, ServingExec, SystolicExec};
 pub use model::{CompiledLayer, CompiledModel};
+pub use network::{
+    AccGuard, FcStage, InferenceSession, NetworkOutput, NetworkPlan, NetworkStage, ReferenceNet,
+};

@@ -1,0 +1,1225 @@
+//! Whole-network compilation and end-to-end inference — the network
+//! closure of the compile pipeline.
+//!
+//! PRs 3–4 built the per-layer story: `Compiler` packs conv layers into
+//! [`CompiledModel`]s that any [`Executor`] runs bit-exactly. The paper's
+//! headline claim is bigger: *whole CNNs* (AlexNet/VGG-16 style at
+//! 8/6/4-bit) keep their accuracy when every multiplication goes through
+//! the SDMM datapath. This module closes that loop:
+//!
+//! * [`NetworkPlan::compile`] lowers an entire [`Model`] (conv + ReLU +
+//!   2×2 max-pool + fully-connected + requantize schedule) through the
+//!   typestate [`Compiler`] — including its
+//!   [`CompressionPolicy`](crate::compress::CompressionPolicy) stage —
+//!   into a pipeline of single-layer [`CompiledModel`] stages plus
+//!   approximated FC heads, with a static 48-bit-accumulator guard
+//!   ([`AccGuard`]) per conv stage.
+//! * [`InferenceSession`] runs batched images end-to-end on **any**
+//!   executor backend (`ScalarExec` / `BatchExec` / `SystolicExec` /
+//!   `ServingExec`), accumulating DSP-op and multiplication accounting
+//!   across the whole pass.
+//! * [`ReferenceNet`] is the exact integer reference for the same
+//!   schedule — plain `conv2d_int` loops, no packing — used both as the
+//!   golden model for conformance tests (`tests/golden_network.rs`)
+//!   and as the "exact int reference" column of the accuracy tables
+//!   (`cnn::accuracy`, `sdmm eval`).
+//!
+//! ## Stage schedule
+//!
+//! Every conv stage executes `conv → ReLU → requantize(v_bits) →
+//! [2×2 max-pool]`. The executors' shared forward skeleton already
+//! applies `conv → ReLU → requantize`, so a stage is exactly one
+//! `Executor::run` call followed by an optional pool. For even spatial
+//! dims, pooling *after* requantization is bit-identical to the
+//! textbook pool-before-requantize order: after ReLU all values are
+//! non-negative, the tensor maximum survives 2×2 pooling (the max of
+//! its own window is itself), so both orders compute the same symmetric
+//! scale — and `v ↦ clamp(round(v/scale))` is monotone, so it commutes
+//! with `max` element-by-element (pinned by a unit test below). Odd
+//! dims floor-crop the last row/column, which can drop the tensor max
+//! and change the scale between the two orders — there the schedule is
+//! *defined* as requantize-then-pool, implemented identically by the
+//! session and the reference, so conformance is unaffected.
+//!
+//! The pool schedule is inferred from geometry ([`pool_schedule`]): two
+//! consecutive convs either chain directly (`out_hw == next.in_hw`) or
+//! through one 2×2/stride-2 pool (`out_hw / 2 == next.in_hw`); the last
+//! conv pools iff the first FC's input features require it. Branching
+//! topologies (GoogLeNet inception) do not chain linearly and are
+//! refused with a typed error.
+//!
+//! ## 48-bit accumulator guard
+//!
+//! The SDMM substitution is exact only while conv accumulators stay in
+//! the DSP48E1's 48-bit signed accumulator range. [`AccGuard`] bounds
+//! the worst-case accumulator magnitude per stage statically
+//! (`max_oc Σ|w| · 2^(v-1)`); [`NetworkPlan::compile`] refuses any
+//! network that could saturate, and [`ReferenceNet`] re-checks the
+//! actual accumulators (`acc_fits_48bit`) at run time.
+//!
+//! ```
+//! use sdmm::api::{ApproxPolicy, BatchExec, Compiler, InferenceSession, NetworkPlan};
+//! use sdmm::cnn::infer::Tensor3;
+//! use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+//!
+//! // A 2-conv + pool + FC network, hand-rolled zoo geometry.
+//! let model = Model {
+//!     kind: ModelKind::TinyCnn,
+//!     convs: vec![
+//!         ConvLayer::new("c1", 8, 1, 4, 3, 1, 1, 1),
+//!         ConvLayer::new("c2", 4, 4, 4, 3, 1, 1, 1),
+//!     ],
+//!     fcs: vec![(4 * 2 * 2, 3)],
+//! };
+//! let conv_w: Vec<Vec<i64>> = model
+//!     .convs
+//!     .iter()
+//!     .map(|l| (0..l.params() as i64).map(|i| (i % 15) - 7).collect())
+//!     .collect();
+//! let fc_w: Vec<Vec<i64>> = vec![(0..(16 * 3) as i64).map(|i| (i % 13) - 6).collect()];
+//!
+//! let compiler = Compiler::for_bits(8)?.approximate(ApproxPolicy::nearest());
+//! let plan = NetworkPlan::compile(&compiler, "demo", &model, &conv_w, &fc_w)?;
+//!
+//! let mut input = Tensor3::zeros(1, 8, 8);
+//! for (i, v) in input.data.iter_mut().enumerate() {
+//!     *v = (i as i64 % 9) - 4;
+//! }
+//!
+//! let mut batch = BatchExec::new();
+//! let out = InferenceSession::new(&plan, &mut batch).infer(&input)?;
+//! assert_eq!(out.logits.len(), 3);
+//! // bit-identical to the exact scalar reference over the plan's
+//! // approximated weights:
+//! assert_eq!(out.logits, plan.reference().forward(&input)?);
+//! # Ok::<(), sdmm::error::SdmmError>(())
+//! ```
+
+use super::compiler::{Compiler, Ready};
+use super::exec::Executor;
+use super::model::CompiledModel;
+use crate::cnn::infer::{
+    acc_fits_48bit, approximate_weights, conv2d_int, fc_int, maxpool2, relu, requantize, Tensor3,
+};
+use crate::cnn::zoo::{ConvLayer, Model};
+use crate::compress::{prune_magnitude, CompressionPolicy};
+use crate::error::{Context, Result, SdmmError};
+use crate::manip::{approximation_error_table, ErrorStats};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// File name of the plan manifest inside a saved-plan directory (the
+/// per-stage conv planes live in `L0/`, `L1/`, … as ordinary
+/// [`CompiledModel`] artifacts).
+pub const PLAN_MANIFEST: &str = "plan.json";
+
+/// Index of the winning logit. Ties break toward the *last* maximum —
+/// the same tie-break `Iterator::max_by_key` gives, pinned here so the
+/// session, the reference and the accuracy harness can never disagree
+/// on a tied argmax.
+///
+/// Panics on an empty slice (a compiled plan never produces one).
+pub fn top1(logits: &[i64]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &v)| v)
+        .map(|(i, _)| i)
+        .expect("top1 of empty logits")
+}
+
+/// Infer the pool schedule of a linear conv stack from its geometry:
+/// `pools[i]` is true when a 2×2/stride-2 max-pool sits after conv `i`.
+/// Consecutive convs must either chain directly or through exactly one
+/// pool; the last entry is fixed by the first FC's input features
+/// (`fc_in`), or `false` when the network has no FC head. Anything else
+/// (branching topologies, arbitrary reshapes) is a typed
+/// [`SdmmError::InvalidModel`].
+pub fn pool_schedule(convs: &[ConvLayer], fc_in: Option<usize>) -> Result<Vec<bool>> {
+    if convs.is_empty() {
+        return Err(SdmmError::InvalidModel(
+            "network has no conv layers".into(),
+        ));
+    }
+    let mut pools = Vec::with_capacity(convs.len());
+    for pair in convs.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        if a.out_ch != b.in_ch {
+            return Err(SdmmError::InvalidModel(format!(
+                "layer {:?} ({} out ch) does not feed {:?} ({} in ch)",
+                a.name, a.out_ch, b.name, b.in_ch
+            )));
+        }
+        let o = a.out_hw();
+        if o == b.in_hw {
+            pools.push(false);
+        } else if o >= 2 && o / 2 == b.in_hw {
+            pools.push(true);
+        } else {
+            return Err(SdmmError::InvalidModel(format!(
+                "layer {:?} ({o}x{o} out) feeds {:?} ({hw}x{hw} in) neither directly \
+                 nor through one 2x2 pool",
+                a.name,
+                b.name,
+                hw = b.in_hw,
+            )));
+        }
+    }
+    let last = convs.last().unwrap();
+    let o = last.out_hw();
+    match fc_in {
+        None => pools.push(false),
+        Some(in_f) => {
+            if last.out_ch * o * o == in_f {
+                pools.push(false);
+            } else if o >= 2 && last.out_ch * (o / 2) * (o / 2) == in_f {
+                pools.push(true);
+            } else {
+                return Err(SdmmError::InvalidModel(format!(
+                    "last conv {:?} ({} ch, {o}x{o}) cannot produce {in_f} FC input \
+                     features with or without one 2x2 pool",
+                    last.name, last.out_ch,
+                )));
+            }
+        }
+    }
+    Ok(pools)
+}
+
+/// The FC-head chain shared by [`InferenceSession`] and
+/// [`ReferenceNet`]: per head an arity check and `fc_int`, with the
+/// ReLU + requantize glue *between* heads and raw logits from the
+/// last. Both consumers call exactly this function — the
+/// executor-vs-reference conformance contract cannot drift between
+/// two copies of the loop.
+fn fc_chain<'w, I>(mut flat: Vec<i64>, heads: I, v_bits: u32) -> Result<Vec<i64>>
+where
+    I: ExactSizeIterator<Item = (usize, usize, &'w [i64])>,
+{
+    let n = heads.len();
+    for (fi, (in_f, out_f, w)) in heads.enumerate() {
+        if flat.len() != in_f {
+            return Err(SdmmError::ArityMismatch {
+                what: "FC input features",
+                got: flat.len(),
+                expected: in_f,
+            });
+        }
+        let logits = fc_int(&flat, w, in_f, out_f);
+        if fi + 1 < n {
+            let mut t = Tensor3 {
+                c: out_f,
+                h: 1,
+                w: 1,
+                data: logits,
+            };
+            relu(&mut t);
+            flat = requantize(&t, v_bits).0.data;
+        } else {
+            flat = logits;
+        }
+    }
+    Ok(flat)
+}
+
+/// Static worst-case accumulator bound for one conv stage — the
+/// compile-time side of the paper's exactness condition (the DSP's
+/// 48-bit accumulator must never saturate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccGuard {
+    /// Worst-case accumulator magnitude: `max_oc Σ_taps |w| · 2^(v-1)`.
+    pub worst_abs: u128,
+    /// Signed bits needed to hold `±worst_abs`.
+    pub bits: u32,
+}
+
+impl AccGuard {
+    /// Bound the accumulators of `layer` executed over OIHW `weights`
+    /// with `v_bits` inputs. The bound is per output channel (sum of
+    /// absolute weights times the worst input magnitude), so it is
+    /// tight for the adversarial input.
+    pub fn for_weights(weights: &[i64], layer: &ConvLayer, v_bits: u32) -> AccGuard {
+        let icg = layer.in_ch / layer.groups;
+        let taps = icg * layer.kernel * layer.kernel;
+        let mut worst_sum = 0u128;
+        for oc in 0..layer.out_ch {
+            let s: u128 = weights[oc * taps..(oc + 1) * taps]
+                .iter()
+                .map(|w| w.unsigned_abs() as u128)
+                .sum();
+            worst_sum = worst_sum.max(s);
+        }
+        let worst_abs = worst_sum * (1u128 << (v_bits - 1));
+        let bits = if worst_abs == 0 {
+            1
+        } else {
+            129 - worst_abs.leading_zeros()
+        };
+        AccGuard { worst_abs, bits }
+    }
+
+    /// Whether the worst-case accumulator fits the DSP48E1's 48-bit
+    /// signed accumulator (the condition that makes SDMM execution
+    /// exact — `cnn::infer::acc_fits_48bit` is the runtime analogue).
+    pub fn fits_48bit(&self) -> bool {
+        self.bits <= 48
+    }
+}
+
+/// One pipeline stage of a compiled network: a single-conv-layer
+/// [`CompiledModel`] (so any executor runs it unchanged), the pool flag
+/// of the schedule, and the stage's accumulator guard.
+#[derive(Clone, Debug)]
+pub struct NetworkStage {
+    /// The stage's conv layer compiled on its own (named
+    /// `"{plan}.L{i}"`; the serving backend admits each stage as its
+    /// own registry entry).
+    pub model: CompiledModel,
+    /// Whether a 2×2/stride-2 max-pool follows the requantize.
+    pub pool: bool,
+    /// Static 48-bit accumulator accounting for this stage.
+    pub guard: AccGuard,
+}
+
+impl NetworkStage {
+    /// The conv layer geometry of this stage.
+    pub fn layer(&self) -> &ConvLayer {
+        &self.model.layers[0].layer
+    }
+
+    /// Approximation error statistics of this stage's weights (empty
+    /// when compiled with `skip_stats` or loaded from an artifact).
+    pub fn stats(&self) -> &ErrorStats {
+        &self.model.layers[0].stats
+    }
+
+    /// Shape `(c, h, w)` of the activation this stage hands the next
+    /// one (after the optional pool).
+    pub fn out_dims(&self) -> (usize, usize, usize) {
+        let l = self.layer();
+        let o = l.out_hw();
+        let o = if self.pool { o / 2 } else { o };
+        (l.out_ch, o, o)
+    }
+}
+
+/// One fully-connected head of a compiled network. FC weights go
+/// through the same approximation (and, under a pruning policy, the
+/// same magnitude pruning) as the conv planes — the paper compresses
+/// AlexNet/VGG-16 FC layers with the identical hardware.
+#[derive(Clone, Debug)]
+pub struct FcStage {
+    /// Input feature count.
+    pub in_f: usize,
+    /// Output feature count.
+    pub out_f: usize,
+    /// The effective (approximated, possibly pruned) weights the stage
+    /// multiplies with, row-major `[out_f][in_f]`.
+    pub weights: Vec<i64>,
+    /// Approximation error statistics of the FC weights (empty when
+    /// compiled with `skip_stats` or loaded from an artifact).
+    pub stats: ErrorStats,
+    /// DSP block operations one forward pass of this stage stands for
+    /// (`ceil(in_f · out_f / kw)` — kw weights share one DSP op).
+    pub dsp_ops: u64,
+}
+
+/// Result of one end-to-end network inference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetworkOutput {
+    /// Raw integer logits (no ReLU/requantize after the final stage;
+    /// for a plan without FC heads this is the flattened final
+    /// activation).
+    pub logits: Vec<i64>,
+    /// Winning class index ([`top1`] tie-break).
+    pub top1: usize,
+    /// DSP block operations the pass stands in for (conv stages + FC
+    /// heads).
+    pub dsp_ops: u64,
+    /// Multiplications executed.
+    pub mults: u64,
+}
+
+/// A whole network compiled once through the typestate [`Compiler`]:
+/// a pipeline of single-layer conv stages plus approximated FC heads.
+/// The unit [`InferenceSession`] executes on any backend, and the unit
+/// [`save`](NetworkPlan::save)/[`load`](NetworkPlan::load) persist
+/// (per-stage [`CompiledModel`] artifacts + a small JSON plan
+/// manifest).
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    /// Plan name (stage models are named `"{name}.L{i}"`).
+    pub name: String,
+    /// Activation bit width between stages.
+    pub v_bits: u32,
+    /// Off-chip compression policy the stages were compiled under.
+    pub compression: CompressionPolicy,
+    /// Conv stages in execution order.
+    pub stages: Vec<NetworkStage>,
+    /// Fully-connected heads in execution order (may be empty).
+    pub fcs: Vec<FcStage>,
+}
+
+impl NetworkPlan {
+    /// Compile a whole [`Model`] through `compiler`: infer the pool
+    /// schedule from the geometry, pack every conv layer into its own
+    /// single-layer [`CompiledModel`] (honoring the compiler's
+    /// approximation *and* compression stages), approximate the FC
+    /// weights with the same hardware rules, and verify every stage's
+    /// [`AccGuard`] fits the 48-bit accumulator.
+    ///
+    /// `conv_weights[i]` is layer `i`'s OIHW quantized weights;
+    /// `fc_weights[j]` is FC head `j`'s row-major quantized weights.
+    /// All failures are typed (`InvalidModel`, `WeightOutOfRange`, …).
+    pub fn compile(
+        compiler: &Compiler<Ready>,
+        name: &str,
+        model: &Model,
+        conv_weights: &[Vec<i64>],
+        fc_weights: &[Vec<i64>],
+    ) -> Result<NetworkPlan> {
+        if conv_weights.len() != model.convs.len() {
+            return Err(SdmmError::InvalidModel(format!(
+                "network {name}: {} conv weight sets for {} conv layers",
+                conv_weights.len(),
+                model.convs.len()
+            )));
+        }
+        if fc_weights.len() != model.fcs.len() {
+            return Err(SdmmError::InvalidModel(format!(
+                "network {name}: {} FC weight sets for {} FC layers",
+                fc_weights.len(),
+                model.fcs.len()
+            )));
+        }
+        for pair in model.fcs.windows(2) {
+            if pair[0].1 != pair[1].0 {
+                return Err(SdmmError::InvalidModel(format!(
+                    "network {name}: FC {} -> {} does not feed FC {} -> {}",
+                    pair[0].0, pair[0].1, pair[1].0, pair[1].1
+                )));
+            }
+        }
+        let pools = pool_schedule(&model.convs, model.fcs.first().map(|f| f.0))?;
+        let layout = compiler.layout();
+        let (v_bits, c_bits) = (layout.v, layout.c);
+        let kw = layout.kw() as u64;
+
+        let mut stages = Vec::with_capacity(model.convs.len());
+        for (i, (layer, w)) in model.convs.iter().zip(conv_weights).enumerate() {
+            let m = compiler
+                .pack_model(&format!("{name}.L{i}"), &[layer.clone()], &[w.clone()])
+                .map_err(|e| e.in_context(format!("compiling network {name} stage {i}")))?;
+            let guard = AccGuard::for_weights(&m.layers[0].effective_weights(), layer, v_bits);
+            if !guard.fits_48bit() {
+                return Err(SdmmError::InvalidModel(format!(
+                    "network {name} stage {i} ({:?}): worst-case accumulator needs {} bits, \
+                     exceeding the DSP's 48-bit accumulator (the SDMM substitution would \
+                     not be exact)",
+                    layer.name, guard.bits
+                )));
+            }
+            stages.push(NetworkStage {
+                model: m,
+                pool: pools[i],
+                guard,
+            });
+        }
+
+        let mut fcs = Vec::with_capacity(model.fcs.len());
+        for (&(in_f, out_f), wf) in model.fcs.iter().zip(fc_weights) {
+            let feat = in_f.checked_mul(out_f).ok_or_else(|| {
+                SdmmError::InvalidModel(format!(
+                    "network {name}: FC {in_f}x{out_f} feature product overflows"
+                ))
+            })?;
+            if wf.len() != feat {
+                return Err(SdmmError::ArityMismatch {
+                    what: "FC weights",
+                    got: wf.len(),
+                    expected: feat,
+                });
+            }
+            let lim = 1u64 << (c_bits - 1);
+            if let Some(bad) = wf.iter().copied().find(|w| w.unsigned_abs() > lim) {
+                return Err(SdmmError::WeightOutOfRange { weight: bad, c_bits });
+            }
+            // Under a pruning policy the FC weights prune before
+            // approximation, exactly like the conv planes.
+            let pruned;
+            let src: &[i64] = if compiler.compression().prunes() {
+                pruned = prune_magnitude(wf, compiler.prune_sparsity()).pruned;
+                &pruned
+            } else {
+                wf
+            };
+            let stats = if compiler.policy().skip_stats {
+                approximation_error_table(&[], c_bits)
+            } else {
+                approximation_error_table(src, c_bits)
+            };
+            fcs.push(FcStage {
+                in_f,
+                out_f,
+                weights: approximate_weights(src, c_bits),
+                stats,
+                dsp_ops: (feat as u64).div_ceil(kw),
+            });
+        }
+
+        let plan = NetworkPlan {
+            name: name.to_string(),
+            v_bits,
+            compression: compiler.compression(),
+            stages,
+            fcs,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Expected input tensor shape `(c, h, w)`.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        let l = self.stages[0].layer();
+        (l.in_ch, l.in_hw, l.in_hw)
+    }
+
+    /// Logit count of one inference (last FC's features, or the
+    /// flattened final activation size for a plan without FC heads).
+    pub fn num_classes(&self) -> usize {
+        match self.fcs.last() {
+            Some(fc) => fc.out_f,
+            None => {
+                let (c, h, w) = self.stages.last().unwrap().out_dims();
+                c * h * w
+            }
+        }
+    }
+
+    /// MAC count of one forward pass (conv stages + FC heads).
+    pub fn macs(&self) -> u64 {
+        let conv: u64 = self.stages.iter().map(|s| s.layer().macs()).sum();
+        // weights.len() == in_f·out_f for every validated plan, and
+        // cannot overflow for a hand-assembled one.
+        let fc: u64 = self.fcs.iter().map(|f| f.weights.len() as u64).sum();
+        conv + fc
+    }
+
+    /// Total packed tuples cached across the plan's stage planes.
+    pub fn cached_tuples(&self) -> usize {
+        self.stages.iter().map(|s| s.model.cached_tuples()).sum()
+    }
+
+    /// Worst per-stage mean-square approximation error across conv
+    /// stages and FC heads (one-number compile-quality summary).
+    pub fn worst_stage_mse(&self) -> f64 {
+        let conv = self.stages.iter().map(|s| s.stats().mse).fold(0.0, f64::max);
+        self.fcs.iter().map(|f| f.stats.mse).fold(conv, f64::max)
+    }
+
+    /// The exact integer reference over this plan's *effective*
+    /// (approximated) weights — every executor must match it
+    /// bit-for-bit (the golden-model conformance property).
+    pub fn reference(&self) -> ReferenceNet {
+        ReferenceNet {
+            layers: self.stages.iter().map(|s| s.layer().clone()).collect(),
+            pools: self.stages.iter().map(|s| s.pool).collect(),
+            conv_weights: self
+                .stages
+                .iter()
+                .map(|s| s.model.layers[0].effective_weights())
+                .collect(),
+            fcs: self.fcs.iter().map(|f| (f.in_f, f.out_f)).collect(),
+            fc_weights: self.fcs.iter().map(|f| f.weights.clone()).collect(),
+            v_bits: self.v_bits,
+        }
+    }
+
+    /// Validate the plan's structural invariants: at least one stage,
+    /// every stage a single-layer model at the plan's bit width, stages
+    /// chain under the pool schedule, FC heads chain off the final
+    /// activation. `compile` output always passes; hand-assembled or
+    /// loaded plans are refused with typed errors here.
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            return Err(SdmmError::InvalidModel(format!(
+                "plan {} has no conv stages",
+                self.name
+            )));
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            s.model
+                .validate_structure()
+                .map_err(|e| e.in_context(format!("plan {} stage {i}", self.name)))?;
+            if s.model.layers.len() != 1 {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} stage {i}: stage models hold exactly one conv layer, found {}",
+                    self.name,
+                    s.model.layers.len()
+                )));
+            }
+            if s.model.v_bits != self.v_bits {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} stage {i}: stage compiled at {} bits, plan is {}-bit",
+                    self.name, s.model.v_bits, self.v_bits
+                )));
+            }
+        }
+        for i in 0..self.stages.len() - 1 {
+            let (c, h, _) = self.stages[i].out_dims();
+            let next = self.stages[i + 1].layer();
+            if c != next.in_ch || h != next.in_hw {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} stage {i} hands ({c} ch, {h}x{h}) to stage {} expecting \
+                     ({} ch, {hw}x{hw})",
+                    self.name,
+                    i + 1,
+                    next.in_ch,
+                    hw = next.in_hw,
+                )));
+            }
+        }
+        // Zero-sized activations or heads would produce empty logits
+        // (a top1 panic) — refuse them here with a typed error instead.
+        for (i, s) in self.stages.iter().enumerate() {
+            let (c, h, w) = s.out_dims();
+            if c * h * w == 0 {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} stage {i}: zero-sized output activation ({c}x{h}x{w})",
+                    self.name
+                )));
+            }
+        }
+        let (c, h, w) = self.stages.last().unwrap().out_dims();
+        let mut feats = c * h * w;
+        for (j, fc) in self.fcs.iter().enumerate() {
+            if fc.in_f == 0 || fc.out_f == 0 {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} FC {j}: zero-width head ({} -> {})",
+                    self.name, fc.in_f, fc.out_f
+                )));
+            }
+            let feat_w = fc.in_f.checked_mul(fc.out_f).ok_or_else(|| {
+                SdmmError::InvalidModel(format!(
+                    "plan {} FC {j}: {}x{} feature product overflows",
+                    self.name, fc.in_f, fc.out_f
+                ))
+            })?;
+            if fc.weights.len() != feat_w {
+                return Err(SdmmError::ArityMismatch {
+                    what: "FC weights",
+                    got: fc.weights.len(),
+                    expected: feat_w,
+                });
+            }
+            if fc.in_f != feats {
+                return Err(SdmmError::InvalidModel(format!(
+                    "plan {} FC {j}: expects {} input features, pipeline provides {feats}",
+                    self.name, fc.in_f
+                )));
+            }
+            feats = fc.out_f;
+        }
+        Ok(())
+    }
+
+    /// Persist the plan: each stage's [`CompiledModel`] artifact in
+    /// `L0/`, `L1/`, … (the versioned `sdmm-model.bin` format,
+    /// DESIGN.md §8) plus a [`PLAN_MANIFEST`] JSON carrying the pool
+    /// schedule and the effective FC weights.
+    /// [`load`](NetworkPlan::load) round-trips it bit-exactly
+    /// (per-layer `ErrorStats` are compile-time reports and are not
+    /// stored, exactly like `CompiledModel::save`).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        self.validate()?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating plan directory {dir:?}"))?;
+        for (i, stage) in self.stages.iter().enumerate() {
+            stage
+                .model
+                .save(dir.join(format!("L{i}")))
+                .map_err(|e| e.in_context(format!("saving plan {} stage {i}", self.name)))?;
+        }
+        let mut m = BTreeMap::new();
+        m.insert("format".to_string(), Json::Str("sdmm-plan".into()));
+        m.insert("version".to_string(), Json::Num(1.0));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("v_bits".to_string(), Json::Num(self.v_bits as f64));
+        m.insert(
+            "compression".to_string(),
+            Json::Str(self.compression.name().into()),
+        );
+        m.insert(
+            "pools".to_string(),
+            Json::Arr(
+                self.stages
+                    .iter()
+                    .map(|s| Json::Num(if s.pool { 1.0 } else { 0.0 }))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "fcs".to_string(),
+            Json::Arr(
+                self.fcs
+                    .iter()
+                    .map(|f| {
+                        let mut fm = BTreeMap::new();
+                        fm.insert("in_f".to_string(), Json::Num(f.in_f as f64));
+                        fm.insert("out_f".to_string(), Json::Num(f.out_f as f64));
+                        fm.insert(
+                            "weights".to_string(),
+                            Json::Arr(f.weights.iter().map(|&w| Json::Num(w as f64)).collect()),
+                        );
+                        Json::Obj(fm)
+                    })
+                    .collect(),
+            ),
+        );
+        let mut text = Json::Obj(m).to_string();
+        text.push('\n');
+        let path = dir.join(PLAN_MANIFEST);
+        std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load a plan saved by [`save`](NetworkPlan::save): stage planes
+    /// cold-load through the validating artifact reader (index streams
+    /// decode straight into WROM-backed planes, nothing repacked),
+    /// guards are recomputed from the decoded effective weights, and
+    /// every inconsistency is a typed
+    /// [`SdmmError::CorruptArtifact`]/[`SdmmError::InvalidModel`] —
+    /// never a panic.
+    pub fn load(dir: impl AsRef<Path>) -> Result<NetworkPlan> {
+        let dir = dir.as_ref();
+        let path = dir.join(PLAN_MANIFEST);
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| SdmmError::CorruptArtifact(format!("plan manifest: {e}")))?;
+        let corrupt = |m: String| SdmmError::CorruptArtifact(format!("plan manifest: {m}"));
+        if j.get("format").and_then(|v| v.as_str()) != Some("sdmm-plan") {
+            return Err(corrupt("not an sdmm-plan manifest".into()));
+        }
+        if j.get("version").and_then(|v| v.as_f64()) != Some(1.0) {
+            return Err(corrupt("unsupported plan version".into()));
+        }
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| corrupt("missing name".into()))?
+            .to_string();
+        let v_bits = j
+            .get("v_bits")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| corrupt("missing v_bits".into()))? as u32;
+        if !(2..=16).contains(&v_bits) {
+            return Err(corrupt(format!("implausible v_bits {v_bits}")));
+        }
+        let compression = CompressionPolicy::parse(
+            j.get("compression")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| corrupt("missing compression".into()))?,
+        )?;
+        let pools: Vec<bool> = j
+            .get("pools")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| corrupt("missing pools".into()))?
+            .iter()
+            .map(|p| match p.as_f64() {
+                Some(v) if v == 0.0 => Ok(false),
+                Some(v) if v == 1.0 => Ok(true),
+                _ => Err(corrupt("pool flags must be 0 or 1".into())),
+            })
+            .collect::<Result<_>>()?;
+        if pools.is_empty() {
+            return Err(corrupt("plan has no stages".into()));
+        }
+
+        let mut stages = Vec::with_capacity(pools.len());
+        for (i, &pool) in pools.iter().enumerate() {
+            let model = CompiledModel::load(dir.join(format!("L{i}")))
+                .map_err(|e| e.in_context(format!("loading plan {name} stage {i}")))?;
+            if model.layers.len() != 1 {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "plan {name} stage {i}: expected a single-layer stage model, found {}",
+                    model.layers.len()
+                )));
+            }
+            let layer = model.layers[0].layer.clone();
+            let guard =
+                AccGuard::for_weights(&model.layers[0].effective_weights(), &layer, v_bits);
+            if !guard.fits_48bit() {
+                return Err(SdmmError::CorruptArtifact(format!(
+                    "plan {name} stage {i}: decoded weights overflow the 48-bit accumulator"
+                )));
+            }
+            stages.push(NetworkStage { model, pool, guard });
+        }
+        let c_bits = stages[0].model.layers[0].plane.layout.c;
+        let kw = stages[0].model.layers[0].plane.layout.kw() as u64;
+
+        let mut fcs = Vec::new();
+        for (fj, f) in j
+            .get("fcs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| corrupt("missing fcs".into()))?
+            .iter()
+            .enumerate()
+        {
+            let in_f = f
+                .get("in_f")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| corrupt(format!("fc {fj}: missing in_f")))?;
+            let out_f = f
+                .get("out_f")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| corrupt(format!("fc {fj}: missing out_f")))?;
+            // Effective (approximated) magnitudes are bounded by
+            // 2^(c-1) — same bound compile enforces — so anything
+            // beyond it is manifest corruption, not a legal weight.
+            let wlim = (1u64 << (c_bits - 1)) as f64;
+            let weights: Vec<i64> = f
+                .get("weights")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| corrupt(format!("fc {fj}: missing weights")))?
+                .iter()
+                .map(|w| {
+                    let v = w
+                        .as_f64()
+                        .filter(|v| v.fract() == 0.0)
+                        .ok_or_else(|| corrupt(format!("fc {fj}: non-integer weight")))?;
+                    if v.abs() > wlim {
+                        return Err(corrupt(format!(
+                            "fc {fj}: weight {v} outside the signed {c_bits}-bit \
+                             effective range"
+                        )));
+                    }
+                    Ok(v as i64)
+                })
+                .collect::<Result<_>>()?;
+            let feat = in_f
+                .checked_mul(out_f)
+                .ok_or_else(|| corrupt(format!("fc {fj}: {in_f}x{out_f} overflows")))?;
+            if weights.len() != feat {
+                return Err(corrupt(format!(
+                    "fc {fj}: {} weights for {feat} features",
+                    weights.len()
+                )));
+            }
+            fcs.push(FcStage {
+                in_f,
+                out_f,
+                weights,
+                stats: approximation_error_table(&[], c_bits),
+                dsp_ops: (feat as u64).div_ceil(kw),
+            });
+        }
+
+        let plan = NetworkPlan {
+            name,
+            v_bits,
+            compression,
+            stages,
+            fcs,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// An end-to-end inference session: one [`NetworkPlan`] driven through
+/// one [`Executor`] backend. The session owns nothing — it borrows the
+/// plan and the executor, so one plan can serve sessions on every
+/// backend and one warm backend (e.g. a started [`ServingExec`]
+/// runtime) can serve many plans.
+///
+/// [`ServingExec`]: super::ServingExec
+pub struct InferenceSession<'a> {
+    plan: &'a NetworkPlan,
+    exec: &'a mut dyn Executor,
+}
+
+impl<'a> InferenceSession<'a> {
+    /// Open a session for `plan` on `exec`.
+    pub fn new(plan: &'a NetworkPlan, exec: &'a mut dyn Executor) -> InferenceSession<'a> {
+        InferenceSession { plan, exec }
+    }
+
+    /// The plan this session runs.
+    pub fn plan(&self) -> &NetworkPlan {
+        self.plan
+    }
+
+    /// The backend name this session executes on.
+    pub fn backend(&self) -> &'static str {
+        self.exec.name()
+    }
+
+    /// Run one image end-to-end: every conv stage through the executor
+    /// (conv → ReLU → requantize), the pool schedule and FC heads in
+    /// the session glue. Input validation (shape, operand range) is the
+    /// executor's usual typed-error path.
+    pub fn infer(&mut self, image: &Tensor3) -> Result<NetworkOutput> {
+        Ok(self.run(image, false)?.0)
+    }
+
+    /// [`infer`](Self::infer), additionally returning each stage's
+    /// output activation (post-pool) — the per-layer view the golden
+    /// conformance vectors pin down.
+    pub fn infer_trace(&mut self, image: &Tensor3) -> Result<(NetworkOutput, Vec<Tensor3>)> {
+        self.run(image, true)
+    }
+
+    /// Run a batch of images end-to-end, preserving order. Stages are
+    /// executed image-by-image (the executors parallelize within a
+    /// layer; the serving backend additionally pipelines across its
+    /// shards).
+    pub fn infer_batch(&mut self, images: &[Tensor3]) -> Result<Vec<NetworkOutput>> {
+        images.iter().map(|img| self.infer(img)).collect()
+    }
+
+    fn run(&mut self, image: &Tensor3, keep_trace: bool) -> Result<(NetworkOutput, Vec<Tensor3>)> {
+        let plan = self.plan;
+        let mut x = image.clone();
+        let mut dsp_ops = 0u64;
+        let mut mults = 0u64;
+        let mut trace = Vec::new();
+        for stage in &plan.stages {
+            let out = self.exec.run(&stage.model, &x)?;
+            dsp_ops += out.dsp_ops;
+            mults += out.mults;
+            x = if stage.pool {
+                maxpool2(&out.output)
+            } else {
+                out.output
+            };
+            if keep_trace {
+                trace.push(x.clone());
+            }
+        }
+        for fc in &plan.fcs {
+            dsp_ops += fc.dsp_ops;
+            mults += fc.weights.len() as u64;
+        }
+        let flat = fc_chain(
+            x.data,
+            plan.fcs.iter().map(|f| (f.in_f, f.out_f, f.weights.as_slice())),
+            plan.v_bits,
+        )?;
+        let t1 = top1(&flat);
+        Ok((
+            NetworkOutput {
+                logits: flat,
+                top1: t1,
+                dsp_ops,
+                mults,
+            },
+            trace,
+        ))
+    }
+}
+
+/// The exact integer reference network: the same conv → ReLU →
+/// requantize → pool → FC schedule as [`InferenceSession`], executed
+/// with the plain scalar `conv2d_int` loops and *whatever weights it
+/// is given* — quantized-but-unapproximated weights for the "exact int
+/// reference" column of the accuracy tables, or a plan's effective
+/// weights ([`NetworkPlan::reference`]) as the golden model every
+/// backend must match bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct ReferenceNet {
+    /// Conv layers in execution order.
+    pub layers: Vec<ConvLayer>,
+    /// Pool flag per conv layer (same meaning as [`NetworkStage::pool`]).
+    pub pools: Vec<bool>,
+    /// OIHW weights per conv layer (used exactly as given).
+    pub conv_weights: Vec<Vec<i64>>,
+    /// FC head geometry `(in_f, out_f)` in execution order.
+    pub fcs: Vec<(usize, usize)>,
+    /// Row-major FC weights per head (used exactly as given).
+    pub fc_weights: Vec<Vec<i64>>,
+    /// Activation bit width between layers.
+    pub v_bits: u32,
+}
+
+impl ReferenceNet {
+    /// Build a reference net for a zoo [`Model`], inferring the pool
+    /// schedule from the geometry (same rules as
+    /// [`NetworkPlan::compile`]). Weights are used exactly as given —
+    /// no approximation.
+    pub fn new(
+        model: &Model,
+        conv_weights: Vec<Vec<i64>>,
+        fc_weights: Vec<Vec<i64>>,
+        v_bits: u32,
+    ) -> Result<ReferenceNet> {
+        if conv_weights.len() != model.convs.len() || fc_weights.len() != model.fcs.len() {
+            return Err(SdmmError::InvalidModel(format!(
+                "reference net: {} conv / {} FC weight sets for {} conv / {} FC layers",
+                conv_weights.len(),
+                fc_weights.len(),
+                model.convs.len(),
+                model.fcs.len()
+            )));
+        }
+        let pools = pool_schedule(&model.convs, model.fcs.first().map(|f| f.0))?;
+        Ok(ReferenceNet {
+            layers: model.convs.clone(),
+            pools,
+            conv_weights,
+            fcs: model.fcs.clone(),
+            fc_weights,
+            v_bits,
+        })
+    }
+
+    /// One exact forward pass; returns the raw logits (no per-stage
+    /// trace is materialized).
+    pub fn forward(&self, image: &Tensor3) -> Result<Vec<i64>> {
+        Ok(self.run(image, false)?.0)
+    }
+
+    /// One exact forward pass, additionally returning each conv
+    /// stage's output activation (post-pool). Verifies the 48-bit
+    /// accumulator guard on every stage's raw conv accumulators
+    /// (`acc_fits_48bit`) — a violation is a typed error, never silent
+    /// wraparound.
+    pub fn forward_trace(&self, image: &Tensor3) -> Result<(Vec<i64>, Vec<Tensor3>)> {
+        self.run(image, true)
+    }
+
+    fn run(&self, image: &Tensor3, keep_trace: bool) -> Result<(Vec<i64>, Vec<Tensor3>)> {
+        let mut x = image.clone();
+        let mut trace = Vec::new();
+        for (i, (layer, w)) in self.layers.iter().zip(&self.conv_weights).enumerate() {
+            let expected = (layer.in_ch, layer.in_hw, layer.in_hw);
+            if x.shape() != expected {
+                return Err(SdmmError::ShapeMismatch {
+                    expected,
+                    got: x.shape(),
+                });
+            }
+            let mut y = conv2d_int(&x, w, layer);
+            if !acc_fits_48bit(&y) {
+                return Err(SdmmError::Runtime(format!(
+                    "reference stage {i} ({:?}): conv accumulator exceeds the signed \
+                     48-bit DSP accumulator range",
+                    layer.name
+                )));
+            }
+            relu(&mut y);
+            let mut q = requantize(&y, self.v_bits).0;
+            if self.pools[i] {
+                q = maxpool2(&q);
+            }
+            if keep_trace {
+                trace.push(q.clone());
+            }
+            x = q;
+        }
+        let flat = fc_chain(
+            x.data,
+            self.fcs
+                .iter()
+                .zip(&self.fc_weights)
+                .map(|(&(i, o), w)| (i, o, w.as_slice())),
+            self.v_bits,
+        )?;
+        Ok((flat, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ApproxPolicy, BatchExec, ScalarExec};
+    use crate::cnn::zoo::ModelKind;
+    use crate::util::rng::Rng;
+
+    fn small_model() -> Model {
+        Model {
+            kind: ModelKind::TinyCnn,
+            convs: vec![
+                ConvLayer::new("c1", 8, 2, 4, 3, 1, 1, 1),
+                ConvLayer::new("c2", 4, 4, 6, 3, 1, 1, 1),
+            ],
+            fcs: vec![(6 * 2 * 2, 5)],
+        }
+    }
+
+    fn random_weights(model: &Model, v: u32, seed: u64) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
+        let lim = 1i64 << (v - 1);
+        let mut rng = Rng::new(seed);
+        let conv = model
+            .convs
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        let fc = model
+            .fcs
+            .iter()
+            .map(|&(i, o)| (0..i * o).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        (conv, fc)
+    }
+
+    fn random_input(model: &Model, v: u32, seed: u64) -> Tensor3 {
+        let lim = 1i64 << (v - 1);
+        let mut rng = Rng::new(seed);
+        let l = &model.convs[0];
+        let mut t = Tensor3::zeros(l.in_ch, l.in_hw, l.in_hw);
+        t.data = (0..t.data.len()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+        t
+    }
+
+    #[test]
+    fn pool_schedule_inferred_from_geometry() {
+        let m = small_model();
+        let pools = pool_schedule(&m.convs, Some(m.fcs[0].0)).unwrap();
+        assert_eq!(pools, vec![true, true]);
+        // direct chaining: no pool
+        let convs = [
+            ConvLayer::new("a", 6, 2, 3, 3, 1, 1, 1),
+            ConvLayer::new("b", 6, 3, 3, 3, 1, 1, 1),
+        ];
+        assert_eq!(pool_schedule(&convs, None).unwrap(), vec![false, false]);
+        // broken chaining is typed
+        let bad = [
+            ConvLayer::new("a", 6, 2, 3, 3, 1, 1, 1),
+            ConvLayer::new("b", 5, 3, 3, 3, 1, 1, 1),
+        ];
+        assert!(matches!(
+            pool_schedule(&bad, None),
+            Err(SdmmError::InvalidModel(_))
+        ));
+        // FC features that fit neither pooled nor unpooled are typed
+        assert!(matches!(
+            pool_schedule(&convs[..1], Some(17)),
+            Err(SdmmError::InvalidModel(_))
+        ));
+    }
+
+    #[test]
+    fn requantize_commutes_with_maxpool_after_relu() {
+        // The stage-order identity for EVEN spatial dims: after ReLU,
+        // requantize-then-pool == pool-then-requantize, bit for bit.
+        // (Odd dims floor-crop and can drop the tensor max, changing
+        // the scale between orders — there the schedule is *defined*
+        // as requantize-then-pool; see the module docs.)
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let c = 1 + rng.below(3) as usize;
+            let hw = 2 * (1 + rng.below(4) as usize);
+            let mut t = Tensor3::zeros(c, hw, hw);
+            t.data = (0..t.data.len()).map(|_| rng.range_i64(0, 50_000)).collect();
+            for bits in [8u32, 6, 4] {
+                let a = maxpool2(&requantize(&t, bits).0);
+                let b = requantize(&maxpool2(&t), bits).0;
+                assert_eq!(a, b, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn session_matches_reference_on_all_widths() {
+        let m = small_model();
+        for v in [8u32, 6, 4] {
+            let (cw, fw) = random_weights(&m, v, 40 + v as u64);
+            let input = random_input(&m, v, 50 + v as u64);
+            let compiler = Compiler::for_bits(v).unwrap().approximate(ApproxPolicy::nearest());
+            let plan = NetworkPlan::compile(&compiler, "t", &m, &cw, &fw).unwrap();
+            let mut scalar = ScalarExec::new();
+            let mut batch = BatchExec::new();
+            let a = InferenceSession::new(&plan, &mut scalar).infer(&input).unwrap();
+            let b = InferenceSession::new(&plan, &mut batch).infer(&input).unwrap();
+            assert_eq!(a, b, "scalar vs batch @{v}b");
+            let (logits, trace) = plan.reference().forward_trace(&input).unwrap();
+            assert_eq!(a.logits, logits, "session vs reference @{v}b");
+            assert_eq!(trace.len(), plan.stages.len());
+            // quantized-but-unapproximated reference differs in general
+            // but has identical geometry
+            let raw = ReferenceNet::new(&m, cw, fw, v).unwrap().forward(&input).unwrap();
+            assert_eq!(raw.len(), logits.len());
+        }
+    }
+
+    #[test]
+    fn guard_accounts_and_rejects_saturation() {
+        let layer = ConvLayer::new("c", 4, 1, 1, 1, 1, 0, 1);
+        // one weight of magnitude 1, 8-bit inputs: bound = 128, 9 bits
+        let g = AccGuard::for_weights(&[1], &layer, 8);
+        assert_eq!(g.worst_abs, 128);
+        assert_eq!(g.bits, 9);
+        assert!(g.fits_48bit());
+        // exactly 2^47 - 1 fits; 2^47 does not
+        assert!(AccGuard { worst_abs: (1u128 << 47) - 1, bits: 48 }.fits_48bit());
+        let g = AccGuard { worst_abs: 1u128 << 47, bits: 49 };
+        assert!(!g.fits_48bit());
+    }
+
+    #[test]
+    fn batch_infer_preserves_order() {
+        let m = small_model();
+        let (cw, fw) = random_weights(&m, 8, 7);
+        let compiler = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        let plan = NetworkPlan::compile(&compiler, "t", &m, &cw, &fw).unwrap();
+        let imgs: Vec<Tensor3> = (0..4u64).map(|i| random_input(&m, 8, 100 + i)).collect();
+        let mut batch = BatchExec::new();
+        let outs = InferenceSession::new(&plan, &mut batch).infer_batch(&imgs).unwrap();
+        let mut batch2 = BatchExec::new();
+        let mut session = InferenceSession::new(&plan, &mut batch2);
+        for (img, out) in imgs.iter().zip(&outs) {
+            assert_eq!(session.infer(img).unwrap(), *out);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_preserves_outputs() {
+        let m = small_model();
+        let (cw, fw) = random_weights(&m, 8, 9);
+        let input = random_input(&m, 8, 10);
+        let compiler = Compiler::for_bits(8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(CompressionPolicy::WrcHuffman);
+        let plan = NetworkPlan::compile(&compiler, "rt", &m, &cw, &fw).unwrap();
+        let dir = std::env::temp_dir().join(format!("sdmm-plan-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        plan.save(&dir).unwrap();
+        let loaded = NetworkPlan::load(&dir).unwrap();
+        assert_eq!(loaded.v_bits, plan.v_bits);
+        assert_eq!(loaded.compression, CompressionPolicy::WrcHuffman);
+        assert_eq!(loaded.stages.len(), plan.stages.len());
+        let mut a = BatchExec::new();
+        let mut b = BatchExec::new();
+        let x = InferenceSession::new(&plan, &mut a).infer(&input).unwrap();
+        let y = InferenceSession::new(&loaded, &mut b).infer(&input).unwrap();
+        assert_eq!(x, y, "cold-loaded plan diverged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compile_validates_weight_sets_and_fc_range() {
+        let m = small_model();
+        let compiler = Compiler::for_bits(8).unwrap().approximate(ApproxPolicy::nearest());
+        assert!(matches!(
+            NetworkPlan::compile(&compiler, "t", &m, &[], &[]),
+            Err(SdmmError::InvalidModel(_))
+        ));
+        let (cw, mut fw) = random_weights(&m, 8, 3);
+        fw[0][5] = 400; // outside signed 8-bit
+        assert!(matches!(
+            NetworkPlan::compile(&compiler, "t", &m, &cw, &fw),
+            Err(SdmmError::WeightOutOfRange { weight: 400, c_bits: 8 })
+        ));
+    }
+
+    #[test]
+    fn top1_breaks_ties_toward_last_max() {
+        assert_eq!(top1(&[3, 7, 7, 1]), 2);
+        assert_eq!(top1(&[-5]), 0);
+    }
+}

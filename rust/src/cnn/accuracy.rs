@@ -1,6 +1,7 @@
-//! Accuracy harness — the Table 2 reproduction.
+//! Accuracy harness — the Table 2 reproduction plus the network-level
+//! accuracy-delta protocol behind `sdmm eval`.
 //!
-//! Two complementary measurements (DESIGN.md §2):
+//! Three complementary measurements (DESIGN.md §2, §9):
 //!
 //! 1. **Weight-level** (`weight_error_report`): approximation error
 //!    statistics on distribution-matched weights for the *exact*
@@ -8,14 +9,51 @@
 //! 2. **Task-level** (`classification_delta`): a small integer CNN
 //!    (zoo::tiny_cnn shapes) classifying synthetic data; error increase
 //!    of approximated-quantized vs plain-quantized inference — the same
-//!    quantity Table 2 reports. The float forward pass is the teacher.
+//!    quantity Table 2 reports.
+//! 3. **Network-level** (`network_accuracy_table`): the Tiny-ImageNet-
+//!    like zoo model run end-to-end through the `api::network` pipeline
+//!    on a real `Executor` backend, measuring top-1 agreement against
+//!    the exact integer reference across 8/6/4-bit weights — the
+//!    paper's headline claim reproduced on the served path.
+//!
+//! Since the network pipeline landed, every forward pass here delegates
+//! to [`crate::api::network`]: the plain-quantized and float-teacher
+//! paths run on [`ReferenceNet`] (the exact scalar reference), the
+//! approximated path compiles a [`NetworkPlan`] and executes through an
+//! [`InferenceSession`] — the same code every executor backend and the
+//! golden conformance suite runs. The hand-rolled conv loop this module
+//! used to carry is gone.
 
-use super::infer::{approximate_weights, conv2d_int, fc_int, maxpool2, relu, requantize, Tensor3};
+use super::infer::Tensor3;
 use super::quant::quantize_symmetric;
 use super::weights::synth_layer_weights;
-use super::zoo::{tiny_cnn, Model, ModelKind};
+use super::zoo::{tiny_cnn, tiny_imagenet_cnn, Model, ModelKind};
+use crate::api::network::{top1, InferenceSession, NetworkPlan, ReferenceNet};
+use crate::api::{ApproxPolicy, BatchExec, Compiler, Executor};
+use crate::error::{Result, SdmmError};
 use crate::manip::{approximation_error_table, ErrorStats};
 use crate::util::rng::Rng;
+
+/// One synthetic evaluation image: per-channel low-frequency sinusoid
+/// mixtures plus mild noise — the input family both accuracy protocols
+/// share (EXPERIMENTS.md §Accuracy). Channel 0 carries no phase
+/// offset, so the single-channel task-level protocol draws exactly
+/// this recipe too.
+fn synth_image(rng: &mut Rng, chans: usize, hw: usize) -> Vec<f64> {
+    let mut img = vec![0.0f64; chans * hw * hw];
+    for ch in 0..chans {
+        let fx = rng.f64() * 0.8 + 0.2;
+        let fy = rng.f64() * 0.8 + 0.2;
+        let phase = rng.f64() * 6.28;
+        for i in 0..hw * hw {
+            let y = (i / hw) as f64;
+            let x = (i % hw) as f64;
+            img[ch * hw * hw + i] =
+                (fx * x + phase).sin() * (fy * y + 0.5 * ch as f64).cos() + 0.1 * rng.normal();
+        }
+    }
+    img
+}
 
 /// Weight-level approximation error for a zoo model at weight width
 /// `c_bits`: synthesize each conv layer, quantize, approximate, report.
@@ -48,60 +86,17 @@ pub struct ClassificationDelta {
     pub samples: usize,
 }
 
-/// The tiny CNN forward pass in integer arithmetic; `w_bits` quantizes
-/// weights, `a_bits` quantizes activations between layers, `approx`
-/// additionally applies the paper's approximation to every weight.
-fn tiny_forward(
-    input: &Tensor3,
-    layer_weights: &[Vec<i64>],
-    fc_w: &[i64],
-    a_bits: u32,
-    model: &Model,
-) -> usize {
-    let mut x = input.clone();
-    for (layer, wq) in model.convs.iter().zip(layer_weights) {
-        let mut y = conv2d_int(&x, wq, layer);
-        relu(&mut y);
-        let y = maxpool2(&y);
-        let (yq, _) = requantize(&y, a_bits);
-        x = yq;
-    }
-    let flat: Vec<i64> = x.data.clone();
-    let (in_f, out_f) = model.fcs[0];
-    let logits = fc_int(&flat, fc_w, in_f, out_f);
-    argmax(&logits)
-}
-
-fn argmax(xs: &[i64]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by_key(|(_, &v)| v)
-        .map(|(i, _)| i)
-        .unwrap()
-}
-
-/// Float forward (teacher labels).
-fn tiny_forward_float(input_f: &[f64], weights_f: &[Vec<f64>], fc_wf: &[f64], model: &Model) -> usize {
-    // Reuse the integer path at high precision (14-bit) — with 14-bit
-    // weights and activations the quantization error is far below the
-    // logit gaps of the synthetic task, so this is an exact teacher.
-    let (qin, _) = quantize_symmetric(input_f, 14);
-    let input = Tensor3 {
-        c: model.convs[0].in_ch,
-        h: model.convs[0].in_hw,
-        w: model.convs[0].in_hw,
-        data: qin,
-    };
-    let wq: Vec<Vec<i64>> = weights_f
-        .iter()
-        .map(|w| quantize_symmetric(w, 14).0)
-        .collect();
-    let (fcq, _) = quantize_symmetric(fc_wf, 14);
-    tiny_forward(&input, &wq, &fcq, 14, model)
-}
-
 /// Run the full Table 2 cell: (weight bits, activation bits) on
-/// `samples` synthetic images.
+/// `samples` synthetic images. The quantized baseline and the float
+/// teacher run on the exact [`ReferenceNet`]; the approximated path
+/// compiles a [`NetworkPlan`] through the facade compiler and executes
+/// on the batch backend (bit-identical to every other backend —
+/// `tests/api_facade.rs`, `tests/golden_network.rs`).
+///
+/// Panics if `w_bits`/`a_bits` fall outside the paper's {8, 6, 4}
+/// grid — no SDMM port layout exists there, so the approximated path
+/// is undefined (`Compiler::for_bits_wc` is the typed-error entry
+/// point for callers probing other widths).
 pub fn classification_delta(w_bits: u32, a_bits: u32, samples: usize, seed: u64) -> ClassificationDelta {
     let model = tiny_cnn();
     let mut rng = Rng::new(seed);
@@ -117,42 +112,51 @@ pub fn classification_delta(w_bits: u32, a_bits: u32, samples: usize, seed: u64)
         .map(|_| rng.laplace((2.0 / in_f as f64).sqrt() / std::f64::consts::SQRT_2))
         .collect();
 
-    // Quantized + approximated variants.
+    // Float teacher: the reference net at 14 bits — with 14-bit weights
+    // and activations the quantization error is far below the logit
+    // gaps of the synthetic task, so this is an exact teacher.
+    let wq14: Vec<Vec<i64>> = weights_f
+        .iter()
+        .map(|w| quantize_symmetric(w, 14).0)
+        .collect();
+    let fc14 = quantize_symmetric(&fc_wf, 14).0;
+    let teacher_net = ReferenceNet::new(&model, wq14, vec![fc14], 14).expect("teacher net");
+
+    // Quantized baseline (exact reference) and approximated plan (the
+    // SDMM hardware path) share the same quantized weights; the plan
+    // approximates conv planes and the FC head itself at pack time.
     let wq: Vec<Vec<i64>> = weights_f
         .iter()
         .map(|w| quantize_symmetric(w, w_bits).0)
         .collect();
-    let wa: Vec<Vec<i64>> = wq.iter().map(|w| approximate_weights(w, w_bits)).collect();
     let (fcq, _) = quantize_symmetric(&fc_wf, w_bits);
-    // FC weights go through the same packing hardware.
-    let fca = approximate_weights(&fcq, w_bits);
+    let quant_net =
+        ReferenceNet::new(&model, wq.clone(), vec![fcq.clone()], a_bits).expect("quant reference");
+    let compiler = Compiler::for_bits_wc(w_bits, a_bits)
+        .expect("paper bit widths")
+        .approximate(ApproxPolicy::nearest());
+    let plan =
+        NetworkPlan::compile(&compiler, "tiny", &model, &wq, &[fcq]).expect("tiny CNN compiles");
+    let mut batch = BatchExec::new();
+    let mut session = InferenceSession::new(&plan, &mut batch);
 
     let (mut wrong_q, mut wrong_a) = (0usize, 0usize);
+    let hw = model.convs[0].in_hw;
     for _ in 0..samples {
         // Synthetic image with some spatial structure (low-frequency
         // mixture) so the task is not pure noise.
-        let hw = model.convs[0].in_hw;
-        let fx = rng.f64() * 0.8 + 0.2;
-        let fy = rng.f64() * 0.8 + 0.2;
-        let phase = rng.f64() * 6.28;
-        let img_f: Vec<f64> = (0..hw * hw)
-            .map(|i| {
-                let y = (i / hw) as f64;
-                let x = (i % hw) as f64;
-                (fx * x + phase).sin() * (fy * y).cos() + 0.1 * rng.normal()
-            })
-            .collect();
-        let teacher = tiny_forward_float(&img_f, &weights_f, &fc_wf, &model);
+        let img_f = synth_image(&mut rng, 1, hw);
+        let (q14, _) = quantize_symmetric(&img_f, 14);
+        let teacher = top1(
+            &teacher_net
+                .forward(&Tensor3 { c: 1, h: hw, w: hw, data: q14 })
+                .expect("teacher forward"),
+        );
 
         let (qi, _) = quantize_symmetric(&img_f, a_bits);
-        let input = Tensor3 {
-            c: 1,
-            h: hw,
-            w: hw,
-            data: qi,
-        };
-        let pred_q = tiny_forward(&input, &wq, &fcq, a_bits, &model);
-        let pred_a = tiny_forward(&input, &wa, &fca, a_bits, &model);
+        let input = Tensor3 { c: 1, h: hw, w: hw, data: qi };
+        let pred_q = top1(&quant_net.forward(&input).expect("reference forward"));
+        let pred_a = session.infer(&input).expect("session forward").top1;
         if pred_q != teacher {
             wrong_q += 1;
         }
@@ -168,6 +172,133 @@ pub fn classification_delta(w_bits: u32, a_bits: u32, samples: usize, seed: u64)
         delta_pp: err_approx - err_quant,
         samples,
     }
+}
+
+/// One row of the network-level accuracy-delta table (`sdmm eval`).
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkAccuracyRow {
+    /// Weight/activation bit width of this row.
+    pub w_bits: u32,
+    /// Images evaluated.
+    pub samples: usize,
+    /// Percentage of images where the SDMM plan's top-1 equals the
+    /// exact integer reference's top-1 (the paper's
+    /// accuracy-preservation claim; exactly 100 at 4 bits, where the
+    /// approximation is the identity).
+    pub top1_agreement: f64,
+    /// Error rate of exact quantized inference vs the float teacher.
+    pub err_quant: f64,
+    /// Error rate of the SDMM plan vs the float teacher.
+    pub err_approx: f64,
+    /// Error increase in percentage points (Table 2 quantity at
+    /// network scale).
+    pub delta_pp: f64,
+}
+
+/// The network-level accuracy-delta protocol on the default batch
+/// backend. See [`network_accuracy_table_with`].
+pub fn network_accuracy_table(samples: usize, seed: u64) -> Result<Vec<NetworkAccuracyRow>> {
+    let mut batch = BatchExec::new();
+    network_accuracy_table_with(&mut batch, samples, seed)
+}
+
+/// Reproduce the paper's accuracy-delta table at network scale: the
+/// Tiny-ImageNet-like zoo model ([`tiny_imagenet_cnn`]), deterministic
+/// synthetic 64×64 RGB inputs, one row per weight width in {8, 6, 4}.
+///
+/// Per row: quantize the synthesized float weights at `w_bits`, run
+/// every image through (a) the exact integer reference
+/// ([`ReferenceNet`]) and (b) a [`NetworkPlan`] compiled through the
+/// facade and executed on `exec`, and score both against the 14-bit
+/// float teacher. `top1_agreement` is the direct plan-vs-reference
+/// comparison — the quantity the golden conformance suite pins at the
+/// bit level and this protocol measures at the task level.
+pub fn network_accuracy_table_with(
+    exec: &mut dyn Executor,
+    samples: usize,
+    seed: u64,
+) -> Result<Vec<NetworkAccuracyRow>> {
+    if samples == 0 {
+        return Err(SdmmError::InvalidConfig(
+            "accuracy protocol needs at least one sample".into(),
+        ));
+    }
+    let model = tiny_imagenet_cnn();
+    let mut rng = Rng::new(seed);
+
+    let weights_f: Vec<Vec<f64>> = model
+        .convs
+        .iter()
+        .map(|l| synth_layer_weights(l, &mut rng))
+        .collect();
+    let (in_f, out_f) = model.fcs[0];
+    let fc_wf: Vec<f64> = (0..in_f * out_f)
+        .map(|_| rng.laplace((2.0 / in_f as f64).sqrt() / std::f64::consts::SQRT_2))
+        .collect();
+
+    // Deterministic Tiny-ImageNet-like inputs: per-channel low-frequency
+    // mixtures plus mild noise, 3 channels, 64×64.
+    let hw = model.convs[0].in_hw;
+    let chans = model.convs[0].in_ch;
+    let mut images: Vec<Vec<f64>> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        images.push(synth_image(&mut rng, chans, hw));
+    }
+
+    // Teacher labels once per image (independent of the row's width).
+    let wq14: Vec<Vec<i64>> = weights_f
+        .iter()
+        .map(|w| quantize_symmetric(w, 14).0)
+        .collect();
+    let fc14 = quantize_symmetric(&fc_wf, 14).0;
+    let teacher_net = ReferenceNet::new(&model, wq14, vec![fc14], 14)?;
+    let mut teachers = Vec::with_capacity(samples);
+    for img in &images {
+        let (q14, _) = quantize_symmetric(img, 14);
+        let t = Tensor3 { c: chans, h: hw, w: hw, data: q14 };
+        teachers.push(top1(&teacher_net.forward(&t)?));
+    }
+
+    let mut rows = Vec::with_capacity(3);
+    for w_bits in [8u32, 6, 4] {
+        let wq: Vec<Vec<i64>> = weights_f
+            .iter()
+            .map(|w| quantize_symmetric(w, w_bits).0)
+            .collect();
+        let (fcq, _) = quantize_symmetric(&fc_wf, w_bits);
+        let quant_net = ReferenceNet::new(&model, wq.clone(), vec![fcq.clone()], w_bits)?;
+        let compiler = Compiler::for_bits(w_bits)?.approximate(ApproxPolicy::nearest());
+        let plan = NetworkPlan::compile(&compiler, "tinyimagenet", &model, &wq, &[fcq])?;
+        let mut session = InferenceSession::new(&plan, &mut *exec);
+
+        let (mut agree, mut wrong_q, mut wrong_a) = (0usize, 0usize, 0usize);
+        for (img, &teacher) in images.iter().zip(&teachers) {
+            let (qi, _) = quantize_symmetric(img, w_bits);
+            let input = Tensor3 { c: chans, h: hw, w: hw, data: qi };
+            let pred_q = top1(&quant_net.forward(&input)?);
+            let pred_a = session.infer(&input)?.top1;
+            if pred_a == pred_q {
+                agree += 1;
+            }
+            if pred_q != teacher {
+                wrong_q += 1;
+            }
+            if pred_a != teacher {
+                wrong_a += 1;
+            }
+        }
+        let err_quant = wrong_q as f64 / samples as f64 * 100.0;
+        let err_approx = wrong_a as f64 / samples as f64 * 100.0;
+        rows.push(NetworkAccuracyRow {
+            w_bits,
+            samples,
+            top1_agreement: agree as f64 / samples as f64 * 100.0,
+            err_quant,
+            err_approx,
+            delta_pp: err_approx - err_quant,
+        });
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -201,5 +332,20 @@ mod tests {
     fn table2_8bit_delta_small() {
         let d = classification_delta(8, 8, 60, 4);
         assert!(d.delta_pp.abs() <= 5.0, "{d:?}");
+    }
+
+    #[test]
+    fn network_table_4bit_row_is_exact() {
+        // 2 images keep this fast in debug builds; the protocol's full
+        // sample count lives in `sdmm eval` / EXPERIMENTS.md.
+        let rows = network_accuracy_table(2, 11).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!((0.0..=100.0).contains(&r.top1_agreement), "{r:?}");
+            assert_eq!(r.samples, 2);
+        }
+        let r4 = rows.iter().find(|r| r.w_bits == 4).unwrap();
+        assert_eq!(r4.top1_agreement, 100.0, "{r4:?}");
+        assert_eq!(r4.delta_pp, 0.0, "{r4:?}");
     }
 }

@@ -195,11 +195,16 @@ pub fn requantize(t: &Tensor3, bits: u32) -> (Tensor3, QuantParams) {
     )
 }
 
-/// Verify every accumulator fits the DSP's 48-bit signed range —
-/// the guard that makes the SDMM/1M substitution exact.
+/// Verify every accumulator fits the DSP's 48-bit signed range
+/// `[-2^47, 2^47 - 1]` — the guard that makes the SDMM/1M substitution
+/// exact. The compile-time analogue is
+/// [`AccGuard`](crate::api::AccGuard), which bounds a layer's worst
+/// case before any input is seen.
 pub fn acc_fits_48bit(t: &Tensor3) -> bool {
     let lim = 1i64 << 47;
-    t.data.iter().all(|&v| v > -lim && v < lim)
+    // The signed range is asymmetric: -2^47 is representable, +2^47
+    // is not.
+    t.data.iter().all(|&v| v >= -lim && v < lim)
 }
 
 #[cfg(test)]
@@ -292,6 +297,113 @@ mod tests {
         let ws8: Vec<i64> = (-128..128).collect();
         let a = approximate_weights(&ws8, 8);
         assert_eq!(approximate_weights(&a, 8), a);
+    }
+
+    #[test]
+    fn maxpool_odd_dims_floor_semantics() {
+        // 3x3 -> 1x1: the last (odd) row and column never reach the
+        // output (floor pooling, the standard CNN convention).
+        let t = Tensor3 {
+            c: 1,
+            h: 3,
+            w: 3,
+            data: vec![1, 2, 99, 3, 4, 99, 99, 99, 99],
+        };
+        let p = maxpool2(&t);
+        assert_eq!((p.c, p.h, p.w), (1, 1, 1));
+        assert_eq!(p.data, vec![4]);
+        // 5x4 -> 2x2 (mixed odd/even dims)
+        let mut t = Tensor3::zeros(2, 5, 4);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = i as i64;
+        }
+        let p = maxpool2(&t);
+        assert_eq!((p.c, p.h, p.w), (2, 2, 2));
+        // channel 0, window (rows 2-3, cols 2-3): max = 3*4 + 3 = 15
+        assert_eq!(p.at(0, 1, 1), 15);
+    }
+
+    #[test]
+    fn maxpool_all_negative_picks_least_negative() {
+        // No ReLU assumption in maxpool itself: on an all-negative
+        // tensor the window max is the value closest to zero.
+        let t = Tensor3 {
+            c: 1,
+            h: 2,
+            w: 2,
+            data: vec![-8, -1, -300, -42],
+        };
+        assert_eq!(maxpool2(&t).data, vec![-1]);
+    }
+
+    #[test]
+    fn requantize_all_negative_tensor_maps_to_minus_qmax() {
+        // amax comes from |x|, so an all-negative tensor requantizes to
+        // [-qmax, 0] — qmin = -qmax - 1 is never produced by the
+        // symmetric scheme.
+        let t = Tensor3 {
+            c: 1,
+            h: 1,
+            w: 4,
+            data: vec![-1000, -500, -250, -1],
+        };
+        for bits in [8u32, 6, 4] {
+            let (q, p) = requantize(&t, bits);
+            assert_eq!(q.data[0], -p.qmax(), "bits={bits}");
+            assert!(q.data.iter().all(|&v| (-p.qmax()..=0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn requantize_zero_and_single_value_tensors() {
+        let z = Tensor3::zeros(1, 2, 2);
+        let (q, p) = requantize(&z, 8);
+        assert!(q.data.iter().all(|&v| v == 0));
+        assert_eq!(p.scale, 1.0);
+        // a single hot value lands exactly on qmax
+        let mut t = Tensor3::zeros(1, 2, 2);
+        t.set(0, 1, 1, -123_456);
+        let (q, p) = requantize(&t, 8);
+        assert_eq!(q.at(0, 1, 1), -p.qmax());
+    }
+
+    #[test]
+    fn fc_known_negative_and_zero_features() {
+        // out0 = -3*4 + 0 = -12; out1 = 2*4 + 0 = 8 (zero input feature
+        // contributes nothing regardless of its weight)
+        let logits = fc_int(&[4, 0], &[-3, 9, 2, -7], 2, 2);
+        assert_eq!(logits, vec![-12, 8]);
+    }
+
+    #[test]
+    fn acc_48bit_boundaries_exact() {
+        let lim = 1i64 << 47;
+        let mk = |v: i64| Tensor3 {
+            c: 1,
+            h: 1,
+            w: 1,
+            data: vec![v],
+        };
+        // the full signed 48-bit range is [-2^47, 2^47 - 1]
+        assert!(acc_fits_48bit(&mk(lim - 1)));
+        assert!(acc_fits_48bit(&mk(-lim)));
+        assert!(!acc_fits_48bit(&mk(lim)));
+        assert!(!acc_fits_48bit(&mk(-lim - 1)));
+        assert!(acc_fits_48bit(&mk(0)));
+    }
+
+    #[test]
+    fn conv_saturation_detected_by_guard() {
+        // A 1x1 conv engineered to exceed 2^47: weight 2^20, input
+        // 2^28 (not a legal operand width, but conv2d_int is pure i64 —
+        // the guard is what must catch it).
+        let layer = ConvLayer::new("t", 1, 1, 1, 1, 1, 0, 1);
+        let mut input = Tensor3::zeros(1, 1, 1);
+        input.set(0, 0, 0, 1 << 28);
+        let out = conv2d_int(&input, &[1 << 20], &layer);
+        assert!(!acc_fits_48bit(&out));
+        let small = conv2d_int(&input, &[1 << 18], &layer);
+        assert!(acc_fits_48bit(&small));
     }
 
     #[test]

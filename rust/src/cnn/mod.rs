@@ -13,9 +13,18 @@
 //!   that conv weights empirically follow, layer-by-layer, with a fixed
 //!   seed — approximation error statistics (the mechanism behind
 //!   Table 2) are faithful;
-//! * end-to-end classification deltas come from the small JAX-trained
-//!   CNN served through the PJRT runtime (see `coordinator` and
+//! * end-to-end classification deltas run through the
+//!   [`crate::api::network`] pipeline (`NetworkPlan` +
+//!   `InferenceSession` on a real `Executor` backend, with the exact
+//!   integer `ReferenceNet` as baseline and golden model) — plus,
+//!   when artifacts are present, the small JAX-trained CNN served
+//!   through the PJRT runtime (see `coordinator` and
 //!   `examples/serve_cnn.rs`).
+//!
+//! `infer` keeps the tensor primitives (conv/pool/FC/requantize) and
+//! the scalar `conv2d_int` reference those pipelines are defined
+//! against; the per-model forward loops that used to live in
+//! `accuracy` are gone — everything delegates to `api::network`.
 
 pub mod accuracy;
 pub mod infer;

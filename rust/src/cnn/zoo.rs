@@ -73,6 +73,11 @@ pub enum ModelKind {
     MobileNet,
     /// The small end-to-end CNN trained at build time (python/compile).
     TinyCnn,
+    /// Tiny-ImageNet-like evaluation CNN (64×64 RGB in, 200 classes):
+    /// the deterministic synthetic-input accuracy protocol of
+    /// `sdmm eval` / `cnn::accuracy::network_accuracy_table` runs on
+    /// this geometry through the full `api::network` pipeline.
+    TinyImageNet,
 }
 
 impl ModelKind {
@@ -83,6 +88,7 @@ impl ModelKind {
             ModelKind::GoogleNet => "GoogleNet",
             ModelKind::MobileNet => "MobileNet",
             ModelKind::TinyCnn => "TinyCNN",
+            ModelKind::TinyImageNet => "TinyImageNet",
         }
     }
 
@@ -131,6 +137,7 @@ impl Model {
             ModelKind::GoogleNet => googlenet(),
             ModelKind::MobileNet => mobilenet(),
             ModelKind::TinyCnn => tiny_cnn(),
+            ModelKind::TinyImageNet => tiny_imagenet_cnn(),
         }
     }
 }
@@ -262,6 +269,27 @@ pub fn tiny_cnn() -> Model {
     }
 }
 
+/// The Tiny-ImageNet-like evaluation CNN: 64×64 RGB input (the actual
+/// Tiny ImageNet resolution), four conv+pool blocks, a 200-class head
+/// (Tiny ImageNet's class count). Small enough that the full
+/// `sdmm eval` accuracy protocol (8/6/4-bit × teacher + exact reference
+/// + SDMM plan, dozens of images) runs in seconds, while every layer
+/// still exercises the real pipeline: multi-channel convs, the pool
+/// schedule, requantization and an approximated FC classifier.
+pub fn tiny_imagenet_cnn() -> Model {
+    let convs = vec![
+        ConvLayer::new("conv1", 64, 3, 12, 3, 1, 1, 1),
+        ConvLayer::new("conv2", 32, 12, 24, 3, 1, 1, 1),
+        ConvLayer::new("conv3", 16, 24, 32, 3, 1, 1, 1),
+        ConvLayer::new("conv4", 8, 32, 32, 3, 1, 1, 1),
+    ];
+    Model {
+        kind: ModelKind::TinyImageNet,
+        convs,
+        fcs: vec![(4 * 4 * 32, 200)],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +361,22 @@ mod tests {
         assert_eq!(m.convs[0].out_hw(), 55);
         assert_eq!(m.convs[1].out_hw(), 27);
         assert_eq!(m.convs[2].out_hw(), 13);
+    }
+
+    #[test]
+    fn tiny_imagenet_geometry_chains_through_pools() {
+        let m = Model::build(ModelKind::TinyImageNet);
+        // every conv's pooled output feeds the next layer
+        for pair in m.convs.windows(2) {
+            assert_eq!(pair[0].out_ch, pair[1].in_ch);
+            assert_eq!(pair[0].out_hw() / 2, pair[1].in_hw);
+        }
+        let last = m.convs.last().unwrap();
+        assert_eq!(
+            last.out_ch * (last.out_hw() / 2) * (last.out_hw() / 2),
+            m.fcs[0].0
+        );
+        assert_eq!(m.fcs[0].1, 200);
     }
 
     #[test]

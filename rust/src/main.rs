@@ -95,6 +95,7 @@ fn run() -> Result<()> {
         "manip" => cmd_manip(&args),
         "pack" => cmd_pack(&args),
         "compile" => cmd_compile(&args),
+        "eval" => cmd_eval(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "serve-sim" => cmd_serve_sim(&args),
@@ -116,7 +117,11 @@ fn print_usage() {
          sdmm pack <w1,w2,...> [--bits N] [--mode approx|exact]\n\
          sdmm compile [--bits N] [--policy none|wrc|wrc-huffman|prune-wrc-huffman]\n\
          \x20            [--out DIR] [--sparsity F] [--seed S]\n\
-         sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|ablation|all>\n\
+         sdmm eval [--samples N] [--seed S] [--backend scalar|batch|systolic|serving]\n\
+         \x20            [--smoke]   whole-network accuracy-delta protocol (top-1\n\
+         \x20            agreement vs the exact int reference at 8/6/4-bit; gates\n\
+         \x20            on exact 4-bit agreement)\n\
+         sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|accuracy|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
          sdmm serve-sim [--shards N] [--requests N] [--concurrency C] [--from-artifact DIR]\n\
@@ -286,6 +291,78 @@ fn cmd_compile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The whole-network accuracy-delta protocol (EXPERIMENTS.md
+/// §Accuracy): deterministic synthetic Tiny-ImageNet-like images
+/// through the `api::network` pipeline on a chosen executor backend,
+/// top-1 agreement against the exact integer reference plus error
+/// deltas vs the float teacher, one row per weight width in {8, 6, 4}.
+/// Exits non-zero unless the 4-bit row is *exactly* agreement 100% /
+/// delta 0 pp (the approximation is the identity below 6 bits — any
+/// deviation is a conformance bug, not noise).
+fn cmd_eval(args: &Args) -> Result<()> {
+    use sdmm::api::{BatchExec, ScalarExec, ServingExec, SystolicExec};
+    use sdmm::cnn::accuracy::network_accuracy_table_with;
+    use sdmm::coordinator::ServingConfig;
+
+    let smoke = args.flags.contains_key("smoke");
+    let samples = args.flag_usize("samples", if smoke { 8 } else { 48 })?;
+    let seed = args.flag_usize("seed", 2024)? as u64;
+    let backend = args.flag("backend", "batch");
+    let t0 = Instant::now();
+    let rows = match backend.as_str() {
+        "scalar" => {
+            let mut e = ScalarExec::new();
+            network_accuracy_table_with(&mut e, samples, seed)?
+        }
+        "batch" => {
+            let mut e = BatchExec::new();
+            network_accuracy_table_with(&mut e, samples, seed)?
+        }
+        "systolic" => {
+            let mut e = SystolicExec::new();
+            network_accuracy_table_with(&mut e, samples, seed)?
+        }
+        "serving" => {
+            let mut e = ServingExec::start(ServingConfig {
+                shards: sdmm::util::par::num_threads(),
+                queue_capacity: 64,
+            })?;
+            let rows = network_accuracy_table_with(&mut e, samples, seed)?;
+            e.shutdown();
+            rows
+        }
+        other => bail!("unknown backend {other:?} (scalar|batch|systolic|serving)"),
+    };
+    println!(
+        "==== network accuracy delta (TinyImageNet-like CNN, backend={backend}, \
+         seed={seed}) ===="
+    );
+    println!(
+        "approx path: Compiler -> NetworkPlan -> InferenceSession; reference: exact \
+         integer ReferenceNet; teacher: 14-bit reference net"
+    );
+    print!("{}", sdmm::report::render_accuracy_rows(&rows));
+    println!(
+        "({} images x 3 widths in {:.2}s)",
+        samples,
+        t0.elapsed().as_secs_f64()
+    );
+    let r4 = rows
+        .iter()
+        .find(|r| r.w_bits == 4)
+        .context("4-bit row missing")?;
+    if r4.top1_agreement != 100.0 || r4.delta_pp != 0.0 {
+        bail!(
+            "4-bit conformance gate FAILED: agreement {:.2}%, delta {:+.2} pp \
+             (4-bit approximation must be the identity)",
+            r4.top1_agreement,
+            r4.delta_pp
+        );
+    }
+    println!("4-bit conformance gate OK: agreement 100%, delta +0.00 pp");
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -306,6 +383,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig10" => sdmm::report::fig10(),
         "rom" => sdmm::report::rom_bounds(),
         "network" => sdmm::report::network_summary(),
+        "accuracy" => sdmm::report::accuracy_network(),
         "ablation" => sdmm::report::ablation::all(),
         "all" => sdmm::report::all(&dir),
         other => bail!("unknown report {other:?}"),

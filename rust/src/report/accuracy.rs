@@ -1,0 +1,70 @@
+//! Network-level accuracy-delta report — the paper's
+//! accuracy-preservation claim reproduced on the served path
+//! (EXPERIMENTS.md §Accuracy; also the body of `sdmm eval`).
+
+use crate::cnn::accuracy::{network_accuracy_table, NetworkAccuracyRow};
+use std::fmt::Write;
+
+/// Render accuracy rows as the fixed-width table `sdmm eval` prints
+/// and CI publishes as a build artifact (one row per weight width).
+pub fn render_accuracy_rows(rows: &[NetworkAccuracyRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:>6} {:>8} {:>12} {:>10} {:>10} {:>10}",
+        "W=I", "samples", "top1 agree", "err(q)%", "err(a)%", "delta pp"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>6} {:>8} {:>11.2}% {:>10.2} {:>10.2} {:>+10.2}",
+            r.w_bits, r.samples, r.top1_agreement, r.err_quant, r.err_approx, r.delta_pp
+        );
+    }
+    s
+}
+
+/// The report block: the network accuracy-delta protocol at its
+/// default sample count and seed (deterministic — the same numbers
+/// EXPERIMENTS.md §Accuracy records).
+pub fn accuracy_network() -> String {
+    let mut s = String::from(
+        "\n==== network accuracy delta (TinyImageNet-like CNN, SDMM plan vs exact \
+         int reference) ====\n",
+    );
+    s.push_str(
+        "protocol: synthetic 64x64 RGB inputs (seed 2024), 14-bit reference-net teacher,\n\
+         48 images; approx path = NetworkPlan + BatchExec (bit-identical on every\n\
+         backend per tests/golden_network.rs); paper claim: |delta| <= 0.38 pp, exact\n\
+         zeros at 4 bits\n\n",
+    );
+    match network_accuracy_table(48, 2024) {
+        Ok(rows) => s.push_str(&render_accuracy_rows(&rows)),
+        Err(e) => {
+            let _ = writeln!(s, "  (accuracy protocol failed: {e})");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::accuracy::NetworkAccuracyRow;
+
+    #[test]
+    fn renders_rows() {
+        let rows = [NetworkAccuracyRow {
+            w_bits: 8,
+            samples: 10,
+            top1_agreement: 90.0,
+            err_quant: 20.0,
+            err_approx: 30.0,
+            delta_pp: 10.0,
+        }];
+        let s = render_accuracy_rows(&rows);
+        assert!(s.contains("top1 agree"));
+        assert!(s.contains("90.00%"));
+        assert!(s.contains("+10.00"));
+    }
+}

@@ -6,10 +6,12 @@
 //! calls — the same code paths the tests pin down.
 
 pub mod ablation;
+mod accuracy;
 mod network;
 mod serving;
 mod tables;
 
+pub use accuracy::{accuracy_network, render_accuracy_rows};
 pub use network::network_summary;
 pub use serving::serving_summary;
 pub use tables::*;
@@ -29,6 +31,7 @@ pub fn all(artifacts_dir: &str) -> String {
     out.push_str(&fig10());
     out.push_str(&rom_bounds());
     out.push_str(&network_summary());
+    out.push_str(&accuracy_network());
     out.push_str(&ablation::all());
     out
 }

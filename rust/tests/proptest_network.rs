@@ -1,0 +1,210 @@
+//! Network-pipeline property tests (util::check harness — proptest is
+//! not in the vendored crate set).
+//!
+//! Over random zoo-style geometries (2 convs, random pools including
+//! odd-dimension floor pooling, optional FC head) × {8, 6, 4}-bit
+//! operands × **all** `CompressionPolicy` variants:
+//!
+//! * `NetworkPlan` output is bit-identical across `ScalarExec`,
+//!   `BatchExec`, `SystolicExec` and `ServingExec` — logits, top-1 and
+//!   op accounting alike — and equals the exact scalar reference over
+//!   the plan's effective weights.
+//! * `save → load → serve` of the plan's `CompiledModel` artifacts
+//!   preserves outputs bit-exactly (the deployable path changes where
+//!   weights live, never what they compute).
+
+use sdmm::api::{
+    ApproxPolicy, BatchExec, Compiler, CompressionPolicy, InferenceSession, NetworkPlan,
+    ScalarExec, ServingExec, SystolicExec,
+};
+use sdmm::cnn::infer::Tensor3;
+use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+use sdmm::coordinator::ServingConfig;
+use sdmm::util::check::check;
+use sdmm::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static PLAN_ID: AtomicUsize = AtomicUsize::new(0);
+
+type Case = (Model, Vec<Vec<i64>>, Vec<Vec<i64>>, Tensor3);
+
+/// Random 2-conv (+ optional FC) network with in-range weights and
+/// input at width `v`. Every conv preserves its spatial size (k=3/p=1
+/// or k=1/p=0), so the random pool flags alone decide the transitions
+/// — including floor pooling of odd sizes (6 → pool → 3 → pool → 1).
+fn random_net(r: &mut Rng, v: u32) -> Case {
+    let lim = 1i64 << (v - 1);
+    let hw0 = 2 * (3 + r.below(2) as usize); // 6 or 8
+    let c0 = 1 + r.below(3) as usize;
+    let c1 = 1 + r.below(4) as usize;
+    let c2 = 1 + r.below(5) as usize;
+    let pool0 = r.bool(0.5);
+    let hw1 = if pool0 { hw0 / 2 } else { hw0 };
+    let k1 = if r.bool(0.5) { 3 } else { 1 };
+    let convs = vec![
+        ConvLayer::new("p0", hw0, c0, c1, 3, 1, 1, 1),
+        ConvLayer::new("p1", hw1, c1, c2, k1, 1, if k1 == 3 { 1 } else { 0 }, 1),
+    ];
+    let pool1 = hw1 >= 2 && r.bool(0.5);
+    let hw2 = if pool1 { hw1 / 2 } else { hw1 };
+    let fcs = if r.bool(0.7) {
+        vec![(c2 * hw2 * hw2, 2 + r.below(4) as usize)]
+    } else {
+        vec![]
+    };
+    let model = Model {
+        kind: ModelKind::TinyCnn,
+        convs,
+        fcs,
+    };
+    let conv_w: Vec<Vec<i64>> = model
+        .convs
+        .iter()
+        .map(|l| (0..l.params()).map(|_| r.range_i64(-lim, lim - 1)).collect())
+        .collect();
+    let fc_w: Vec<Vec<i64>> = model
+        .fcs
+        .iter()
+        .map(|&(i, o)| (0..i * o).map(|_| r.range_i64(-lim, lim - 1)).collect())
+        .collect();
+    let mut input = Tensor3::zeros(c0, hw0, hw0);
+    input.data = (0..input.data.len()).map(|_| r.range_i64(-lim, lim - 1)).collect();
+    (model, conv_w, fc_w, input)
+}
+
+fn compile(v: u32, policy: CompressionPolicy, case: &Case) -> Result<NetworkPlan, sdmm::error::SdmmError> {
+    let (model, cw, fw, _) = case;
+    let name = format!("prop{}", PLAN_ID.fetch_add(1, Ordering::Relaxed));
+    NetworkPlan::compile(
+        &Compiler::for_bits(v)?
+            .approximate(ApproxPolicy::nearest())
+            .compress(policy),
+        &name,
+        model,
+        cw,
+        fw,
+    )
+}
+
+const ALL_POLICIES: [CompressionPolicy; 4] = [
+    CompressionPolicy::None,
+    CompressionPolicy::Wrc,
+    CompressionPolicy::WrcHuffman,
+    CompressionPolicy::PruneWrcHuffman,
+];
+
+#[test]
+fn prop_network_bit_identical_across_backends() {
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 2,
+        queue_capacity: 16,
+    })
+    .unwrap();
+    for v in [8u32, 6, 4] {
+        for policy in ALL_POLICIES {
+            let mut scalar = ScalarExec::new();
+            let mut batch = BatchExec::new();
+            let mut systolic = SystolicExec::new();
+            check(
+                "network-bit-identical",
+                4,
+                9100 + v as u64 * 10 + policy.tag() as u64,
+                |r| random_net(r, v),
+                |case| {
+                    let plan = compile(v, policy, case)?;
+                    let input = &case.3;
+                    let a = InferenceSession::new(&plan, &mut scalar).infer(input)?;
+                    let b = InferenceSession::new(&plan, &mut batch).infer(input)?;
+                    let c = InferenceSession::new(&plan, &mut systolic).infer(input)?;
+                    let d = InferenceSession::new(&plan, &mut serving).infer(input)?;
+                    for (name, out) in
+                        [("batch", &b), ("systolic", &c), ("serving", &d)]
+                    {
+                        if *out != a {
+                            return Err(format!(
+                                "{name} diverged from scalar (v={v}, {policy}): \
+                                 {out:?} vs {a:?}"
+                            )
+                            .into());
+                        }
+                    }
+                    let golden = plan.reference().forward(input)?;
+                    if a.logits != golden {
+                        return Err(format!(
+                            "scalar != exact reference (v={v}, {policy})"
+                        )
+                        .into());
+                    }
+                    if a.mults != plan.macs() {
+                        return Err(format!(
+                            "mults {} != plan macs {} (v={v}, {policy})",
+                            a.mults,
+                            plan.macs()
+                        )
+                        .into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+    let snap = serving.shutdown();
+    assert_eq!(snap.total_failed(), 0);
+    assert!(snap.total_jobs() > 0);
+}
+
+#[test]
+fn prop_save_load_serve_preserves_outputs() {
+    let mut serving = ServingExec::start(ServingConfig {
+        shards: 1,
+        queue_capacity: 8,
+    })
+    .unwrap();
+    let base = std::env::temp_dir().join(format!("sdmm-prop-plan-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    for v in [8u32, 6, 4] {
+        for policy in ALL_POLICIES {
+            let mut batch = BatchExec::new();
+            check(
+                "network-save-load-serve",
+                2,
+                9500 + v as u64 * 10 + policy.tag() as u64,
+                |r| random_net(r, v),
+                |case| {
+                    let plan = compile(v, policy, case)?;
+                    let input = &case.3;
+                    let want = InferenceSession::new(&plan, &mut batch).infer(input)?;
+                    let dir = base.join(format!(
+                        "{}-{v}-{}",
+                        PLAN_ID.fetch_add(1, Ordering::Relaxed),
+                        policy.tag()
+                    ));
+                    plan.save(&dir)?;
+                    let loaded = NetworkPlan::load(&dir)?;
+                    let _ = std::fs::remove_dir_all(&dir);
+                    if loaded.compression != policy || loaded.v_bits != v {
+                        return Err("loaded plan metadata diverged".into());
+                    }
+                    let got = InferenceSession::new(&loaded, &mut batch).infer(input)?;
+                    if got != want {
+                        return Err(format!(
+                            "cold-loaded plan diverged on batch (v={v}, {policy})"
+                        )
+                        .into());
+                    }
+                    let served = InferenceSession::new(&loaded, &mut serving).infer(input)?;
+                    if served != want {
+                        return Err(format!(
+                            "cold-loaded plan diverged when served (v={v}, {policy})"
+                        )
+                        .into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+    let snap = serving.shutdown();
+    assert_eq!(snap.total_failed(), 0);
+}
