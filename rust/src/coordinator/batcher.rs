@@ -9,8 +9,9 @@
 //! is woken *immediately* when work arrives (no polling, no fixed
 //! sleep on the submission path).
 
+use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Result of draining the submit queue.
@@ -66,7 +67,7 @@ impl<T> SubmitQueue<T> {
     /// Enqueue one item and wake the worker. Returns false (item
     /// dropped) when the queue is closed.
     pub fn push(&self, item: T) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.closed {
             return false;
         }
@@ -75,12 +76,25 @@ impl<T> SubmitQueue<T> {
         true
     }
 
+    /// Re-admit an item at the *front* of the queue. The supervision
+    /// path uses this to hand a crashed worker's drained-but-
+    /// unprocessed jobs (and retried in-flight jobs) back in original
+    /// FIFO order. Unlike [`push`](Self::push) it succeeds even on a
+    /// closed queue: a requeued item was admitted before the close,
+    /// and the shutdown-flush contract ("every admitted job completes
+    /// exactly once") requires it to reach a drain.
+    pub fn requeue_front(&self, item: T) {
+        let mut s = lock_unpoisoned(&self.state);
+        s.queue.push_front(item);
+        self.cond.notify_one();
+    }
+
     /// Bounded enqueue: refuse (without blocking) when the queue
     /// already holds `cap` items — the backpressure primitive the
     /// sharded serving runtime's admission layer builds on. Otherwise
     /// identical to [`push`](Self::push).
     pub fn try_push_bounded(&self, item: T, cap: usize) -> PushOutcome {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.closed {
             return PushOutcome::Closed;
         }
@@ -95,14 +109,14 @@ impl<T> SubmitQueue<T> {
     /// Close the queue: producers are refused from now on, the worker
     /// is woken to drain what remains.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         s.closed = true;
         self.cond.notify_all();
     }
 
     /// Items currently queued (racy by nature — informational only).
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.state).queue.len()
     }
 
     /// True when nothing is queued right now.
@@ -115,21 +129,21 @@ impl<T> SubmitQueue<T> {
     /// a push or close — then drain whatever arrived. Never sleeps once
     /// work is available.
     pub fn drain_wait(&self, timeout: Option<Duration>, out: &mut Vec<T>) -> QueueStatus {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.queue.is_empty() && !s.closed {
             match timeout {
                 Some(d) => {
                     let (guard, _) = self
                         .cond
                         .wait_timeout_while(s, d, |st| st.queue.is_empty() && !st.closed)
-                        .unwrap();
+                        .unwrap_or_else(PoisonError::into_inner);
                     s = guard;
                 }
                 None => {
                     s = self
                         .cond
                         .wait_while(s, |st| st.queue.is_empty() && !st.closed)
-                        .unwrap();
+                        .unwrap_or_else(PoisonError::into_inner);
                 }
             }
         }
@@ -466,6 +480,56 @@ mod tests {
             }
         }
         assert_eq!(out.len() as u32, admitted);
+    }
+
+    #[test]
+    fn requeue_front_preserves_fifo_even_when_closed() {
+        let q = SubmitQueue::new();
+        assert!(q.push(3u32));
+        q.close();
+        // Supervisor path: [1, 2] were drained by a crashed worker and
+        // go back in original order, ahead of what is still queued —
+        // and the close must not refuse them.
+        q.requeue_front(2);
+        q.requeue_front(1);
+        let mut out = Vec::new();
+        let st = q.drain_wait(None, &mut out);
+        assert_eq!(st, QueueStatus::Closed);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn requeue_front_wakes_a_parked_worker() {
+        let q: Arc<SubmitQueue<u32>> = SubmitQueue::new();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.requeue_front(9u32));
+        let mut out = Vec::new();
+        let st = q.drain_wait(None, &mut out);
+        assert_eq!(st, QueueStatus::Open);
+        assert_eq!(out, vec![9]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn queue_survives_a_poisoned_lock() {
+        // A panic while holding the state lock (the footgun a crashed
+        // worker used to leave behind) must not wedge later callers.
+        let q = SubmitQueue::new();
+        assert!(q.push(1u32));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = q.state.lock().unwrap();
+            panic!("poison the queue lock");
+        }));
+        assert!(r.is_err());
+        assert!(q.push(2), "push must recover from the poisoned lock");
+        assert_eq!(q.len(), 2);
+        q.requeue_front(0);
+        let mut out = Vec::new();
+        let st = q.drain_wait(Some(Duration::from_millis(1)), &mut out);
+        assert_eq!(st, QueueStatus::Open);
+        assert_eq!(out, vec![0, 1, 2]);
+        q.close();
+        assert!(!q.push(3));
     }
 
     #[test]

@@ -142,8 +142,52 @@ impl LatencySnapshot {
     }
 }
 
+/// Supervisor-maintained health of one shard (DESIGN.md §10).
+///
+/// Admission reads this lock-free: [`Dead`](ShardState::Dead) shards
+/// take no new work, and a runtime whose every shard is dead refuses
+/// requests with a typed `NoHealthyShards` error instead of queueing
+/// into the void.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// Worker is live and serving.
+    Up,
+    /// Worker crashed; the supervisor is backing off before a restart.
+    Restarting,
+    /// Crash budget exhausted — the shard answers everything still
+    /// queued with typed `ShardUnavailable` errors until shutdown.
+    Dead,
+}
+
+impl ShardState {
+    /// Short fixed-width label for report tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardState::Up => "up",
+            ShardState::Restarting => "restart",
+            ShardState::Dead => "dead",
+        }
+    }
+
+    fn as_usize(self) -> usize {
+        match self {
+            ShardState::Up => 0,
+            ShardState::Restarting => 1,
+            ShardState::Dead => 2,
+        }
+    }
+
+    fn from_usize(v: usize) -> ShardState {
+        match v {
+            1 => ShardState::Restarting,
+            2 => ShardState::Dead,
+            _ => ShardState::Up,
+        }
+    }
+}
+
 /// Per-shard serving counters (all lock-free; shared between the
-/// admission layer and the shard's worker thread).
+/// admission layer, the shard's worker thread and its supervisor).
 #[derive(Debug, Default)]
 pub struct ShardMetrics {
     jobs_ok: AtomicU64,
@@ -157,6 +201,19 @@ pub struct ShardMetrics {
     /// Jobs admitted but not yet completed (queued + executing).
     depth: AtomicUsize,
     peak_depth: AtomicUsize,
+    /// Encoded [`ShardState`] (0 = up, 1 = restarting, 2 = dead).
+    state: AtomicUsize,
+    /// Worker panics caught by the supervisor.
+    panics: AtomicU64,
+    /// Worker restarts the supervisor performed.
+    restarts: AtomicU64,
+    /// Requests that expired at their deadline before executing.
+    expired: AtomicU64,
+    /// Jobs served by the scalar fallback tier instead of the packed
+    /// plane path.
+    degraded: AtomicU64,
+    /// Crashed jobs re-admitted to a healthy shard.
+    retries: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -195,6 +252,52 @@ impl ShardMetrics {
         self.depth.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Supervisor side: claim one in-flight slot unconditionally — the
+    /// retry path transfers an already-admitted job between shards, so
+    /// the transfer must never bounce off the target's capacity (the
+    /// global bound still holds: the origin slot is released first).
+    pub fn inc_depth(&self) {
+        let prev = self.depth.fetch_add(1, Ordering::Relaxed);
+        self.peak_depth.fetch_max(prev + 1, Ordering::Relaxed);
+    }
+
+    /// Current supervisor-maintained health state.
+    pub fn state(&self) -> ShardState {
+        ShardState::from_usize(self.state.load(Ordering::Relaxed))
+    }
+
+    /// Supervisor side: publish a health-state transition.
+    pub fn set_state(&self, s: ShardState) {
+        self.state.store(s.as_usize(), Ordering::Relaxed);
+    }
+
+    /// Supervisor side: one worker panic was caught.
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Supervisor side: the worker was restarted after backoff.
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker side: one request expired at its deadline after `ns`
+    /// nanoseconds queued (counted as a failed job too).
+    pub fn record_expired(&self, ns: u64) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        self.record_err(ns);
+    }
+
+    /// Worker side: one job was served by the scalar fallback tier.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Supervisor side: one crashed job was re-admitted here.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Worker side: one Condvar wake drained `n` jobs (`n` > 0).
     pub fn record_drain(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -228,6 +331,12 @@ impl ShardMetrics {
             batch_jobs: self.batch_jobs.load(Ordering::Relaxed),
             queue_depth: self.depth.load(Ordering::Relaxed),
             peak_depth: self.peak_depth.load(Ordering::Relaxed),
+            state: self.state(),
+            panics: self.panics.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            deadline_expired: self.expired.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
             latency: self.latency.snapshot(),
         }
     }
@@ -254,6 +363,19 @@ pub struct ShardSnapshot {
     pub queue_depth: usize,
     /// High-water mark of `queue_depth` over the shard's lifetime.
     pub peak_depth: usize,
+    /// Supervisor-maintained health state at snapshot time.
+    pub state: ShardState,
+    /// Worker panics caught by the supervisor.
+    pub panics: u64,
+    /// Worker restarts the supervisor performed.
+    pub restarts: u64,
+    /// Requests that expired at their deadline before executing
+    /// (subset of `jobs_err`).
+    pub deadline_expired: u64,
+    /// Jobs served by the scalar fallback tier (subset of `jobs_ok`).
+    pub degraded: u64,
+    /// Crashed jobs re-admitted to this shard.
+    pub retries: u64,
     /// End-to-end latency distribution (admission → response).
     pub latency: LatencySnapshot,
 }
@@ -303,6 +425,45 @@ impl RuntimeSnapshot {
     /// saturation).
     pub fn min_shard_jobs(&self) -> u64 {
         self.shards.iter().map(|s| s.jobs_ok).min().unwrap_or(0)
+    }
+
+    /// Worker restarts across all shards.
+    pub fn total_restarts(&self) -> u64 {
+        self.shards.iter().map(|s| s.restarts).sum()
+    }
+
+    /// Worker panics caught across all shards.
+    pub fn total_panics(&self) -> u64 {
+        self.shards.iter().map(|s| s.panics).sum()
+    }
+
+    /// Deadline expirations across all shards.
+    pub fn total_expired(&self) -> u64 {
+        self.shards.iter().map(|s| s.deadline_expired).sum()
+    }
+
+    /// Scalar-tier fallback completions across all shards.
+    pub fn total_degraded(&self) -> u64 {
+        self.shards.iter().map(|s| s.degraded).sum()
+    }
+
+    /// Cross-shard retry transfers across all shards.
+    pub fn total_retries(&self) -> u64 {
+        self.shards.iter().map(|s| s.retries).sum()
+    }
+
+    /// Shards whose crash budget is exhausted.
+    pub fn dead_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.state == ShardState::Dead).count()
+    }
+
+    /// `true` when every shard is [`ShardState::Up`] with an empty
+    /// queue — the "recovered to healthy steady state" predicate the
+    /// chaos suite asserts after replaying a fault plan.
+    pub fn healthy(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.state == ShardState::Up && s.queue_depth == 0)
     }
 }
 
@@ -385,5 +546,57 @@ mod tests {
         assert_eq!(snap.total_mults(), 12);
         assert_eq!(snap.min_shard_jobs(), 1);
         assert_eq!(snap.total_failed(), 0);
+        assert!(snap.healthy(), "fresh shards are up with empty queues");
+    }
+
+    #[test]
+    fn health_state_round_trips_and_gates_healthy() {
+        let m = ShardMetrics::new();
+        assert_eq!(m.state(), ShardState::Up);
+        m.set_state(ShardState::Restarting);
+        assert_eq!(m.state(), ShardState::Restarting);
+        assert_eq!(m.snapshot(0).state.name(), "restart");
+        m.set_state(ShardState::Dead);
+        let snap = RuntimeSnapshot { shards: vec![m.snapshot(0)] };
+        assert_eq!(snap.dead_shards(), 1);
+        assert!(!snap.healthy());
+        m.set_state(ShardState::Up);
+        assert!(RuntimeSnapshot { shards: vec![m.snapshot(0)] }.healthy());
+        // A non-empty queue is not healthy even with every shard up.
+        m.inc_depth();
+        assert!(!RuntimeSnapshot { shards: vec![m.snapshot(0)] }.healthy());
+    }
+
+    #[test]
+    fn supervision_counters_roll_up() {
+        let a = ShardMetrics::new();
+        a.record_panic();
+        a.record_restart();
+        a.record_retry();
+        a.record_degraded();
+        a.record_expired(500);
+        let b = ShardMetrics::new();
+        let snap = RuntimeSnapshot {
+            shards: vec![a.snapshot(0), b.snapshot(1)],
+        };
+        assert_eq!(snap.total_panics(), 1);
+        assert_eq!(snap.total_restarts(), 1);
+        assert_eq!(snap.total_degraded(), 1);
+        assert_eq!(snap.total_expired(), 1);
+        // Expiry counts as a failure, and the sample hits the histogram.
+        assert_eq!(snap.total_failed(), 1);
+        assert_eq!(snap.shards[0].retries, 1);
+        assert_eq!(snap.shards[0].latency.count(), 1);
+    }
+
+    #[test]
+    fn inc_depth_is_unbounded_and_tracks_peak() {
+        let m = ShardMetrics::new();
+        assert!(m.try_inc_depth(1));
+        assert!(!m.try_inc_depth(1));
+        // The retry-transfer path must not bounce off the cap.
+        m.inc_depth();
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.snapshot(0).peak_depth, 2);
     }
 }

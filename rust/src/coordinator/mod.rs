@@ -17,6 +17,13 @@
 //!   admission layer doing least-loaded shard selection and
 //!   bounded-queue backpressure. Mixed 8/6/4-bit models serve side by
 //!   side; outputs stay bit-exact with the single-shard batch path.
+//!   Each shard worker runs under a supervisor
+//!   ([`catch_unwind`](std::panic::catch_unwind) isolation, capped
+//!   exponential-backoff restart, exactly-once
+//!   requeue of in-flight requests), requests carry optional deadlines
+//!   and retry budgets, and a shard that loses its packed arrays
+//!   degrades to the bit-exact scalar tier — see
+//!   [`fault`](crate::fault) for the deterministic chaos harness.
 //! * [`metrics`] — lock-free per-shard observability (latency
 //!   histograms, queue depth, drain-batch fill, DSP-op counters),
 //!   exported as plain-value snapshots for
@@ -46,10 +53,12 @@ pub mod shard;
 
 pub use batcher::{BatchPolicy, BatchRunner, Batcher, PushOutcome, QueueStatus, SubmitQueue};
 pub use metrics::{
-    LatencyHistogram, LatencySnapshot, RuntimeSnapshot, ShardMetrics, ShardSnapshot,
+    LatencyHistogram, LatencySnapshot, RuntimeSnapshot, ShardMetrics, ShardSnapshot, ShardState,
 };
 pub use pipeline::{PackedNetwork, PackingPipeline, PackingReport};
 pub use registry::{ModelKey, ModelRegistry, ModelRun, ModelSpec, RegisteredModel};
 pub use runner::CnnRunner;
 pub use server::{InferenceServer, ServerMetrics};
-pub use shard::{AdmitError, InferOutput, ServingConfig, ServingRuntime};
+pub use shard::{
+    AdmitError, InferOutput, ServingConfig, ServingRuntime, SubmitOptions, SupervisionPolicy,
+};

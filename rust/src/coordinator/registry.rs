@@ -16,10 +16,12 @@
 use crate::api::{ApproxPolicy, CompiledModel, Compiler};
 use crate::cnn::infer::{relu, requantize, Tensor3};
 use crate::cnn::zoo::ConvLayer;
+use crate::dsp::SdmmEngine;
 use crate::error::{Result, SdmmError};
 use crate::packing::PackedPlane;
 use crate::sa::SystolicArray;
 use crate::util::rng::Rng;
+use crate::util::sync::{read_unpoisoned, write_unpoisoned};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
@@ -159,7 +161,43 @@ impl RegisteredModel {
             let run = sa.run_conv_batch_with_plane(layer, plane, &x)?;
             dsp_ops += run.dsp_ops;
             mults += run.mults;
-            let mut y = run.output.expect("batch conv always returns output");
+            let mut y = run.output.ok_or_else(|| {
+                SdmmError::Runtime("batch conv returned no output tensor".into())
+            })?;
+            relu(&mut y);
+            x = requantize(&y, self.key.v_bits).0;
+        }
+        Ok(ModelRun {
+            output: x,
+            dsp_ops,
+            mults,
+        })
+    }
+
+    /// Run the full model on the port-accurate *scalar* engine — the
+    /// degradation ladder's reference tier (DESIGN.md §10). Same
+    /// per-layer sequence as [`run`](Self::run) (conv through the
+    /// shared plane → ReLU → requantize), through
+    /// [`PackedPlane::execute_conv_scalar`] instead of the batch
+    /// array, so the output tensor and op accounting are bit-exact
+    /// with the packed path; only throughput differs. A shard whose
+    /// packed-plane path is unavailable serves from this tier rather
+    /// than failing the request.
+    pub fn run_scalar(&self, engine: &mut SdmmEngine, input: &Tensor3) -> Result<ModelRun> {
+        let expected = self.input_shape();
+        if input.shape() != expected {
+            return Err(SdmmError::ShapeMismatch {
+                expected,
+                got: input.shape(),
+            });
+        }
+        let mut x = input.clone();
+        let mut dsp_ops = 0u64;
+        let mut mults = 0u64;
+        for (layer, plane) in self.layers.iter().zip(&self.planes) {
+            let (mut y, ops, m) = plane.execute_conv_scalar(&x, layer, engine);
+            dsp_ops += ops;
+            mults += m;
             relu(&mut y);
             x = requantize(&y, self.key.v_bits).0;
         }
@@ -241,7 +279,7 @@ impl ModelRegistry {
             group: compiled.group,
             planes: planes.clone(),
         });
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = write_unpoisoned(&self.inner);
         // Drop every plane of the model being replaced first, so a
         // re-registration with fewer layers leaves no stale entries.
         inner
@@ -275,16 +313,14 @@ impl ModelRegistry {
 
     /// Look up a model by key.
     pub fn get(&self, key: &ModelKey) -> Option<Arc<RegisteredModel>> {
-        self.inner.read().unwrap().models.get(key).cloned()
+        read_unpoisoned(&self.inner).models.get(key).cloned()
     }
 
     /// Look up one cached plane by (model, layer, bit-width) — the
     /// shared cache entry, identical `Arc` to the one inside the
     /// registered model.
     pub fn plane(&self, name: &str, layer: usize, v_bits: u32) -> Option<Arc<PackedPlane>> {
-        self.inner
-            .read()
-            .unwrap()
+        read_unpoisoned(&self.inner)
             .planes
             .get(&(name.to_string(), layer, v_bits))
             .cloned()
@@ -292,12 +328,12 @@ impl ModelRegistry {
 
     /// Keys of every registered model.
     pub fn keys(&self) -> Vec<ModelKey> {
-        self.inner.read().unwrap().models.keys().cloned().collect()
+        read_unpoisoned(&self.inner).models.keys().cloned().collect()
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().models.len()
+        read_unpoisoned(&self.inner).models.len()
     }
 
     /// True when no model is registered.
@@ -308,9 +344,7 @@ impl ModelRegistry {
     /// Total packed tuples across every cached plane (cache-size
     /// accounting for the serving report).
     pub fn total_cached_tuples(&self) -> usize {
-        self.inner
-            .read()
-            .unwrap()
+        read_unpoisoned(&self.inner)
             .planes
             .values()
             .map(|p| p.total_tuples())

@@ -8,6 +8,8 @@
 
 use super::batcher::{BatchPolicy, BatchRunner, Batcher, QueueStatus, SubmitQueue};
 use crate::util::stats::Summary;
+use crate::util::sync::lock_unpoisoned;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -29,21 +31,35 @@ pub struct ServerMetrics {
     pub padded_slots: u64,
     /// Requests answered.
     pub requests: u64,
+    /// Batches whose runner returned an error (their requests see a
+    /// disconnected channel, reported as a typed runtime error by
+    /// `infer`).
+    pub failed_batches: u64,
+    /// Runner panics the worker caught and survived — the worker keeps
+    /// serving later batches instead of wedging the process.
+    pub worker_panics: u64,
 }
 
 impl ServerMetrics {
-    /// Requests per second over the given wall-clock window.
+    /// Requests per second over the given wall-clock window. Returns
+    /// 0.0 (never NaN or inf) for an empty window or a zero-duration
+    /// one.
     pub fn throughput_per_sec(&self, wall: Duration) -> f64 {
-        self.requests as f64 / wall.as_secs_f64()
+        let secs = wall.as_secs_f64();
+        if self.requests == 0 || secs <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / secs
     }
 
     /// Fraction of executed batch slots that carried real requests.
+    /// Returns 0.0 (never NaN) when no batch ran or `batch_size` is 0.
     pub fn batch_occupancy(&self, batch_size: usize) -> f64 {
-        if self.batches == 0 {
+        if self.batches == 0 || batch_size == 0 {
             return 0.0;
         }
         let slots = self.batches * batch_size as u64;
-        (slots - self.padded_slots) as f64 / slots as f64
+        slots.saturating_sub(self.padded_slots) as f64 / slots as f64
     }
 }
 
@@ -115,7 +131,7 @@ impl InferenceServer {
 
     /// Current metrics (the server keeps running).
     pub fn metrics(&self) -> ServerMetrics {
-        self.metrics.lock().unwrap().clone()
+        lock_unpoisoned(&self.metrics).clone()
     }
 
     /// Graceful shutdown: close the queue and join the worker.
@@ -124,7 +140,7 @@ impl InferenceServer {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        let m = self.metrics.lock().unwrap().clone();
+        let m = lock_unpoisoned(&self.metrics).clone();
         m
     }
 }
@@ -151,9 +167,15 @@ fn worker_loop<R: BatchRunner>(
     while open || !batcher.is_empty() {
         let now = Instant::now();
         if batcher.ready(now) || (!open && !batcher.is_empty()) {
-            match batcher.flush(&mut runner) {
-                Ok(done) => {
-                    let mut m = metrics.lock().unwrap();
+            // The runner is user/PJRT code: it may return an error or
+            // panic outright. Either way the batch's requests were
+            // consumed (their senders drop, clients see a typed
+            // disconnect through `infer`), the counters record what
+            // happened, and the worker lives on to serve the next
+            // batch — one bad batch never wedges the server.
+            match catch_unwind(AssertUnwindSafe(|| batcher.flush(&mut runner))) {
+                Ok(Ok(done)) => {
+                    let mut m = lock_unpoisoned(&metrics);
                     m.batches = batcher.batches;
                     m.padded_slots = batcher.padded_slots;
                     for (tag, out, _qdelay) in done {
@@ -163,13 +185,17 @@ fn worker_loop<R: BatchRunner>(
                         let _ = resp.send(Ok(out));
                     }
                 }
-                Err(e) => {
-                    // Batch failure: report to every waiter in the batch.
-                    let msg = format!("batch execution failed: {e}");
-                    let _ = msg; // tags were consumed by flush on error path
-                    // flush() drained the queue only on success; on error
-                    // requests stay queued — drop them with an error.
-                    // (Simplest robust behaviour for a simulator.)
+                Ok(Err(_)) => {
+                    let mut m = lock_unpoisoned(&metrics);
+                    m.batches = batcher.batches;
+                    m.padded_slots = batcher.padded_slots;
+                    m.failed_batches += 1;
+                }
+                Err(_) => {
+                    let mut m = lock_unpoisoned(&metrics);
+                    m.batches = batcher.batches;
+                    m.padded_slots = batcher.padded_slots;
+                    m.worker_panics += 1;
                 }
             }
             continue;
@@ -247,6 +273,89 @@ mod tests {
         assert!(m.batches >= 8);
         // burst of 32 into batches of 4: occupancy should be high
         assert!(m.batch_occupancy(4) > 0.9, "{m:?}");
+    }
+
+    #[test]
+    fn metrics_ratios_are_finite_on_degenerate_inputs() {
+        let m = ServerMetrics::default();
+        // Nothing served yet + zero window: both denominators are zero.
+        assert_eq!(m.throughput_per_sec(Duration::ZERO), 0.0);
+        assert_eq!(m.batch_occupancy(0), 0.0);
+        assert_eq!(m.batch_occupancy(4), 0.0);
+        let m = ServerMetrics {
+            requests: 10,
+            batches: 3,
+            padded_slots: 2,
+            ..ServerMetrics::default()
+        };
+        // Served requests but a zero-duration window must still be 0.0,
+        // not +inf.
+        assert_eq!(m.throughput_per_sec(Duration::ZERO), 0.0);
+        assert_eq!(m.batch_occupancy(0), 0.0);
+        let occ = m.batch_occupancy(4);
+        assert!(occ.is_finite() && occ > 0.0 && occ <= 1.0);
+        assert!(m.throughput_per_sec(Duration::from_secs(2)) == 5.0);
+    }
+
+    /// Panics on the second batch, serves every other one.
+    struct FlakyDoubler {
+        runs: usize,
+    }
+
+    impl BatchRunner for FlakyDoubler {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn item_len(&self) -> usize {
+            2
+        }
+        fn out_len(&self) -> usize {
+            2
+        }
+        fn run(&mut self, x: &[f32]) -> crate::error::Result<Vec<f32>> {
+            self.runs += 1;
+            if self.runs == 2 {
+                panic!("injected fault: runner panic on batch 2");
+            }
+            Ok(x.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    #[test]
+    fn worker_survives_runner_panic_and_keeps_serving() {
+        let server = InferenceServer::start(
+            FlakyDoubler { runs: 0 },
+            BatchPolicy {
+                max_batch: 1, // one request per batch → deterministic mapping
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        // Batch 1: served.
+        assert_eq!(server.infer(vec![1.0, 2.0]).unwrap(), vec![2.0, 4.0]);
+        // Batch 2: the runner panics; the client sees a typed disconnect
+        // error, not a hang — and the worker thread stays alive.
+        let err = server.infer(vec![3.0, 3.0]).unwrap_err();
+        assert!(format!("{err}").contains("server dropped request"), "{err}");
+        // Batch 3: served again by the same (recovered) worker.
+        assert_eq!(server.infer(vec![5.0, 0.5]).unwrap(), vec![10.0, 1.0]);
+        let m = server.shutdown();
+        assert_eq!(m.worker_panics, 1, "{m:?}");
+        assert_eq!(m.failed_batches, 0);
+        assert_eq!(m.requests, 2);
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_worker_cleanly() {
+        let server = InferenceServer::start(
+            Doubler,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let rx = server.submit(vec![2.0, 2.0]);
+        drop(server); // Drop closes the queue and joins — must not hang.
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![4.0, 4.0]);
     }
 
     #[test]

@@ -1,8 +1,8 @@
-//! The sharded multi-model serving runtime.
+//! The sharded multi-model serving runtime, under supervision.
 //!
 //! Replaces the one-queue/one-array serving shape with N independent
 //! shards. Each shard owns its own [`SubmitQueue`] and a Condvar-woken
-//! batching worker thread; the worker keeps one `MultiPack`
+//! batching worker; the worker keeps one `MultiPack`
 //! [`SystolicArray`] per bit-width it has seen and executes whole-model
 //! jobs through the registry's shared
 //! [`PackedPlane`](crate::packing::PackedPlane)s — so an 8-bit
@@ -15,33 +15,63 @@
 //!
 //! 1. **Validation** — model exists, input shape and value range match
 //!    (a malformed job is refused at the door, never inside a worker).
-//! 2. **Least-loaded selection** — the shard with the smallest
+//! 2. **Least-loaded selection** — the healthy shard with the smallest
 //!    in-flight depth (queued + executing) wins; ties go to the lowest
-//!    index.
+//!    index. [`ShardState::Dead`] shards take no new work, and a
+//!    runtime with no healthy shard refuses with
+//!    [`AdmitError::NoHealthyShards`].
 //! 3. **Bounded-queue backpressure** — when even the least-loaded
 //!    shard is at `queue_capacity`, the caller gets
 //!    [`AdmitError::Backpressure`] instead of an unbounded queue.
 //!
+//! **Supervision** (DESIGN.md §10): each shard thread is a supervisor
+//! running the worker body under `catch_unwind`. When the worker
+//! panics mid-job, the supervisor requeues every drained-but-
+//! unprocessed job at the front of the shard's own queue (original
+//! order, exactly-once — none of them was responded to), re-admits the
+//! in-flight job to the healthiest shard while its bounded retry
+//! budget lasts (typed [`ShardUnavailable`](crate::error::SdmmError::ShardUnavailable)
+//! past it), then restarts the worker after a capped exponential
+//! backoff. A shard that crashes more than
+//! [`SupervisionPolicy::max_restarts`] times in a row is declared
+//! [`Dead`](ShardState::Dead) and answers everything still queued with
+//! typed errors until shutdown. Requests may carry a deadline
+//! ([`SubmitOptions`]); an expired request is answered with a typed
+//! [`DeadlineExceeded`](crate::error::SdmmError::DeadlineExceeded)
+//! at the head of the line, before any execution work.
+//!
+//! **Degradation ladder**: when the packed-plane path is unavailable
+//! for a job (array construction failed, plane refused, or a fault
+//! plan forced it), the worker falls back to the bit-exact scalar
+//! reference tier ([`RegisteredModel::run_scalar`](super::registry::RegisteredModel::run_scalar))
+//! — same arithmetic, fewer multiplications per DSP op — and reports
+//! the downgrade through [`InferOutput::degraded`] and the shard's
+//! `degraded` counter.
+//!
 //! Shutdown is flush-then-join: queues close (producers are refused),
-//! workers drain what was admitted, every in-flight job completes
-//! exactly once, then threads join.
+//! workers drain what was admitted, every admitted job resolves
+//! exactly once — with a result or a typed error — then threads join.
 //!
 //! Outputs are bit-exact with the single-shard
 //! [`run_conv_batch`](crate::sa::SystolicArray::run_conv_batch) path:
 //! sharding only changes *where* a job runs, never its arithmetic
-//! (asserted by `tests/integration_coordinator.rs` and the serving
-//! bench's pre-timing equivalence check).
+//! (asserted by `tests/integration_coordinator.rs`, the chaos suite
+//! `tests/chaos_serving.rs`, and the serving bench's pre-timing
+//! equivalence check).
 
 use super::batcher::{PushOutcome, QueueStatus, SubmitQueue};
-use super::metrics::{RuntimeSnapshot, ShardMetrics};
+use super::metrics::{RuntimeSnapshot, ShardMetrics, ShardState};
 use super::registry::{ModelKey, ModelRegistry};
 use crate::cnn::infer::Tensor3;
+use crate::dsp::SdmmEngine;
+use crate::error::{Context, Result, SdmmError};
+use crate::fault::{FaultInjector, FaultKind, FaultPlan};
 use crate::sa::{PeArch, SaConfig, SystolicArray};
-use crate::error::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Runtime sizing knobs.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +92,48 @@ impl Default for ServingConfig {
             queue_capacity: 256,
         }
     }
+}
+
+/// Supervision and retry policy (DESIGN.md §10). The defaults suit
+/// production serving; chaos tests shrink the backoffs and caps.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisionPolicy {
+    /// Consecutive worker crashes (with no completed job in between)
+    /// after which the shard is declared [`ShardState::Dead`].
+    pub max_restarts: u32,
+    /// Backoff before the first restart; doubles per consecutive
+    /// crash.
+    pub initial_backoff: Duration,
+    /// Cap on the exponential backoff.
+    pub max_backoff: Duration,
+    /// Default per-request retry budget: how many crashes a single
+    /// request may be re-admitted after before it fails with a typed
+    /// [`ShardUnavailable`](crate::error::SdmmError::ShardUnavailable).
+    pub default_retry_budget: u32,
+}
+
+impl Default for SupervisionPolicy {
+    fn default() -> Self {
+        SupervisionPolicy {
+            max_restarts: 4,
+            initial_backoff: Duration::from_micros(500),
+            max_backoff: Duration::from_millis(50),
+            default_retry_budget: 2,
+        }
+    }
+}
+
+/// Per-request admission options ([`ServingRuntime::submit_with`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Deadline budget measured from admission. A request still queued
+    /// when it expires is answered with a typed
+    /// [`DeadlineExceeded`](crate::error::SdmmError::DeadlineExceeded)
+    /// — it is never executed late.
+    pub deadline: Option<Duration>,
+    /// Retry-budget override for this request (`None` → the policy's
+    /// [`default_retry_budget`](SupervisionPolicy::default_retry_budget)).
+    pub retry_budget: Option<u32>,
 }
 
 /// Why admission refused a request. Typed (rather than `anyhow`) so
@@ -88,6 +160,10 @@ pub enum AdmitError {
         /// The per-shard in-flight bound that was hit.
         queue_capacity: usize,
     },
+    /// Every shard has been declared dead by its supervisor — the
+    /// runtime is up but has no healthy worker left to take the
+    /// request.
+    NoHealthyShards,
     /// The runtime is shutting down; no new work is accepted.
     ShuttingDown,
 }
@@ -107,6 +183,9 @@ impl std::fmt::Display for AdmitError {
             AdmitError::Backpressure { queue_capacity } => {
                 write!(f, "all shards at capacity ({queue_capacity} in flight)")
             }
+            AdmitError::NoHealthyShards => {
+                write!(f, "every shard is dead (crash budgets exhausted)")
+            }
             AdmitError::ShuttingDown => write!(f, "serving runtime is shutting down"),
         }
     }
@@ -125,6 +204,9 @@ pub struct InferOutput {
     pub mults: u64,
     /// Shard that executed the job.
     pub shard: usize,
+    /// `true` when the packed-plane path was unavailable and the job
+    /// was served by the bit-exact scalar reference tier instead.
+    pub degraded: bool,
 }
 
 /// One admitted job travelling through a shard queue.
@@ -133,6 +215,23 @@ struct Job {
     input: Tensor3,
     resp: mpsc::Sender<Result<InferOutput>>,
     enqueued: Instant,
+    /// Absolute expiry instant, resolved at admission.
+    deadline: Option<Instant>,
+    /// Crashes this request has already survived.
+    attempts: u32,
+    /// Crashes this request may survive before a typed failure.
+    retry_budget: u32,
+}
+
+/// Everything one shard's supervisor thread needs; bundling it keeps
+/// the spawn sites and helper signatures flat.
+struct ShardCtx {
+    shard: usize,
+    queues: Arc<Vec<Arc<SubmitQueue<Job>>>>,
+    metrics: Arc<Vec<Arc<ShardMetrics>>>,
+    registry: Arc<ModelRegistry>,
+    policy: SupervisionPolicy,
+    fault: Option<Arc<FaultInjector>>,
 }
 
 /// Handle to a running sharded serving runtime. Dropping it shuts the
@@ -140,14 +239,17 @@ struct Job {
 /// does the same and returns the final metrics snapshot.
 pub struct ServingRuntime {
     registry: Arc<ModelRegistry>,
-    queues: Vec<Arc<SubmitQueue<Job>>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    metrics: Vec<Arc<ShardMetrics>>,
+    queues: Arc<Vec<Arc<SubmitQueue<Job>>>>,
+    supervisors: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Vec<Arc<ShardMetrics>>>,
     config: ServingConfig,
+    policy: SupervisionPolicy,
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl ServingRuntime {
-    /// Start `config.shards` workers over the given registry.
+    /// Start `config.shards` supervised workers over the given registry
+    /// with the default [`SupervisionPolicy`] and no fault injection.
     ///
     /// ```
     /// use std::sync::Arc;
@@ -169,25 +271,61 @@ impl ServingRuntime {
     /// assert_eq!(snap.total_jobs(), 1);
     /// ```
     pub fn start(registry: Arc<ModelRegistry>, config: ServingConfig) -> Result<ServingRuntime> {
+        Self::start_supervised(registry, config, SupervisionPolicy::default(), None)
+    }
+
+    /// Start the runtime with an explicit supervision policy and an
+    /// optional deterministic [`FaultPlan`] (chaos testing; `None` is
+    /// the production no-op).
+    pub fn start_supervised(
+        registry: Arc<ModelRegistry>,
+        config: ServingConfig,
+        policy: SupervisionPolicy,
+        plan: Option<FaultPlan>,
+    ) -> Result<ServingRuntime> {
         crate::ensure!(config.shards > 0, "serving runtime needs at least one shard");
         crate::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
-        let mut queues = Vec::with_capacity(config.shards);
-        let mut metrics = Vec::with_capacity(config.shards);
-        let mut workers = Vec::with_capacity(config.shards);
+        let fault = plan.map(|p| Arc::new(FaultInjector::new(&p, config.shards)));
+        let queues: Arc<Vec<Arc<SubmitQueue<Job>>>> =
+            Arc::new((0..config.shards).map(|_| SubmitQueue::new()).collect());
+        let metrics: Arc<Vec<Arc<ShardMetrics>>> =
+            Arc::new((0..config.shards).map(|_| Arc::new(ShardMetrics::new())).collect());
+        let mut supervisors = Vec::with_capacity(config.shards);
         for shard in 0..config.shards {
-            let queue: Arc<SubmitQueue<Job>> = SubmitQueue::new();
-            let m = Arc::new(ShardMetrics::new());
-            let (q, reg, mm) = (Arc::clone(&queue), Arc::clone(&registry), Arc::clone(&m));
-            workers.push(std::thread::spawn(move || worker_loop(shard, q, reg, mm)));
-            queues.push(queue);
-            metrics.push(m);
+            let ctx = ShardCtx {
+                shard,
+                queues: Arc::clone(&queues),
+                metrics: Arc::clone(&metrics),
+                registry: Arc::clone(&registry),
+                policy,
+                fault: fault.clone(),
+            };
+            let spawned = std::thread::Builder::new()
+                .name(format!("sdmm-shard-{shard}"))
+                .spawn(move || supervisor_loop(ctx));
+            match spawned {
+                Ok(handle) => supervisors.push(handle),
+                Err(e) => {
+                    // Unwind the shards already started so nothing
+                    // parks forever on a queue no one will close.
+                    for q in queues.iter() {
+                        q.close();
+                    }
+                    for s in supervisors {
+                        let _ = s.join();
+                    }
+                    return Err(SdmmError::Io(e));
+                }
+            }
         }
         Ok(ServingRuntime {
             registry,
             queues,
-            workers,
+            supervisors,
             metrics,
             config,
+            policy,
+            fault,
         })
     }
 
@@ -203,14 +341,36 @@ impl ServingRuntime {
         &self.config
     }
 
-    /// Admit one inference: validate, pick the least-loaded shard,
-    /// enqueue (waking that shard's worker), and return the response
-    /// channel. Fails fast with a typed [`AdmitError`] instead of
-    /// queueing unboundedly.
+    /// The supervision policy the runtime was started with.
+    pub fn policy(&self) -> &SupervisionPolicy {
+        &self.policy
+    }
+
+    /// Planned fault events fired so far (0 without a fault plan).
+    pub fn faults_fired(&self) -> u64 {
+        self.fault.as_ref().map_or(0, |f| f.fired())
+    }
+
+    /// Admit one inference with default options: no deadline, the
+    /// policy's retry budget. See [`submit_with`](Self::submit_with).
     pub fn submit(
         &self,
         key: &ModelKey,
         input: Tensor3,
+    ) -> std::result::Result<mpsc::Receiver<Result<InferOutput>>, AdmitError> {
+        self.submit_with(key, input, SubmitOptions::default())
+    }
+
+    /// Admit one inference: validate, pick the least-loaded healthy
+    /// shard, enqueue (waking that shard's worker), and return the
+    /// response channel. Fails fast with a typed [`AdmitError`]
+    /// instead of queueing unboundedly. The returned channel always
+    /// resolves exactly once — a result, or a typed error.
+    pub fn submit_with(
+        &self,
+        key: &ModelKey,
+        input: Tensor3,
+        opts: SubmitOptions,
     ) -> std::result::Result<mpsc::Receiver<Result<InferOutput>>, AdmitError> {
         let model = self
             .registry
@@ -225,16 +385,23 @@ impl ServingRuntime {
         if input.data.iter().any(|&x| x < -lim || x >= lim) {
             return Err(AdmitError::InputOutOfRange { v_bits: key.v_bits });
         }
-        // Least-loaded shard by in-flight depth; lowest index wins ties.
-        let mut shard = 0usize;
+        // Least-loaded healthy shard by in-flight depth; lowest index
+        // wins ties. Dead shards take no new work.
+        let mut shard = None;
         let mut best = usize::MAX;
         for (i, m) in self.metrics.iter().enumerate() {
+            if m.state() == ShardState::Dead {
+                continue;
+            }
             let d = m.depth();
             if d < best {
                 best = d;
-                shard = i;
+                shard = Some(i);
             }
         }
+        let Some(shard) = shard else {
+            return Err(AdmitError::NoHealthyShards);
+        };
         // Claim the slot atomically — the bound holds even when
         // submitters race (the scan above is only a placement hint).
         let m = &self.metrics[shard];
@@ -243,12 +410,16 @@ impl ServingRuntime {
                 queue_capacity: self.config.queue_capacity,
             });
         }
+        let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let job = Job {
             key: key.clone(),
             input,
             resp: tx,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: opts.deadline.map(|d| now + d),
+            attempts: 0,
+            retry_budget: opts.retry_budget.unwrap_or(self.policy.default_retry_budget),
         };
         match self.queues[shard].try_push_bounded(job, self.config.queue_capacity) {
             PushOutcome::Queued => Ok(rx),
@@ -294,11 +465,26 @@ impl ServingRuntime {
     }
 
     fn stop(&mut self) {
-        for q in &self.queues {
+        for q in self.queues.iter() {
             q.close();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for s in self.supervisors.drain(..) {
+            let _ = s.join();
+        }
+        // Final sweep: a retried job can land on a peer whose
+        // supervisor already exited (crash racing the close). Nothing
+        // will drain it, so answer it with a typed error here rather
+        // than strand the client — exactly-once still holds, the job
+        // was never responded to.
+        let mut leftovers: Vec<Job> = Vec::new();
+        for (i, q) in self.queues.iter().enumerate() {
+            q.drain_wait(Some(Duration::ZERO), &mut leftovers);
+            for job in leftovers.drain(..) {
+                let m = &self.metrics[i];
+                m.record_err(job.enqueued.elapsed().as_nanos() as u64);
+                m.dec_depth();
+                let _ = job.resp.send(Err(SdmmError::ShardUnavailable { shard: i }));
+            }
         }
     }
 }
@@ -321,61 +507,260 @@ impl ShardArrays {
             let sa = SystolicArray::new(SaConfig::paper_prototype(v_bits, PeArch::MultiPack))?;
             self.by_bits.insert(v_bits, sa);
         }
+        // Unreachable-None invariant: the key was inserted two lines up
+        // and nothing removes entries — `get` cannot miss.
         Ok(self.by_bits.get(&v_bits).unwrap())
     }
 }
 
-fn worker_loop(
-    shard: usize,
-    queue: Arc<SubmitQueue<Job>>,
-    registry: Arc<ModelRegistry>,
-    metrics: Arc<ShardMetrics>,
-) {
+/// Why one worker incarnation ended.
+enum WorkerExit {
+    /// The queue closed; everything admitted was drained and answered.
+    Closed,
+    /// The worker panicked. `job` is the in-flight request (not yet
+    /// responded to); `completed` counts jobs this incarnation finished
+    /// before crashing (resets the consecutive-crash counter).
+    Crashed { job: Option<Job>, completed: u64 },
+}
+
+/// Supervisor body, one per shard: run the worker, and on a crash
+/// decide between restart-with-backoff and declaring the shard dead.
+fn supervisor_loop(ctx: ShardCtx) {
+    let me = &ctx.metrics[ctx.shard];
+    let mut consecutive = 0u32;
+    let mut backoff = ctx.policy.initial_backoff;
+    loop {
+        me.set_state(ShardState::Up);
+        match run_worker(&ctx) {
+            WorkerExit::Closed => return,
+            WorkerExit::Crashed { job, completed } => {
+                me.record_panic();
+                if completed > 0 {
+                    // The incarnation made progress: this is not a
+                    // crash loop, start the budget over.
+                    consecutive = 0;
+                    backoff = ctx.policy.initial_backoff;
+                }
+                consecutive += 1;
+                let dying = consecutive > ctx.policy.max_restarts;
+                if dying {
+                    // Declared dead *before* re-admitting the in-flight
+                    // job so the retry lands on a healthy peer, not
+                    // back here.
+                    me.set_state(ShardState::Dead);
+                }
+                if let Some(job) = job {
+                    readmit_or_fail(&ctx, job);
+                }
+                if dying {
+                    drain_and_fail(&ctx);
+                    return;
+                }
+                me.set_state(ShardState::Restarting);
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2).min(ctx.policy.max_backoff);
+                me.record_restart();
+            }
+        }
+    }
+}
+
+/// Retry path for a crashed in-flight job: re-admit it to the
+/// healthiest shard while its budget lasts, else answer with a typed
+/// error. The origin's depth slot moves with the job, so the global
+/// in-flight accounting stays exact.
+fn readmit_or_fail(ctx: &ShardCtx, mut job: Job) {
+    let origin = &ctx.metrics[ctx.shard];
+    job.attempts += 1;
+    if job.attempts > job.retry_budget {
+        origin.record_err(job.enqueued.elapsed().as_nanos() as u64);
+        origin.dec_depth();
+        let _ = job.resp.send(Err(SdmmError::ShardUnavailable { shard: ctx.shard }));
+        return;
+    }
+    let mut target = None;
+    let mut best = usize::MAX;
+    for (i, m) in ctx.metrics.iter().enumerate() {
+        if m.state() == ShardState::Dead {
+            continue;
+        }
+        let d = m.depth();
+        if d < best {
+            best = d;
+            target = Some(i);
+        }
+    }
+    match target {
+        Some(t) => {
+            origin.dec_depth();
+            ctx.metrics[t].inc_depth();
+            ctx.metrics[t].record_retry();
+            // Front of the queue: the retried job kept its place in
+            // line (it was admitted before everything queued behind
+            // the crash).
+            ctx.queues[t].requeue_front(job);
+        }
+        None => {
+            origin.record_err(job.enqueued.elapsed().as_nanos() as u64);
+            origin.dec_depth();
+            let _ = job.resp.send(Err(SdmmError::ShardUnavailable { shard: ctx.shard }));
+        }
+    }
+}
+
+/// Dead-shard terminal loop: answer everything still queued (and
+/// anything a crashing peer requeues here) with typed errors until the
+/// queue closes. Keeps clients from hanging on a shard that will never
+/// execute again.
+fn drain_and_fail(ctx: &ShardCtx) {
+    let queue = &ctx.queues[ctx.shard];
+    let me = &ctx.metrics[ctx.shard];
+    let mut buf: Vec<Job> = Vec::new();
+    loop {
+        let status = queue.drain_wait(None, &mut buf);
+        for job in buf.drain(..) {
+            me.record_err(job.enqueued.elapsed().as_nanos() as u64);
+            me.dec_depth();
+            let _ = job.resp.send(Err(SdmmError::ShardUnavailable { shard: ctx.shard }));
+        }
+        if status == QueueStatus::Closed {
+            return;
+        }
+    }
+}
+
+/// One worker incarnation: drain, check deadlines, execute under
+/// `catch_unwind`, respond. Returns how (and with what in hand) it
+/// ended.
+fn run_worker(ctx: &ShardCtx) -> WorkerExit {
+    let shard = ctx.shard;
+    let queue = &ctx.queues[shard];
+    let me = &ctx.metrics[shard];
+    // Per-incarnation state: a crash throws the array cache and scalar
+    // engine away; the packed planes live in the registry and survive.
     let mut arrays = ShardArrays::default();
+    let mut engine = SdmmEngine::new();
     let mut incoming: Vec<Job> = Vec::new();
+    let mut completed = 0u64;
     loop {
         // Park until work arrives or the queue closes; the drain and
         // the status read happen under one lock, so a Closed status
         // means `incoming` already holds everything that was admitted.
         let status = queue.drain_wait(None, &mut incoming);
         if !incoming.is_empty() {
-            metrics.record_drain(incoming.len());
-        }
-        for job in incoming.drain(..) {
-            let result = execute(shard, &mut arrays, &registry, &job);
-            let ns = job.enqueued.elapsed().as_nanos() as u64;
-            match &result {
-                Ok(out) => metrics.record_ok(ns, out.dsp_ops, out.mults),
-                Err(_) => metrics.record_err(ns),
+            me.record_drain(incoming.len());
+            if let Some(f) = &ctx.fault {
+                if let Some(stall) = f.on_drain(shard) {
+                    std::thread::sleep(stall);
+                }
             }
-            metrics.dec_depth();
-            // A dropped receiver is the client's choice, not an error.
-            let _ = job.resp.send(result);
+        }
+        let mut jobs: VecDeque<Job> = incoming.drain(..).collect();
+        while let Some(job) = jobs.pop_front() {
+            // Head-of-line deadline check, before any execution work:
+            // an expired request is answered typed, never run late.
+            if let Some(dl) = job.deadline {
+                if Instant::now() >= dl {
+                    let waited = job.enqueued.elapsed();
+                    me.record_expired(waited.as_nanos() as u64);
+                    me.dec_depth();
+                    let _ = job.resp.send(Err(SdmmError::DeadlineExceeded { waited }));
+                    continue;
+                }
+            }
+            let mut inject_panic = false;
+            let mut force_scalar = false;
+            if let Some(f) = &ctx.fault {
+                match f.on_job(shard) {
+                    Some(FaultKind::WorkerPanic) => inject_panic = true,
+                    Some(FaultKind::SlowShard { delay })
+                    | Some(FaultKind::QueueStall { delay }) => std::thread::sleep(delay),
+                    Some(FaultKind::DegradePackedPath) => force_scalar = true,
+                    None => {}
+                }
+            }
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if inject_panic {
+                    panic!("injected fault: worker panic on shard {shard}");
+                }
+                execute(shard, &mut arrays, &mut engine, &ctx.registry, &job, force_scalar)
+            }));
+            match outcome {
+                Ok(result) => {
+                    let ns = job.enqueued.elapsed().as_nanos() as u64;
+                    match &result {
+                        Ok(out) => {
+                            me.record_ok(ns, out.dsp_ops, out.mults);
+                            if out.degraded {
+                                me.record_degraded();
+                            }
+                            completed += 1;
+                        }
+                        Err(_) => me.record_err(ns),
+                    }
+                    me.dec_depth();
+                    // A dropped receiver is the client's choice, not an
+                    // error.
+                    let _ = job.resp.send(result);
+                }
+                Err(_) => {
+                    // Crashed mid-job. Everything still in hand was
+                    // never responded to: requeue it at the front of
+                    // our own queue in original order (exactly-once
+                    // holds), and hand the in-flight job to the
+                    // supervisor for its retry decision.
+                    for j in jobs.into_iter().rev() {
+                        queue.requeue_front(j);
+                    }
+                    return WorkerExit::Crashed { job: Some(job), completed };
+                }
+            }
         }
         if status == QueueStatus::Closed {
-            break;
+            return WorkerExit::Closed;
         }
     }
 }
 
+/// Execute one job: packed-plane path first, bit-exact scalar tier as
+/// the degradation fallback.
 fn execute(
     shard: usize,
     arrays: &mut ShardArrays,
+    engine: &mut SdmmEngine,
     registry: &ModelRegistry,
     job: &Job,
+    force_scalar: bool,
 ) -> Result<InferOutput> {
     // Re-resolved per job (not cached at admission) so a model replaced
     // mid-flight serves its newest planes.
     let model = registry
         .get(&job.key)
         .with_context(|| format!("model {} vanished after admission", job.key))?;
-    let sa = arrays.array_for(model.key.v_bits)?;
-    let run = model.run(sa, &job.input)?;
+    if !force_scalar {
+        let packed = arrays
+            .array_for(model.key.v_bits)
+            .and_then(|sa| model.run(sa, &job.input));
+        if let Ok(run) = packed {
+            return Ok(InferOutput {
+                output: run.output,
+                dsp_ops: run.dsp_ops,
+                mults: run.mults,
+                shard,
+                degraded: false,
+            });
+        }
+        // Packed path unavailable — fall through to the scalar tier.
+        // Input-validation failures reproduce identically there, so
+        // degrading never masks a bad request.
+    }
+    let run = model.run_scalar(engine, &job.input)?;
     Ok(InferOutput {
         output: run.output,
         dsp_ops: run.dsp_ops,
         mults: run.mults,
         shard,
+        degraded: true,
     })
 }
 
@@ -412,10 +797,12 @@ mod tests {
         assert_eq!((out.output.c, out.output.h), (3, 6));
         assert!(out.shard < 2);
         assert!(out.mults > 0);
+        assert!(!out.degraded, "packed path must serve the healthy case");
         let snap = rt.shutdown();
         assert_eq!(snap.total_jobs(), 1);
         assert_eq!(snap.total_failed(), 0);
         assert_eq!(snap.total_mults(), out.mults);
+        assert_eq!(snap.total_degraded(), 0);
     }
 
     #[test]
@@ -452,6 +839,7 @@ mod tests {
         let snap = rt.shutdown();
         assert_eq!(snap.shards.len(), 4);
         assert_eq!(snap.total_jobs(), 0);
+        assert!(snap.healthy());
     }
 
     #[test]
@@ -472,5 +860,59 @@ mod tests {
             }
         )
         .is_err());
+    }
+
+    #[test]
+    fn zero_deadline_expires_with_typed_error() {
+        // Duration::ZERO is expired the instant it is admitted — the
+        // deterministic way to exercise the deadline path with no
+        // wall-clock sleep in the assertion.
+        let rt = ServingRuntime::start(
+            small_registry(),
+            ServingConfig {
+                shards: 1,
+                queue_capacity: 8,
+            },
+        )
+        .unwrap();
+        let key = ModelKey::new("m", 8);
+        let rx = rt
+            .submit_with(
+                &key,
+                Tensor3::zeros(2, 6, 6),
+                SubmitOptions {
+                    deadline: Some(Duration::ZERO),
+                    retry_budget: None,
+                },
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(
+            matches!(err.root(), SdmmError::DeadlineExceeded { .. }),
+            "expected DeadlineExceeded, got {err}"
+        );
+        let snap = rt.shutdown();
+        assert_eq!(snap.total_expired(), 1);
+        assert_eq!(snap.total_jobs(), 0);
+        assert!(snap.healthy(), "expiry must release the depth slot");
+    }
+
+    #[test]
+    fn generous_deadline_serves_normally() {
+        let rt = ServingRuntime::start(small_registry(), ServingConfig::default()).unwrap();
+        let key = ModelKey::new("m", 8);
+        let rx = rt
+            .submit_with(
+                &key,
+                Tensor3::zeros(2, 6, 6),
+                SubmitOptions {
+                    deadline: Some(Duration::from_secs(3600)),
+                    retry_budget: Some(0),
+                },
+            )
+            .unwrap();
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.output.c, 3);
+        assert_eq!(rt.shutdown().total_expired(), 0);
     }
 }

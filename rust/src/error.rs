@@ -91,6 +91,21 @@ pub enum SdmmError {
     CorruptArtifact(String),
     /// The serving admission layer refused the request.
     Admission(AdmitError),
+    /// An admitted request outlived its deadline budget before a shard
+    /// worker could execute it — the head-of-line timeout path of the
+    /// supervised runtime (DESIGN.md §10). The request was *not* run.
+    DeadlineExceeded {
+        /// How long the request sat queued before it expired.
+        waited: std::time::Duration,
+    },
+    /// The shard holding an admitted request gave up on it: the worker
+    /// crashed past the request's retry budget, the shard was declared
+    /// dead by its supervisor, or shutdown swept the queue before a
+    /// worker could run it. The request ran zero complete times.
+    ShardUnavailable {
+        /// The shard that gave up on the request.
+        shard: usize,
+    },
     /// An underlying I/O operation failed.
     Io(std::io::Error),
     /// Text (JSON manifest, CLI argument, artifact metadata) failed to
@@ -164,6 +179,12 @@ impl std::fmt::Display for SdmmError {
             SdmmError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
             SdmmError::CorruptArtifact(m) => write!(f, "corrupt artifact: {m}"),
             SdmmError::Admission(e) => write!(f, "admission refused: {e}"),
+            SdmmError::DeadlineExceeded { waited } => {
+                write!(f, "deadline exceeded after {waited:?} in queue (request not executed)")
+            }
+            SdmmError::ShardUnavailable { shard } => {
+                write!(f, "shard {shard} unavailable (crashed past retry budget or shut down)")
+            }
             SdmmError::Io(e) => write!(f, "i/o: {e}"),
             SdmmError::Parse(m) => write!(f, "parse: {m}"),
             SdmmError::Runtime(m) => write!(f, "runtime: {m}"),

@@ -1,0 +1,353 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §10).
+//!
+//! Chaos runs must be *replayable*: a failure seen once in CI has to
+//! reproduce locally from nothing but a seed. A [`FaultPlan`] is
+//! generated from a single `u64` seed through the crate's deterministic
+//! [`Rng`] and addresses every injection point by **per-shard
+//! ordinals** — "the 3rd job executed on shard 1", "the 2nd queue
+//! drain on shard 0" — never by wall-clock time, so firing is
+//! independent of cross-shard interleaving and machine speed.
+//!
+//! Injection points (the fault taxonomy):
+//!
+//! * [`FaultKind::WorkerPanic`] — panic the shard worker mid-job,
+//!   exercising `catch_unwind` supervision, restart backoff, and the
+//!   exactly-once requeue of drained-but-unprocessed jobs.
+//! * [`FaultKind::SlowShard`] — stall the worker before a job (latency
+//!   spike), exercising deadline expiry and least-loaded steering.
+//! * [`FaultKind::QueueStall`] — stall the worker after a queue drain,
+//!   exercising head-of-line pressure and backpressure admission.
+//! * [`FaultKind::DegradePackedPath`] — make the packed-plane path
+//!   unavailable for one job, forcing the bit-exact scalar fallback
+//!   tier (the degradation ladder's bottom rung).
+//! * artifact byte corruption — [`FaultPlan::corrupt_artifact`] flips
+//!   planned bytes in a serialized model so the cold-load path must
+//!   refuse with a typed `CorruptArtifact` error.
+//!
+//! The runtime carries an `Option<Arc<FaultInjector>>`; production
+//! paths pass `None` and pay one branch per job — a zero-cost no-op.
+
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// One kind of injected failure (see the module docs for the taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the shard worker mid-job (supervisor restart path).
+    WorkerPanic,
+    /// Stall the worker before executing a job (latency spike).
+    SlowShard {
+        /// Injected delay before the job runs.
+        delay: Duration,
+    },
+    /// Stall the worker right after a queue drain (head-of-line
+    /// pressure while jobs sit decoded but unexecuted).
+    QueueStall {
+        /// Injected delay after the drain.
+        delay: Duration,
+    },
+    /// Make the packed-plane path unavailable for one job, forcing the
+    /// bit-exact scalar reference tier.
+    DegradePackedPath,
+}
+
+/// One planned fault: fire `kind` when shard `shard` reaches per-shard
+/// ordinal `nth` (job sequence number, or drain sequence number for
+/// [`FaultKind::QueueStall`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Shard the fault targets.
+    pub shard: usize,
+    /// 0-based per-shard ordinal the fault fires at.
+    pub nth: u64,
+    /// What to inject.
+    pub kind: FaultKind,
+}
+
+/// Sizing knobs for [`FaultPlan::generate`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Shard count ordinals are drawn over.
+    pub shards: usize,
+    /// Per-shard ordinal horizon; events land in `[0, horizon)`.
+    pub horizon: u64,
+    /// Worker panics to plan.
+    pub panics: usize,
+    /// Slow-shard latency spikes to plan.
+    pub slow: usize,
+    /// Post-drain queue stalls to plan.
+    pub stalls: usize,
+    /// Forced scalar-tier degradations to plan.
+    pub degrades: usize,
+    /// Artifact byte corruptions to plan.
+    pub artifact_flips: usize,
+    /// Upper bound for injected delays.
+    pub max_delay: Duration,
+}
+
+impl FaultSpec {
+    /// A light mixed plan sized for smoke runs: a couple of each fault
+    /// kind over `horizon` jobs per shard, short delays.
+    pub fn light(shards: usize, horizon: u64) -> FaultSpec {
+        FaultSpec {
+            shards,
+            horizon,
+            panics: 2,
+            slow: 2,
+            stalls: 1,
+            degrades: 2,
+            artifact_flips: 4,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A seeded, reproducible set of faults. Same seed + same spec ⇒
+/// identical plan, on every machine — the replay contract the chaos
+/// suite (`tests/chaos_serving.rs`) and the CI seed matrix rely on.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed the plan was generated from (kept for reports).
+    pub seed: u64,
+    /// Planned events; at most one per (shard, ordinal, channel).
+    pub events: Vec<FaultEvent>,
+    /// Planned artifact corruptions as `(position, xor mask)`; the
+    /// position is reduced modulo the artifact length when applied,
+    /// and the mask is never zero (every flip changes its byte).
+    pub flips: Vec<(u64, u8)>,
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing fires, nothing is corrupted.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, events: Vec::new(), flips: Vec::new() }
+    }
+
+    /// Generate a plan from a seed. Event ordinals are de-duplicated
+    /// per (shard, ordinal) within each channel (job-keyed kinds vs
+    /// drain-keyed stalls), so no two events contend for one slot.
+    pub fn generate(seed: u64, spec: &FaultSpec) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let shards = spec.shards.max(1) as u64;
+        let horizon = spec.horizon.max(1);
+        let mut events = Vec::new();
+        // (shard, nth, drain-channel?) slots already taken.
+        let mut used: HashSet<(usize, u64, bool)> = HashSet::new();
+        let mut place = |rng: &mut Rng, used: &mut HashSet<(usize, u64, bool)>, drain: bool| {
+            // Bounded rejection sampling; on a crowded horizon simply
+            // drop the event rather than loop forever.
+            for _ in 0..32 {
+                let shard = rng.below(shards) as usize;
+                let nth = rng.below(horizon);
+                if used.insert((shard, nth, drain)) {
+                    return Some((shard, nth));
+                }
+            }
+            None
+        };
+        let max_us = spec.max_delay.as_micros().max(1) as u64;
+        for _ in 0..spec.panics {
+            if let Some((shard, nth)) = place(&mut rng, &mut used, false) {
+                events.push(FaultEvent { shard, nth, kind: FaultKind::WorkerPanic });
+            }
+        }
+        for _ in 0..spec.slow {
+            let delay = Duration::from_micros(1 + rng.below(max_us));
+            if let Some((shard, nth)) = place(&mut rng, &mut used, false) {
+                events.push(FaultEvent { shard, nth, kind: FaultKind::SlowShard { delay } });
+            }
+        }
+        for _ in 0..spec.degrades {
+            if let Some((shard, nth)) = place(&mut rng, &mut used, false) {
+                events.push(FaultEvent { shard, nth, kind: FaultKind::DegradePackedPath });
+            }
+        }
+        for _ in 0..spec.stalls {
+            let delay = Duration::from_micros(1 + rng.below(max_us));
+            if let Some((shard, nth)) = place(&mut rng, &mut used, true) {
+                events.push(FaultEvent { shard, nth, kind: FaultKind::QueueStall { delay } });
+            }
+        }
+        let mut flips = Vec::with_capacity(spec.artifact_flips);
+        for _ in 0..spec.artifact_flips {
+            let pos = rng.next_u64();
+            let mask = (1 + rng.below(255)) as u8;
+            flips.push((pos, mask));
+        }
+        FaultPlan { seed, events, flips }
+    }
+
+    /// Apply the planned byte corruptions to a serialized artifact,
+    /// in place. Returns how many bytes were flipped (0 for an empty
+    /// slice or an empty plan).
+    pub fn corrupt_artifact(&self, bytes: &mut [u8]) -> usize {
+        if bytes.is_empty() {
+            return 0;
+        }
+        let len = bytes.len() as u64;
+        for &(pos, mask) in &self.flips {
+            bytes[(pos % len) as usize] ^= mask;
+        }
+        self.flips.len()
+    }
+
+    /// Planned worker panics — chaos tests size retry budgets and
+    /// restart caps off this so no request can out-crash its budget.
+    pub fn panics(&self) -> usize {
+        self.events.iter().filter(|e| e.kind == FaultKind::WorkerPanic).count()
+    }
+}
+
+/// The runtime-side carrier of a [`FaultPlan`]: shared by every shard
+/// worker through an `Arc`, it advances per-shard atomic ordinals and
+/// answers "does a fault fire here?" — exactly once per planned event,
+/// deterministically, across worker restarts (ordinals are owned by
+/// the injector, not the worker incarnation, so a restart never
+/// replays the crash that killed its predecessor).
+#[derive(Debug)]
+pub struct FaultInjector {
+    /// Job-keyed events: (shard, job ordinal) → fault.
+    jobs: HashMap<(usize, u64), FaultKind>,
+    /// Drain-keyed stalls: (shard, drain ordinal) → delay.
+    drains: HashMap<(usize, u64), Duration>,
+    job_seq: Vec<AtomicU64>,
+    drain_seq: Vec<AtomicU64>,
+    fired: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Build an injector for a runtime with `shards` shards. Events
+    /// targeting shards outside `0..shards` never fire.
+    pub fn new(plan: &FaultPlan, shards: usize) -> FaultInjector {
+        let mut jobs = HashMap::new();
+        let mut drains = HashMap::new();
+        for e in &plan.events {
+            match e.kind {
+                FaultKind::QueueStall { delay } => {
+                    drains.entry((e.shard, e.nth)).or_insert(delay);
+                }
+                kind => {
+                    jobs.entry((e.shard, e.nth)).or_insert(kind);
+                }
+            }
+        }
+        FaultInjector {
+            jobs,
+            drains,
+            job_seq: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            drain_seq: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            fired: AtomicU64::new(0),
+        }
+    }
+
+    /// Called by shard `shard`'s worker before each job: advances the
+    /// shard's job ordinal and returns the fault planned for it, if
+    /// any. Out-of-range shards always get `None`.
+    pub fn on_job(&self, shard: usize) -> Option<FaultKind> {
+        let seq = self.job_seq.get(shard)?.fetch_add(1, Ordering::Relaxed);
+        let kind = self.jobs.get(&(shard, seq)).copied();
+        if kind.is_some() {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        kind
+    }
+
+    /// Called after each non-empty queue drain: advances the shard's
+    /// drain ordinal and returns the planned stall, if any.
+    pub fn on_drain(&self, shard: usize) -> Option<Duration> {
+        let seq = self.drain_seq.get(shard)?.fetch_add(1, Ordering::Relaxed);
+        let delay = self.drains.get(&(shard, seq)).copied();
+        if delay.is_some() {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        delay
+    }
+
+    /// Planned events fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FaultSpec {
+        FaultSpec {
+            shards: 3,
+            horizon: 64,
+            panics: 3,
+            slow: 2,
+            stalls: 2,
+            degrades: 2,
+            artifact_flips: 8,
+            max_delay: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = FaultPlan::generate(42, &spec());
+        let b = FaultPlan::generate(42, &spec());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.flips, b.flips);
+        assert_eq!(a.panics(), 3);
+        let c = FaultPlan::generate(43, &spec());
+        assert!(a.events != c.events || a.flips != c.flips);
+    }
+
+    #[test]
+    fn injector_fires_each_event_exactly_once_at_its_ordinal() {
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![
+                FaultEvent { shard: 0, nth: 2, kind: FaultKind::WorkerPanic },
+                FaultEvent { shard: 1, nth: 0, kind: FaultKind::DegradePackedPath },
+                FaultEvent {
+                    shard: 0,
+                    nth: 1,
+                    kind: FaultKind::QueueStall { delay: Duration::from_micros(5) },
+                },
+            ],
+            flips: Vec::new(),
+        };
+        let inj = FaultInjector::new(&plan, 2);
+        // Shard 0 jobs: ordinals 0, 1, 2 — the panic fires at 2 only.
+        assert_eq!(inj.on_job(0), None);
+        assert_eq!(inj.on_job(0), None);
+        assert_eq!(inj.on_job(0), Some(FaultKind::WorkerPanic));
+        assert_eq!(inj.on_job(0), None);
+        // Shard 1 fires on its first job; ordinals are per-shard.
+        assert_eq!(inj.on_job(1), Some(FaultKind::DegradePackedPath));
+        // Drain channel is independent of the job channel.
+        assert_eq!(inj.on_drain(0), None);
+        assert_eq!(inj.on_drain(0), Some(Duration::from_micros(5)));
+        assert_eq!(inj.on_drain(0), None);
+        assert_eq!(inj.fired(), 3);
+        // Out-of-range shard: never fires, never panics.
+        assert_eq!(inj.on_job(7), None);
+        assert_eq!(inj.on_drain(7), None);
+    }
+
+    #[test]
+    fn corrupt_artifact_flips_planned_bytes() {
+        let plan = FaultPlan::generate(7, &spec());
+        let clean = vec![0xA5u8; 256];
+        let mut dirty = clean.clone();
+        let n = plan.corrupt_artifact(&mut dirty);
+        assert_eq!(n, 8);
+        assert_ne!(clean, dirty, "a nonzero mask must change at least one byte");
+        // Reproducible: same plan corrupts the same bytes.
+        let mut again = clean.clone();
+        plan.corrupt_artifact(&mut again);
+        assert_eq!(dirty, again);
+        // Empty input and empty plan are no-ops.
+        assert_eq!(plan.corrupt_artifact(&mut []), 0);
+        let mut untouched = clean.clone();
+        assert_eq!(FaultPlan::none().corrupt_artifact(&mut untouched), 0);
+        assert_eq!(untouched, clean);
+    }
+}

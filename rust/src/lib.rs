@@ -111,6 +111,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod dsp;
 pub mod error;
+pub mod fault;
 pub mod manip;
 pub mod packing;
 pub mod report;

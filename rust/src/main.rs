@@ -13,10 +13,12 @@
 //! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
 //!            [--bits N] [--artifacts DIR]     batched PJRT serving demo
 //! sdmm serve-sim [--shards N] [--requests N] [--concurrency C]
-//!            [--from-artifact DIR]
+//!            [--from-artifact DIR] [--chaos-seed S]
 //!            sharded multi-model serving demo on the simulator backend
 //!            (mixed 8/6/4-bit registry; with --from-artifact the model
-//!            cold-loads from a compiled artifact — no repacking)
+//!            cold-loads from a compiled artifact — no repacking; with
+//!            --chaos-seed a deterministic fault plan injects panics,
+//!            stalls and degradations while serving)
 //! sdmm sim [--bits N] [--arch 1m|2m|mp]       systolic-array estimates
 //! ```
 
@@ -125,6 +127,7 @@ fn print_usage() {
          \x20            [--artifacts DIR]\n\
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
          sdmm serve-sim [--shards N] [--requests N] [--concurrency C] [--from-artifact DIR]\n\
+         \x20            [--chaos-seed S]\n\
          sdmm sim [--bits N] [--arch 1m|2m|mp]"
     );
 }
@@ -477,6 +480,10 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let shards = args.flag_usize("shards", sdmm::util::par::num_threads())?;
     let requests = args.flag_usize("requests", 96)?;
     let concurrency = args.flag_usize("concurrency", 2 * shards.max(1))?;
+    let chaos: Option<u64> = match args.flags.get("chaos-seed") {
+        Some(v) => Some(v.parse().with_context(|| format!("--chaos-seed {v}"))?),
+        None => None,
+    };
 
     let registry = Arc::new(ModelRegistry::new());
     let mut work: Vec<(ModelKey, Tensor3)> = Vec::new();
@@ -498,7 +505,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             .map(|_| rng.range_i64(-lim, lim - 1))
             .collect();
         work.push((model.key.clone(), input));
-        return serve_sim_loop(registry, work, shards, requests, concurrency);
+        return serve_sim_loop(registry, work, shards, requests, concurrency, chaos);
     }
     for v in [8u32, 6, 4] {
         let layers = vec![
@@ -533,31 +540,54 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         registry.len(),
         registry.total_cached_tuples()
     );
-    serve_sim_loop(registry, work, shards, requests, concurrency)
+    serve_sim_loop(registry, work, shards, requests, concurrency, chaos)
 }
 
 /// The closed-loop serving drive shared by both `serve-sim` admission
-/// paths (in-process compile and artifact cold-load).
+/// paths (in-process compile and artifact cold-load). With a chaos
+/// seed, a deterministic [`sdmm::fault::FaultPlan`] rides along and the
+/// drive tolerates (and counts) typed per-request failures instead of
+/// aborting on the first one.
 fn serve_sim_loop(
     registry: std::sync::Arc<sdmm::coordinator::ModelRegistry>,
     work: Vec<(sdmm::coordinator::ModelKey, sdmm::cnn::infer::Tensor3)>,
     shards: usize,
     requests: usize,
     concurrency: usize,
+    chaos: Option<u64>,
 ) -> Result<()> {
-    use sdmm::coordinator::{ServingConfig, ServingRuntime};
+    use sdmm::coordinator::{ServingConfig, ServingRuntime, SupervisionPolicy};
+    use sdmm::fault::{FaultPlan, FaultSpec};
     use std::sync::Arc;
 
-    let rt = ServingRuntime::start(
-        Arc::clone(&registry),
-        ServingConfig {
-            shards,
-            queue_capacity: 256,
-        },
-    )?;
+    let config = ServingConfig {
+        shards,
+        queue_capacity: 256,
+    };
+    let rt = match chaos {
+        Some(seed) => {
+            let horizon = ((requests / shards.max(1)).max(8)) as u64;
+            let spec = FaultSpec::light(shards, horizon);
+            let plan = FaultPlan::generate(seed, &spec);
+            let policy = SupervisionPolicy {
+                // Enough retries that every planned panic can be absorbed.
+                default_retry_budget: (plan.panics() as u32).max(2),
+                ..SupervisionPolicy::default()
+            };
+            println!(
+                "chaos: seed {seed} -> {} planned fault events over {shards} shard(s), \
+                 retry budget {}",
+                plan.events.len(),
+                policy.default_retry_budget
+            );
+            ServingRuntime::start_supervised(Arc::clone(&registry), config, policy, Some(plan))?
+        }
+        None => ServingRuntime::start(Arc::clone(&registry), config)?,
+    };
     let t0 = Instant::now();
     let mut inflight = std::collections::VecDeque::new();
     let (mut sent, mut done) = (0usize, 0usize);
+    let (mut ok, mut typed_errors, mut dropped) = (0usize, 0usize, 0usize);
     while done < requests {
         while inflight.len() < concurrency && sent < requests {
             let (key, x) = &work[sent % work.len()];
@@ -570,19 +600,47 @@ fn serve_sim_loop(
             }
         }
         if let Some(rx) = inflight.pop_front() {
-            rx.recv().context("runtime dropped request")??;
+            match rx.recv() {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(e)) if chaos.is_some() => {
+                    typed_errors += 1;
+                    if typed_errors == 1 {
+                        println!("chaos: first typed failure: {e}");
+                    }
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_) if chaos.is_some() => dropped += 1,
+                Err(e) => return Err(e).context("runtime dropped request"),
+            }
             done += 1;
         }
     }
     let wall = t0.elapsed();
+    let fired = rt.faults_fired();
     let snap = rt.shutdown();
     println!(
         "served {} mixed-precision requests on {shards} shard(s) in {:.3}s -> {:.0} req/s",
         snap.total_jobs(),
         wall.as_secs_f64(),
-        snap.total_jobs() as f64 / wall.as_secs_f64()
+        snap.total_jobs() as f64 / wall.as_secs_f64().max(1e-9)
     );
     print!("{}", sdmm::report::serving_summary(&snap));
+    if chaos.is_some() {
+        println!(
+            "chaos: fired {fired} fault(s): {} restart(s), {} panic(s), {} degraded, \
+             {} expired, {} dead shard(s); {ok} ok, {typed_errors} typed failure(s), \
+             {dropped} dropped",
+            snap.total_restarts(),
+            snap.total_panics(),
+            snap.total_degraded(),
+            snap.total_expired(),
+            snap.dead_shards(),
+        );
+        println!(
+            "chaos: runtime {} to a healthy steady state before shutdown",
+            if snap.dead_shards() == 0 { "recovered" } else { "did NOT recover" }
+        );
+    }
     Ok(())
 }
 

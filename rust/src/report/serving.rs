@@ -1,24 +1,29 @@
 //! Serving-runtime report: renders a [`RuntimeSnapshot`] as the
-//! per-shard table the serving bench and demos print (DESIGN.md §6).
+//! per-shard table the serving bench and demos print (DESIGN.md §6,
+//! fault/health columns per §10).
 
 use crate::coordinator::RuntimeSnapshot;
 use crate::util::bench::fmt_ns;
 
-/// Format a runtime snapshot: one row per shard (jobs, failures,
-/// latency p50/p99, drain-batch fill, peak in-flight depth, DSP ops)
-/// plus a totals line. Pure formatting — callable on a live runtime's
-/// `snapshot()` or on the final snapshot `shutdown()` returns.
+/// Format a runtime snapshot: one row per shard (health state, jobs,
+/// failures, latency p50/p99, drain-batch fill, peak in-flight depth,
+/// DSP ops, supervision counters) plus a totals line and a fault-model
+/// line (restarts/panics/degraded/expired/dead). Pure formatting —
+/// callable on a live runtime's `snapshot()` or on the final snapshot
+/// `shutdown()` returns.
 pub fn serving_summary(snap: &RuntimeSnapshot) -> String {
     let mut out = String::new();
     out.push_str("== serving runtime ==\n");
     out.push_str(&format!(
-        "{:>5} {:>8} {:>6} {:>10} {:>10} {:>6} {:>6} {:>12} {:>12}\n",
-        "shard", "jobs", "fail", "p50", "p99", "fill", "peak", "dsp_ops", "mults"
+        "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>6} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
+        "shard", "state", "jobs", "fail", "p50", "p99", "fill", "peak", "dsp_ops", "mults",
+        "restart", "deg", "exp"
     ));
     for s in &snap.shards {
         out.push_str(&format!(
-            "{:>5} {:>8} {:>6} {:>10} {:>10} {:>6.2} {:>6} {:>12} {:>12}\n",
+            "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>6.2} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
             s.shard,
+            s.state.name(),
             s.jobs_ok,
             s.jobs_err,
             fmt_ns(s.latency.p50_ns()),
@@ -27,6 +32,9 @@ pub fn serving_summary(snap: &RuntimeSnapshot) -> String {
             s.peak_depth,
             s.dsp_ops,
             s.mults,
+            s.restarts,
+            s.degraded,
+            s.deadline_expired,
         ));
     }
     out.push_str(&format!(
@@ -40,6 +48,16 @@ pub fn serving_summary(snap: &RuntimeSnapshot) -> String {
         } else {
             snap.total_mults() as f64 / snap.total_dsp_ops() as f64
         },
+    ));
+    out.push_str(&format!(
+        "faults: restarts={} panics={} degraded={} expired={} retries={} dead_shards={} healthy={}\n",
+        snap.total_restarts(),
+        snap.total_panics(),
+        snap.total_degraded(),
+        snap.total_expired(),
+        snap.total_retries(),
+        snap.dead_shards(),
+        snap.healthy(),
     ));
     out
 }
@@ -64,7 +82,30 @@ mod tests {
         assert!(text.contains("total jobs=2"));
         assert!(text.contains("dsp_ops=200"));
         assert!(text.contains("3.00 mults/DSP op"));
-        // one header + two shard rows + totals
-        assert_eq!(text.lines().count(), 5);
+        assert!(text.contains("dead_shards=0 healthy=true"));
+        // one header + two shard rows + totals + fault line
+        assert_eq!(text.lines().count(), 6);
+    }
+
+    #[test]
+    fn fault_line_reflects_supervision_counters() {
+        let a = ShardMetrics::new();
+        a.record_panic();
+        a.record_restart();
+        a.record_degraded();
+        a.record_expired(1_000);
+        a.record_retry();
+        a.set_state(crate::coordinator::ShardState::Dead);
+        let snap = RuntimeSnapshot {
+            shards: vec![a.snapshot(0)],
+        };
+        let text = serving_summary(&snap);
+        assert!(text.contains("dead"), "{text}");
+        assert!(
+            text.contains(
+                "faults: restarts=1 panics=1 degraded=1 expired=1 retries=1 dead_shards=1 healthy=false"
+            ),
+            "{text}"
+        );
     }
 }

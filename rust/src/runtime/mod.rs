@@ -34,7 +34,7 @@ pub mod store;
 pub use artifacts::{Artifacts, TensorEntry};
 pub use exec::Executable;
 pub use model::{CnnModel, WeightMode};
-pub use store::{load_model, save_model, ArtifactInfo};
+pub use store::{load_model, load_model_bytes, save_model, ArtifactInfo};
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";

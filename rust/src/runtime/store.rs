@@ -103,7 +103,7 @@ fn intern_name(s: &str) -> &'static str {
     use std::collections::HashMap;
     use std::sync::{Mutex, OnceLock};
     static NAMES: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
-    let mut map = NAMES.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    let mut map = crate::util::sync::lock_unpoisoned(NAMES.get_or_init(|| Mutex::new(HashMap::new())));
     if let Some(&interned) = map.get(s) {
         return interned;
     }
@@ -550,6 +550,17 @@ pub fn load_model(dir: &Path) -> Result<CompiledModel> {
         return Err(corrupt("manifest checksum disagrees with binary footer"));
     }
     Ok(model)
+}
+
+/// Parse a model artifact directly from its binary bytes, skipping the
+/// manifest cross-check of [`load_model`]. This is the fuzz/chaos
+/// surface: every byte of `bytes` is untrusted, and any mutation —
+/// truncation, bit flip, fabricated header — must come back as a typed
+/// [`SdmmError::CorruptArtifact`]-family error, never a panic or an
+/// over-allocation (asserted by the seeded mutation sweep in
+/// `tests/artifact_roundtrip.rs`).
+pub fn load_model_bytes(bytes: &[u8]) -> Result<CompiledModel> {
+    parse_model(bytes).map(|(model, _checksum)| model)
 }
 
 fn parse_model(bytes: &[u8]) -> Result<(CompiledModel, u64)> {

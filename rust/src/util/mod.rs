@@ -17,6 +17,8 @@
 //! * [`json`] — a minimal JSON writer/reader for artifact manifests.
 //! * [`par`] — scoped-thread data parallelism (rayon substitute) for
 //!   the tiled conv / systolic-array hot paths.
+//! * [`sync`] — poison-recovering `Mutex`/`RwLock` helpers so one
+//!   panicking worker never wedges every later lock holder.
 
 pub mod bench;
 pub mod bits;
@@ -25,7 +27,9 @@ pub mod json;
 pub mod par;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use bits::{mask, sext, zext};
 pub use rng::Rng;
 pub use stats::Summary;
+pub use sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};

@@ -1,0 +1,63 @@
+//! Poison-recovering lock helpers for the serving stack.
+//!
+//! `std` mutexes and rwlocks poison when a holder panics, and every
+//! later `lock().unwrap()` then panics too — one crashed worker wedges
+//! each thread that touches the shared state after it (DESIGN.md §10).
+//! The coordinator's guarded state is deliberately panic-safe between
+//! operations — bounded queues of owned jobs and plain counters, never
+//! half-applied multi-step invariants — so recovery is always correct:
+//! these helpers take the guard out of the [`PoisonError`] and carry on.
+//!
+//! Use these for every lock on a serving-path shared structure; a bare
+//! `lock().unwrap()` in the coordinator is a poisoning footgun.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an rwlock, recovering the guard if a writer panicked.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an rwlock, recovering the guard if a holder panicked.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_poison() {
+        let m = Mutex::new(7u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the mutex");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_poison() {
+        let l = RwLock::new(vec![1, 2, 3]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("poison the rwlock");
+        }));
+        assert!(r.is_err());
+        assert_eq!(read_unpoisoned(&l).len(), 3);
+        write_unpoisoned(&l).push(4);
+        assert_eq!(read_unpoisoned(&l).len(), 4);
+    }
+}

@@ -337,6 +337,73 @@ fn bit_flips_and_fabricated_headers_yield_typed_errors() {
     }
 }
 
+/// Satellite of the fault-tolerance PR: a seeded N=256 mutation sweep
+/// over the serialized artifact through the raw-bytes entry point
+/// ([`sdmm::runtime::load_model_bytes`]). Every mutation — random bit
+/// flips, truncations at arbitrary offsets, and planned
+/// [`FaultPlan::corrupt_artifact`] burst corruptions — must come back
+/// as a typed `CorruptArtifact`-family error. A panic (or an
+/// over-allocation aborting the process) fails the test by
+/// construction.
+#[test]
+fn seeded_mutation_sweep_never_panics_and_always_types_the_error() {
+    use sdmm::fault::{FaultPlan, FaultSpec};
+    use sdmm::runtime::load_model_bytes;
+
+    let model = compile(8, CompressionPolicy::WrcHuffman, 14);
+    let dir = TempDir::new("sweep");
+    model.save(dir.path()).unwrap();
+    let pristine = std::fs::read(dir.path().join("sdmm-model.bin")).unwrap();
+    // The unmutated bytes parse — the sweep mutates a known-good file.
+    load_model_bytes(&pristine).unwrap();
+
+    let mut rng = Rng::new(0x5eed);
+    for case in 0..256u32 {
+        let mut bytes = pristine.clone();
+        match case % 4 {
+            // 1–8 random single-bit flips anywhere in the file
+            // (including the checksum footer).
+            0 => {
+                let flips = 1 + rng.below(8);
+                for _ in 0..flips {
+                    let pos = rng.below(bytes.len() as u64) as usize;
+                    bytes[pos] ^= 1 << rng.below(8);
+                }
+            }
+            // Truncation at an arbitrary offset (torn write / short
+            // read), including the empty file.
+            1 => {
+                let keep = rng.below(bytes.len() as u64) as usize;
+                bytes.truncate(keep);
+            }
+            // A planned burst corruption from the chaos module's own
+            // generator — the same flips `serve-sim --chaos-seed`
+            // would apply.
+            2 => {
+                let spec = FaultSpec::light(1, 8);
+                let plan = FaultPlan::generate(1000 + case as u64, &spec);
+                assert!(plan.corrupt_artifact(&mut bytes) > 0);
+            }
+            // A multi-byte stomp: overwrite a random window with seeded
+            // garbage (fabricated section data).
+            _ => {
+                let start = rng.below((bytes.len() - 1) as u64) as usize;
+                let len = (1 + rng.below(64) as usize).min(bytes.len() - start);
+                for b in &mut bytes[start..start + len] {
+                    *b = rng.below(256) as u8;
+                }
+            }
+        }
+        if bytes == pristine {
+            // A garbage window can coincide with the original bytes;
+            // such a case is a no-op, not a corruption.
+            continue;
+        }
+        let err = load_model_bytes(&bytes).unwrap_err();
+        assert_corrupt(err);
+    }
+}
+
 #[test]
 fn manifest_mismatch_and_absence_are_typed_errors() {
     let model = compile(8, CompressionPolicy::Wrc, 13);

@@ -1,0 +1,405 @@
+//! Chaos suite: replay deterministic fault plans against the sharded
+//! serving runtime and assert the exactly-once / bit-exact / recovery
+//! contract (DESIGN.md §10, EXPERIMENTS.md "Chaos protocol").
+//!
+//! Every test is seeded — the same seed replays the same plan on any
+//! machine — and none relies on wall-clock sleeps for correctness:
+//! delays only bound liveness waits (bounded polling), never decide
+//! pass/fail.
+//!
+//! CI runs this file once per seed in its matrix with
+//! `SDMM_CHAOS_SEED=<seed>`; without the variable the built-in seed set
+//! is used.
+
+use sdmm::cnn::infer::{relu, requantize, Tensor3};
+use sdmm::cnn::zoo::ConvLayer;
+use sdmm::coordinator::{
+    AdmitError, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime, ShardState,
+    SupervisionPolicy,
+};
+use sdmm::error::SdmmError;
+use sdmm::fault::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
+use sdmm::sa::{PeArch, SaConfig, SystolicArray};
+use sdmm::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fixed replay seeds (CI runs one per matrix leg). `SDMM_CHAOS_SEED`
+/// overrides the whole set with a single seed for targeted replays.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("SDMM_CHAOS_SEED") {
+        Ok(v) => vec![v.parse().expect("SDMM_CHAOS_SEED must be a u64")],
+        Err(_) => vec![7, 42, 0xC0FFEE],
+    }
+}
+
+/// Mixed-precision model set (one 2-conv model per bit width) plus a
+/// seeded in-range input per model — mirrors the integration suite so
+/// chaos runs exercise the same packed planes.
+fn mixed_set() -> Vec<(ModelSpec, Tensor3)> {
+    [8u32, 6, 4]
+        .iter()
+        .map(|&v| {
+            let layers = vec![
+                ConvLayer::new("c1", 8, 4, 6, 3, 1, 1, 1),
+                ConvLayer::new("c2", 8, 6, 6, 3, 1, 1, 1),
+            ];
+            let spec = ModelSpec::random("net", v, layers, 300 + v as u64);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(400 + v as u64);
+            let mut input = Tensor3::zeros(4, 8, 8);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            (spec, input)
+        })
+        .collect()
+}
+
+fn registry_for(set: &[(ModelSpec, Tensor3)]) -> Arc<ModelRegistry> {
+    let reg = Arc::new(ModelRegistry::new());
+    for (spec, _) in set {
+        reg.register(spec.clone()).unwrap();
+    }
+    reg
+}
+
+/// The no-fault reference: the pre-existing single-shard batch path
+/// with the runtime's ReLU/requantize interleaving. Both the packed
+/// tier and the scalar degradation tier must match it bit-exactly.
+fn reference_forward(spec: &ModelSpec, input: &Tensor3) -> Tensor3 {
+    let sa =
+        SystolicArray::new(SaConfig::paper_prototype(spec.v_bits, PeArch::MultiPack)).unwrap();
+    let mut x = input.clone();
+    for (layer, w) in spec.layers.iter().zip(&spec.weights) {
+        let mut y = sa.run_conv_batch(layer, w, &x).unwrap().output.unwrap();
+        relu(&mut y);
+        x = requantize(&y, spec.v_bits).0;
+    }
+    x
+}
+
+/// Short backoffs so a replay converges quickly; the generous restart
+/// cap keeps light plans from ever killing a shard.
+fn chaos_policy(retry_budget: u32) -> SupervisionPolicy {
+    SupervisionPolicy {
+        max_restarts: 8,
+        initial_backoff: Duration::from_micros(200),
+        max_backoff: Duration::from_millis(2),
+        default_retry_budget: retry_budget,
+    }
+}
+
+/// Bounded liveness wait: poll the snapshot until every shard is Up
+/// with an empty queue. Panics with the final snapshot if the runtime
+/// never converges (the bound is generous; the expected wait is one
+/// backoff, ≤ 2 ms under `chaos_policy`).
+fn await_healthy(rt: &ServingRuntime) {
+    for _ in 0..20_000 {
+        if rt.snapshot().healthy() {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    panic!("runtime never recovered to healthy: {:?}", rt.snapshot());
+}
+
+#[test]
+fn seeded_plans_replay_with_exactly_once_bit_exact_delivery() {
+    let set = mixed_set();
+    let references: Vec<Tensor3> =
+        set.iter().map(|(s, x)| reference_forward(s, x)).collect();
+    for seed in chaos_seeds() {
+        let shards = 3usize;
+        let n = 60usize;
+        let spec = FaultSpec::light(shards, (n / shards) as u64);
+        let plan = FaultPlan::generate(seed, &spec);
+        assert_eq!(
+            plan.events,
+            FaultPlan::generate(seed, &spec).events,
+            "plan generation must be deterministic"
+        );
+        // Budget sized so no request can out-crash it: each planned
+        // panic fires exactly once, so a single request survives at
+        // most `panics()` crashes — every submission must succeed.
+        let budget = (plan.panics() as u32).max(2);
+        let registry = registry_for(&set);
+        let rt = ServingRuntime::start_supervised(
+            Arc::clone(&registry),
+            ServingConfig {
+                shards,
+                queue_capacity: 128,
+            },
+            chaos_policy(budget),
+            Some(plan),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let (spec, input) = &set[i % set.len()];
+                rt.submit(&spec.key(), input.clone()).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("seed {seed}: request {i} dropped"))
+                .unwrap_or_else(|e| panic!("seed {seed}: request {i} failed: {e}"));
+            assert_eq!(
+                out.output,
+                references[i % set.len()],
+                "seed {seed}: request {i} not bit-exact (degraded={})",
+                out.degraded
+            );
+            assert!(rx.recv().is_err(), "seed {seed}: request {i} answered twice");
+        }
+        // Full recovery: every shard back Up with an empty queue.
+        await_healthy(&rt);
+        let snap = rt.shutdown();
+        assert_eq!(snap.total_jobs(), n as u64, "seed {seed}");
+        assert_eq!(snap.total_failed(), 0, "seed {seed}");
+        assert_eq!(
+            snap.total_panics(),
+            snap.total_restarts(),
+            "seed {seed}: every caught panic must be followed by a restart"
+        );
+        assert_eq!(snap.dead_shards(), 0, "seed {seed}");
+        assert!(snap.healthy(), "seed {seed}: final snapshot not healthy");
+    }
+}
+
+#[test]
+fn crash_past_budget_kills_the_shard_and_peers_take_over() {
+    let set = mixed_set();
+    let (spec, input) = &set[0];
+    let want = reference_forward(spec, input);
+    let registry = registry_for(&set);
+    // A zero-restart policy with one planned panic on shard 0's first
+    // job: the crash immediately exhausts the budget, the shard dies,
+    // and the in-flight job must be retried on the surviving peer.
+    let plan = FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent {
+            shard: 0,
+            nth: 0,
+            kind: FaultKind::WorkerPanic,
+        }],
+        flips: Vec::new(),
+    };
+    let rt = ServingRuntime::start_supervised(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 2,
+            queue_capacity: 16,
+        },
+        SupervisionPolicy {
+            max_restarts: 0,
+            ..chaos_policy(2)
+        },
+        Some(plan),
+    )
+    .unwrap();
+    // Serialized submissions: with idle queues the least-loaded scan
+    // admits to shard 0 first, which fires the planned panic.
+    let out = rt.infer(&spec.key(), input.clone()).unwrap();
+    assert_eq!(out.output, want, "retried job must stay bit-exact");
+    assert_eq!(out.shard, 1, "retry must land on the surviving peer");
+    // The dead shard is gated out of admission; traffic keeps flowing.
+    for _ in 0..4 {
+        let out = rt.infer(&spec.key(), input.clone()).unwrap();
+        assert_eq!(out.shard, 1);
+        assert_eq!(out.output, want);
+    }
+    let snap = rt.shutdown();
+    assert_eq!(snap.dead_shards(), 1);
+    assert_eq!(snap.shards[0].state, ShardState::Dead);
+    assert_eq!(snap.shards[0].panics, 1);
+    assert_eq!(snap.shards[0].restarts, 0);
+    assert_eq!(snap.shards[1].jobs_ok, 5);
+    assert_eq!(snap.shards[1].retries, 1, "one cross-shard retry transfer");
+    assert!(!snap.healthy());
+}
+
+#[test]
+fn all_shards_dead_fails_typed_and_gates_admission() {
+    let set = mixed_set();
+    let (spec, input) = &set[0];
+    let registry = registry_for(&set);
+    let plan = FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent {
+            shard: 0,
+            nth: 0,
+            kind: FaultKind::WorkerPanic,
+        }],
+        flips: Vec::new(),
+    };
+    let rt = ServingRuntime::start_supervised(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 1,
+            queue_capacity: 8,
+        },
+        SupervisionPolicy {
+            max_restarts: 0,
+            ..chaos_policy(2)
+        },
+        Some(plan),
+    )
+    .unwrap();
+    // The only shard dies on the first job; with no healthy peer the
+    // request must fail with a typed error — never hang.
+    let err = rt.infer(&spec.key(), input.clone()).unwrap_err();
+    assert!(
+        matches!(err.root(), SdmmError::ShardUnavailable { shard: 0 }),
+        "expected ShardUnavailable, got: {err}"
+    );
+    // Admission now refuses outright (typed), before queuing anything.
+    assert!(matches!(
+        rt.submit(&spec.key(), input.clone()),
+        Err(AdmitError::NoHealthyShards)
+    ));
+    let snap = rt.shutdown();
+    assert_eq!(snap.dead_shards(), 1);
+    assert_eq!(snap.total_jobs(), 0);
+    assert_eq!(snap.total_failed(), 1);
+}
+
+#[test]
+fn forced_degradation_serves_bit_exact_from_the_scalar_tier() {
+    let set = mixed_set();
+    let registry = registry_for(&set);
+    let n = 6u64;
+    // Force the scalar tier for every one of the n jobs on the single
+    // shard: outputs must stay bit-exact with the packed path.
+    let plan = FaultPlan {
+        seed: 0,
+        events: (0..n)
+            .map(|nth| FaultEvent {
+                shard: 0,
+                nth,
+                kind: FaultKind::DegradePackedPath,
+            })
+            .collect(),
+        flips: Vec::new(),
+    };
+    let rt = ServingRuntime::start_supervised(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 1,
+            queue_capacity: 16,
+        },
+        chaos_policy(2),
+        Some(plan),
+    )
+    .unwrap();
+    for i in 0..n as usize {
+        let (spec, input) = &set[i % set.len()];
+        let want = reference_forward(spec, input);
+        let out = rt.infer(&spec.key(), input.clone()).unwrap();
+        assert!(out.degraded, "job {i} should have been forced scalar");
+        assert_eq!(out.output, want, "scalar tier diverged on job {i}");
+    }
+    assert_eq!(rt.faults_fired(), n);
+    let snap = rt.shutdown();
+    assert_eq!(snap.total_degraded(), n);
+    assert_eq!(snap.total_jobs(), n);
+    assert_eq!(snap.total_failed(), 0);
+    assert!(snap.healthy(), "degradation must not cost health");
+}
+
+#[test]
+fn shutdown_under_saturation_with_faults_resolves_every_request_once() {
+    let set = mixed_set();
+    let references: Vec<Tensor3> =
+        set.iter().map(|(s, x)| reference_forward(s, x)).collect();
+    let registry = registry_for(&set);
+    let shards = 2usize;
+    let n = 24usize;
+    let spec = FaultSpec::light(shards, (n / shards) as u64);
+    let plan = FaultPlan::generate(9_001, &spec);
+    let budget = (plan.panics() as u32).max(2);
+    let rt = ServingRuntime::start_supervised(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards,
+            queue_capacity: 64,
+        },
+        chaos_policy(budget),
+        Some(plan),
+    )
+    .unwrap();
+    // Saturate, then shut down with everything still in flight: every
+    // admitted request must resolve exactly once — bit-exact or typed.
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let (spec, input) = &set[i % set.len()];
+            rt.submit(&spec.key(), input.clone()).unwrap()
+        })
+        .collect();
+    let snap = rt.shutdown();
+    let (mut ok, mut typed) = (0u64, 0u64);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().unwrap_or_else(|_| panic!("request {i} dropped")) {
+            Ok(out) => {
+                assert_eq!(out.output, references[i % set.len()], "request {i}");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.root(),
+                        SdmmError::ShardUnavailable { .. } | SdmmError::DeadlineExceeded { .. }
+                    ),
+                    "request {i}: untyped failure {e}"
+                );
+                typed += 1;
+            }
+        }
+        assert!(rx.recv().is_err(), "request {i} answered twice");
+    }
+    assert_eq!(ok + typed, n as u64);
+    assert_eq!(snap.total_jobs() + snap.total_failed(), n as u64);
+    assert_eq!(snap.total_jobs(), ok);
+    assert_eq!(snap.total_failed(), typed);
+}
+
+#[test]
+fn zero_deadline_fails_typed_while_the_runtime_stays_healthy() {
+    use sdmm::coordinator::SubmitOptions;
+    let set = mixed_set();
+    let (spec, input) = &set[0];
+    let registry = registry_for(&set);
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 1,
+            queue_capacity: 8,
+        },
+    )
+    .unwrap();
+    // A zero budget is already expired at admission — deterministic
+    // typed failure with no wall-clock dependence at all.
+    let rx = rt
+        .submit_with(
+            &spec.key(),
+            input.clone(),
+            SubmitOptions {
+                deadline: Some(Duration::ZERO),
+                retry_budget: None,
+            },
+        )
+        .unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    assert!(
+        matches!(err.root(), SdmmError::DeadlineExceeded { .. }),
+        "expected DeadlineExceeded, got: {err}"
+    );
+    // An expired request must not poison the shard for its successors.
+    let out = rt.infer(&spec.key(), input.clone()).unwrap();
+    assert_eq!(out.output, reference_forward(spec, input));
+    let snap = rt.shutdown();
+    assert_eq!(snap.total_expired(), 1);
+    assert_eq!(snap.total_jobs(), 1);
+    assert!(snap.healthy());
+}

@@ -297,6 +297,53 @@ fn sharded_runtime_shutdown_flushes_admitted_jobs() {
 }
 
 #[test]
+fn sharded_runtime_drop_without_shutdown_flushes_and_joins() {
+    let set = mixed_set();
+    let registry = Arc::new(ModelRegistry::new());
+    for (spec, _) in &set {
+        registry.register(spec.clone()).unwrap();
+    }
+    let rt = ServingRuntime::start(
+        Arc::clone(&registry),
+        ServingConfig {
+            shards: 2,
+            queue_capacity: 32,
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..9)
+        .map(|i| {
+            let (spec, input) = &set[i % set.len()];
+            rt.submit(&spec.key(), input.clone()).unwrap()
+        })
+        .collect();
+    // Dropping the handle without calling shutdown() must join the
+    // supervisors (no hang, no leaked threads) and still answer every
+    // admitted request exactly once.
+    drop(rt);
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+        assert!(rx.recv().is_err(), "job answered twice");
+    }
+}
+
+#[test]
+fn inference_server_drop_without_shutdown_flushes_and_joins() {
+    let server = InferenceServer::start(
+        SumRunner,
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_secs(1), // long deadline: drop must flush
+        },
+    );
+    let rxs: Vec<_> = (0..5).map(|i| server.submit(vec![i as f32; 8])).collect();
+    drop(server);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![8.0 * i as f32]);
+    }
+}
+
+#[test]
 fn pjrt_backed_server_roundtrip() {
     if !sdmm::runtime::artifacts_available("artifacts") {
         eprintln!("SKIP: artifacts missing");
