@@ -27,9 +27,10 @@ use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, Systoli
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
 use sdmm::cnn::zoo::ConvLayer;
 use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
+use sdmm::dsp::Isa;
 use sdmm::report::serving_summary;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
-use sdmm::util::bench::BenchSuite;
+use sdmm::util::bench::{write_snapshot, BenchSuite};
 use sdmm::util::rng::Rng;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -84,6 +85,15 @@ fn bench_native(suite: &mut BenchSuite) {
     });
 }
 
+/// `--json PATH`: write the finished suite as a versioned snapshot
+/// (the perf-trajectory file `bench-diff` gates against).
+fn json_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
     let serving_only = std::env::args().any(|a| a == "--serving");
     let coldstart_only = std::env::args().any(|a| a == "--coldstart");
@@ -102,9 +112,62 @@ fn main() {
         bench_network(&mut suite);
     } else {
         bench_native(&mut suite);
+        bench_isa_matrix(&mut suite);
         serving(&mut suite);
     }
-    suite.run();
+    let results = suite.run();
+    if let Some(path) = json_arg() {
+        write_snapshot("e2e", &results, &path).unwrap();
+    }
+}
+
+/// Part 6: the per-bit-width × per-ISA-rung conv matrix — one
+/// `conv e2e (BatchExec, {bits}-bit, isa={rung})` row per combination
+/// the host supports. These rows are the heart of `BENCH_e2e.json`: the
+/// trajectory gate watches each rung's p50 independently, so a
+/// dispatch-ladder regression (e.g. AVX2 silently falling back to
+/// scalar) shows up as a >10% slowdown on exactly one row family.
+///
+/// `Isa::set_override` is process-global, but this binary is
+/// single-threaded and every rung is bit-exact (asserted before each
+/// timing row), so the override only changes speed, never results.
+fn bench_isa_matrix(suite: &mut BenchSuite) {
+    let mut rng = Rng::new(23);
+    for &bits in &[8u32, 6, 4] {
+        let lim = 1i64 << (bits - 1);
+        let layers = vec![
+            ConvLayer::new("m1", 12, 8, 16, 3, 1, 1, 1),
+            ConvLayer::new("m2", 12, 16, 16, 3, 1, 1, 1),
+        ];
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        let mut input = Tensor3::zeros(layers[0].in_ch, layers[0].in_hw, layers[0].in_hw);
+        input.data = (0..input.data.len())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+        let model = Compiler::for_bits(bits)
+            .unwrap()
+            .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() })
+            .pack_model("bench-matrix", &layers, &weights)
+            .unwrap();
+        let mut batch = BatchExec::new();
+        Isa::set_override(Some(Isa::Scalar));
+        let golden = batch.run(&model, &input).unwrap().output;
+        for isa in Isa::supported() {
+            Isa::set_override(Some(isa));
+            let out = batch.run(&model, &input).unwrap().output;
+            assert_eq!(out, golden, "{bits}-bit ISA rung {} diverged", isa.name());
+            suite.bench(
+                &format!("conv e2e (BatchExec, {bits}-bit, isa={})", isa.name()),
+                macs as f64,
+                || batch.run(&model, &input).unwrap().output.data[0],
+            );
+        }
+        Isa::set_override(None);
+    }
 }
 
 /// Part 5 (`-- --network`, EXPERIMENTS.md §Accuracy): end-to-end

@@ -5,10 +5,20 @@
 
 use sdmm::cnn::infer::Tensor3;
 use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+use sdmm::dsp::Isa;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
-use sdmm::util::bench::BenchSuite;
+use sdmm::util::bench::{write_snapshot, BenchSuite};
 use sdmm::util::rng::Rng;
 use std::time::Instant;
+
+/// `--json PATH`: write the finished suite as a versioned snapshot
+/// (the perf-trajectory file `bench-diff` gates against).
+fn json_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+}
 
 /// Median wall-clock of `n` runs of `f` (seconds).
 fn median_secs<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
@@ -76,6 +86,19 @@ fn main() {
     suite.bench("cmp-layer run_conv_batch_with_plane MP 8-bit", big_macs, || {
         sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap().mults
     });
+    // Per-ISA-rung rows for the same batch path (trajectory matrix —
+    // bit-exactness across rungs is asserted before each timing row).
+    for isa in Isa::supported() {
+        Isa::set_override(Some(isa));
+        let run = sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap();
+        assert_eq!(run.output, batch_run.output, "ISA rung {} diverged", isa.name());
+        suite.bench(
+            &format!("cmp-layer run_conv_batch MP 8-bit (isa={})", isa.name()),
+            big_macs,
+            || sa.run_conv_batch_with_plane(&big, &plane, &inp).unwrap().mults,
+        );
+    }
+    Isa::set_override(None);
     let reps = if std::env::var("SDMM_BENCH_FAST").is_ok() { 3 } else { 7 };
     let t_scalar = median_secs(reps, || sa.run_conv(&big, &w, &inp).unwrap());
     let t_batch = median_secs(reps, || {
@@ -101,5 +124,8 @@ fn main() {
             .sum::<u64>()
     });
 
-    suite.run();
+    let results = suite.run();
+    if let Some(path) = json_arg() {
+        write_snapshot("systolic-array", &results, &path).unwrap();
+    }
 }

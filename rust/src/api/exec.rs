@@ -7,7 +7,8 @@
 //! layers).
 
 use super::model::{CompiledLayer, CompiledModel};
-use crate::cnn::infer::{relu, requantize, Tensor3};
+use crate::cnn::infer::Tensor3;
+use crate::dsp::simd;
 use crate::coordinator::{ModelRegistry, RuntimeSnapshot, ServingConfig, ServingRuntime};
 use crate::dsp::SdmmEngine;
 use crate::error::{Result, SdmmError};
@@ -45,7 +46,11 @@ pub trait Executor {
 }
 
 /// Shared forward-pass skeleton: validate, then fold `conv` over the
-/// layers with the ReLU + requantize glue every backend agrees on.
+/// layers with the ReLU + requantize glue every backend agrees on. The
+/// glue stages run on the runtime-dispatched SIMD tier
+/// ([`crate::dsp::simd`]) — bit-identical to the scalar
+/// [`crate::cnn::infer`] stages on every dispatch rung, so backend
+/// interchangeability is unaffected.
 fn forward(
     model: &CompiledModel,
     input: &Tensor3,
@@ -60,8 +65,8 @@ fn forward(
         let (mut y, ops, m) = conv(cl, &x)?;
         dsp_ops += ops;
         mults += m;
-        relu(&mut y);
-        x = requantize(&y, model.v_bits).0;
+        simd::relu(&mut y);
+        x = simd::requantize(&y, model.v_bits).0;
     }
     Ok(ExecOutput {
         output: x,

@@ -103,6 +103,7 @@ use crate::cnn::infer::{
 };
 use crate::cnn::zoo::{ConvLayer, Model};
 use crate::compress::{prune_magnitude, CompressionPolicy};
+use crate::dsp::simd;
 use crate::error::{Context, Result, SdmmError};
 use crate::manip::{approximation_error_table, ErrorStats};
 use crate::util::json::Json;
@@ -193,7 +194,14 @@ pub fn pool_schedule(convs: &[ConvLayer], fc_in: Option<usize>) -> Result<Vec<bo
 /// last. Both consumers call exactly this function — the
 /// executor-vs-reference conformance contract cannot drift between
 /// two copies of the loop.
-fn fc_chain<'w, I>(mut flat: Vec<i64>, heads: I, v_bits: u32) -> Result<Vec<i64>>
+///
+/// `wide` selects the kernel tier: the session runs the
+/// runtime-dispatched SIMD kernels ([`crate::dsp::simd`]); the
+/// reference stays on the plain scalar loops so golden vectors are
+/// always minted by code that cannot share a defect with the tier
+/// under test. The two tiers are bit-identical by the SIMD
+/// conformance contract, so `wide` never changes a result.
+fn fc_chain<'w, I>(mut flat: Vec<i64>, heads: I, v_bits: u32, wide: bool) -> Result<Vec<i64>>
 where
     I: ExactSizeIterator<Item = (usize, usize, &'w [i64])>,
 {
@@ -206,7 +214,11 @@ where
                 expected: in_f,
             });
         }
-        let logits = fc_int(&flat, w, in_f, out_f);
+        let logits = if wide {
+            simd::fc_int(&flat, w, in_f, out_f)
+        } else {
+            fc_int(&flat, w, in_f, out_f)
+        };
         if fi + 1 < n {
             let mut t = Tensor3 {
                 c: out_f,
@@ -214,8 +226,13 @@ where
                 w: 1,
                 data: logits,
             };
-            relu(&mut t);
-            flat = requantize(&t, v_bits).0.data;
+            if wide {
+                simd::relu(&mut t);
+                flat = simd::requantize(&t, v_bits).0.data;
+            } else {
+                relu(&mut t);
+                flat = requantize(&t, v_bits).0.data;
+            }
         } else {
             flat = logits;
         }
@@ -892,7 +909,7 @@ impl<'a> InferenceSession<'a> {
             dsp_ops += out.dsp_ops;
             mults += out.mults;
             x = if stage.pool {
-                maxpool2(&out.output)
+                simd::maxpool2(&out.output)
             } else {
                 out.output
             };
@@ -908,6 +925,7 @@ impl<'a> InferenceSession<'a> {
             x.data,
             plan.fcs.iter().map(|f| (f.in_f, f.out_f, f.weights.as_slice())),
             plan.v_bits,
+            true,
         )?;
         let t1 = top1(&flat);
         Ok((
@@ -1027,6 +1045,10 @@ impl ReferenceNet {
                 .zip(&self.fc_weights)
                 .map(|(&(i, o), w)| (i, o, w.as_slice())),
             self.v_bits,
+            // The reference stays scalar end-to-end: it is the mint
+            // for golden vectors and must not share code with the
+            // SIMD tier it certifies.
+            false,
         )?;
         Ok((flat, trace))
     }

@@ -164,8 +164,11 @@ impl RegisteredModel {
             let mut y = run.output.ok_or_else(|| {
                 SdmmError::Runtime("batch conv returned no output tensor".into())
             })?;
-            relu(&mut y);
-            x = requantize(&y, self.key.v_bits).0;
+            // Shard drains run the stage glue on the runtime-dispatched
+            // SIMD tier (bit-identical to the scalar stages on every
+            // rung); the degradation tier below stays scalar.
+            crate::dsp::simd::relu(&mut y);
+            x = crate::dsp::simd::requantize(&y, self.key.v_bits).0;
         }
         Ok(ModelRun {
             output: x,

@@ -42,10 +42,11 @@
 //! `hi_j` the top `min(n_j, v)` bits of the v-bit window — all
 //! input-independent. [`PreparedTuple`] hoists these constants once per
 //! tuple; the per-lane kernel is then a handful of shifts, masks, one
-//! `u64` multiply and adds, which LLVM auto-vectorizes over the group
-//! chunks. An explicit AVX2 path (feature `simd`, runtime-detected)
-//! covers the single-input layouts; the scalar kernel remains the
-//! bit-exact reference either way.
+//! `u64` multiply and adds. Dense lane-0 streams (the conv mapping, and
+//! every ki = 1 layout) additionally dispatch through the explicit
+//! SIMD tier in [`super::simd`] — runtime-detected, no feature flag —
+//! with [`PreparedTuple::p_words_lane0`] as the bit-exact scalar
+//! reference rung.
 
 use super::engine::SdmmEngine;
 use crate::error::{Result, SdmmError};
@@ -70,12 +71,14 @@ pub struct PreparedTuple {
     ki: usize,
     kw: usize,
     b_offsets: [u32; MAX_KI],
-    /// Active (non-zero) slots, packed front-to-back.
-    n_active: usize,
-    act_n: [u32; MAX_KW],
-    act_aoff: [u32; MAX_KW],
+    /// Active (non-zero) slots, packed front-to-back. The `act_*`
+    /// constants are shared with the `dsp::simd` kernels, which are the
+    /// vector transcription of [`Self::p_words_lane0`].
+    pub(crate) n_active: usize,
+    pub(crate) act_n: [u32; MAX_KW],
+    pub(crate) act_aoff: [u32; MAX_KW],
     /// `NEG_j` before the per-lane `<< boff_i` shift.
-    act_neg: [u64; MAX_KW],
+    pub(crate) act_neg: [u64; MAX_KW],
     /// Post-processing constants per *original* slot index.
     slot_zero: [bool; MAX_KW],
     slot_negated: [bool; MAX_KW],
@@ -175,12 +178,16 @@ impl PreparedTuple {
             & mask(48)
     }
 
-    /// Lane-parallel P words for single-input layouts: one output per
-    /// input pattern. The loop body is branch-free so LLVM can
-    /// auto-vectorize the chunked form.
+    /// Lane-parallel P words for a dense lane-0 input stream: one
+    /// output per input pattern. Valid for every ki = 1 layout *and*
+    /// for the single-lane (conv) packing of multi-input layouts —
+    /// both require only that lane 0 sits at B-word offset 0, which
+    /// holds for all shipped layouts; idle lanes stream zeros and
+    /// contribute nothing. The loop body is branch-free so LLVM can
+    /// auto-vectorize the chunked form; this is also the bit-exact
+    /// scalar reference rung of the [`super::simd`] dispatch ladder.
     #[inline]
-    pub fn p_words_ki1(&self, p: &[u64], neg: &[u64], out: &mut [u64]) {
-        debug_assert_eq!(self.ki, 1);
+    pub fn p_words_lane0(&self, p: &[u64], neg: &[u64], out: &mut [u64]) {
         debug_assert_eq!(self.b_offsets[0], 0);
         debug_assert!(p.len() >= out.len() && neg.len() >= out.len());
         let a = self.a_word;
@@ -200,7 +207,8 @@ impl PreparedTuple {
             if na > 2 {
                 c = c.wrapping_add(nv & g2).wrapping_add((pv >> n2) << o2);
             }
-            // ki = 1 ⇒ B < 2^16, bit 17 can never be set: no bias term.
+            // Lane 0 at offset 0 ⇒ B = pv < 2^v ≤ 2^16, bit 17 can
+            // never be set: no bias term.
             *o = a.wrapping_mul(pv).wrapping_add(c) & m48;
         }
     }
@@ -238,6 +246,12 @@ pub struct BatchLanes {
     p: Vec<u64>,
     /// `u64::MAX` where the input is negative, else 0; same layout.
     neg: Vec<u64>,
+    /// Dense lane-0 copy (`[group]`) kept by the single-lane packers of
+    /// ki > 1 layouts so the SIMD tier streams contiguously; empty when
+    /// packed with full multi-lane groups (ki = 1 uses `p`/`neg`
+    /// directly — they are already dense).
+    p0: Vec<u64>,
+    neg0: Vec<u64>,
 }
 
 impl BatchLanes {
@@ -260,6 +274,8 @@ impl BatchLanes {
             v: layout.v,
             p: Vec::with_capacity(inputs.len()),
             neg: Vec::with_capacity(inputs.len()),
+            p0: Vec::new(),
+            neg0: Vec::new(),
         };
         lanes.extend(inputs);
         Ok(lanes)
@@ -278,12 +294,10 @@ impl BatchLanes {
             v: layout.v,
             p: vec![0; xs.len() * ki],
             neg: vec![0; xs.len() * ki],
+            p0: Vec::new(),
+            neg0: Vec::new(),
         };
-        for (g, &x) in xs.iter().enumerate() {
-            debug_assert!(crate::util::bits::fits_signed(x, layout.v));
-            lanes.p[g * ki] = zext(x, layout.v);
-            lanes.neg[g * ki] = if x < 0 { u64::MAX } else { 0 };
-        }
+        lanes.repack_lane0(xs);
         lanes
     }
 
@@ -292,12 +306,23 @@ impl BatchLanes {
     pub fn repack_lane0(&mut self, xs: &[i64]) {
         assert_eq!(self.groups, xs.len(), "lane tile size changed");
         if self.ki > 1 {
+            // Strided arrays stay correct for the generic paths; the
+            // dense copies feed the SIMD tier contiguously.
             self.p.iter_mut().for_each(|v| *v = 0);
             self.neg.iter_mut().for_each(|v| *v = 0);
+            self.p0.resize(xs.len(), 0);
+            self.neg0.resize(xs.len(), 0);
         }
         for (g, &x) in xs.iter().enumerate() {
-            self.p[g * self.ki] = zext(x, self.v);
-            self.neg[g * self.ki] = if x < 0 { u64::MAX } else { 0 };
+            debug_assert!(crate::util::bits::fits_signed(x, self.v));
+            let pv = zext(x, self.v);
+            let nv = if x < 0 { u64::MAX } else { 0 };
+            self.p[g * self.ki] = pv;
+            self.neg[g * self.ki] = nv;
+            if self.ki > 1 {
+                self.p0[g] = pv;
+                self.neg0[g] = nv;
+            }
         }
     }
 
@@ -319,9 +344,18 @@ impl BatchLanes {
         self.ki
     }
 
-    /// Lane-0 patterns as a contiguous slice (only valid for ki = 1).
-    fn lane0_slices(&self) -> (&[u64], &[u64]) {
-        (&self.p, &self.neg)
+    /// Dense lane-0 pattern streams (`[group]`), when this packing has
+    /// them: ki = 1 lanes are dense by construction; single-lane
+    /// packings of wider layouts keep explicit dense copies. `None`
+    /// for full multi-lane groups.
+    fn lane0_dense(&self) -> Option<(&[u64], &[u64])> {
+        if self.ki == 1 {
+            Some((&self.p, &self.neg))
+        } else if self.p0.len() == self.groups {
+            Some((&self.p0, &self.neg0))
+        } else {
+            None
+        }
     }
 }
 
@@ -398,25 +432,23 @@ impl BatchEngine {
         assert!(out.len() >= lanes.groups, "output buffer too small");
         let out = &mut out[..lanes.groups];
         self.ops += lanes.groups as u64;
-        if tuple.ki == 1 {
-            let (p, neg) = lanes.lane0_slices();
-            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-            {
-                if simd::avx2_available() {
-                    // SAFETY: AVX2 presence checked at runtime.
-                    unsafe { simd::p_words_ki1_avx2(tuple, p, neg, out) };
-                    return;
-                }
+        // Dense lane-0 streams (all ki = 1 packings, and the conv
+        // mapping's single-lane packing of wider layouts) run on the
+        // runtime-dispatched SIMD tier; the ladder's scalar rung is
+        // `PreparedTuple::p_words_lane0`, so this branch is bit-exact
+        // on every host.
+        if tuple.b_offsets[0] == 0 {
+            if let Some((p, neg)) = lanes.lane0_dense() {
+                super::simd::p_words_lane0(tuple, p, neg, out);
+                return;
             }
-            tuple.p_words_ki1(p, neg, out);
-        } else {
-            let ki = tuple.ki;
-            for (g, o) in out.iter_mut().enumerate() {
-                *o = tuple.p_word(
-                    &lanes.p[g * ki..(g + 1) * ki],
-                    &lanes.neg[g * ki..(g + 1) * ki],
-                );
-            }
+        }
+        let ki = tuple.ki;
+        for (g, o) in out.iter_mut().enumerate() {
+            *o = tuple.p_word(
+                &lanes.p[g * ki..(g + 1) * ki],
+                &lanes.neg[g * ki..(g + 1) * ki],
+            );
         }
     }
 
@@ -482,11 +514,7 @@ impl BatchEngine {
             let negated = tuple.slot_negated[j];
             let row = &mut acc[(row0 + j) * stride..(row0 + j) * stride + groups];
             let lowmask = mask(n);
-            for ((rv, &pw), &pl) in row
-                .iter_mut()
-                .zip(p_scratch.iter())
-                .zip(lanes.p.iter().step_by(ki))
-            {
+            let unpack = |rv: &mut i64, pw: u64, pl: u64| {
                 let val = sext(pw >> off, w);
                 let concat = (val << n) | (pl & lowmask) as i64;
                 let r = concat << s;
@@ -494,6 +522,22 @@ impl BatchEngine {
                     *rv -= r;
                 } else {
                     *rv += r;
+                }
+            };
+            // Read lane-0 patterns from the dense stream when the
+            // packing keeps one (contiguous loads), else stride over
+            // the grouped array.
+            if let Some((p0, _)) = lanes.lane0_dense() {
+                for ((rv, &pw), &pl) in row.iter_mut().zip(p_scratch.iter()).zip(p0) {
+                    unpack(rv, pw, pl);
+                }
+            } else {
+                for ((rv, &pw), &pl) in row
+                    .iter_mut()
+                    .zip(p_scratch.iter())
+                    .zip(lanes.p.iter().step_by(ki))
+                {
+                    unpack(rv, pw, pl);
                 }
             }
         }
@@ -543,53 +587,6 @@ pub fn scalar_raw_reference(
         .chunks(ki)
         .map(|group| engine.execute_raw(tuple, group))
         .collect()
-}
-
-#[cfg(all(feature = "simd", target_arch = "x86_64"))]
-mod simd {
-    //! Explicit AVX2 kernel for single-input layouts. Bit-identical to
-    //! [`PreparedTuple::p_words_ki1`]: 4 groups per vector, unsigned
-    //! 25×18-class multiply via `mul_epu32` (operands < 2^32, product
-    //! < 2^43), C-word accumulation with shared shift counts.
-
-    use super::PreparedTuple;
-    use crate::util::bits::mask;
-    use std::arch::x86_64::*;
-
-    #[inline]
-    pub fn avx2_available() -> bool {
-        std::is_x86_feature_detected!("avx2")
-    }
-
-    #[target_feature(enable = "avx2")]
-    pub unsafe fn p_words_ki1_avx2(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
-        debug_assert_eq!(t.ki, 1);
-        let n = out.len();
-        let a = _mm256_set1_epi64x(t.a_word as i64);
-        let m48 = _mm256_set1_epi64x(mask(48) as i64);
-        let mut g = 0usize;
-        while g + 4 <= n {
-            let pv = _mm256_loadu_si256(p.as_ptr().add(g) as *const __m256i);
-            let nv = _mm256_loadu_si256(neg.as_ptr().add(g) as *const __m256i);
-            // A·B (both operands fit 32 bits; epu32 multiplies the low
-            // dwords of each 64-bit lane).
-            let prod = _mm256_mul_epu32(a, pv);
-            let mut c = _mm256_setzero_si256();
-            for s in 0..t.n_active {
-                let negw = _mm256_set1_epi64x(t.act_neg[s] as i64);
-                c = _mm256_add_epi64(c, _mm256_and_si256(nv, negw));
-                let sh = _mm256_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
-                let sh = _mm256_sll_epi64(sh, _mm_cvtsi32_si128(t.act_aoff[s] as i32));
-                c = _mm256_add_epi64(c, sh);
-            }
-            let res = _mm256_and_si256(_mm256_add_epi64(prod, c), m48);
-            _mm256_storeu_si256(out.as_mut_ptr().add(g) as *mut __m256i, res);
-            g += 4;
-        }
-        if g < n {
-            t.p_words_ki1(&p[g..n], &neg[g..n], &mut out[g..n]);
-        }
-    }
 }
 
 #[cfg(test)]

@@ -14,7 +14,10 @@
 //! [`batch`] module evaluates many independent SDMM P words per call in
 //! plain unsigned `u64` arithmetic — bit-exact with [`SdmmEngine`] but
 //! without the per-op port bookkeeping; see its module docs for the
-//! identity that makes that sound.
+//! identity that makes that sound. The [`simd`] module widens that and
+//! every other inference stage (requantize, ReLU, maxpool, FC) behind
+//! a runtime-dispatched scalar/SSE4.1/AVX2 ladder that is on by
+//! default and bit-exact on every rung.
 
 #![warn(missing_docs)]
 
@@ -22,8 +25,10 @@ pub mod batch;
 mod dsp48;
 mod engine;
 mod generation;
+pub mod simd;
 
 pub use batch::{scalar_raw_reference, BatchEngine, BatchLanes, PreparedTuple};
+pub use simd::Isa;
 pub use dsp48::{Dsp48E1, DspOp, DspStats};
 pub use engine::{MacUnit, SdmmEngine};
 pub use generation::{is_feasible_exact_on, DspGeneration};

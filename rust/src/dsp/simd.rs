@@ -1,0 +1,960 @@
+//! Runtime-dispatched SIMD kernel tier (the default execution tier —
+//! no feature flag required).
+//!
+//! The paper's SDMM trick only pays off if the simulated DSP datapath
+//! runs as fast as the host allows, and the multiply is not the whole
+//! MAC: the surrounding requantize / ReLU / maxpool / FC stages move
+//! as many bytes as the conv itself. This module widens every stage of
+//! the `InferenceSession` pipeline behind one per-process dispatch
+//! ladder:
+//!
+//! * [`Isa::Avx2`] — 4 × 64-bit lanes per op (AVX2).
+//! * [`Isa::Sse41`] — 2 × 64-bit lanes per op (SSE4.1; the 64-bit
+//!   signed compare is emulated, see [`maxpool2`]).
+//! * [`Isa::Scalar`] — the plain loops in [`crate::cnn::infer`] and
+//!   [`PreparedTuple`]; always available, and the bit-exact reference
+//!   the other rungs are tested against.
+//!
+//! The rung is selected **once per process** ([`Isa::active`]):
+//! detection via `is_x86_feature_detected!`, overridable with
+//! `SDMM_ISA=scalar|sse41|avx2`. Per-process (not per-call) selection
+//! keeps the dispatch out of the kernels' inner loops and guarantees a
+//! whole inference — every tile, every thread — runs on one rung, so a
+//! golden replay under a forced rung exercises exactly that rung
+//! (DESIGN.md §11). Tests and benches may pin a rung in-process with
+//! [`Isa::set_override`]; requesting a rung the host cannot run clamps
+//! to the best supported one, so an unsupported instruction can never
+//! be reached.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every kernel here returns *bit-identical* results to its scalar
+//! reference for every input the pipeline can produce — asserted per
+//! stage and end-to-end by `tests/simd_conformance.rs` and the golden
+//! vectors. Two design rules make that tractable:
+//!
+//! * Integer stages (P words, ReLU, maxpool, FC) reassociate only
+//!   wrapping adds/multiplies, which are associative and commutative
+//!   mod 2^64 — lane order cannot change the result.
+//! * The requantize stage's float math is kept *operation-identical*
+//!   to [`quantize_symmetric`](crate::cnn::quant::quantize_symmetric):
+//!   IEEE division vectorizes exactly, and `f64::round`
+//!   (round-half-**away-from-zero**) is emulated exactly from
+//!   truncation — `trunc(x) + (|x − trunc(x)| ≥ 0.5 ? copysign(1, x)
+//!   : 0)`, where the subtraction is exact by Sterbenz's lemma. The
+//!   tempting `trunc(x + copysign(0.5, x))` is **not** used: it
+//!   differs from `round` at x = 0.49999999999999994 (adding 0.5
+//!   rounds up to 1.0 before truncation). Tensors whose magnitudes
+//!   reach 2^51 (far beyond the 48-bit accumulator guard) fall back to
+//!   the scalar path rather than risk the exact int↔float conversions.
+
+use super::batch::PreparedTuple;
+use crate::cnn::infer::Tensor3;
+use crate::cnn::quant::QuantParams;
+use crate::error::{Result, SdmmError};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Once, OnceLock};
+
+/// One rung of the dispatch ladder, ordered worst-to-best.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Isa {
+    /// Plain scalar loops — the bit-exact reference rung.
+    Scalar,
+    /// 2 × 64-bit lanes (SSE4.1 for `blendv`; the arithmetic core is
+    /// SSE2).
+    Sse41,
+    /// 4 × 64-bit lanes (AVX2).
+    Avx2,
+}
+
+impl Isa {
+    /// Stable lowercase name (the `SDMM_ISA` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse41 => "sse41",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse an `SDMM_ISA` value. Unknown names are a typed
+    /// [`SdmmError::InvalidConfig`] — the resolver downgrades that to
+    /// a one-time warning plus auto-detection, but tools that take an
+    /// ISA argument surface it as an error.
+    pub fn parse(s: &str) -> Result<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "sse41" | "sse4.1" => Ok(Isa::Sse41),
+            "avx2" => Ok(Isa::Avx2),
+            other => Err(SdmmError::InvalidConfig(format!(
+                "SDMM_ISA: unknown ISA {other:?} (expected scalar|sse41|avx2)"
+            ))),
+        }
+    }
+
+    /// Best rung the host can execute, detected once per process.
+    pub fn detect() -> Isa {
+        static BEST: OnceLock<Isa> = OnceLock::new();
+        *BEST.get_or_init(|| {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::is_x86_feature_detected!("avx2") {
+                    return Isa::Avx2;
+                }
+                if std::is_x86_feature_detected!("sse4.1") {
+                    return Isa::Sse41;
+                }
+            }
+            Isa::Scalar
+        })
+    }
+
+    /// Every rung this host can run, worst-to-best (always starts with
+    /// [`Isa::Scalar`]). Conformance tests iterate this to diff each
+    /// rung against the scalar reference.
+    pub fn supported() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Sse41, Isa::Avx2]
+            .into_iter()
+            .filter(|&i| i <= Isa::detect())
+            .collect()
+    }
+
+    /// The rung every kernel dispatches to: an in-process
+    /// [`override`](Isa::set_override) if one is set, else the
+    /// `SDMM_ISA` resolution (cached once per process).
+    pub fn active() -> Isa {
+        match OVERRIDE.load(Ordering::Relaxed) {
+            1 => Isa::Scalar,
+            2 => Isa::Sse41,
+            3 => Isa::Avx2,
+            _ => Self::env_resolved(),
+        }
+    }
+
+    /// Pin the dispatch rung in-process (tests and benches; production
+    /// selection is the `SDMM_ISA` env var). `None` restores env/auto
+    /// resolution. The request is clamped to [`Isa::detect`] — the
+    /// effective rung is returned, so callers can skip rungs the host
+    /// lacks.
+    pub fn set_override(isa: Option<Isa>) -> Isa {
+        let effective = isa.map(|i| i.min(Isa::detect()));
+        OVERRIDE.store(
+            match effective {
+                None => 0,
+                Some(Isa::Scalar) => 1,
+                Some(Isa::Sse41) => 2,
+                Some(Isa::Avx2) => 3,
+            },
+            Ordering::Relaxed,
+        );
+        effective.unwrap_or_else(Self::env_resolved)
+    }
+
+    fn env_resolved() -> Isa {
+        static RESOLVED: OnceLock<Isa> = OnceLock::new();
+        *RESOLVED.get_or_init(|| {
+            let env = std::env::var("SDMM_ISA").ok();
+            let (isa, warning) = resolve(env.as_deref(), Isa::detect());
+            if let Some(w) = warning {
+                static WARN: Once = Once::new();
+                WARN.call_once(|| eprintln!("sdmm: {w}"));
+            }
+            isa
+        })
+    }
+}
+
+/// In-process rung override: 0 = none, else `Isa` discriminant + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Pure `SDMM_ISA` resolution (unit-testable without touching process
+/// env): `None` → detected; unparseable → detected + warning; a
+/// requested rung above `detected` clamps down + warning; otherwise
+/// the requested rung (forcing *down* is always honored — that is the
+/// conformance story).
+pub fn resolve(env: Option<&str>, detected: Isa) -> (Isa, Option<String>) {
+    match env {
+        None => (detected, None),
+        Some(raw) => match Isa::parse(raw) {
+            Err(e) => (
+                detected,
+                Some(format!("{e}; using detected ISA {}", detected.name())),
+            ),
+            Ok(req) if req > detected => (
+                detected,
+                Some(format!(
+                    "SDMM_ISA={} not supported by this host; clamped to {}",
+                    req.name(),
+                    detected.name()
+                )),
+            ),
+            Ok(req) => (req, None),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P words (the SDMM multiply itself)
+// ---------------------------------------------------------------------------
+
+/// Lane-parallel raw P words for a dense lane-0 input stream
+/// (`p[g] = zext(x_g, v)`, `neg[g]` all-ones for negative `x_g`),
+/// dispatched on [`Isa::active`]. Bit-identical to
+/// [`PreparedTuple::p_words_lane0`], the scalar reference. Valid for
+/// any layout whose lane 0 sits at B-word offset 0 (all shipped
+/// layouts) — idle lanes stream zeros and contribute nothing.
+pub fn p_words_lane0(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+    p_words_lane0_on(Isa::active(), t, p, neg, out)
+}
+
+/// [`p_words_lane0`] pinned to one rung (clamped to the host's best).
+pub fn p_words_lane0_on(isa: Isa, t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+    match isa.min(Isa::detect()) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect(), so the required
+        // features are present.
+        Isa::Avx2 => unsafe { x86::p_words_lane0_avx2(t, p, neg, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::p_words_lane0_sse41(t, p, neg, out) },
+        _ => t.p_words_lane0(p, neg, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReLU
+// ---------------------------------------------------------------------------
+
+/// Wide in-place ReLU over a tensor (dispatched on [`Isa::active`]).
+/// Bit-identical to [`crate::cnn::infer::relu`].
+pub fn relu(t: &mut Tensor3) {
+    relu_on(Isa::active(), &mut t.data)
+}
+
+/// Wide in-place ReLU over a raw slice, pinned to one rung (clamped to
+/// the host's best). Branch-free: `v & !(v >> 63)` per lane.
+pub fn relu_on(isa: Isa, data: &mut [i64]) {
+    match isa.min(Isa::detect()) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect().
+        Isa::Avx2 => unsafe { x86::relu_avx2(data) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::relu_sse41(data) },
+        _ => {
+            for v in data {
+                if *v < 0 {
+                    *v = 0;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2×2 max-pool
+// ---------------------------------------------------------------------------
+
+/// Wide 2×2/stride-2 max-pool (dispatched on [`Isa::active`]).
+/// Bit-identical to [`crate::cnn::infer::maxpool2`], including the
+/// floor semantics on odd extents.
+pub fn maxpool2(t: &Tensor3) -> Tensor3 {
+    maxpool2_on(Isa::active(), t)
+}
+
+/// [`maxpool2`] pinned to one rung (clamped to the host's best). The
+/// vertical row-pair max runs lane-parallel (AVX2 `cmpgt_epi64` +
+/// blend; on SSE4.1 the signed 64-bit compare is emulated from 32-bit
+/// compares plus the borrow of a 64-bit subtraction); the final
+/// horizontal pair max is a scalar pass over the halved row.
+pub fn maxpool2_on(isa: Isa, t: &Tensor3) -> Tensor3 {
+    let isa = isa.min(Isa::detect());
+    if isa == Isa::Scalar {
+        return crate::cnn::infer::maxpool2(t);
+    }
+    let (oh, ow) = (t.h / 2, t.w / 2);
+    let mut out = Tensor3::zeros(t.c, oh, ow);
+    let mut vmax = vec![0i64; t.w];
+    for c in 0..t.c {
+        for y in 0..oh {
+            let ra = (c * t.h + 2 * y) * t.w;
+            let rb = ra + t.w;
+            max2_rows_on(isa, &t.data[ra..ra + t.w], &t.data[rb..rb + t.w], &mut vmax);
+            let orow = &mut out.data[(c * oh + y) * ow..(c * oh + y) * ow + ow];
+            for (x, o) in orow.iter_mut().enumerate() {
+                *o = vmax[2 * x].max(vmax[2 * x + 1]);
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise `out[i] = max(a[i], b[i])` on one rung — the vertical
+/// half of the pooling kernel, exposed for the conformance tests'
+/// boundary sweeps (`i64::MIN`/`MAX` included).
+pub fn max2_rows_on(isa: Isa, a: &[i64], b: &[i64], out: &mut [i64]) {
+    debug_assert!(a.len() == b.len() && out.len() >= a.len());
+    match isa.min(Isa::detect()) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect().
+        Isa::Avx2 => unsafe { x86::max2_avx2(a, b, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::max2_sse41(a, b, out) },
+        _ => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x.max(y);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fully-connected head
+// ---------------------------------------------------------------------------
+
+/// Wide fully-connected layer (dispatched on [`Isa::active`]).
+/// Bit-identical to [`crate::cnn::infer::fc_int`] for every
+/// non-overflowing input (the pipeline's activations/weights keep the
+/// dot products far inside i64; the SIMD path additionally wraps mod
+/// 2^64 exactly like release-mode scalar if an overflow is forced).
+pub fn fc_int(input: &[i64], weights: &[i64], in_f: usize, out_f: usize) -> Vec<i64> {
+    fc_int_on(Isa::active(), input, weights, in_f, out_f)
+}
+
+/// [`fc_int`] pinned to one rung (clamped to the host's best). The
+/// 64×64→64 lane multiply is composed from three `mul_epu32`s; lane
+/// partial sums reassociate only wrapping adds, so the result is
+/// independent of lane count.
+pub fn fc_int_on(isa: Isa, input: &[i64], weights: &[i64], in_f: usize, out_f: usize) -> Vec<i64> {
+    assert_eq!(input.len(), in_f);
+    assert_eq!(weights.len(), in_f * out_f);
+    match isa.min(Isa::detect()) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect().
+        Isa::Avx2 => (0..out_f)
+            .map(|o| unsafe { x86::dot_avx2(input, &weights[o * in_f..(o + 1) * in_f]) })
+            .collect(),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => (0..out_f)
+            .map(|o| unsafe { x86::dot_sse41(input, &weights[o * in_f..(o + 1) * in_f]) })
+            .collect(),
+        _ => crate::cnn::infer::fc_int(input, weights, in_f, out_f),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requantize
+// ---------------------------------------------------------------------------
+
+/// Wide symmetric requantization (dispatched on [`Isa::active`]).
+/// Bit-identical to [`crate::cnn::infer::requantize`] — scale *and*
+/// every quantized value — for all tensors within the 48-bit
+/// accumulator guard (magnitudes ≥ 2^51 fall back to the scalar path).
+pub fn requantize(t: &Tensor3, bits: u32) -> (Tensor3, QuantParams) {
+    requantize_on(Isa::active(), t, bits)
+}
+
+/// [`requantize`] pinned to one rung (clamped to the host's best).
+///
+/// The integer |v| maximum reduces exactly (conversion i64→f64 is
+/// monotone, so the max of conversions equals the conversion of the
+/// max); the per-element `(x / scale).round().clamp(..)` runs
+/// lane-parallel with IEEE-identical division and the exact
+/// round-half-away-from-zero emulation described in the module docs.
+pub fn requantize_on(isa: Isa, t: &Tensor3, bits: u32) -> (Tensor3, QuantParams) {
+    let isa = isa.min(Isa::detect());
+    if isa == Isa::Scalar {
+        return crate::cnn::infer::requantize(t, bits);
+    }
+    assert!((2..=16).contains(&bits));
+    let amax = t.data.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
+    // The exact int↔float lane conversions need |v| < 2^51; the
+    // accumulator guard bounds the pipeline at 2^47, so this fallback
+    // only fires on hand-built tensors.
+    if amax >= 1 << 51 {
+        return crate::cnn::infer::requantize(t, bits);
+    }
+    let qmax = (1i64 << (bits - 1)) - 1;
+    let qmin = -(1i64 << (bits - 1));
+    let scale = if amax == 0 { 1.0 } else { amax as f64 / qmax as f64 };
+    let params = QuantParams { bits, scale };
+    let mut out = Tensor3::zeros(t.c, t.h, t.w);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect().
+        Isa::Avx2 => unsafe { x86::quant_avx2(&t.data, scale, qmin, qmax, &mut out.data) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::quant_sse41(&t.data, scale, qmin, qmax, &mut out.data) },
+        _ => quant_scalar(&t.data, scale, qmin, qmax, &mut out.data),
+    }
+    (out, params)
+}
+
+/// The scalar quantize loop the vector kernels' tails reuse —
+/// operation-identical to `quantize_symmetric`'s mapping.
+fn quant_scalar(data: &[i64], scale: f64, qmin: i64, qmax: i64, out: &mut [i64]) {
+    for (o, &v) in out.iter_mut().zip(data) {
+        let q = (v as f64 / scale).round() as i64;
+        *o = q.clamp(qmin, qmax);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The unsafe rungs. Every function is `target_feature`-gated and
+    //! only reachable through the clamped dispatchers above; tails run
+    //! the scalar reference so partial vectors cannot diverge.
+
+    use super::super::batch::PreparedTuple;
+    use super::quant_scalar;
+    use crate::util::bits::mask;
+    use std::arch::x86_64::*;
+
+    // ---- P words ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn p_words_lane0_avx2(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        let n = out.len();
+        let a = _mm256_set1_epi64x(t.a_word as i64);
+        let m48 = _mm256_set1_epi64x(mask(48) as i64);
+        let mut g = 0usize;
+        while g + 4 <= n {
+            let pv = _mm256_loadu_si256(p.as_ptr().add(g) as *const __m256i);
+            let nv = _mm256_loadu_si256(neg.as_ptr().add(g) as *const __m256i);
+            // A·B: both operands fit 32 bits (A < 2^25, lane-0 B < 2^v),
+            // and epu32 multiplies the low dwords of each 64-bit lane.
+            let prod = _mm256_mul_epu32(a, pv);
+            let mut c = _mm256_setzero_si256();
+            for s in 0..t.n_active {
+                let negw = _mm256_set1_epi64x(t.act_neg[s] as i64);
+                c = _mm256_add_epi64(c, _mm256_and_si256(nv, negw));
+                let sh = _mm256_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
+                let sh = _mm256_sll_epi64(sh, _mm_cvtsi32_si128(t.act_aoff[s] as i32));
+                c = _mm256_add_epi64(c, sh);
+            }
+            let res = _mm256_and_si256(_mm256_add_epi64(prod, c), m48);
+            _mm256_storeu_si256(out.as_mut_ptr().add(g) as *mut __m256i, res);
+            g += 4;
+        }
+        if g < n {
+            t.p_words_lane0(&p[g..n], &neg[g..n], &mut out[g..n]);
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn p_words_lane0_sse41(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        let n = out.len();
+        let a = _mm_set1_epi64x(t.a_word as i64);
+        let m48 = _mm_set1_epi64x(mask(48) as i64);
+        let mut g = 0usize;
+        while g + 2 <= n {
+            let pv = _mm_loadu_si128(p.as_ptr().add(g) as *const __m128i);
+            let nv = _mm_loadu_si128(neg.as_ptr().add(g) as *const __m128i);
+            let prod = _mm_mul_epu32(a, pv);
+            let mut c = _mm_setzero_si128();
+            for s in 0..t.n_active {
+                let negw = _mm_set1_epi64x(t.act_neg[s] as i64);
+                c = _mm_add_epi64(c, _mm_and_si128(nv, negw));
+                let sh = _mm_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
+                let sh = _mm_sll_epi64(sh, _mm_cvtsi32_si128(t.act_aoff[s] as i32));
+                c = _mm_add_epi64(c, sh);
+            }
+            let res = _mm_and_si128(_mm_add_epi64(prod, c), m48);
+            _mm_storeu_si128(out.as_mut_ptr().add(g) as *mut __m128i, res);
+            g += 2;
+        }
+        if g < n {
+            t.p_words_lane0(&p[g..n], &neg[g..n], &mut out[g..n]);
+        }
+    }
+
+    // ---- ReLU ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_avx2(data: &mut [i64]) {
+        let n = data.len();
+        let zero = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let ptr = data.as_mut_ptr().add(i) as *mut __m256i;
+            let v = _mm256_loadu_si256(ptr as *const __m256i);
+            let negmask = _mm256_cmpgt_epi64(zero, v);
+            _mm256_storeu_si256(ptr, _mm256_andnot_si256(negmask, v));
+            i += 4;
+        }
+        for v in &mut data[i..] {
+            if *v < 0 {
+                *v = 0;
+            }
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn relu_sse41(data: &mut [i64]) {
+        let n = data.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let ptr = data.as_mut_ptr().add(i) as *mut __m128i;
+            let v = _mm_loadu_si128(ptr as *const __m128i);
+            // Broadcast each lane's high dword, then its sign bit: an
+            // all-ones mask exactly for negative lanes (no cmpgt_epi64
+            // before SSE4.2).
+            let sign = _mm_srai_epi32(_mm_shuffle_epi32(v, 0xF5), 31);
+            _mm_storeu_si128(ptr, _mm_andnot_si128(sign, v));
+            i += 2;
+        }
+        for v in &mut data[i..] {
+            if *v < 0 {
+                *v = 0;
+            }
+        }
+    }
+
+    // ---- max (vertical pooling half) ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max2_avx2(a: &[i64], b: &[i64], out: &mut [i64]) {
+        let n = a.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let bv = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let m = _mm256_blendv_epi8(bv, av, _mm256_cmpgt_epi64(av, bv));
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, m);
+            i += 4;
+        }
+        for j in i..n {
+            out[j] = a[j].max(b[j]);
+        }
+    }
+
+    /// Signed 64-bit `a > b` per lane without SSE4.2's `cmpgt_epi64`:
+    /// compare the high dwords signed; on a high-dword tie the verdict
+    /// is the borrow (sign bit) of the 64-bit `b − a`, which resolves
+    /// the *unsigned* low-dword comparison. The final shuffle
+    /// broadcasts each lane's high-dword sign to the full lane.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn cmpgt64_sse(a: __m128i, b: __m128i) -> __m128i {
+        let tie = _mm_and_si128(_mm_cmpeq_epi32(a, b), _mm_sub_epi64(b, a));
+        let r = _mm_or_si128(tie, _mm_cmpgt_epi32(a, b));
+        _mm_shuffle_epi32(_mm_srai_epi32(r, 31), 0xF5)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn max2_sse41(a: &[i64], b: &[i64], out: &mut [i64]) {
+        let n = a.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let av = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let bv = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let m = _mm_blendv_epi8(bv, av, cmpgt64_sse(av, bv));
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, m);
+            i += 2;
+        }
+        for j in i..n {
+            out[j] = a[j].max(b[j]);
+        }
+    }
+
+    // ---- FC dot products ----
+
+    /// `a·b mod 2^64` per 64-bit lane from three 32×32→64 multiplies.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul64_avx2(a: __m256i, b: __m256i) -> __m256i {
+        let lo = _mm256_mul_epu32(a, b);
+        let ah = _mm256_srli_epi64::<32>(a);
+        let bh = _mm256_srli_epi64::<32>(b);
+        let cross = _mm256_add_epi64(_mm256_mul_epu32(ah, b), _mm256_mul_epu32(a, bh));
+        _mm256_add_epi64(lo, _mm256_slli_epi64::<32>(cross))
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn mul64_sse(a: __m128i, b: __m128i) -> __m128i {
+        let lo = _mm_mul_epu32(a, b);
+        let ah = _mm_srli_epi64::<32>(a);
+        let bh = _mm_srli_epi64::<32>(b);
+        let cross = _mm_add_epi64(_mm_mul_epu32(ah, b), _mm_mul_epu32(a, bh));
+        _mm_add_epi64(lo, _mm_slli_epi64::<32>(cross))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(x: &[i64], w: &[i64]) -> i64 {
+        let n = x.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let wv = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, mul64_avx2(wv, xv));
+            i += 4;
+        }
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum = lanes[0]
+            .wrapping_add(lanes[1])
+            .wrapping_add(lanes[2])
+            .wrapping_add(lanes[3]);
+        for j in i..n {
+            sum = sum.wrapping_add(w[j].wrapping_mul(x[j]));
+        }
+        sum
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_sse41(x: &[i64], w: &[i64]) -> i64 {
+        let n = x.len();
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+            acc = _mm_add_epi64(acc, mul64_sse(wv, xv));
+            i += 2;
+        }
+        let mut lanes = [0i64; 2];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+        let mut sum = lanes[0].wrapping_add(lanes[1]);
+        for j in i..n {
+            sum = sum.wrapping_add(w[j].wrapping_mul(x[j]));
+        }
+        sum
+    }
+
+    // ---- requantize value loop ----
+
+    /// Bit pattern of 2^52 + 2^51 — the magic constant for exact
+    /// i64↔f64 lane conversion of values |v| < 2^51.
+    const MAGIC_BITS: i64 = 0x4338_0000_0000_0000;
+    const MAGIC: f64 = 6_755_399_441_055_744.0; // 2^52 + 2^51
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quant_avx2(data: &[i64], scale: f64, qmin: i64, qmax: i64, out: &mut [i64]) {
+        let n = data.len();
+        let magic_i = _mm256_set1_epi64x(MAGIC_BITS);
+        let magic_d = _mm256_set1_pd(MAGIC);
+        let vscale = _mm256_set1_pd(scale);
+        let half = _mm256_set1_pd(0.5);
+        let one = _mm256_set1_pd(1.0);
+        let signbit = _mm256_set1_pd(-0.0);
+        let vqmin = _mm256_set1_pd(qmin as f64);
+        let vqmax = _mm256_set1_pd(qmax as f64);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            // exact i64 → f64 (|v| < 2^51, checked by the caller)
+            let x = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_add_epi64(v, magic_i)), magic_d);
+            let q = _mm256_div_pd(x, vscale);
+            // round half away from zero, bit-exact with f64::round
+            let t = _mm256_round_pd::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(q);
+            let diff = _mm256_sub_pd(q, t); // exact (Sterbenz)
+            let absdiff = _mm256_andnot_pd(signbit, diff);
+            let ge = _mm256_cmp_pd::<_CMP_GE_OQ>(absdiff, half);
+            let sone = _mm256_or_pd(_mm256_and_pd(q, signbit), one); // copysign(1, q)
+            let r = _mm256_add_pd(t, _mm256_and_pd(ge, sone));
+            // clamp in the double domain (all bounds are exact small
+            // integers, so this equals integer clamping after cast)
+            let r = _mm256_min_pd(_mm256_max_pd(r, vqmin), vqmax);
+            // exact f64 → i64 (|r| ≤ qmax ≪ 2^51)
+            let y = _mm256_sub_epi64(_mm256_castpd_si256(_mm256_add_pd(r, magic_d)), magic_i);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, y);
+            i += 4;
+        }
+        quant_scalar(&data[i..], scale, qmin, qmax, &mut out[i..]);
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn quant_sse41(data: &[i64], scale: f64, qmin: i64, qmax: i64, out: &mut [i64]) {
+        let n = data.len();
+        let magic_i = _mm_set1_epi64x(MAGIC_BITS);
+        let magic_d = _mm_set1_pd(MAGIC);
+        let vscale = _mm_set1_pd(scale);
+        let half = _mm_set1_pd(0.5);
+        let one = _mm_set1_pd(1.0);
+        let signbit = _mm_set1_pd(-0.0);
+        let vqmin = _mm_set1_pd(qmin as f64);
+        let vqmax = _mm_set1_pd(qmax as f64);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = _mm_loadu_si128(data.as_ptr().add(i) as *const __m128i);
+            let x = _mm_sub_pd(_mm_castsi128_pd(_mm_add_epi64(v, magic_i)), magic_d);
+            let q = _mm_div_pd(x, vscale);
+            let t = _mm_round_pd::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(q);
+            let diff = _mm_sub_pd(q, t);
+            let absdiff = _mm_andnot_pd(signbit, diff);
+            let ge = _mm_cmpge_pd(absdiff, half);
+            let sone = _mm_or_pd(_mm_and_pd(q, signbit), one);
+            let r = _mm_add_pd(t, _mm_and_pd(ge, sone));
+            let r = _mm_min_pd(_mm_max_pd(r, vqmin), vqmax);
+            let y = _mm_sub_epi64(_mm_castpd_si128(_mm_add_pd(r, magic_d)), magic_i);
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, y);
+            i += 2;
+        }
+        quant_scalar(&data[i..], scale, qmin, qmax, &mut out[i..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::infer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_and_resolve() {
+        assert_eq!(Isa::parse("scalar").unwrap(), Isa::Scalar);
+        assert_eq!(Isa::parse("SSE41").unwrap(), Isa::Sse41);
+        assert_eq!(Isa::parse("sse4.1").unwrap(), Isa::Sse41);
+        assert_eq!(Isa::parse(" avx2 ").unwrap(), Isa::Avx2);
+        assert!(matches!(
+            Isa::parse("neon"),
+            Err(SdmmError::InvalidConfig(_))
+        ));
+        assert!(matches!(Isa::parse(""), Err(SdmmError::InvalidConfig(_))));
+
+        // unset → detected, no warning
+        assert_eq!(resolve(None, Isa::Avx2), (Isa::Avx2, None));
+        // forcing down is always honored
+        assert_eq!(resolve(Some("scalar"), Isa::Avx2), (Isa::Scalar, None));
+        assert_eq!(resolve(Some("sse41"), Isa::Avx2), (Isa::Sse41, None));
+        // requesting above the host clamps with a warning
+        let (isa, warn) = resolve(Some("avx2"), Isa::Sse41);
+        assert_eq!(isa, Isa::Sse41);
+        assert!(warn.unwrap().contains("clamped"));
+        // garbage falls back to detection with a warning
+        let (isa, warn) = resolve(Some("sse9"), Isa::Avx2);
+        assert_eq!(isa, Isa::Avx2);
+        assert!(warn.unwrap().contains("unknown ISA"));
+    }
+
+    #[test]
+    fn supported_starts_scalar_and_is_ordered() {
+        let s = Isa::supported();
+        assert_eq!(s[0], Isa::Scalar);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*s.last().unwrap(), Isa::detect());
+    }
+
+    #[test]
+    fn override_clamps_to_host() {
+        // Requesting the best rung (or worse) is always effective.
+        for &isa in &Isa::supported() {
+            assert_eq!(Isa::set_override(Some(isa)), isa);
+        }
+        // Requesting above the host clamps.
+        assert_eq!(Isa::set_override(Some(Isa::Avx2)), Isa::detect());
+        Isa::set_override(None);
+    }
+
+    fn tensor_from(data: Vec<i64>) -> Tensor3 {
+        let w = data.len();
+        Tensor3 { c: 1, h: 1, w, data }
+    }
+
+    #[test]
+    fn relu_rungs_match_scalar() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 64, 129] {
+            let base: Vec<i64> = (0..len)
+                .map(|i| match i % 5 {
+                    0 => i64::MIN + 1,
+                    1 => i64::MAX,
+                    _ => rng.range_i64(-(1 << 46), 1 << 46),
+                })
+                .collect();
+            let mut want = base.clone();
+            for v in &mut want {
+                if *v < 0 {
+                    *v = 0;
+                }
+            }
+            for &isa in &Isa::supported() {
+                let mut got = base.clone();
+                relu_on(isa, &mut got);
+                assert_eq!(got, want, "isa={isa:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_rows_boundary_values() {
+        // The SSE4.1 compare emulation must survive every sign/
+        // magnitude corner, including i64::MIN/MAX and high-dword ties
+        // that need the unsigned low-dword borrow.
+        let specials = [
+            i64::MIN,
+            i64::MIN + 1,
+            -(1i64 << 32) - 1,
+            -(1i64 << 32),
+            -(1i64 << 31),
+            -1,
+            0,
+            1,
+            (1i64 << 31) - 1,
+            1i64 << 31,
+            (1i64 << 32) + 5,
+            i64::MAX - 1,
+            i64::MAX,
+        ];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for &x in &specials {
+            for &y in &specials {
+                a.push(x);
+                b.push(y);
+            }
+        }
+        let want: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x.max(y)).collect();
+        for &isa in &Isa::supported() {
+            let mut got = vec![0i64; a.len()];
+            max2_rows_on(isa, &a, &b, &mut got);
+            assert_eq!(got, want, "isa={isa:?}");
+        }
+    }
+
+    #[test]
+    fn maxpool_rungs_match_scalar() {
+        let mut rng = Rng::new(31);
+        for (c, h, w) in [(1, 2, 2), (3, 8, 8), (2, 7, 9), (4, 5, 4), (1, 1, 6)] {
+            let mut t = Tensor3::zeros(c, h, w);
+            for v in &mut t.data {
+                *v = rng.range_i64(-(1 << 46), 1 << 46);
+            }
+            let want = infer::maxpool2(&t);
+            for &isa in &Isa::supported() {
+                assert_eq!(maxpool2_on(isa, &t), want, "isa={isa:?} {c}x{h}x{w}");
+            }
+        }
+    }
+
+    #[test]
+    fn fc_rungs_match_scalar() {
+        let mut rng = Rng::new(77);
+        for (in_f, out_f) in [(1, 1), (2, 3), (24, 5), (33, 7), (128, 10)] {
+            let x: Vec<i64> = (0..in_f).map(|_| rng.range_i64(-127, 127)).collect();
+            let w: Vec<i64> = (0..in_f * out_f)
+                .map(|_| rng.range_i64(-127, 127))
+                .collect();
+            let want = infer::fc_int(&x, &w, in_f, out_f);
+            for &isa in &Isa::supported() {
+                assert_eq!(
+                    fc_int_on(isa, &x, &w, in_f, out_f),
+                    want,
+                    "isa={isa:?} {in_f}x{out_f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_wide_multiply_is_exact_for_large_magnitudes() {
+        // The 3-multiply 64-bit lane product must be exact well beyond
+        // 32-bit operands (accumulator-scale values).
+        let mut rng = Rng::new(78);
+        let x: Vec<i64> = (0..16).map(|_| rng.range_i64(-(1 << 40), 1 << 40)).collect();
+        let w: Vec<i64> = (0..16).map(|_| rng.range_i64(-(1 << 20), 1 << 20)).collect();
+        let want = infer::fc_int(&x, &w, 16, 1);
+        for &isa in &Isa::supported() {
+            assert_eq!(fc_int_on(isa, &x, &w, 16, 1), want, "isa={isa:?}");
+        }
+    }
+
+    #[test]
+    fn requantize_rungs_match_scalar_random() {
+        let mut rng = Rng::new(123);
+        for bits in [8u32, 6, 4] {
+            for len in [1usize, 2, 3, 4, 5, 17, 64, 257] {
+                let t = tensor_from(
+                    (0..len)
+                        .map(|_| rng.range_i64(-(1 << 46), 1 << 46))
+                        .collect(),
+                );
+                let (want, wp) = infer::requantize(&t, bits);
+                for &isa in &Isa::supported() {
+                    let (got, gp) = requantize_on(isa, &t, bits);
+                    assert_eq!(got, want, "isa={isa:?} bits={bits} len={len}");
+                    assert_eq!(gp.scale.to_bits(), wp.scale.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_round_boundary_cases() {
+        // amax 4, bits 4 → qmax 7, scale 4/7: 2/(4/7) = 3.5 lands on a
+        // half and must round away from zero (+4 / −4).
+        let t = tensor_from(vec![1, 2, -2, 3, 4, -4, 0]);
+        for &isa in &Isa::supported() {
+            let (got, _) = requantize_on(isa, &t, 4);
+            let (want, _) = infer::requantize(&t, 4);
+            assert_eq!(got, want, "isa={isa:?}");
+            assert_eq!(got.data[1], 4, "2/(4/7)=3.5 must round away from zero");
+            assert_eq!(got.data[2], -4);
+        }
+        // All-negative, zeros, and single-hot tensors (the scalar
+        // suite's edge cases) on every rung.
+        for data in [
+            vec![-1000, -500, -250, -1],
+            vec![0, 0, 0, 0],
+            vec![0, 0, -123_456, 0],
+        ] {
+            let t = tensor_from(data);
+            for bits in [8u32, 6, 4] {
+                let (want, wp) = infer::requantize(&t, bits);
+                for &isa in &Isa::supported() {
+                    let (got, gp) = requantize_on(isa, &t, bits);
+                    assert_eq!(got, want, "isa={isa:?} bits={bits}");
+                    assert_eq!(gp.scale.to_bits(), wp.scale.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_huge_magnitudes_fall_back_bit_exact() {
+        // ≥ 2^51 exceeds the exact lane-conversion domain: the wide
+        // path must detect it and agree with scalar via fallback.
+        let t = tensor_from(vec![1 << 52, -(1 << 55), 17, -3]);
+        for bits in [8u32, 4] {
+            let (want, _) = infer::requantize(&t, bits);
+            for &isa in &Isa::supported() {
+                assert_eq!(requantize_on(isa, &t, bits).0, want, "isa={isa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn p_words_rungs_match_scalar_all_layouts() {
+        use crate::packing::{pack_approx, Layout};
+        let mut rng = Rng::new(9);
+        for v in [8u32, 6, 4] {
+            let l = Layout::for_bits(v).unwrap();
+            let lim = 1i64 << (v - 1);
+            for _ in 0..20 {
+                let ws: Vec<i64> = (0..l.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                let t = pack_approx(&l, &ws).unwrap();
+                let pt = PreparedTuple::prepare(&t);
+                // Dense lane-0 stream (idle lanes zero), every input.
+                let xs: Vec<i64> = (-lim..lim).collect();
+                let p: Vec<u64> = xs.iter().map(|&x| crate::util::bits::zext(x, v)).collect();
+                let neg: Vec<u64> = xs
+                    .iter()
+                    .map(|&x| if x < 0 { u64::MAX } else { 0 })
+                    .collect();
+                let mut want = vec![0u64; xs.len()];
+                pt.p_words_lane0(&p, &neg, &mut want);
+                for &isa in &Isa::supported() {
+                    let mut got = vec![0u64; xs.len()];
+                    p_words_lane0_on(isa, &pt, &p, &neg, &mut got);
+                    assert_eq!(got, want, "isa={isa:?} v={v} ws={ws:?}");
+                }
+            }
+        }
+    }
+}

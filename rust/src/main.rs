@@ -102,6 +102,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "serve-sim" => cmd_serve_sim(&args),
         "sim" => cmd_sim(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -128,8 +129,61 @@ fn print_usage() {
          sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
          sdmm serve-sim [--shards N] [--requests N] [--concurrency C] [--from-artifact DIR]\n\
          \x20            [--chaos-seed S]\n\
-         sdmm sim [--bits N] [--arch 1m|2m|mp]"
+         sdmm sim [--bits N] [--arch 1m|2m|mp]\n\
+         sdmm bench-diff <baseline.json> <new.json> [--threshold-pct F] [--calibrate ROW]\n\
+         \x20            perf-trajectory gate: compare two bench snapshots on p50;\n\
+         \x20            exits non-zero if any row is more than F% (default 10) slower"
     );
+}
+
+/// The perf-trajectory gate (`sdmm bench-diff`): compare a fresh bench
+/// snapshot against the committed baseline (`BENCH_e2e.json` /
+/// `BENCH_sa.json`) on p50 latency, printing the diff table CI uploads
+/// as an artifact. Any row more than `--threshold-pct` percent slower
+/// fails the gate; improvements never do (update the committed snapshot
+/// manually when a speedup is real). `--calibrate ROW` scales the fresh
+/// run by the named row's baseline/new ratio so snapshots recorded on
+/// one machine gate runs on another.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use sdmm::util::bench::diff_snapshots;
+    use sdmm::util::json::Json;
+
+    let base_path = args
+        .positional
+        .first()
+        .context("bench-diff needs <baseline.json> <new.json>")?;
+    let new_path = args
+        .positional
+        .get(1)
+        .context("bench-diff needs <baseline.json> <new.json>")?;
+    let read = |path: &str| -> Result<Json> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading snapshot {path}"))?;
+        Json::parse(&text).with_context(|| format!("parsing snapshot {path}"))
+    };
+    let base = read(base_path)?;
+    let new = read(new_path)?;
+    let threshold: f64 = args.flag("threshold-pct", "10").parse()?;
+    let calibrate = args.flags.get("calibrate").cloned();
+    let diff = diff_snapshots(&base, &new, threshold, calibrate.as_deref())?;
+    println!(
+        "== bench-diff: {base_path} vs {new_path} (threshold {threshold}%{}) ==",
+        match &calibrate {
+            Some(c) => format!(", calibrated on {c:?} x{:.3}", diff.scale),
+            None => String::new(),
+        }
+    );
+    print!("{}", diff.render());
+    if diff.regressions.is_empty() {
+        println!("perf gate OK: no row more than {threshold}% slower than baseline");
+        Ok(())
+    } else {
+        bail!(
+            "perf gate FAILED: {} row(s) regressed more than {threshold}%: {}",
+            diff.regressions.len(),
+            diff.regressions.join(", ")
+        )
+    }
 }
 
 fn cmd_manip(args: &Args) -> Result<()> {

@@ -7,9 +7,21 @@
 //! is reached, and reports mean / p50 / p99 per-iteration latency and
 //! derived throughput. Output is plain text so `cargo bench | tee` logs
 //! are self-describing.
+//!
+//! For the perf-trajectory gate (EXPERIMENTS.md §Perf-trajectory
+//! protocol), [`write_snapshot`] serializes a finished suite into a
+//! versioned JSON snapshot (`BENCH_e2e.json` / `BENCH_sa.json`) that
+//! `sdmm bench-diff` compares against on every CI run.
 
+use crate::error::{Result, SdmmError};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// Schema version stamped into every bench snapshot. Bump when the
+/// field set changes so `bench-diff` can reject mixed comparisons.
+pub const SNAPSHOT_VERSION: u64 = 1;
 
 pub struct BenchConfig {
     pub warmup: Duration,
@@ -110,8 +122,11 @@ impl BenchSuite {
         self.results.push(result);
     }
 
-    /// Finish: print a compact summary table.
-    pub fn run(self) {
+    /// Finish: print a compact summary table and hand back the results
+    /// (callers that only want the printout can ignore the return; the
+    /// bench binaries feed it into [`write_snapshot`] for the perf
+    /// gate).
+    pub fn run(self) -> Vec<BenchResult> {
         println!("-- {} summary --", self.suite);
         println!(
             "{:<44} {:>12} {:>12} {:>12} {:>14}",
@@ -127,7 +142,225 @@ impl BenchSuite {
                 fmt_count(r.throughput_per_sec()),
             );
         }
+        self.results
     }
+}
+
+/// Build the versioned JSON value for a finished suite (separated from
+/// the file write so tests can assert the schema without touching disk).
+pub fn snapshot_json(suite: &str, results: &[BenchResult]) -> Json {
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut row = BTreeMap::new();
+            row.insert("name".to_string(), Json::Str(r.name.clone()));
+            row.insert("mean_ns".to_string(), Json::Num(r.latency.mean()));
+            row.insert("p50_ns".to_string(), Json::Num(r.latency.p50()));
+            row.insert("p99_ns".to_string(), Json::Num(r.latency.p99()));
+            row.insert(
+                "throughput_per_sec".to_string(),
+                Json::Num(r.throughput_per_sec()),
+            );
+            row.insert("items_per_iter".to_string(), Json::Num(r.items_per_iter));
+            row.insert("total_iters".to_string(), Json::Num(r.total_iters as f64));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+    top.insert("suite".to_string(), Json::Str(suite.to_string()));
+    top.insert("results".to_string(), Json::Arr(rows));
+    Json::Obj(top)
+}
+
+/// Write a bench snapshot to `path` (the committed `BENCH_*.json`
+/// trajectory files and their CI-regenerated counterparts).
+pub fn write_snapshot(suite: &str, results: &[BenchResult], path: &str) -> Result<()> {
+    let json = snapshot_json(suite, results).to_string();
+    std::fs::write(path, json + "\n")
+        .map_err(|e| SdmmError::Runtime(format!("writing bench snapshot {path}: {e}")))?;
+    println!("wrote bench snapshot: {path}");
+    Ok(())
+}
+
+/// One row of a [`diff_snapshots`] comparison (`sdmm bench-diff`).
+pub struct DiffRow {
+    pub name: String,
+    /// Committed-baseline p50 (ns).
+    pub base_p50: f64,
+    /// Fresh-run p50 (ns) after calibration scaling.
+    pub new_p50: f64,
+    /// Percent change, positive = slower. NaN for added/removed rows.
+    pub delta_pct: f64,
+    pub status: &'static str,
+}
+
+/// Result of comparing two bench snapshots.
+pub struct BenchDiff {
+    pub rows: Vec<DiffRow>,
+    /// Names of rows slower than the threshold (gate failures).
+    pub regressions: Vec<String>,
+    /// Calibration factor applied to the fresh run's numbers (1.0 when
+    /// no `--calibrate` row was given).
+    pub scale: f64,
+}
+
+impl BenchDiff {
+    /// Render the comparison as the table `bench-diff` prints (and CI
+    /// uploads as a build artifact).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<52} {:>12} {:>12} {:>9}  {}\n",
+            "benchmark", "base p50", "new p50", "delta", "status"
+        ));
+        for r in &self.rows {
+            let delta = if r.delta_pct.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:+.1}%", r.delta_pct)
+            };
+            out.push_str(&format!(
+                "{:<52} {:>12} {:>12} {:>9}  {}\n",
+                r.name,
+                if r.base_p50.is_nan() { "-".into() } else { fmt_ns(r.base_p50) },
+                if r.new_p50.is_nan() { "-".into() } else { fmt_ns(r.new_p50) },
+                delta,
+                r.status
+            ));
+        }
+        out
+    }
+}
+
+/// Extract `(name, p50_ns)` rows from a parsed snapshot, validating the
+/// schema version so mixed-format comparisons fail loudly.
+fn snapshot_rows(json: &Json, which: &str) -> Result<Vec<(String, f64)>> {
+    let version = json
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| SdmmError::InvalidConfig(format!("{which}: missing snapshot version")))?;
+    if version != SNAPSHOT_VERSION as f64 {
+        return Err(SdmmError::InvalidConfig(format!(
+            "{which}: snapshot version {version} != supported {SNAPSHOT_VERSION}"
+        )));
+    }
+    let rows = json
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| SdmmError::InvalidConfig(format!("{which}: missing results array")))?;
+    rows.iter()
+        .map(|row| {
+            let name = row
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| SdmmError::InvalidConfig(format!("{which}: row missing name")))?;
+            let p50 = row.get("p50_ns").and_then(Json::as_f64).ok_or_else(|| {
+                SdmmError::InvalidConfig(format!("{which}: row {name:?} missing p50_ns"))
+            })?;
+            Ok((name.to_string(), p50))
+        })
+        .collect()
+}
+
+/// Compare two bench snapshots on p50 latency (the perf-trajectory
+/// gate). A fresh-run row more than `threshold_pct` percent slower than
+/// its committed baseline is a regression; improvements never fail (the
+/// committed snapshot is updated manually when a speedup is real).
+///
+/// `calibrate` names a row present in both snapshots (by convention a
+/// scalar-rung baseline): every fresh p50 is scaled by
+/// `base[cal] / new[cal]` first, cancelling absolute machine speed so a
+/// snapshot recorded on one host gates runs on another. Rows present in
+/// only one snapshot are reported (`added` / `removed`) but never fail
+/// the gate — suites grow.
+pub fn diff_snapshots(
+    base: &Json,
+    new: &Json,
+    threshold_pct: f64,
+    calibrate: Option<&str>,
+) -> Result<BenchDiff> {
+    let base_rows = snapshot_rows(base, "baseline")?;
+    let new_rows = snapshot_rows(new, "new run")?;
+    let new_map: BTreeMap<&str, f64> =
+        new_rows.iter().map(|(n, p)| (n.as_str(), *p)).collect();
+    let base_map: BTreeMap<&str, f64> =
+        base_rows.iter().map(|(n, p)| (n.as_str(), *p)).collect();
+
+    let scale = match calibrate {
+        None => 1.0,
+        Some(cal) => {
+            let b = *base_map.get(cal).ok_or_else(|| {
+                SdmmError::InvalidConfig(format!("calibration row {cal:?} not in baseline"))
+            })?;
+            let n = *new_map.get(cal).ok_or_else(|| {
+                SdmmError::InvalidConfig(format!("calibration row {cal:?} not in new run"))
+            })?;
+            if b <= 0.0 || n <= 0.0 {
+                return Err(SdmmError::InvalidConfig(format!(
+                    "calibration row {cal:?} has non-positive p50"
+                )));
+            }
+            b / n
+        }
+    };
+
+    let mut rows = Vec::new();
+    let mut regressions = Vec::new();
+    for (name, base_p50) in &base_rows {
+        match new_map.get(name.as_str()) {
+            None => rows.push(DiffRow {
+                name: name.clone(),
+                base_p50: *base_p50,
+                new_p50: f64::NAN,
+                delta_pct: f64::NAN,
+                status: "removed",
+            }),
+            Some(&raw_new) => {
+                let new_p50 = raw_new * scale;
+                let delta_pct = if *base_p50 > 0.0 {
+                    (new_p50 / base_p50 - 1.0) * 100.0
+                } else {
+                    f64::NAN
+                };
+                let status = if calibrate == Some(name.as_str()) {
+                    "calibration"
+                } else if delta_pct.is_nan() {
+                    "n/a"
+                } else if delta_pct > threshold_pct {
+                    regressions.push(name.clone());
+                    "REGRESSED"
+                } else if delta_pct < -threshold_pct {
+                    "improved"
+                } else {
+                    "ok"
+                };
+                rows.push(DiffRow {
+                    name: name.clone(),
+                    base_p50: *base_p50,
+                    new_p50,
+                    delta_pct,
+                    status,
+                });
+            }
+        }
+    }
+    for (name, raw_new) in &new_rows {
+        if !base_map.contains_key(name.as_str()) {
+            rows.push(DiffRow {
+                name: name.clone(),
+                base_p50: f64::NAN,
+                new_p50: raw_new * scale,
+                delta_pct: f64::NAN,
+                status: "added",
+            });
+        }
+    }
+    Ok(BenchDiff {
+        rows,
+        regressions,
+        scale,
+    })
 }
 
 fn print_result(r: &BenchResult) {
@@ -193,5 +426,112 @@ mod tests {
         });
         assert_eq!(s.results.len(), 1);
         assert!(s.results[0].total_iters > 0);
+    }
+
+    #[test]
+    fn snapshot_schema_round_trips() {
+        let mut latency = Summary::new();
+        latency.add(100.0);
+        latency.add(200.0);
+        let results = vec![BenchResult {
+            name: "e2e/scalar/8bit".to_string(),
+            latency,
+            items_per_iter: 4.0,
+            total_iters: 2,
+        }];
+        let json = snapshot_json("e2e", &results);
+        // Round-trip through the serializer/parser and check the fields
+        // bench-diff depends on.
+        let parsed = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(parsed.get("version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("suite").and_then(Json::as_str), Some("e2e"));
+        let rows = parsed.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(
+            row.get("name").and_then(Json::as_str),
+            Some("e2e/scalar/8bit")
+        );
+        assert_eq!(row.get("mean_ns").and_then(Json::as_f64), Some(150.0));
+        // Summary::quantile rounds the index half-away-from-zero, so the
+        // two-sample p50 lands on the upper sample.
+        assert_eq!(row.get("p50_ns").and_then(Json::as_f64), Some(200.0));
+        assert!(row.get("p99_ns").and_then(Json::as_f64).unwrap() >= 100.0);
+        assert!(row.get("throughput_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(row.get("total_iters").and_then(Json::as_f64), Some(2.0));
+    }
+
+    /// Build a minimal snapshot Json from (name, p50) pairs.
+    fn snap(rows: &[(&str, f64)]) -> Json {
+        let arr = rows
+            .iter()
+            .map(|(name, p50)| {
+                let mut row = BTreeMap::new();
+                row.insert("name".to_string(), Json::Str(name.to_string()));
+                row.insert("p50_ns".to_string(), Json::Num(*p50));
+                Json::Obj(row)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+        top.insert("suite".to_string(), Json::Str("t".to_string()));
+        top.insert("results".to_string(), Json::Arr(arr));
+        Json::Obj(top)
+    }
+
+    #[test]
+    fn diff_flags_regressions_only_past_threshold() {
+        let base = snap(&[("a", 100.0), ("b", 100.0), ("c", 100.0)]);
+        let new = snap(&[("a", 105.0), ("b", 125.0), ("c", 80.0)]);
+        let d = diff_snapshots(&base, &new, 10.0, None).unwrap();
+        assert_eq!(d.regressions, vec!["b".to_string()]);
+        let by_name: BTreeMap<&str, &str> =
+            d.rows.iter().map(|r| (r.name.as_str(), r.status)).collect();
+        assert_eq!(by_name["a"], "ok");
+        assert_eq!(by_name["b"], "REGRESSED");
+        assert_eq!(by_name["c"], "improved");
+        // Render shouldn't panic and should carry every row.
+        let table = d.render();
+        for name in ["a", "b", "c"] {
+            assert!(table.contains(name));
+        }
+    }
+
+    #[test]
+    fn diff_calibration_cancels_machine_speed() {
+        // New machine is uniformly 2x slower; the calibration row
+        // absorbs it, so nothing regresses.
+        let base = snap(&[("cal", 100.0), ("x", 400.0)]);
+        let new = snap(&[("cal", 200.0), ("x", 810.0)]);
+        let d = diff_snapshots(&base, &new, 10.0, Some("cal")).unwrap();
+        assert!((d.scale - 0.5).abs() < 1e-12);
+        assert!(d.regressions.is_empty(), "{:?}", d.regressions);
+        // But a genuine 2x slowdown on top of the machine factor fails.
+        let bad = snap(&[("cal", 200.0), ("x", 1600.0)]);
+        let d2 = diff_snapshots(&base, &bad, 10.0, Some("cal")).unwrap();
+        assert_eq!(d2.regressions, vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn diff_reports_added_and_removed_without_failing() {
+        let base = snap(&[("gone", 100.0), ("kept", 100.0)]);
+        let new = snap(&[("kept", 100.0), ("fresh", 50.0)]);
+        let d = diff_snapshots(&base, &new, 10.0, None).unwrap();
+        assert!(d.regressions.is_empty());
+        let statuses: Vec<(&str, &str)> =
+            d.rows.iter().map(|r| (r.name.as_str(), r.status)).collect();
+        assert!(statuses.contains(&("gone", "removed")));
+        assert!(statuses.contains(&("fresh", "added")));
+    }
+
+    #[test]
+    fn diff_rejects_wrong_version_and_missing_calibration() {
+        let mut top = BTreeMap::new();
+        top.insert("version".to_string(), Json::Num(99.0));
+        top.insert("results".to_string(), Json::Arr(vec![]));
+        let bad = Json::Obj(top);
+        let good = snap(&[("a", 1.0)]);
+        assert!(diff_snapshots(&bad, &good, 10.0, None).is_err());
+        assert!(diff_snapshots(&good, &good, 10.0, Some("nope")).is_err());
     }
 }

@@ -15,21 +15,84 @@
 //! or available, so results are bit-identical regardless of thread
 //! count (integer work only — no float reassociation anywhere).
 
+use crate::error::{Result, SdmmError};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Worker-thread budget: `SDMM_THREADS` env override (0 or unset =
-/// all available cores). Single knob shared by every parallel path so
-/// benches can pin scalar-vs-batch comparisons to known parallelism.
-pub fn num_threads() -> usize {
-    match std::env::var("SDMM_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-    {
-        Some(n) if n > 0 => n,
-        _ => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
+/// Upper bound on the worker-thread budget. Requests beyond it clamp
+/// (with a warning): thousands of scoped OS threads per conv tile
+/// would only serialize on the work queue, and a typo'd
+/// `SDMM_THREADS=10000` should degrade, not fork-bomb the host.
+pub const MAX_THREADS: usize = 512;
+
+/// Parse an `SDMM_THREADS`-style value into a worker-thread budget.
+///
+/// Typed errors instead of silent fallback (the original sin this
+/// replaces): empty, non-numeric, negative and zero values are each a
+/// distinct [`SdmmError::InvalidConfig`]. Values above [`MAX_THREADS`]
+/// are accepted but clamped (the caller logs the adjustment). `0` is
+/// rejected rather than meaning "auto" — unset the variable for auto.
+pub fn parse_threads(raw: &str) -> Result<usize> {
+    let s = raw.trim();
+    if s.is_empty() {
+        return Err(SdmmError::InvalidConfig(
+            "SDMM_THREADS is set but empty (unset it for auto-detection)".into(),
+        ));
     }
+    let n: usize = s.parse().map_err(|_| {
+        SdmmError::InvalidConfig(format!(
+            "SDMM_THREADS={s:?} is not a positive integer"
+        ))
+    })?;
+    if n == 0 {
+        return Err(SdmmError::InvalidConfig(
+            "SDMM_THREADS=0 is invalid (unset the variable for auto-detection)".into(),
+        ));
+    }
+    Ok(n.min(MAX_THREADS))
+}
+
+/// Worker-thread budget: `SDMM_THREADS` env override, unset = all
+/// available cores. Single knob shared by every parallel path so
+/// benches can pin scalar-vs-batch comparisons to known parallelism.
+///
+/// An *invalid* value (empty, garbage, zero) no longer falls back
+/// silently: it warns once on stderr with the typed parse error and
+/// then uses auto-detection; values above [`MAX_THREADS`] clamp with
+/// the same one-time warning. Library callers that want the hard error
+/// instead use [`parse_threads`] directly.
+pub fn num_threads() -> usize {
+    match std::env::var("SDMM_THREADS") {
+        Err(_) => available(),
+        Ok(raw) => match parse_threads(&raw) {
+            Ok(n) => {
+                if raw.trim().parse::<usize>().map(|r| r > n).unwrap_or(false) {
+                    warn_once(&format!(
+                        "sdmm: SDMM_THREADS={} exceeds the {MAX_THREADS}-thread cap; clamped",
+                        raw.trim()
+                    ));
+                }
+                n
+            }
+            Err(e) => {
+                warn_once(&format!("sdmm: {e}; using auto-detected parallelism"));
+                available()
+            }
+        },
+    }
+}
+
+fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Print one configuration warning per process (the thread budget is
+/// consulted on every parallel call — a bad env var must not flood
+/// stderr).
+fn warn_once(msg: &str) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| eprintln!("{msg}"));
 }
 
 /// Map `f` over `0..n` with dynamic scheduling across worker threads;
@@ -115,6 +178,57 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_threads_rejects_empty() {
+        for raw in ["", "   ", "\t"] {
+            match parse_threads(raw) {
+                Err(SdmmError::InvalidConfig(msg)) => {
+                    assert!(msg.contains("empty"), "raw={raw:?} msg={msg}")
+                }
+                other => panic!("raw={raw:?}: expected InvalidConfig, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parse_threads_rejects_garbage() {
+        for raw in ["abc", "4x", "1.5", "0x10", "--2", "∞"] {
+            assert!(
+                matches!(parse_threads(raw), Err(SdmmError::InvalidConfig(_))),
+                "raw={raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_threads_rejects_zero_and_negative() {
+        for raw in ["0", " 0 ", "-1", "-64"] {
+            assert!(
+                matches!(parse_threads(raw), Err(SdmmError::InvalidConfig(_))),
+                "raw={raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_threads_accepts_and_clamps() {
+        assert_eq!(parse_threads("1").unwrap(), 1);
+        assert_eq!(parse_threads(" 8 ").unwrap(), 8);
+        assert_eq!(parse_threads(&MAX_THREADS.to_string()).unwrap(), MAX_THREADS);
+        // Huge values clamp instead of spawning thousands of threads.
+        assert_eq!(parse_threads("100000").unwrap(), MAX_THREADS);
+        assert_eq!(parse_threads(&usize::MAX.to_string()).unwrap(), MAX_THREADS);
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        // Whatever the environment, the budget must be a sane positive
+        // count (invalid values fall back to auto-detection with a
+        // warning rather than panicking the conv hot path).
+        let n = num_threads();
+        assert!(n >= 1);
+    }
 
     #[test]
     fn par_map_preserves_order() {

@@ -1,0 +1,221 @@
+//! Shared golden-fixture helpers for the conformance suites
+//! (`golden_network.rs`, `simd_conformance.rs`).
+//!
+//! The checked-in vectors under `rust/src/resources/golden/` are minted
+//! exclusively by the exact scalar `ReferenceNet` (see `regen_golden`);
+//! both suites replay them through independent code paths, so the
+//! parser and the deterministic case recipe live here once.
+
+// Each integration-test crate compiles this module independently and
+// uses a different subset of it.
+#![allow(dead_code)]
+
+use sdmm::api::{ApproxPolicy, Compiler, CompressionPolicy, NetworkPlan};
+use sdmm::cnn::infer::Tensor3;
+use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+use sdmm::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Directory of the checked-in vectors (inside the crate source tree,
+/// so the suites need no artifacts and run everywhere).
+pub fn golden_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src/resources/golden"))
+}
+
+/// Static layer names for fixtures (ConvLayer::name is &'static str).
+pub static STAGE_NAMES: [&str; 4] = ["g0", "g1", "g2", "g3"];
+
+pub struct Fixture {
+    pub bits: u32,
+    pub seed: u64,
+    pub model: Model,
+    pub pools: Vec<bool>,
+    pub conv_weights: Vec<Vec<i64>>,
+    pub fc_weights: Vec<Vec<i64>>,
+    pub input: Tensor3,
+    pub stages: Vec<Tensor3>,
+    pub logits: Vec<i64>,
+    pub top1: usize,
+}
+
+/// Sequential token cursor over the fixture text (comment lines
+/// stripped). Panics with the offending keyword on malformed input —
+/// a corrupted checked-in vector should fail loudly.
+pub struct Cursor<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(text: &'a str) -> Cursor<'a> {
+        Cursor {
+            toks: text
+                .lines()
+                .filter(|l| !l.trim_start().starts_with('#'))
+                .flat_map(|l| l.split_whitespace())
+                .collect(),
+            pos: 0,
+        }
+    }
+
+    pub fn tok(&mut self) -> &'a str {
+        let t = self.toks.get(self.pos).copied().expect("golden vector truncated");
+        self.pos += 1;
+        t
+    }
+
+    pub fn expect(&mut self, kw: &str) {
+        let t = self.tok();
+        assert_eq!(t, kw, "golden vector: expected keyword {kw:?}, found {t:?}");
+    }
+
+    pub fn usize(&mut self) -> usize {
+        self.tok().parse().expect("golden vector: bad integer")
+    }
+
+    pub fn i64(&mut self) -> i64 {
+        self.tok().parse().expect("golden vector: bad integer")
+    }
+
+    pub fn ints(&mut self, n: usize) -> Vec<i64> {
+        (0..n).map(|_| self.i64()).collect()
+    }
+}
+
+pub fn parse_fixture(text: &str) -> Fixture {
+    let mut c = Cursor::new(text);
+    c.expect("bits");
+    let bits = c.usize() as u32;
+    c.expect("seed");
+    let seed = c.usize() as u64;
+    c.expect("layers");
+    let n_layers = c.usize();
+    let mut convs = Vec::with_capacity(n_layers);
+    let mut pools = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        c.expect("layer");
+        let (in_hw, in_ch, out_ch) = (c.usize(), c.usize(), c.usize());
+        let (kernel, stride, pad, groups) = (c.usize(), c.usize(), c.usize(), c.usize());
+        pools.push(c.usize() == 1);
+        convs.push(ConvLayer::new(
+            STAGE_NAMES[i], in_hw, in_ch, out_ch, kernel, stride, pad, groups,
+        ));
+    }
+    c.expect("fc");
+    let fc = (c.usize(), c.usize());
+    let model = Model {
+        kind: ModelKind::TinyCnn,
+        convs,
+        fcs: vec![fc],
+    };
+    let mut conv_weights = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        c.expect("weights");
+        assert_eq!(c.usize(), i, "golden vector: weights out of order");
+        let n = c.usize();
+        conv_weights.push(c.ints(n));
+    }
+    c.expect("fcweights");
+    let n = c.usize();
+    let fc_weights = vec![c.ints(n)];
+    c.expect("input");
+    let (ic, ih, iw) = (c.usize(), c.usize(), c.usize());
+    let input = Tensor3 {
+        c: ic,
+        h: ih,
+        w: iw,
+        data: c.ints(ic * ih * iw),
+    };
+    let mut stages = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        c.expect("stage");
+        assert_eq!(c.usize(), i, "golden vector: stages out of order");
+        let (sc, sh, sw) = (c.usize(), c.usize(), c.usize());
+        stages.push(Tensor3 {
+            c: sc,
+            h: sh,
+            w: sw,
+            data: c.ints(sc * sh * sw),
+        });
+    }
+    c.expect("logits");
+    let n = c.usize();
+    let logits = c.ints(n);
+    c.expect("top1");
+    let top1 = c.usize();
+    assert_eq!(c.pos, c.toks.len(), "golden vector: trailing tokens");
+    Fixture {
+        bits,
+        seed,
+        model,
+        pools,
+        conv_weights,
+        fc_weights,
+        input,
+        stages,
+        logits,
+        top1,
+    }
+}
+
+/// Load and parse the checked-in vector for one bit width.
+pub fn load_fixture(bits: u32) -> Fixture {
+    let path = golden_dir().join(format!("net{bits}.txt"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading golden vector {path:?}: {e}"));
+    let fx = parse_fixture(&text);
+    assert_eq!(fx.bits, bits, "vector/file bit-width mismatch");
+    fx
+}
+
+/// The deterministic golden case: geometry + seeded weights/input.
+/// Must stay in lockstep with the checked-in vectors (regen_golden
+/// rewrites them from exactly this recipe).
+pub fn golden_case(bits: u32) -> (Model, Vec<Vec<i64>>, Vec<Vec<i64>>, Tensor3, u64) {
+    let model = Model {
+        kind: ModelKind::TinyCnn,
+        convs: vec![
+            ConvLayer::new("g0", 8, 2, 4, 3, 1, 1, 1),
+            ConvLayer::new("g1", 4, 4, 6, 3, 1, 1, 1),
+        ],
+        fcs: vec![(24, 5)],
+    };
+    let seed = 9000 + bits as u64;
+    let lim = 1i64 << (bits - 1);
+    let mut rng = Rng::new(seed);
+    let conv_w: Vec<Vec<i64>> = model
+        .convs
+        .iter()
+        .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+        .collect();
+    let fc_w: Vec<Vec<i64>> = model
+        .fcs
+        .iter()
+        .map(|&(i, o)| (0..i * o).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+        .collect();
+    let l0 = &model.convs[0];
+    let mut input = Tensor3::zeros(l0.in_ch, l0.in_hw, l0.in_hw);
+    input.data = (0..input.data.len()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+    (model, conv_w, fc_w, input, seed)
+}
+
+pub fn compile_plan(
+    fx_bits: u32,
+    model: &Model,
+    cw: &[Vec<i64>],
+    fw: &[Vec<i64>],
+    name: &str,
+    policy: CompressionPolicy,
+) -> NetworkPlan {
+    NetworkPlan::compile(
+        &Compiler::for_bits(fx_bits)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(policy),
+        name,
+        model,
+        cw,
+        fw,
+    )
+    .unwrap()
+}

@@ -1,0 +1,381 @@
+//! Scalar ≡ SIMD differential conformance suite (the lockdown for the
+//! runtime-dispatched `dsp::simd` tier).
+//!
+//! Four legs:
+//!
+//! 1. **Seeded sweep** (N = 512 random planes): every stage kind the
+//!    inference pipeline vectorizes — SDMM multiply (P words), ReLU,
+//!    2×2 maxpool, symmetric requantization, FC head — diffed
+//!    bit-for-bit against its scalar reference on every dispatch rung
+//!    the host supports, via the rung-pinned `*_on` kernel variants
+//!    (no global state, safe under parallel test threads).
+//! 2. **Sign-correction port edges**: exhaustive input enumeration for
+//!    tuples that toggle the DSP48E1 `a24`/`b17` sign bits, against the
+//!    port-accurate `SdmmEngine` oracle.
+//! 3. **End-to-end**: `InferenceSession` over random networks ×
+//!    {8, 6, 4} bits × every `CompressionPolicy`, against the fully
+//!    scalar `ReferenceNet` (which never touches the SIMD tier — the
+//!    oracle cannot share a defect with the tier under test).
+//! 4. **Golden replay**: the checked-in `net{8,6,4}.txt` vectors replay
+//!    bit-exactly with each rung pinned via `Isa::set_override` (the CI
+//!    feature matrix additionally pins `SDMM_ISA` per job, covering the
+//!    env-var resolution path).
+
+mod common;
+
+use common::{compile_plan, load_fixture};
+use sdmm::api::{BatchExec, CompressionPolicy, Executor, InferenceSession, SystolicExec};
+use sdmm::cnn::infer::{self as scalar_stage, Tensor3};
+use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
+use sdmm::dsp::simd::{self, resolve};
+use sdmm::dsp::{scalar_raw_reference, BatchEngine, BatchLanes, Isa, PreparedTuple, SdmmEngine};
+use sdmm::packing::{pack_approx, Layout};
+use sdmm::util::rng::Rng;
+
+/// Dense lane-0 pattern streams for a slice of inputs (the documented
+/// `BatchLanes::pack_lane0` semantic, rebuilt independently so the test
+/// does not trust the packer it is checking).
+fn lane0_streams(xs: &[i64], v: u32) -> (Vec<u64>, Vec<u64>) {
+    let vmask = (1u64 << v) - 1;
+    let p = xs.iter().map(|&x| (x as u64) & vmask).collect();
+    let neg = xs
+        .iter()
+        .map(|&x| if x < 0 { u64::MAX } else { 0 })
+        .collect();
+    (p, neg)
+}
+
+/// Lane-0 inputs padded to full ki-lane groups (idle lanes zero) — the
+/// shape the port-accurate oracle consumes.
+fn pad_lane0(xs: &[i64], ki: usize) -> Vec<i64> {
+    xs.iter()
+        .flat_map(|&x| {
+            let mut g = vec![0i64; ki];
+            g[0] = x;
+            g
+        })
+        .collect()
+}
+
+#[test]
+fn seeded_sweep_512_planes_scalar_vs_simd_all_stage_kinds() {
+    let rungs = Isa::supported();
+    let mut rng = Rng::new(0x51D_C0DE);
+    for round in 0..512u64 {
+        let bits = [8u32, 6, 4][(round % 3) as usize];
+        let lim = 1i64 << (bits - 1);
+        let layout = Layout::for_bits(bits).unwrap();
+
+        // --- conv stage (the SDMM multiply): random tuple, random plane.
+        let ws: Vec<i64> = (0..layout.kw())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let tuple = pack_approx(&layout, &ws).unwrap();
+        let pt = PreparedTuple::prepare(&tuple);
+        let groups = 1 + rng.below(96) as usize;
+        let xs: Vec<i64> = (0..groups).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+        let mut engine = SdmmEngine::new();
+        let want = scalar_raw_reference(&mut engine, &tuple, &pad_lane0(&xs, layout.ki()));
+        let (p, neg) = lane0_streams(&xs, bits);
+        for &isa in &rungs {
+            let mut got = vec![0u64; groups];
+            simd::p_words_lane0_on(isa, &pt, &p, &neg, &mut got);
+            assert_eq!(
+                got,
+                want,
+                "round {round}: p_words rung {} diverged (bits {bits}, ws {ws:?})",
+                isa.name()
+            );
+        }
+        // The dispatched batch path (whatever rung is active) agrees,
+        // for both the dense lane-0 packing and full multi-lane groups.
+        let lanes = BatchLanes::pack_lane0(&layout, &xs);
+        let mut got = vec![0u64; groups];
+        BatchEngine::new().execute_raw_batch(&pt, &lanes, &mut got);
+        assert_eq!(got, want, "round {round}: dispatched lane-0 path diverged");
+        let full: Vec<i64> = (0..groups * layout.ki())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let want_full = scalar_raw_reference(&mut engine, &tuple, &full);
+        let lanes_full = BatchLanes::pack(&layout, &full).unwrap();
+        let mut got_full = vec![0u64; groups];
+        BatchEngine::new().execute_raw_batch(&pt, &lanes_full, &mut got_full);
+        assert_eq!(got_full, want_full, "round {round}: multi-lane path diverged");
+
+        // --- activation plane for the glue stages. Amplitudes cycle
+        // through small, conv-accumulator-sized, and huge (the last
+        // exercises requantize's exact ≥2^51 scalar fallback).
+        let (c, h, w) = (
+            1 + rng.below(3) as usize,
+            2 + rng.below(8) as usize,
+            2 + rng.below(8) as usize,
+        );
+        let amp = [255i64, 1 << 20, 1 << 46, 1 << 55][(round % 4) as usize];
+        let mut t = Tensor3::zeros(c, h, w);
+        t.data = (0..t.data.len()).map(|_| rng.range_i64(-amp, amp)).collect();
+
+        // ReLU.
+        let mut want_relu = t.clone();
+        scalar_stage::relu(&mut want_relu);
+        for &isa in &rungs {
+            let mut got_relu = t.data.clone();
+            simd::relu_on(isa, &mut got_relu);
+            assert_eq!(
+                got_relu,
+                want_relu.data,
+                "round {round}: relu rung {} diverged",
+                isa.name()
+            );
+        }
+
+        // 2×2 maxpool (floor semantics on odd dims).
+        let want_pool = scalar_stage::maxpool2(&t);
+        for &isa in &rungs {
+            assert_eq!(
+                simd::maxpool2_on(isa, &t),
+                want_pool,
+                "round {round}: maxpool2 rung {} diverged",
+                isa.name()
+            );
+        }
+
+        // Symmetric requantization back to `bits` activations. The
+        // scale is compared by bit pattern: the tiers must agree on the
+        // exact f64, not approximately.
+        let (want_q, want_qp) = scalar_stage::requantize(&t, bits);
+        for &isa in &rungs {
+            let (got_q, got_qp) = simd::requantize_on(isa, &t, bits);
+            assert_eq!(
+                got_q,
+                want_q,
+                "round {round}: requantize rung {} diverged (amp {amp})",
+                isa.name()
+            );
+            assert_eq!(got_qp.bits, want_qp.bits);
+            assert_eq!(
+                got_qp.scale.to_bits(),
+                want_qp.scale.to_bits(),
+                "round {round}: requantize rung {} scale drifted",
+                isa.name()
+            );
+        }
+
+        // FC head.
+        let in_f = 1 + rng.below(48) as usize;
+        let out_f = 1 + rng.below(12) as usize;
+        let fc_in: Vec<i64> = (0..in_f).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+        let fc_w: Vec<i64> = (0..in_f * out_f)
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let want_fc = scalar_stage::fc_int(&fc_in, &fc_w, in_f, out_f);
+        for &isa in &rungs {
+            assert_eq!(
+                simd::fc_int_on(isa, &fc_in, &fc_w, in_f, out_f),
+                want_fc,
+                "round {round}: fc rung {} diverged",
+                isa.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sign_correction_port_edges_a24_b17_exhaustive() {
+    // Tuples chosen so the DSP48E1 sign bits toggle: a negative or
+    // wide top slot drives A-word bit 24, and at 4 bit (ki = 3,
+    // b_offsets [0,7,14]) a negative lane-2 input drives B-word bit 17
+    // (zext(-8, 4) << 14 = 2^17). Every ki-lane input combination is
+    // enumerated and diffed against the port-accurate engine.
+    let cases: [(u32, &[i64]); 4] = [
+        (8, &[1, 1, 15]),
+        (8, &[-100, 44, 15]),
+        (6, &[5, -3]),
+        (4, &[5, -3]),
+    ];
+    let rungs = Isa::supported();
+    let (mut saw_a24, mut saw_b17) = (false, false);
+    for (bits, ws) in cases {
+        let layout = Layout::for_bits(bits).unwrap();
+        assert_eq!(ws.len(), layout.kw(), "case/kw mismatch at {bits} bit");
+        let tuple = pack_approx(&layout, ws).unwrap();
+        let pt = PreparedTuple::prepare(&tuple);
+        saw_a24 |= (tuple.a_word >> 24) & 1 == 1;
+        let lim = 1i64 << (bits - 1);
+        let ki = layout.ki();
+
+        // Every ki-lane group: lane values enumerated odometer-style.
+        let per_lane = (2 * lim) as usize;
+        let total = per_lane.pow(ki as u32);
+        let mut full = Vec::with_capacity(total * ki);
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut group = vec![0i64; ki];
+            for lane in group.iter_mut() {
+                *lane = (rem % per_lane) as i64 - lim;
+                rem /= per_lane;
+            }
+            saw_b17 |= (tuple.layout.b_word(&group) >> 17) & 1 == 1;
+            full.extend_from_slice(&group);
+        }
+        let mut engine = SdmmEngine::new();
+        let want = scalar_raw_reference(&mut engine, &tuple, &full);
+        let lanes = BatchLanes::pack(&layout, &full).unwrap();
+        let mut got = vec![0u64; total];
+        BatchEngine::new().execute_raw_batch(&pt, &lanes, &mut got);
+        assert_eq!(got, want, "multi-lane edge case diverged ({bits} bit, ws {ws:?})");
+
+        // Lane-0 dense path (the SIMD kernel) on every rung, all values.
+        let xs: Vec<i64> = (-lim..lim).collect();
+        let want0 = scalar_raw_reference(&mut engine, &tuple, &pad_lane0(&xs, ki));
+        let (p, neg) = lane0_streams(&xs, bits);
+        for &isa in &rungs {
+            let mut got0 = vec![0u64; xs.len()];
+            simd::p_words_lane0_on(isa, &pt, &p, &neg, &mut got0);
+            assert_eq!(
+                got0,
+                want0,
+                "lane-0 edge case diverged ({bits} bit, ws {ws:?}, rung {})",
+                isa.name()
+            );
+        }
+    }
+    assert!(saw_a24, "edge set never toggled a24 — cases need rework");
+    assert!(saw_b17, "edge set never toggled b17 — cases need rework");
+}
+
+#[test]
+fn session_matches_scalar_reference_for_all_policies_and_bits() {
+    let policies = [
+        CompressionPolicy::None,
+        CompressionPolicy::Wrc,
+        CompressionPolicy::WrcHuffman,
+        CompressionPolicy::PruneWrcHuffman,
+    ];
+    let mut rng = Rng::new(0xE2E);
+    for bits in [8u32, 6, 4] {
+        let lim = 1i64 << (bits - 1);
+        for policy in policies {
+            let model = Model {
+                kind: ModelKind::TinyCnn,
+                convs: vec![
+                    ConvLayer::new("g0", 8, 2, 4, 3, 1, 1, 1),
+                    ConvLayer::new("g1", 4, 4, 6, 3, 1, 1, 1),
+                ],
+                fcs: vec![(24, 5)],
+            };
+            let cw: Vec<Vec<i64>> = model
+                .convs
+                .iter()
+                .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+                .collect();
+            let fw: Vec<Vec<i64>> = model
+                .fcs
+                .iter()
+                .map(|&(i, o)| (0..i * o).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+                .collect();
+            let l0 = &model.convs[0];
+            let mut input = Tensor3::zeros(l0.in_ch, l0.in_hw, l0.in_hw);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+
+            let plan = compile_plan(bits, &model, &cw, &fw, "simd-pol", policy);
+            // The oracle: ReferenceNet is scalar end-to-end regardless
+            // of the active dispatch rung.
+            let want = plan.reference().forward(&input).unwrap();
+            for &isa in &Isa::supported() {
+                let eff = Isa::set_override(Some(isa));
+                assert_eq!(eff, isa, "host dropped a rung mid-suite");
+                let mut exec = BatchExec::new();
+                let out = InferenceSession::new(&plan, &mut exec).infer(&input).unwrap();
+                assert_eq!(
+                    out.logits,
+                    want,
+                    "session diverged from reference ({bits} bit, {policy:?}, rung {})",
+                    isa.name()
+                );
+            }
+            Isa::set_override(None);
+        }
+    }
+}
+
+#[test]
+fn golden_vectors_replay_bit_exact_on_every_rung() {
+    for bits in [8u32, 6, 4] {
+        let fx = load_fixture(bits);
+        let plan = compile_plan(
+            bits,
+            &fx.model,
+            &fx.conv_weights,
+            &fx.fc_weights,
+            &format!("simd-golden{bits}"),
+            CompressionPolicy::None,
+        );
+        for isa in Isa::supported() {
+            Isa::set_override(Some(isa));
+            let mut batch = BatchExec::new();
+            let mut systolic = SystolicExec::new();
+            let execs: [&mut dyn Executor; 2] = [&mut batch, &mut systolic];
+            for e in execs {
+                let name = e.name();
+                let (out, trace) =
+                    InferenceSession::new(&plan, e).infer_trace(&fx.input).unwrap();
+                assert_eq!(
+                    out.logits,
+                    fx.logits,
+                    "{name} logits != golden on rung {} (net{bits})",
+                    isa.name()
+                );
+                assert_eq!(out.top1, fx.top1);
+                for (i, (got, want)) in trace.iter().zip(&fx.stages).enumerate() {
+                    assert_eq!(
+                        got,
+                        want,
+                        "{name} stage {i} != golden on rung {} (net{bits})",
+                        isa.name()
+                    );
+                }
+            }
+        }
+        Isa::set_override(None);
+    }
+}
+
+#[test]
+fn sdmm_isa_resolution_vocabulary_and_clamping() {
+    // Unset → detected rung, silently.
+    assert_eq!(resolve(None, Isa::Avx2), (Isa::Avx2, None));
+    // The documented vocabulary, case/whitespace-insensitive.
+    for (s, want) in [
+        ("scalar", Isa::Scalar),
+        (" SSE41 ", Isa::Sse41),
+        ("sse4.1", Isa::Sse41),
+        ("avx2", Isa::Avx2),
+    ] {
+        let (got, warn) = resolve(Some(s), Isa::Avx2);
+        assert_eq!(got, want, "SDMM_ISA={s:?}");
+        assert!(warn.is_none(), "SDMM_ISA={s:?} warned: {warn:?}");
+    }
+    // Forcing DOWN is always honored (the conformance story)...
+    assert_eq!(resolve(Some("scalar"), Isa::Avx2).0, Isa::Scalar);
+    // ...forcing UP clamps to the host with a warning...
+    let (got, warn) = resolve(Some("avx2"), Isa::Sse41);
+    assert_eq!(got, Isa::Sse41);
+    assert!(warn.unwrap().contains("clamped"));
+    // ...and garbage falls back to detection with a warning.
+    let (got, warn) = resolve(Some("pentium"), Isa::Sse41);
+    assert_eq!(got, Isa::Sse41);
+    assert!(warn.is_some());
+
+    // set_override clamps the same way and reports the effective rung.
+    let eff = Isa::set_override(Some(Isa::Avx2));
+    assert!(eff <= Isa::detect());
+    assert_eq!(eff, Isa::detect().min(Isa::Avx2));
+    Isa::set_override(None);
+
+    // The ladder always starts at the scalar reference rung.
+    let rungs = Isa::supported();
+    assert_eq!(rungs[0], Isa::Scalar);
+    assert!(rungs.windows(2).all(|w| w[0] < w[1]));
+}
