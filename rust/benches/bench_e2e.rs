@@ -22,6 +22,12 @@
 //! `api::network` pipeline (NetworkPlan + InferenceSession) on all
 //! four executor backends, gated bit-identical against the exact
 //! scalar reference before timing.
+//!
+//! Part 7 (`-- --daemon`, also in the default run so the perf gate
+//! sees its rows): the `sdmm serve` TCP daemon over loopback from one
+//! persistent connection — a single interactive round-trip per
+//! iteration, then a pipelined batch of 16 batch-QoS requests per
+//! iteration (EXPERIMENTS.md §Open-loop serving protocol).
 
 use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
@@ -98,6 +104,7 @@ fn main() {
     let serving_only = std::env::args().any(|a| a == "--serving");
     let coldstart_only = std::env::args().any(|a| a == "--coldstart");
     let network_only = std::env::args().any(|a| a == "--network");
+    let daemon_only = std::env::args().any(|a| a == "--daemon");
     let mut suite = BenchSuite::new("e2e");
     if serving_only {
         // Part 3 only (the dedicated CI smoke step); the plain
@@ -110,10 +117,17 @@ fn main() {
         // Part 5 only: whole-network inference through the
         // NetworkPlan/InferenceSession pipeline on every backend.
         bench_network(&mut suite);
+    } else if daemon_only {
+        // Part 7 only: the TCP daemon over loopback.
+        bench_daemon(&mut suite);
     } else {
         bench_native(&mut suite);
         bench_isa_matrix(&mut suite);
         serving(&mut suite);
+        // Part 7 rides in the default run too: the perf-trajectory
+        // gate snapshots this invocation, so the daemon rows are only
+        // gated if they are produced here.
+        bench_daemon(&mut suite);
     }
     let results = suite.run();
     if let Some(path) = json_arg() {
@@ -462,6 +476,122 @@ fn bench_sharded_serving(suite: &mut BenchSuite) {
         thr[2],
         thr[2] / thr[0]
     );
+}
+
+/// Part 7 (`-- --daemon`, EXPERIMENTS.md §Open-loop serving
+/// protocol): the `sdmm serve` TCP daemon measured over loopback from
+/// one persistent connection. Two rows: a single interactive-QoS
+/// round-trip per iteration (batcher flushes immediately) and a
+/// pipelined batch of 16 batch-QoS requests per iteration (one
+/// continuous-batching window). Every demo model is served bit-exact
+/// against the in-process reference before any timing; the timed
+/// loops only spot-check request ids.
+fn bench_daemon(suite: &mut BenchSuite) {
+    use sdmm::serve::wire::{self, Frame, InferRequest, QosClass};
+    use sdmm::serve::{demo_registry, DaemonConfig, ServeDaemon};
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    let registry = Arc::new(ModelRegistry::new());
+    let work = demo_registry(&registry).unwrap();
+    let daemon = ServeDaemon::start(
+        registry,
+        ("127.0.0.1", 0),
+        DaemonConfig {
+            serving: ServingConfig {
+                shards: 2,
+                queue_capacity: 128,
+            },
+            batch_window: Duration::from_micros(200),
+            max_batch: 16,
+            read_timeout: Duration::from_millis(25),
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut s = TcpStream::connect(daemon.local_addr()).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Bit-exactness gate before timing: every demo model through the
+    // full wire path must match the in-process reference output and
+    // op accounting.
+    for (i, w) in work.iter().enumerate() {
+        let f = Frame::Request(InferRequest {
+            request_id: 1_000_000 + i as u64,
+            tenant: "bench".into(),
+            qos: QosClass::Interactive,
+            model: w.key.name.clone(),
+            v_bits: w.key.v_bits,
+            deadline_us: 0,
+            input: w.input.clone(),
+        });
+        s.write_all(&f.encode()).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Some(Frame::Response(resp)) => {
+                assert_eq!(resp.request_id, 1_000_000 + i as u64);
+                assert_eq!(resp.output, w.expected, "daemon diverged ({})", w.key);
+                assert_eq!((resp.dsp_ops, resp.mults), (w.dsp_ops, w.mults));
+            }
+            other => panic!("daemon gate: unexpected frame {other:?}"),
+        }
+    }
+
+    let wk = &work[0];
+    let mut next_id: u64 = 0;
+    let mut xchg = |s: &mut TcpStream, n: u64, qos: QosClass| -> u64 {
+        let first = next_id;
+        let mut buf = Vec::new();
+        for _ in 0..n {
+            let f = Frame::Request(InferRequest {
+                request_id: next_id,
+                tenant: "bench".into(),
+                qos,
+                model: wk.key.name.clone(),
+                v_bits: wk.key.v_bits,
+                deadline_us: 0,
+                input: wk.input.clone(),
+            });
+            buf.extend_from_slice(&f.encode());
+            next_id += 1;
+        }
+        s.write_all(&buf).unwrap();
+        let mut got = 0u64;
+        while got < n {
+            match wire::read_frame(s).unwrap() {
+                Some(Frame::Response(resp)) => {
+                    assert!(
+                        resp.request_id >= first && resp.request_id < first + n,
+                        "daemon bench: stray response id {}",
+                        resp.request_id
+                    );
+                    got += 1;
+                }
+                other => panic!("daemon bench: unexpected frame {other:?}"),
+            }
+        }
+        got
+    };
+
+    suite.bench("daemon round-trip (loopback, interactive QoS)", 1.0, || {
+        xchg(&mut s, 1, QosClass::Interactive)
+    });
+    suite.bench("daemon pipelined x16 (loopback, batch QoS)", 16.0, || {
+        xchg(&mut s, 16, QosClass::Batch)
+    });
+
+    let stats = daemon.stats();
+    println!(
+        "  -> daemon: {} requests over {} batches, mean fill {:.1}, 0 corrupt frames asserted",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch_fill()
+    );
+    assert_eq!(stats.corrupt_frames, 0);
+    drop(s);
+    let snap = daemon.shutdown();
+    assert_eq!(snap.total_failed(), 0, "daemon bench had failed jobs");
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -140,6 +140,14 @@ impl LatencySnapshot {
     pub fn p99_ns(&self) -> f64 {
         self.quantile_ns(0.99)
     }
+
+    /// Approximate 99.9th-percentile latency (ns) — the open-loop
+    /// serving tail the daemon and `sdmm loadgen` report. With fewer
+    /// than 1000 samples the 99.9th rank collapses onto the maximum
+    /// recorded bucket (rank `ceil(count * 0.999)` = `count`).
+    pub fn p999_ns(&self) -> f64 {
+        self.quantile_ns(0.999)
+    }
 }
 
 /// Supervisor-maintained health of one shard (DESIGN.md §10).
@@ -486,6 +494,37 @@ mod tests {
         // quantile 1.0 reaches the outlier's bucket.
         assert!(s.quantile_ns(1.0) > 500_000.0);
         assert!((s.mean_ns() - (99.0 * 1000.0 + 1e6) / 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn p999_bucket_boundaries() {
+        // 999 samples in the 1000ns bucket (idx 10, midpoint 768) and
+        // one outlier in the 1e6 bucket (idx 20, midpoint 786432).
+        // rank(p999) = ceil(1000 * 0.999) = 999 — the last sample of
+        // the dense bucket, so p999 must NOT reach the outlier...
+        let h = LatencyHistogram::new();
+        for _ in 0..999 {
+            h.record(1000);
+        }
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.p999_ns(), 1.5 * 512.0);
+        // ...until at 1000 dense + 2 outliers the rank
+        // ceil(1002 * 0.999) = 1001 crosses into the outlier bucket.
+        h.record(1000);
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.p999_ns(), 1.5 * (1u64 << 19) as f64);
+        // Sub-1000-sample histograms: p999 rank collapses onto the
+        // maximum (ceil(count * 0.999) = count), here the outlier.
+        let small = LatencyHistogram::new();
+        for _ in 0..9 {
+            small.record(1000);
+        }
+        small.record(1_000_000);
+        assert_eq!(small.snapshot().p999_ns(), 1.5 * (1u64 << 19) as f64);
+        // Empty snapshot stays 0.
+        assert_eq!(LatencyHistogram::new().snapshot().p999_ns(), 0.0);
     }
 
     #[test]

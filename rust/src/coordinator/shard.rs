@@ -166,6 +166,15 @@ pub enum AdmitError {
     NoHealthyShards,
     /// The runtime is shutting down; no new work is accepted.
     ShuttingDown,
+    /// The tenant already has its full quota of requests in flight
+    /// (the serving daemon's per-tenant admission bound; see
+    /// `sdmm::serve`). Retry after the tenant's responses drain.
+    QuotaExceeded {
+        /// Tenant whose quota was hit.
+        tenant: String,
+        /// The per-tenant in-flight bound.
+        limit: usize,
+    },
 }
 
 impl std::fmt::Display for AdmitError {
@@ -187,6 +196,9 @@ impl std::fmt::Display for AdmitError {
                 write!(f, "every shard is dead (crash budgets exhausted)")
             }
             AdmitError::ShuttingDown => write!(f, "serving runtime is shutting down"),
+            AdmitError::QuotaExceeded { tenant, limit } => {
+                write!(f, "tenant {tenant} at quota ({limit} in flight)")
+            }
         }
     }
 }
@@ -372,6 +384,25 @@ impl ServingRuntime {
         input: Tensor3,
         opts: SubmitOptions,
     ) -> std::result::Result<mpsc::Receiver<Result<InferOutput>>, AdmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_into(key, input, opts, tx)?;
+        Ok(rx)
+    }
+
+    /// [`submit_with`](Self::submit_with) with a caller-supplied
+    /// response sender instead of a fresh channel. The serving daemon's
+    /// continuous batcher uses this to route each coalesced request's
+    /// result straight to the connection that owns it; on `Ok(())` the
+    /// sender is guaranteed to resolve exactly once (a result or a
+    /// typed error), on `Err` the runtime never saw the sender and the
+    /// caller still owns the resolution.
+    pub fn submit_into(
+        &self,
+        key: &ModelKey,
+        input: Tensor3,
+        opts: SubmitOptions,
+        resp: mpsc::Sender<Result<InferOutput>>,
+    ) -> std::result::Result<(), AdmitError> {
         let model = self
             .registry
             .get(key)
@@ -411,18 +442,17 @@ impl ServingRuntime {
             });
         }
         let now = Instant::now();
-        let (tx, rx) = mpsc::channel();
         let job = Job {
             key: key.clone(),
             input,
-            resp: tx,
+            resp,
             enqueued: now,
             deadline: opts.deadline.map(|d| now + d),
             attempts: 0,
             retry_budget: opts.retry_budget.unwrap_or(self.policy.default_retry_budget),
         };
         match self.queues[shard].try_push_bounded(job, self.config.queue_capacity) {
-            PushOutcome::Queued => Ok(rx),
+            PushOutcome::Queued => Ok(()),
             PushOutcome::Full => {
                 m.dec_depth();
                 Err(AdmitError::Backpressure {

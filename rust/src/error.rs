@@ -89,6 +89,13 @@ pub enum SdmmError {
     /// out-of-range WROM address, impossible Huffman code) — the
     /// cold-load path refuses it with this instead of panicking.
     CorruptArtifact(String),
+    /// A wire-protocol frame failed validation (bad magic, unsupported
+    /// version, length out of bounds, FNV-1a seal mismatch, truncated
+    /// or over-long payload, malformed field encoding) — the serving
+    /// daemon refuses it with this instead of panicking, mirroring the
+    /// [`CorruptArtifact`](Self::CorruptArtifact) discipline for
+    /// on-disk artifacts.
+    CorruptFrame(String),
     /// The serving admission layer refused the request.
     Admission(AdmitError),
     /// An admitted request outlived its deadline budget before a shard
@@ -178,6 +185,7 @@ impl std::fmt::Display for SdmmError {
             SdmmError::InvalidModel(m) => write!(f, "invalid model: {m}"),
             SdmmError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
             SdmmError::CorruptArtifact(m) => write!(f, "corrupt artifact: {m}"),
+            SdmmError::CorruptFrame(m) => write!(f, "corrupt frame: {m}"),
             SdmmError::Admission(e) => write!(f, "admission refused: {e}"),
             SdmmError::DeadlineExceeded { waited } => {
                 write!(f, "deadline exceeded after {waited:?} in queue (request not executed)")

@@ -200,6 +200,59 @@ impl FaultPlan {
     }
 }
 
+/// One wire-level frame corruption for the serving daemon's mutation
+/// sweep (`tests/daemon_serving.rs`). Deliberately layout-agnostic —
+/// positions and masks are raw offsets reduced modulo the frame length
+/// at apply time; the protocol-aware interpretation (which byte is the
+/// seal, where the model name lives) stays in `serve::wire`, the one
+/// module that knows the frame layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    /// XOR one byte of the encoded frame (seal left stale, so framing
+    /// must refuse it).
+    Flip {
+        /// Byte position, reduced modulo the frame length.
+        pos: u64,
+        /// XOR mask; a zero mask is promoted to 1 when applied.
+        mask: u8,
+    },
+    /// Cut the frame short (mid-header or mid-payload truncation).
+    Truncate {
+        /// Bytes to keep, reduced into `[1, len)` when applied.
+        keep: u64,
+    },
+    /// Corrupt a semantic field, then *recompute* the seal so the
+    /// frame passes the checksum — the decoder or the admission layer
+    /// must still refuse it with a typed error.
+    Reseal {
+        /// Which semantic corruption to apply (interpreted modulo the
+        /// tweak menu in `serve::wire::mutate_frame`).
+        tweak: u8,
+        /// Position operand for tweaks that pick a byte.
+        pos: u64,
+        /// Mask operand for tweaks that flip bits.
+        mask: u8,
+    },
+}
+
+/// Generate `n` seeded frame faults — the mutation half of the wire
+/// corruption sweep. Same seed ⇒ same faults, the same replay contract
+/// as [`FaultPlan::generate`]. Roughly a third of each kind.
+pub fn frame_faults(seed: u64, n: usize) -> Vec<FrameFault> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| match rng.below(3) {
+            0 => FrameFault::Flip { pos: rng.next_u64(), mask: (1u8) << rng.below(8) },
+            1 => FrameFault::Truncate { keep: rng.next_u64() },
+            _ => FrameFault::Reseal {
+                tweak: rng.below(5) as u8,
+                pos: rng.next_u64(),
+                mask: (1 + rng.below(255)) as u8,
+            },
+        })
+        .collect()
+}
+
 /// The runtime-side carrier of a [`FaultPlan`]: shared by every shard
 /// worker through an `Arc`, it advances per-shard atomic ordinals and
 /// answers "does a fault fire here?" — exactly once per planned event,
@@ -330,6 +383,20 @@ mod tests {
         // Out-of-range shard: never fires, never panics.
         assert_eq!(inj.on_job(7), None);
         assert_eq!(inj.on_drain(7), None);
+    }
+
+    #[test]
+    fn frame_faults_are_seeded_and_cover_every_kind() {
+        let a = frame_faults(42, 256);
+        let b = frame_faults(42, 256);
+        assert_eq!(a, b, "same seed must replay the same sweep");
+        assert_ne!(a, frame_faults(43, 256));
+        assert_eq!(a.len(), 256);
+        let flips = a.iter().filter(|f| matches!(f, FrameFault::Flip { .. })).count();
+        let truncs = a.iter().filter(|f| matches!(f, FrameFault::Truncate { .. })).count();
+        let reseals = a.iter().filter(|f| matches!(f, FrameFault::Reseal { .. })).count();
+        assert!(flips > 0 && truncs > 0 && reseals > 0, "{flips}/{truncs}/{reseals}");
+        assert_eq!(flips + truncs + reseals, 256);
     }
 
     #[test]

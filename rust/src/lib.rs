@@ -18,7 +18,11 @@
 //!   batcher plus a sharded multi-model runtime
 //!   ([`coordinator::ServingRuntime`]) that serves mixed 8/6/4-bit
 //!   models from shared packed-weight caches
-//!   ([`coordinator::ModelRegistry`]) across N systolic shards.
+//!   ([`coordinator::ModelRegistry`]) across N systolic shards, and
+//!   a zero-dependency network front end ([`serve`]): the `sdmm
+//!   serve` TCP daemon (sealed binary frames, per-tenant admission
+//!   quotas, QoS-aware continuous batching) plus the `sdmm loadgen`
+//!   open-loop load generator.
 //!
 //! Compiled models are deployable: the pipeline's
 //! [`compress`](api::Compiler::compress) stage fixes a
@@ -118,4 +122,5 @@ pub mod report;
 pub mod resources;
 pub mod runtime;
 pub mod sa;
+pub mod serve;
 pub mod util;

@@ -10,7 +10,20 @@
 //!            compile a demo CNN under a compression policy, write the
 //!            sdmm-model.bin artifact, reload it and verify bit-exactness
 //! sdmm report <table1..table6|fig4|fig7|fig9|fig10|rom|all> [--artifacts DIR]
-//! sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx]
+//! sdmm serve [--addr A] [--port P] [--shards N] [--queue-capacity N]
+//!            [--batch-window-us U] [--max-batch N] [--tenant-quota N]
+//!            [--chaos-seed S]
+//!            the TCP serving daemon: sealed binary frames, per-tenant
+//!            admission quotas, QoS-aware continuous batching over the
+//!            sharded simulator runtime; drains cleanly on a Shutdown
+//!            frame (`sdmm loadgen --shutdown-daemon`)
+//! sdmm loadgen [--addr A:P] [--connections C] [--requests N] [--rate R]
+//!            [--trace poisson|bursty] [--seed S] [--tenants T]
+//!            [--interactive-pct P] [--deadline-ms D] [--no-verify]
+//!            [--shutdown-daemon]
+//!            open-loop load generator against a live daemon; verifies
+//!            every response bit-exactly and prints p50/p99/p999
+//! sdmm serve-pjrt [--requests N] [--concurrency C] [--mode float|quant|approx]
 //!            [--bits N] [--artifacts DIR]     batched PJRT serving demo
 //! sdmm serve-sim [--shards N] [--requests N] [--concurrency C]
 //!            [--from-artifact DIR] [--chaos-seed S]
@@ -99,7 +112,9 @@ fn run() -> Result<()> {
         "compile" => cmd_compile(&args),
         "eval" => cmd_eval(&args),
         "report" => cmd_report(&args),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve_daemon(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "serve-pjrt" => cmd_serve_pjrt(&args),
         "serve-sim" => cmd_serve_sim(&args),
         "sim" => cmd_sim(&args),
         "bench-diff" => cmd_bench_diff(&args),
@@ -126,7 +141,14 @@ fn print_usage() {
          \x20            on exact 4-bit agreement)\n\
          sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|accuracy|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
-         sdmm serve [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
+         sdmm serve [--addr A] [--port P] [--shards N] [--queue-capacity N]\n\
+         \x20            [--batch-window-us U] [--max-batch N] [--tenant-quota N] [--chaos-seed S]\n\
+         \x20            TCP serving daemon (sealed frames, tenant quotas, continuous batching)\n\
+         sdmm loadgen [--addr A:P] [--connections C] [--requests N] [--rate R]\n\
+         \x20            [--trace poisson|bursty] [--seed S] [--tenants T] [--interactive-pct P]\n\
+         \x20            [--deadline-ms D] [--grace-secs G] [--no-verify] [--shutdown-daemon]\n\
+         \x20            open-loop load generator (bit-exact verify, p50/p99/p999 report)\n\
+         sdmm serve-pjrt [--requests N] [--concurrency C] [--mode float|quant|approx] [--bits N]\n\
          sdmm serve-sim [--shards N] [--requests N] [--concurrency C] [--from-artifact DIR]\n\
          \x20            [--chaos-seed S]\n\
          sdmm sim [--bits N] [--arch 1m|2m|mp]\n\
@@ -449,7 +471,155 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// The network serving daemon (`sdmm serve`): register the seeded demo
+/// models, bind the zero-dependency TCP front end, and serve until a
+/// client sends a Shutdown frame. Everything a client needs to drive
+/// it ships in `sdmm loadgen`.
+fn cmd_serve_daemon(args: &Args) -> Result<()> {
+    use sdmm::coordinator::{ModelRegistry, ServingConfig, SupervisionPolicy};
+    use sdmm::fault::{FaultPlan, FaultSpec};
+    use sdmm::serve::{demo_registry, DaemonConfig, ServeDaemon};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let addr = args.flag("addr", "127.0.0.1");
+    let port = args.flag_usize("port", 7433)? as u16;
+    let shards = args.flag_usize("shards", sdmm::util::par::num_threads())?;
+    let queue_capacity = args.flag_usize("queue-capacity", 256)?;
+    let batch_window_us = args.flag_usize("batch-window-us", 500)? as u64;
+    let max_batch = args.flag_usize("max-batch", 32)?;
+    let tenant_quota = args.flag_usize("tenant-quota", 256)?;
+    let chaos: Option<u64> = match args.flags.get("chaos-seed") {
+        Some(v) => Some(v.parse().with_context(|| format!("--chaos-seed {v}"))?),
+        None => None,
+    };
+
+    let registry = Arc::new(ModelRegistry::new());
+    let t0 = Instant::now();
+    let work = demo_registry(&registry)?;
+    println!(
+        "registered {} demo models (8/6/4-bit) in {:.1} ms",
+        work.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let fault_plan = chaos.map(|seed| FaultPlan::generate(seed, &FaultSpec::light(shards, 64)));
+    let policy = match &fault_plan {
+        Some(plan) => {
+            println!(
+                "chaos: seed {} -> {} planned fault events",
+                plan.seed,
+                plan.events.len()
+            );
+            SupervisionPolicy {
+                default_retry_budget: (plan.panics() as u32).max(2),
+                ..SupervisionPolicy::default()
+            }
+        }
+        None => SupervisionPolicy::default(),
+    };
+    let config = DaemonConfig {
+        serving: ServingConfig {
+            shards,
+            queue_capacity,
+        },
+        policy,
+        batch_window: Duration::from_micros(batch_window_us),
+        max_batch,
+        tenant_quota,
+        intake_capacity: shards.max(1) * queue_capacity * 4,
+        fault_plan,
+        ..DaemonConfig::default()
+    };
+    let daemon = ServeDaemon::start(registry, (addr.as_str(), port), config)?;
+    println!(
+        "sdmm serve listening on {} ({} shards, window {}us, max batch {}, tenant quota {})",
+        daemon.local_addr(),
+        shards,
+        batch_window_us,
+        max_batch,
+        tenant_quota
+    );
+    daemon.wait_for_shutdown();
+    let stats = daemon.stats();
+    let snap = daemon.shutdown();
+    println!(
+        "daemon drained: conns={} requests={} corrupt_frames={} quota_refusals={} \
+         batches={} mean_fill={:.2} expired={}",
+        stats.conns,
+        stats.requests,
+        stats.corrupt_frames,
+        stats.quota_refusals,
+        stats.batches,
+        stats.mean_batch_fill(),
+        stats.expired
+    );
+    print!("{}", sdmm::report::serving_summary(&snap));
+    Ok(())
+}
+
+/// The open-loop load generator (`sdmm loadgen`): replay a seeded
+/// Poisson or bursty trace against a live daemon over many
+/// connections, verify every response bit-exactly against the shared
+/// demo ground truth, and print the latency report. Exits non-zero
+/// unless every sent request resolved exactly once.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use sdmm::error::SdmmError;
+    use sdmm::serve::demo_workset;
+    use sdmm::serve::loadgen::{self, LoadgenConfig, TraceKind};
+    use std::net::SocketAddr;
+    use std::time::Duration;
+
+    let addr: SocketAddr = args
+        .flag("addr", "127.0.0.1:7433")
+        .parse()
+        .map_err(|e| SdmmError::Parse(format!("--addr: {e}")))?;
+    let deadline_ms = args.flag_usize("deadline-ms", 0)?;
+    let config = LoadgenConfig {
+        addr,
+        connections: args.flag_usize("connections", 8)?,
+        requests: args.flag_usize("requests", 1000)?,
+        rate_per_sec: args.flag("rate", "2000").parse()?,
+        trace: TraceKind::parse(&args.flag("trace", "poisson"))?,
+        seed: args.flag_usize("seed", 42)? as u64,
+        tenants: args.flag_usize("tenants", 4)?,
+        interactive_pct: args.flag_u32("interactive-pct", 10)?.min(100) as u8,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
+        recv_grace: Duration::from_secs(args.flag_usize("grace-secs", 10)? as u64),
+        verify: !args.flags.contains_key("no-verify"),
+    };
+    println!(
+        "loadgen: {} requests over {} connection(s) at {:.0}/s ({:?} trace, seed {}) -> {}",
+        config.requests, config.connections, config.rate_per_sec, config.trace, config.seed, addr
+    );
+    let work = demo_workset()?;
+    let result = loadgen::run(&config, &work);
+    // Shut the daemon down *before* bailing on any error, so a CI job
+    // waiting on the daemon process never hangs behind a dirty run.
+    let shutdown_result = if args.flags.contains_key("shutdown-daemon") {
+        loadgen::shutdown_daemon(addr)
+    } else {
+        Ok(())
+    };
+    let report = result?;
+    print!("{}", report.render());
+    shutdown_result?;
+    if !report.clean() {
+        bail!(
+            "loadgen run was not clean: sent={} ok={} typed_errors={} duplicates={} \
+             lost={} mismatches={}",
+            report.sent,
+            report.ok,
+            report.typed_errors,
+            report.duplicates,
+            report.lost,
+            report.mismatches
+        );
+    }
+    println!("loadgen OK: every request resolved exactly once, bit-exact");
+    Ok(())
+}
+
+fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     let dir = args.flag("artifacts", "artifacts");
     if !sdmm::runtime::pjrt_enabled() {
         bail!("this build has no PJRT backend — rebuild with `--features pjrt` (needs the xla bindings)");

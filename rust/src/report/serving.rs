@@ -6,28 +6,29 @@ use crate::coordinator::RuntimeSnapshot;
 use crate::util::bench::fmt_ns;
 
 /// Format a runtime snapshot: one row per shard (health state, jobs,
-/// failures, latency p50/p99, drain-batch fill, peak in-flight depth,
-/// DSP ops, supervision counters) plus a totals line and a fault-model
-/// line (restarts/panics/degraded/expired/dead). Pure formatting —
-/// callable on a live runtime's `snapshot()` or on the final snapshot
-/// `shutdown()` returns.
+/// failures, latency p50/p99/p999, drain-batch fill, peak in-flight
+/// depth, DSP ops, supervision counters) plus a totals line and a
+/// fault-model line (restarts/panics/degraded/expired/dead). Pure
+/// formatting — callable on a live runtime's `snapshot()` or on the
+/// final snapshot `shutdown()` returns.
 pub fn serving_summary(snap: &RuntimeSnapshot) -> String {
     let mut out = String::new();
     out.push_str("== serving runtime ==\n");
     out.push_str(&format!(
-        "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>6} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
-        "shard", "state", "jobs", "fail", "p50", "p99", "fill", "peak", "dsp_ops", "mults",
-        "restart", "deg", "exp"
+        "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>10} {:>6} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
+        "shard", "state", "jobs", "fail", "p50", "p99", "p999", "fill", "peak", "dsp_ops",
+        "mults", "restart", "deg", "exp"
     ));
     for s in &snap.shards {
         out.push_str(&format!(
-            "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>6.2} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
+            "{:>5} {:>7} {:>8} {:>6} {:>10} {:>10} {:>10} {:>6.2} {:>6} {:>12} {:>12} {:>7} {:>5} {:>5}\n",
             s.shard,
             s.state.name(),
             s.jobs_ok,
             s.jobs_err,
             fmt_ns(s.latency.p50_ns()),
             fmt_ns(s.latency.p99_ns()),
+            fmt_ns(s.latency.p999_ns()),
             s.mean_batch_fill(),
             s.peak_depth,
             s.dsp_ops,
@@ -83,6 +84,8 @@ mod tests {
         assert!(text.contains("dsp_ops=200"));
         assert!(text.contains("3.00 mults/DSP op"));
         assert!(text.contains("dead_shards=0 healthy=true"));
+        let header = text.lines().nth(1).unwrap();
+        assert!(header.contains("p999"), "p999 column in header: {header}");
         // one header + two shard rows + totals + fault line
         assert_eq!(text.lines().count(), 6);
     }

@@ -1,0 +1,695 @@
+//! The `sdmm serve` daemon: a zero-dependency TCP front end over the
+//! supervised [`ServingRuntime`].
+//!
+//! Architecture (DESIGN.md §12):
+//!
+//! ```text
+//! acceptors (N threads)──► conn reader ──► tenant quota ──► intake
+//!                          conn writer ◄── response chan ◄── queue
+//!                                                              │
+//!                                         continuous batcher ◄─┘
+//!                                         (window / QoS flush)
+//!                                                  │ submit_into
+//!                                         ServingRuntime shards
+//! ```
+//!
+//! * **Thread-per-core accept loop** — N acceptor threads block on one
+//!   shared `TcpListener` (`try_clone`'d descriptors) and spawn one
+//!   reader + one writer thread per connection.
+//! * **Continuous batching** — every connection feeds one shared
+//!   [`SubmitQueue`] intake; a single batcher thread coalesces
+//!   requests across connections until the batching window closes,
+//!   the batch fills, or an interactive-QoS request arrives, then
+//!   routes each request to a shard via
+//!   [`ServingRuntime::submit_into`] with the connection's own
+//!   response sender — results flow straight back to the owning
+//!   writer, exactly once.
+//! * **Admission layering** — per-tenant in-flight quotas sit *in
+//!   front of* the runtime's per-shard depth bounds; both refuse with
+//!   typed [`AdmitError`]s on the wire, never by dropping a request
+//!   silently.
+//! * **Typed refusals everywhere** — corrupt frames get a
+//!   [`CorruptFrame`](crate::error::SdmmError::CorruptFrame) error
+//!   frame (when the stream is still writable) and the connection is
+//!   closed; a daemon must survive any byte stream thrown at it.
+
+use crate::coordinator::{
+    AdmitError, InferOutput, ModelKey, ModelRegistry, PushOutcome, QueueStatus, RuntimeSnapshot,
+    ServingConfig, ServingRuntime, SubmitOptions, SubmitQueue, SupervisionPolicy,
+};
+use crate::error::{Result, SdmmError};
+use crate::fault::FaultPlan;
+use crate::serve::wire::{self, Frame, InferRequest, InferResponse, QosClass};
+use crate::util::sync::lock_unpoisoned;
+use crate::cnn::infer::Tensor3;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Sizing and policy knobs for [`ServeDaemon::start`].
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Shard sizing for the backing [`ServingRuntime`].
+    pub serving: ServingConfig,
+    /// Supervision policy for the backing runtime.
+    pub policy: SupervisionPolicy,
+    /// How long the continuous batcher may hold a batch-QoS request
+    /// open waiting for company. Interactive requests flush
+    /// immediately.
+    pub batch_window: Duration,
+    /// Flush as soon as this many requests are pending, window or not.
+    pub max_batch: usize,
+    /// Per-tenant in-flight request bound; `0` disables quotas.
+    pub tenant_quota: usize,
+    /// Acceptor threads blocking on the listener.
+    pub acceptors: usize,
+    /// Bound on the shared intake queue (decoded, not yet admitted).
+    pub intake_capacity: usize,
+    /// Per-connection read timeout — how often an idle reader wakes to
+    /// poll the shutdown flag (also the unit of the mid-frame stall
+    /// tolerance in [`wire::read_frame`]).
+    pub read_timeout: Duration,
+    /// Deterministic chaos plan for the backing runtime (`None` in
+    /// production).
+    pub fault_plan: Option<FaultPlan>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        let serving = ServingConfig::default();
+        DaemonConfig {
+            serving,
+            policy: SupervisionPolicy::default(),
+            batch_window: Duration::from_micros(500),
+            max_batch: 32,
+            tenant_quota: 256,
+            acceptors: crate::util::par::num_threads().clamp(1, 4),
+            intake_capacity: serving.shards * serving.queue_capacity * 4,
+            read_timeout: Duration::from_millis(100),
+            fault_plan: None,
+        }
+    }
+}
+
+/// Monotonic daemon counters (all relaxed; read via
+/// [`ServeDaemon::stats`]).
+#[derive(Debug, Default)]
+struct DaemonStats {
+    conns: AtomicU64,
+    requests: AtomicU64,
+    corrupt_frames: AtomicU64,
+    quota_refusals: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    expired: AtomicU64,
+}
+
+/// Point-in-time copy of the daemon counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DaemonStatsSnapshot {
+    /// Connections accepted.
+    pub conns: u64,
+    /// Request frames decoded.
+    pub requests: u64,
+    /// Frames refused as corrupt (framing, seal, or decode failures).
+    pub corrupt_frames: u64,
+    /// Requests refused by the per-tenant quota.
+    pub quota_refusals: u64,
+    /// Batches the continuous batcher flushed.
+    pub batches: u64,
+    /// Requests carried by those batches.
+    pub batched_requests: u64,
+    /// Requests that expired in the batcher before admission.
+    pub expired: u64,
+}
+
+impl DaemonStatsSnapshot {
+    /// Mean requests per flushed batch (0 when nothing flushed) — the
+    /// coalescing win the continuous batcher exists for.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Per-tenant in-flight counters guarding admission.
+#[derive(Debug, Default)]
+struct TenantQuotas {
+    inflight: Mutex<HashMap<String, usize>>,
+}
+
+impl TenantQuotas {
+    /// Claim one slot for `tenant` under `limit`; `false` when the
+    /// tenant is already at its bound.
+    fn try_acquire(&self, tenant: &str, limit: usize) -> bool {
+        let mut map = lock_unpoisoned(&self.inflight);
+        let n = map.entry(tenant.to_string()).or_insert(0);
+        if *n >= limit {
+            return false;
+        }
+        *n += 1;
+        true
+    }
+
+    /// Release one slot (called by the connection writer once the
+    /// tenant's response — success or typed error — is resolved).
+    fn release(&self, tenant: &str) {
+        let mut map = lock_unpoisoned(&self.inflight);
+        if let Some(n) = map.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                map.remove(tenant);
+            }
+        }
+    }
+}
+
+/// One decoded request waiting in the intake for the batcher.
+struct PendingReq {
+    key: ModelKey,
+    input: Tensor3,
+    qos: QosClass,
+    expiry: Option<Instant>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<InferOutput>>,
+}
+
+/// What a connection's writer thread does next, in FIFO order: either
+/// await a response channel (quota released when it resolves) or write
+/// pre-encoded bytes.
+enum WriterMsg {
+    /// Wait on `rx`, encode the outcome for `request_id`, release the
+    /// quota slot held under `tenant` (if any), write.
+    Await {
+        request_id: u64,
+        tenant: Option<String>,
+        rx: mpsc::Receiver<Result<InferOutput>>,
+    },
+    /// Write already-encoded bytes (pong, shutdown-ack, refusals).
+    Ready(Vec<u8>),
+}
+
+/// State shared by every daemon thread.
+struct DaemonShared {
+    runtime: ServingRuntime,
+    intake: Arc<SubmitQueue<PendingReq>>,
+    quotas: TenantQuotas,
+    config: DaemonConfig,
+    shutting_down: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    stats: DaemonStats,
+}
+
+/// A running `sdmm serve` daemon. Dropping it (or calling
+/// [`shutdown`](Self::shutdown)) drains and joins every thread.
+pub struct ServeDaemon {
+    inner: Option<Arc<DaemonShared>>,
+    addr: SocketAddr,
+    acceptors: Vec<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl ServeDaemon {
+    /// Bind `addr`, start the supervised runtime, and spawn the
+    /// batcher and acceptor threads. Bind to port 0 to let the OS pick
+    /// (the bound address is [`local_addr`](Self::local_addr)).
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        addr: impl ToSocketAddrs,
+        config: DaemonConfig,
+    ) -> Result<ServeDaemon> {
+        crate::ensure!(config.max_batch > 0, "daemon max_batch must be positive");
+        crate::ensure!(config.acceptors > 0, "daemon needs at least one acceptor");
+        crate::ensure!(config.intake_capacity > 0, "daemon intake capacity must be positive");
+        let runtime = ServingRuntime::start_supervised(
+            registry,
+            config.serving,
+            config.policy,
+            config.fault_plan.clone(),
+        )?;
+        let listener = TcpListener::bind(addr).map_err(SdmmError::Io)?;
+        let local = listener.local_addr().map_err(SdmmError::Io)?;
+        let shared = Arc::new(DaemonShared {
+            runtime,
+            intake: Arc::new(SubmitQueue::new()),
+            quotas: TenantQuotas::default(),
+            config: config.clone(),
+            shutting_down: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            stats: DaemonStats::default(),
+        });
+        let mut daemon = ServeDaemon {
+            inner: Some(Arc::clone(&shared)),
+            addr: local,
+            acceptors: Vec::new(),
+            batcher: None,
+        };
+        let b = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("sdmm-batcher".into())
+            .spawn(move || batcher_loop(b));
+        match spawned {
+            Ok(h) => daemon.batcher = Some(h),
+            Err(e) => {
+                daemon.stop();
+                return Err(SdmmError::Io(e));
+            }
+        }
+        for i in 0..config.acceptors {
+            let l = match listener.try_clone() {
+                Ok(l) => l,
+                Err(e) => {
+                    if daemon.acceptors.is_empty() {
+                        daemon.stop();
+                        return Err(SdmmError::Io(e));
+                    }
+                    break; // at least one acceptor is up; serve with fewer
+                }
+            };
+            let a = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("sdmm-accept-{i}"))
+                .spawn(move || acceptor_loop(a, l));
+            match spawned {
+                Ok(h) => daemon.acceptors.push(h),
+                Err(e) => {
+                    if daemon.acceptors.is_empty() {
+                        daemon.stop();
+                        return Err(SdmmError::Io(e));
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(daemon)
+    }
+
+    /// The address the daemon is actually listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry the backing runtime serves from.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        let shared = self.inner.as_ref().expect("daemon is running");
+        Arc::clone(shared.runtime.registry())
+    }
+
+    /// True once a client sent a `Shutdown` frame (or
+    /// [`shutdown`](Self::shutdown) began).
+    pub fn shutdown_requested(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|s| s.shutting_down.load(Ordering::SeqCst))
+    }
+
+    /// Block until a client requests shutdown (20 ms poll).
+    pub fn wait_for_shutdown(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Point-in-time daemon counters.
+    pub fn stats(&self) -> DaemonStatsSnapshot {
+        let s = &self.inner.as_ref().expect("daemon is running").stats;
+        DaemonStatsSnapshot {
+            conns: s.conns.load(Ordering::Relaxed),
+            requests: s.requests.load(Ordering::Relaxed),
+            corrupt_frames: s.corrupt_frames.load(Ordering::Relaxed),
+            quota_refusals: s.quota_refusals.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            batched_requests: s.batched_requests.load(Ordering::Relaxed),
+            expired: s.expired.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Live per-shard runtime snapshot (for `report::serving_summary`).
+    pub fn snapshot(&self) -> RuntimeSnapshot {
+        self.inner.as_ref().expect("daemon is running").runtime.snapshot()
+    }
+
+    /// Drain everything, join every thread, shut the runtime down and
+    /// return its final snapshot.
+    pub fn shutdown(mut self) -> RuntimeSnapshot {
+        self.stop();
+        let inner = self.inner.take().expect("daemon is running");
+        match Arc::try_unwrap(inner) {
+            Ok(shared) => shared.runtime.shutdown(),
+            // A straggler thread still holds the Arc (it can only be
+            // exiting); settle for a snapshot rather than blocking.
+            Err(arc) => arc.runtime.snapshot(),
+        }
+    }
+
+    /// Idempotent teardown: raise the flag, close the intake (waking
+    /// the batcher), wake and join the acceptors, join every
+    /// connection.
+    fn stop(&mut self) {
+        let Some(shared) = self.inner.clone() else {
+            return;
+        };
+        shared.shutting_down.store(true, Ordering::SeqCst);
+        shared.intake.close();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        // Acceptors block in accept(); each throwaway connection wakes
+        // exactly one, which sees the flag and exits.
+        for _ in 0..1000 {
+            if self.acceptors.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            let _ = TcpStream::connect(self.addr);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> = {
+            let mut guard = lock_unpoisoned(&shared.conns);
+            guard.drain(..).collect()
+        };
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            self.stop();
+            if let Some(inner) = self.inner.take() {
+                if let Ok(shared) = Arc::try_unwrap(inner) {
+                    let _ = shared.runtime.shutdown();
+                }
+            }
+        }
+    }
+}
+
+fn acceptor_loop(shared: Arc<DaemonShared>, listener: TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return; // wake-up connection from stop()
+                }
+                shared.stats.conns.fetch_add(1, Ordering::Relaxed);
+                let sh = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("sdmm-conn".into())
+                    .spawn(move || handle_conn(sh, stream));
+                if let Ok(h) = spawned {
+                    let mut conns = lock_unpoisoned(&shared.conns);
+                    // Reap finished handlers so a long-lived daemon
+                    // doesn't accumulate joined-but-kept handles.
+                    let mut i = 0;
+                    while i < conns.len() {
+                        if conns[i].is_finished() {
+                            let _ = conns.remove(i).join();
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    conns.push(h);
+                }
+            }
+            Err(_) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Per-connection reader: decode frames, dispatch, and keep the
+/// writer's FIFO informed. Any corrupt frame gets one typed error
+/// frame and closes the connection (the stream offset is unknowable
+/// after garbage).
+fn handle_conn(shared: Arc<DaemonShared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.config.read_timeout));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (wtx, wrx) = mpsc::channel::<WriterMsg>();
+    let sh = Arc::clone(&shared);
+    let writer = match std::thread::Builder::new()
+        .name("sdmm-conn-writer".into())
+        .spawn(move || writer_loop(sh, write_half, wrx))
+    {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(Frame::Request(req))) => handle_request(&shared, req, &wtx),
+            Ok(Some(Frame::Ping)) => {
+                let _ = wtx.send(WriterMsg::Ready(Frame::Pong.encode()));
+            }
+            Ok(Some(Frame::Shutdown)) => {
+                shared.shutting_down.store(true, Ordering::SeqCst);
+                let _ = wtx.send(WriterMsg::Ready(Frame::ShutdownAck.encode()));
+                break;
+            }
+            Ok(Some(other)) => {
+                // Server-to-client frame types arriving at the server.
+                let e = SdmmError::CorruptFrame(format!(
+                    "unexpected {} frame from a client",
+                    other.kind()
+                ));
+                shared.stats.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(WriterMsg::Ready(Frame::error_for(0, &e).encode()));
+                break;
+            }
+            Ok(None) => break, // clean EOF at a frame boundary
+            Err(e) if wire::is_timeout(&e) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e) => {
+                if matches!(e.root(), SdmmError::CorruptFrame(_)) {
+                    shared.stats.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                    let _ = wtx.send(WriterMsg::Ready(Frame::error_for(0, &e).encode()));
+                }
+                break;
+            }
+        }
+    }
+    drop(wtx);
+    let _ = writer.join();
+}
+
+/// Admit one decoded request: tenant quota first, then hand it to the
+/// continuous batcher through the intake queue. The writer learns
+/// about the request *before* the batcher can resolve it, so the
+/// response is never orphaned.
+fn handle_request(shared: &Arc<DaemonShared>, req: InferRequest, wtx: &mpsc::Sender<WriterMsg>) {
+    shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let limit = shared.config.tenant_quota;
+    let tenant = if limit > 0 {
+        if !shared.quotas.try_acquire(&req.tenant, limit) {
+            shared.stats.quota_refusals.fetch_add(1, Ordering::Relaxed);
+            let e = SdmmError::Admission(AdmitError::QuotaExceeded {
+                tenant: req.tenant.clone(),
+                limit,
+            });
+            let _ = wtx.send(WriterMsg::Ready(Frame::error_for(req.request_id, &e).encode()));
+            return;
+        }
+        Some(req.tenant.clone())
+    } else {
+        None
+    };
+    let (tx, rx) = mpsc::channel();
+    let now = Instant::now();
+    let pending = PendingReq {
+        key: ModelKey::new(&req.model, req.v_bits),
+        input: req.input,
+        qos: req.qos,
+        expiry: (req.deadline_us > 0).then(|| now + Duration::from_micros(req.deadline_us)),
+        enqueued: now,
+        tx: tx.clone(),
+    };
+    let _ = wtx.send(WriterMsg::Await {
+        request_id: req.request_id,
+        tenant,
+        rx,
+    });
+    match shared
+        .intake
+        .try_push_bounded(pending, shared.config.intake_capacity)
+    {
+        PushOutcome::Queued => {}
+        // try_push_bounded drops the rejected item (and its sender);
+        // the clone held here turns the drop into a typed refusal.
+        PushOutcome::Full => {
+            let _ = tx.send(Err(SdmmError::Admission(AdmitError::Backpressure {
+                queue_capacity: shared.config.intake_capacity,
+            })));
+        }
+        PushOutcome::Closed => {
+            let _ = tx.send(Err(SdmmError::Admission(AdmitError::ShuttingDown)));
+        }
+    }
+}
+
+/// Per-connection writer: drains [`WriterMsg`]s in FIFO order. Keeps
+/// draining after a write failure (responses must still resolve so
+/// tenant quota slots are released), it just stops writing.
+fn writer_loop(shared: Arc<DaemonShared>, stream: TcpStream, wrx: mpsc::Receiver<WriterMsg>) {
+    let mut w = std::io::BufWriter::new(stream);
+    let mut dead = false;
+    while let Ok(msg) = wrx.recv() {
+        match msg {
+            WriterMsg::Await {
+                request_id,
+                tenant,
+                rx,
+            } => {
+                let frame = match rx.recv() {
+                    Ok(Ok(out)) => Frame::Response(InferResponse {
+                        request_id,
+                        shard: out.shard as u32,
+                        degraded: out.degraded,
+                        dsp_ops: out.dsp_ops,
+                        mults: out.mults,
+                        output: out.output,
+                    }),
+                    Ok(Err(e)) => Frame::error_for(request_id, &e),
+                    Err(_) => Frame::error_for(
+                        request_id,
+                        &SdmmError::Runtime("runtime dropped the response channel".into()),
+                    ),
+                };
+                if let Some(t) = tenant {
+                    shared.quotas.release(&t);
+                }
+                if !dead {
+                    let bytes = frame.encode();
+                    dead = w.write_all(&bytes).and_then(|_| w.flush()).is_err();
+                }
+            }
+            WriterMsg::Ready(bytes) => {
+                if !dead {
+                    dead = w.write_all(&bytes).and_then(|_| w.flush()).is_err();
+                }
+            }
+        }
+    }
+}
+
+/// The continuous batcher: drain the shared intake, hold batch-QoS
+/// requests up to the window, flush early on a full batch or any
+/// interactive request, route each request to a shard with the
+/// connection's own response sender. Backpressured requests are
+/// *held*, not dropped — they retry on the next flush until they
+/// expire or the runtime takes them.
+fn batcher_loop(shared: Arc<DaemonShared>) {
+    let window = shared.config.batch_window;
+    let max_batch = shared.config.max_batch;
+    let mut pending: Vec<PendingReq> = Vec::new();
+    let mut drained: Vec<PendingReq> = Vec::new();
+    loop {
+        let timeout = if pending.is_empty() {
+            None // park until a request or close() arrives
+        } else {
+            let oldest = pending
+                .iter()
+                .map(|p| p.enqueued.elapsed())
+                .max()
+                .unwrap_or(Duration::ZERO);
+            Some(
+                window
+                    .saturating_sub(oldest)
+                    .max(Duration::from_micros(200)),
+            )
+        };
+        let status = shared.intake.drain_wait(timeout, &mut drained);
+        pending.append(&mut drained);
+        let closed = status == QueueStatus::Closed;
+        let due = closed
+            || pending.len() >= max_batch
+            || pending.iter().any(|p| p.qos == QosClass::Interactive)
+            || pending
+                .iter()
+                .any(|p| p.enqueued.elapsed() >= window);
+        if due && !pending.is_empty() {
+            flush_batch(&shared, &mut pending);
+        }
+        if closed {
+            // Final drain: whatever backpressure holds back gets a
+            // bounded retry loop, then a typed ShuttingDown refusal.
+            for _ in 0..5000 {
+                if pending.is_empty() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                flush_batch(&shared, &mut pending);
+            }
+            for p in pending.drain(..) {
+                let _ = p
+                    .tx
+                    .send(Err(SdmmError::Admission(AdmitError::ShuttingDown)));
+            }
+            return;
+        }
+    }
+}
+
+/// Flush one batch: expire what's out of budget, submit the rest to
+/// the least-loaded shards, keep what bounced off backpressure.
+fn flush_batch(shared: &DaemonShared, pending: &mut Vec<PendingReq>) {
+    let submitted = pending.len();
+    let mut held = Vec::new();
+    for p in pending.drain(..) {
+        let now = Instant::now();
+        if let Some(exp) = p.expiry {
+            if now >= exp {
+                shared.stats.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(Err(SdmmError::DeadlineExceeded {
+                    waited: p.enqueued.elapsed(),
+                }));
+                continue;
+            }
+        }
+        let opts = SubmitOptions {
+            deadline: p.expiry.map(|e| e.saturating_duration_since(now)),
+            retry_budget: None,
+        };
+        match shared
+            .runtime
+            .submit_into(&p.key, p.input.clone(), opts, p.tx.clone())
+        {
+            Ok(()) => {}
+            Err(AdmitError::Backpressure { .. }) => held.push(p),
+            Err(e) => {
+                let _ = p.tx.send(Err(SdmmError::Admission(e)));
+            }
+        }
+    }
+    let landed = submitted - held.len();
+    if landed > 0 {
+        shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        shared
+            .stats
+            .batched_requests
+            .fetch_add(landed as u64, Ordering::Relaxed);
+    }
+    *pending = held;
+}

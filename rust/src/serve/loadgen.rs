@@ -1,0 +1,478 @@
+//! `sdmm loadgen` — an open-loop load generator for the serving
+//! daemon.
+//!
+//! Open-loop means arrivals follow a precomputed trace (Poisson or
+//! bursty), *not* the server's pace: a slow server doesn't slow the
+//! senders down, so queueing delay shows up in the measured tail
+//! instead of being hidden by client backoff — the methodology the
+//! p999 column exists for (EXPERIMENTS.md §Open-loop serving).
+//!
+//! Each connection runs one sender thread (replaying its slice of the
+//! trace) and one reader thread (matching responses by request id,
+//! checking bit-exactness against the shared [`DemoWork`] ground
+//! truth, and recording latency into a [`ShardMetrics`] histogram —
+//! one "shard" row per connection in the final
+//! [`serving_summary`](crate::report::serving_summary) table, plus an
+//! aggregate histogram across all connections).
+
+use crate::coordinator::{RuntimeSnapshot, ShardMetrics, ShardSnapshot};
+use crate::error::{Result, SdmmError};
+use crate::serve::wire::{self, Frame, InferRequest, QosClass};
+use crate::serve::DemoWork;
+use crate::util::bench::fmt_ns;
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Arrival process the trace is drawn from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Exponential inter-arrivals at the configured rate.
+    Poisson,
+    /// Back-to-back bursts of 8 separated by exponential gaps sized so
+    /// the long-run rate still matches.
+    Bursty,
+}
+
+impl TraceKind {
+    /// Parse a CLI spelling (`poisson` / `bursty`).
+    pub fn parse(s: &str) -> Result<TraceKind> {
+        match s {
+            "poisson" => Ok(TraceKind::Poisson),
+            "bursty" => Ok(TraceKind::Bursty),
+            other => Err(SdmmError::Parse(format!(
+                "unknown trace kind {other:?} (expected poisson|bursty)"
+            ))),
+        }
+    }
+}
+
+/// Load-generator sizing and policy.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Daemon address.
+    pub addr: SocketAddr,
+    /// Concurrent connections (each with its own trace slice).
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Aggregate arrival rate (requests/second across connections).
+    pub rate_per_sec: f64,
+    /// Arrival process.
+    pub trace: TraceKind,
+    /// Trace seed — same seed, same arrivals and QoS assignment.
+    pub seed: u64,
+    /// Distinct tenants to spread requests over.
+    pub tenants: usize,
+    /// Percent of requests sent interactive-QoS (0–100).
+    pub interactive_pct: u8,
+    /// Per-request deadline budget (`None` = no deadline).
+    pub deadline: Option<Duration>,
+    /// How long a reader waits without progress before declaring the
+    /// remaining requests lost.
+    pub recv_grace: Duration,
+    /// Check every response bit-for-bit against the demo ground truth.
+    pub verify: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: SocketAddr::from(([127, 0, 0, 1], 7433)),
+            connections: 8,
+            requests: 1000,
+            rate_per_sec: 2000.0,
+            trace: TraceKind::Poisson,
+            seed: 42,
+            tenants: 4,
+            interactive_pct: 10,
+            deadline: None,
+            recv_grace: Duration::from_secs(10),
+            verify: true,
+        }
+    }
+}
+
+/// What one run observed, across all connections.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Requests actually written to sockets.
+    pub sent: u64,
+    /// Responses that arrived and (when verifying) matched bit-exactly.
+    pub ok: u64,
+    /// Typed error frames (admission, deadline, ...).
+    pub typed_errors: u64,
+    /// Responses for an id already resolved — must be zero.
+    pub duplicates: u64,
+    /// Requests never answered within the grace window — must be zero.
+    pub lost: u64,
+    /// Responses that failed verification (wrong bits, wrong op
+    /// counts, or an id this connection never sent).
+    pub mismatches: u64,
+    /// Wall-clock from first arrival to last reader exit.
+    pub wall: Duration,
+    /// One latency row per connection (the `shard` column is the
+    /// connection index).
+    pub per_conn: RuntimeSnapshot,
+    /// Aggregate latency/op histogram across every connection.
+    pub aggregate: ShardSnapshot,
+}
+
+impl LoadReport {
+    /// True when every sent request resolved exactly once with a
+    /// bit-exact response: nothing lost, duplicated, mismatched, or
+    /// refused.
+    pub fn clean(&self) -> bool {
+        self.lost == 0
+            && self.duplicates == 0
+            && self.mismatches == 0
+            && self.typed_errors == 0
+            && self.ok == self.sent
+    }
+
+    /// Render the counters, the aggregate p50/p99/p999 line, and the
+    /// per-connection table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("== loadgen ==\n");
+        out.push_str(&format!(
+            "sent={} ok={} typed_errors={} duplicates={} lost={} mismatches={} wall={:.2?}\n",
+            self.sent, self.ok, self.typed_errors, self.duplicates, self.lost, self.mismatches,
+            self.wall,
+        ));
+        let secs = self.wall.as_secs_f64();
+        out.push_str(&format!(
+            "throughput={:.1} req/s  latency p50={} p99={} p999={}\n",
+            if secs > 0.0 { self.ok as f64 / secs } else { 0.0 },
+            fmt_ns(self.aggregate.latency.p50_ns()),
+            fmt_ns(self.aggregate.latency.p99_ns()),
+            fmt_ns(self.aggregate.latency.p999_ns()),
+        ));
+        out.push_str("per-connection rows (shard column = connection):\n");
+        out.push_str(&crate::report::serving_summary(&self.per_conn));
+        out
+    }
+}
+
+struct ConnStats {
+    sent: u64,
+    ok: u64,
+    typed_errors: u64,
+    duplicates: u64,
+    mismatches: u64,
+    lost: u64,
+    snapshot: ShardSnapshot,
+}
+
+/// Replay the trace against a live daemon and gather the report.
+/// `work` is the request catalog (usually
+/// [`demo_workset`](crate::serve::demo_workset)); request `i` on
+/// connection `c` uses `work[(c + i) % work.len()]`, which the reader
+/// re-derives to verify responses without any side channel.
+pub fn run(config: &LoadgenConfig, work: &[DemoWork]) -> Result<LoadReport> {
+    crate::ensure!(config.connections > 0, "loadgen needs at least one connection");
+    crate::ensure!(config.requests > 0, "loadgen needs at least one request");
+    crate::ensure!(config.rate_per_sec > 0.0, "loadgen rate must be positive");
+    crate::ensure!(!work.is_empty(), "loadgen needs a non-empty work catalog");
+    let aggregate = Arc::new(ShardMetrics::new());
+    let t0 = Instant::now();
+    let base = config.requests / config.connections;
+    let extra = config.requests % config.connections;
+    let mut handles = Vec::new();
+    for c in 0..config.connections {
+        let n = base + usize::from(c < extra);
+        if n == 0 {
+            continue;
+        }
+        let cfg = config.clone();
+        let catalog = work.to_vec();
+        let agg = Arc::clone(&aggregate);
+        let spawned = std::thread::Builder::new()
+            .name(format!("sdmm-loadgen-{c}"))
+            .spawn(move || conn_run(c, n, &cfg, &catalog, &agg, t0));
+        handles.push(spawned.map_err(SdmmError::Io)?);
+    }
+    let mut report = LoadReport {
+        sent: 0,
+        ok: 0,
+        typed_errors: 0,
+        duplicates: 0,
+        lost: 0,
+        mismatches: 0,
+        wall: Duration::ZERO,
+        per_conn: RuntimeSnapshot { shards: Vec::new() },
+        aggregate: aggregate.snapshot(config.connections),
+    };
+    let mut first_err = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(st)) => {
+                report.sent += st.sent;
+                report.ok += st.ok;
+                report.typed_errors += st.typed_errors;
+                report.duplicates += st.duplicates;
+                report.mismatches += st.mismatches;
+                report.lost += st.lost;
+                report.per_conn.shards.push(st.snapshot);
+            }
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(SdmmError::Runtime("loadgen connection thread panicked".into()));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    report.per_conn.shards.sort_by_key(|s| s.shard);
+    report.wall = t0.elapsed();
+    report.aggregate = aggregate.snapshot(config.connections);
+    Ok(report)
+}
+
+fn conn_run(
+    c: usize,
+    n: usize,
+    cfg: &LoadgenConfig,
+    work: &[DemoWork],
+    agg: &Arc<ShardMetrics>,
+    t0: Instant,
+) -> Result<ConnStats> {
+    let stream = connect_with_retry(cfg.addr, Duration::from_secs(15))?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream.try_clone().map_err(SdmmError::Io)?;
+    let _ = read_half.set_read_timeout(Some(Duration::from_millis(200)));
+
+    // Precompute the arrival offsets for this connection's slice.
+    let mut rng = Rng::new(cfg.seed ^ (c as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let rate_c = cfg.rate_per_sec / cfg.connections as f64;
+    let mut offsets = Vec::with_capacity(n);
+    match cfg.trace {
+        TraceKind::Poisson => {
+            let mut t = 0.0f64;
+            for _ in 0..n {
+                t += -(1.0 - rng.f64()).ln() / rate_c;
+                offsets.push(t);
+            }
+        }
+        TraceKind::Bursty => {
+            let burst = 8usize;
+            let gap_mean = burst as f64 / rate_c;
+            let mut t = 0.0f64;
+            while offsets.len() < n {
+                t += -(1.0 - rng.f64()).ln() * gap_mean;
+                for _ in 0..burst.min(n - offsets.len()) {
+                    offsets.push(t);
+                }
+            }
+        }
+    }
+    let qos: Vec<QosClass> = (0..n)
+        .map(|_| {
+            if rng.below(100) < cfg.interactive_pct as u64 {
+                QosClass::Interactive
+            } else {
+                QosClass::Batch
+            }
+        })
+        .collect();
+    let deadline_us = cfg.deadline.map_or(0, |d| d.as_micros() as u64);
+
+    // Send-start times in ns since t0, shared with the reader. Stamped
+    // *before* the write (never 0 once stamped — the reader treats 0
+    // as "not sent").
+    let starts: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let sender_starts = Arc::clone(&starts);
+    let sender_work: Vec<(Frame, f64)> = (0..n)
+        .map(|i| {
+            let wk = &work[(c + i) % work.len()];
+            let req = Frame::Request(InferRequest {
+                request_id: ((c as u64) << 32) | i as u64,
+                tenant: format!("tenant-{}", (c + i) % cfg.tenants.max(1)),
+                qos: qos[i],
+                model: wk.key.name.clone(),
+                v_bits: wk.key.v_bits,
+                deadline_us,
+                input: wk.input.clone(),
+            });
+            (req, offsets[i])
+        })
+        .collect();
+    let sender = std::thread::Builder::new()
+        .name(format!("sdmm-loadgen-send-{c}"))
+        .spawn(move || -> u64 {
+            let mut w = std::io::BufWriter::new(stream);
+            let mut sent = 0u64;
+            for (i, (frame, offset)) in sender_work.iter().enumerate() {
+                let due = t0 + Duration::from_secs_f64(*offset);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                let bytes = frame.encode();
+                sender_starts[i].store((t0.elapsed().as_nanos() as u64).max(1), Ordering::Relaxed);
+                if w.write_all(&bytes).and_then(|_| w.flush()).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+            sent
+        })
+        .map_err(SdmmError::Io)?;
+
+    // Reader: resolve each id exactly once.
+    let metrics = ShardMetrics::new();
+    let mut seen = vec![false; n];
+    let mut received = 0usize;
+    let (mut ok, mut typed, mut dups, mut mism) = (0u64, 0u64, 0u64, 0u64);
+    let mut r = std::io::BufReader::new(read_half);
+    let mut last_progress = Instant::now();
+    while received < n {
+        match wire::read_frame(&mut r) {
+            Ok(Some(Frame::Response(resp))) => {
+                last_progress = Instant::now();
+                let i = (resp.request_id & 0xffff_ffff) as usize;
+                if (resp.request_id >> 32) as usize != c || i >= n {
+                    mism += 1;
+                    continue;
+                }
+                if seen[i] {
+                    dups += 1;
+                    continue;
+                }
+                seen[i] = true;
+                received += 1;
+                let ns = latency_ns(&starts, i, t0);
+                let wk = &work[(c + i) % work.len()];
+                let exact = !cfg.verify
+                    || (resp.output == wk.expected
+                        && resp.dsp_ops == wk.dsp_ops
+                        && resp.mults == wk.mults);
+                if exact {
+                    ok += 1;
+                    metrics.record_ok(ns, resp.dsp_ops, resp.mults);
+                    agg.record_ok(ns, resp.dsp_ops, resp.mults);
+                } else {
+                    mism += 1;
+                    metrics.record_err(ns);
+                    agg.record_err(ns);
+                }
+            }
+            Ok(Some(Frame::Error(e))) => {
+                last_progress = Instant::now();
+                let i = (e.request_id & 0xffff_ffff) as usize;
+                if (e.request_id >> 32) as usize == c && i < n && !seen[i] {
+                    seen[i] = true;
+                    received += 1;
+                    let ns = latency_ns(&starts, i, t0);
+                    metrics.record_err(ns);
+                    agg.record_err(ns);
+                }
+                typed += 1;
+            }
+            Ok(Some(_)) => {} // pong / unexpected — ignore
+            Ok(None) => break,
+            Err(e) if wire::is_timeout(&e) => {
+                if last_progress.elapsed() > cfg.recv_grace {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let sent = sender.join().unwrap_or(0);
+    Ok(ConnStats {
+        sent,
+        ok,
+        typed_errors: typed,
+        duplicates: dups,
+        mismatches: mism,
+        lost: sent.saturating_sub(received as u64),
+        snapshot: metrics.snapshot(c),
+    })
+}
+
+fn latency_ns(starts: &[AtomicU64], i: usize, t0: Instant) -> u64 {
+    let start = starts[i].load(Ordering::Relaxed);
+    if start == 0 {
+        return 0;
+    }
+    (t0.elapsed().as_nanos() as u64).saturating_sub(start)
+}
+
+/// Connect with retries until `timeout` — rides out the daemon's boot
+/// window when client and server start concurrently (the CI smoke job
+/// does exactly that).
+pub fn connect_with_retry(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(SdmmError::Io(e).in_context("connecting to the serving daemon"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Ask a live daemon to drain and exit: send a `Shutdown` frame, wait
+/// for the `ShutdownAck` (or the daemon closing the stream, which
+/// means it was already going down).
+pub fn shutdown_daemon(addr: SocketAddr) -> Result<()> {
+    let mut s = connect_with_retry(addr, Duration::from_secs(5))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+    s.write_all(&Frame::Shutdown.encode()).map_err(SdmmError::Io)?;
+    loop {
+        match wire::read_frame(&mut s)? {
+            Some(Frame::ShutdownAck) | None => return Ok(()),
+            Some(_) => continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_kind_parses_cli_spellings() {
+        assert_eq!(TraceKind::parse("poisson").unwrap(), TraceKind::Poisson);
+        assert_eq!(TraceKind::parse("bursty").unwrap(), TraceKind::Bursty);
+        assert!(TraceKind::parse("open-loop").is_err());
+    }
+
+    #[test]
+    fn report_cleanliness_is_strict() {
+        let metrics = ShardMetrics::new();
+        let clean = LoadReport {
+            sent: 10,
+            ok: 10,
+            typed_errors: 0,
+            duplicates: 0,
+            lost: 0,
+            mismatches: 0,
+            wall: Duration::from_millis(5),
+            per_conn: RuntimeSnapshot { shards: vec![metrics.snapshot(0)] },
+            aggregate: metrics.snapshot(0),
+        };
+        assert!(clean.clean());
+        let text = clean.render();
+        assert!(text.contains("sent=10"), "{text}");
+        assert!(text.contains("p999"), "{text}");
+        let dirty = LoadReport { lost: 1, ..clean };
+        assert!(!dirty.clean());
+    }
+}

@@ -1,0 +1,130 @@
+//! `sdmm::serve` — the network serving subsystem (DESIGN.md §12).
+//!
+//! Everything the paper's runtime offers in-process (sharded
+//! [`ServingRuntime`](crate::coordinator::ServingRuntime), supervised
+//! fault tolerance, deadline budgets) becomes reachable over TCP here,
+//! with zero dependencies beyond `std::net`:
+//!
+//! * [`wire`] — the versioned, FNV-1a-sealed binary frame protocol.
+//! * [`daemon`] — the `sdmm serve` daemon: thread-per-core accept
+//!   loop, per-tenant admission quotas, two QoS classes, and a
+//!   continuous batcher that coalesces requests from many connections
+//!   into shard drains.
+//! * [`loadgen`] — the `sdmm loadgen` open-loop client: Poisson or
+//!   bursty arrivals over many connections, bit-exactness
+//!   verification against the in-process reference, and a
+//!   p50/p99/p999 latency report.
+//!
+//! The module also ships a tiny deterministic model set
+//! ([`demo_registry`]) so the daemon, the load generator, the tests
+//! and the CI smoke job all agree on what "the demo models" compute
+//! — including the expected outputs, which the load generator checks
+//! bit-for-bit on every response.
+
+#![warn(missing_docs)]
+
+pub mod daemon;
+pub mod loadgen;
+pub mod wire;
+
+pub use daemon::{DaemonConfig, DaemonStatsSnapshot, ServeDaemon};
+pub use loadgen::{LoadReport, LoadgenConfig, TraceKind};
+pub use wire::{ErrorCode, Frame, InferRequest, InferResponse, QosClass};
+
+use crate::api::{ApproxPolicy, Compiler, Executor};
+use crate::cnn::infer::Tensor3;
+use crate::cnn::zoo::ConvLayer;
+use crate::coordinator::{ModelKey, ModelRegistry, ModelSpec};
+use crate::error::Result;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One demo model with a fixed probe input and its expected output —
+/// the shared ground truth for the daemon, the load generator and the
+/// serving tests.
+#[derive(Clone, Debug)]
+pub struct DemoWork {
+    /// Registry address of the model.
+    pub key: ModelKey,
+    /// Deterministic probe input (seeded per bit-width).
+    pub input: Tensor3,
+    /// Bit-exact expected output, computed through the in-process
+    /// [`ServingExec`](crate::api::ServingExec) reference path.
+    pub expected: Tensor3,
+    /// Expected DSP block operations per inference.
+    pub dsp_ops: u64,
+    /// Expected multiplications per inference.
+    pub mults: u64,
+}
+
+/// Compile and register the demo models (one per supported bit-width
+/// 8/6/4) into `registry`, returning one [`DemoWork`] per model. The
+/// whole construction is seeded, so every caller — daemon process,
+/// loadgen process, test — derives the same weights, inputs and
+/// expected outputs independently.
+pub fn demo_registry(registry: &Arc<ModelRegistry>) -> Result<Vec<DemoWork>> {
+    use crate::api::ServingExec;
+    let mut work = Vec::new();
+    for v in [8u32, 6, 4] {
+        let layers = vec![
+            ConvLayer::new("c1", 8, 4, 6, 3, 1, 1, 1),
+            ConvLayer::new("c2", 8, 6, 6, 3, 1, 1, 1),
+        ];
+        let spec = ModelSpec::random("demo", v, layers, 500 + v as u64);
+        let compiled = Compiler::for_bits(v)?
+            .approximate(ApproxPolicy::nearest())
+            .pack_model(&spec.name, &spec.layers, &spec.weights)?;
+        let lim = 1i64 << (v - 1);
+        let mut input = Tensor3::zeros(4, 8, 8);
+        let mut rng = Rng::new(600 + v as u64);
+        for x in input.data.iter_mut() {
+            *x = rng.range_i64(-lim, lim - 1);
+        }
+        // Ground truth through the in-process serving reference — the
+        // same shard-worker code path the daemon executes on, so the
+        // over-the-wire result must match bit for bit.
+        let mut reference = ServingExec::start(crate::coordinator::ServingConfig {
+            shards: 2,
+            queue_capacity: 64,
+        })?;
+        let out = reference.run(&compiled, &input)?;
+        reference.shutdown();
+        registry.register_compiled(&compiled)?;
+        work.push(DemoWork {
+            key: compiled.key(),
+            input,
+            expected: out.output,
+            dsp_ops: out.dsp_ops,
+            mults: out.mults,
+        });
+    }
+    Ok(work)
+}
+
+/// [`demo_registry`] against a throwaway registry — for clients (the
+/// load generator) that only need the request inputs and expected
+/// outputs, not the registered models.
+pub fn demo_workset() -> Result<Vec<DemoWork>> {
+    let registry = Arc::new(ModelRegistry::new());
+    demo_registry(&registry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_workset_is_deterministic_and_covers_all_bit_widths() {
+        let a = demo_workset().unwrap();
+        let b = demo_workset().unwrap();
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.input, y.input);
+            assert_eq!(x.expected, y.expected, "{}", x.key);
+            assert_eq!((x.dsp_ops, x.mults), (y.dsp_ops, y.mults));
+        }
+        let bits: Vec<u32> = a.iter().map(|w| w.key.v_bits).collect();
+        assert_eq!(bits, vec![8, 6, 4]);
+    }
+}

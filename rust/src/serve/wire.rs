@@ -1,0 +1,845 @@
+//! The `sdmm serve` wire protocol: versioned, length-prefixed,
+//! FNV-1a-sealed binary frames over TCP.
+//!
+//! Every frame is `header (12 bytes) + payload + seal (8 bytes)`:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SDMF"
+//! 4       2     version (LE, currently 1)
+//! 6       2     frame type (LE, see the Frame variants)
+//! 8       4     payload length (LE, <= MAX_PAYLOAD)
+//! 12      len   payload (typed encoding below)
+//! 12+len  8     FNV-1a-64 seal over header + payload (LE)
+//! ```
+//!
+//! The seal mirrors the artifact-store checksum discipline
+//! (`runtime/store.rs`, DESIGN.md §8): a frame that fails *any*
+//! validation — magic, version, length bound, seal, payload decode,
+//! trailing bytes — is refused with a typed
+//! [`SdmmError::CorruptFrame`], never a panic. All integers are
+//! little-endian; strings are length-prefixed UTF-8; tensors are
+//! `(c, h, w)` dims plus row-major `i64` values.
+
+use crate::cnn::infer::Tensor3;
+use crate::error::{Result, SdmmError};
+use crate::fault::FrameFault;
+use std::io::Read;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"SDMF";
+
+/// Protocol version carried in every frame header.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload (16 MiB) — a length field beyond
+/// this is refused before any allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+
+/// Upper bound on one tensor's element count (`c*h*w`).
+pub const MAX_TENSOR_ELEMS: u64 = 1 << 22;
+
+/// Consecutive mid-frame read timeouts tolerated before the peer is
+/// declared stalled and the frame refused as corrupt (prevents a
+/// half-sent frame from wedging a reader thread forever).
+const MID_FRAME_STALL_CAP: u32 = 50;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit over a byte slice — the same function the artifact
+/// store seals `sdmm-model.bin` sections with.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv_extend(FNV_OFFSET, bytes)
+}
+
+fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Request quality-of-service class (one byte on the wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosClass {
+    /// Latency-sensitive: flushes the continuous batcher immediately.
+    Interactive,
+    /// Throughput-oriented: may wait up to the daemon's batching
+    /// window to coalesce with other requests.
+    Batch,
+}
+
+impl QosClass {
+    fn as_u8(self) -> u8 {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Batch => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<QosClass> {
+        match b {
+            0 => Ok(QosClass::Interactive),
+            1 => Ok(QosClass::Batch),
+            other => Err(SdmmError::CorruptFrame(format!("unknown QoS class {other}"))),
+        }
+    }
+}
+
+/// Typed error code carried in an [`ErrorFrame`] (two bytes on the
+/// wire). Maps the daemon-side [`SdmmError`] taxonomy onto the
+/// protocol so clients can dispatch without parsing messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame failed validation ([`SdmmError::CorruptFrame`]).
+    CorruptFrame,
+    /// Admission refused the request
+    /// ([`SdmmError::Admission`](crate::error::SdmmError::Admission):
+    /// unknown model, shape/range, backpressure, tenant quota, ...).
+    Admission,
+    /// The request outlived its deadline budget before execution.
+    Deadline,
+    /// The shard holding the request gave up on it.
+    ShardUnavailable,
+    /// Any other server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    fn as_u16(self) -> u16 {
+        match self {
+            ErrorCode::CorruptFrame => 1,
+            ErrorCode::Admission => 2,
+            ErrorCode::Deadline => 3,
+            ErrorCode::ShardUnavailable => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    fn from_u16(v: u16) -> Result<ErrorCode> {
+        Ok(match v {
+            1 => ErrorCode::CorruptFrame,
+            2 => ErrorCode::Admission,
+            3 => ErrorCode::Deadline,
+            4 => ErrorCode::ShardUnavailable,
+            5 => ErrorCode::Internal,
+            other => {
+                return Err(SdmmError::CorruptFrame(format!("unknown error code {other}")))
+            }
+        })
+    }
+
+    /// The code for a server-side error, keyed on the innermost typed
+    /// variant (context wrappers are unwrapped first).
+    pub fn for_error(e: &SdmmError) -> ErrorCode {
+        match e.root() {
+            SdmmError::CorruptFrame(_) => ErrorCode::CorruptFrame,
+            SdmmError::Admission(_) => ErrorCode::Admission,
+            SdmmError::DeadlineExceeded { .. } => ErrorCode::Deadline,
+            SdmmError::ShardUnavailable { .. } => ErrorCode::ShardUnavailable,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// One inference request (client → daemon).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InferRequest {
+    /// Client-chosen correlation id, echoed in the response.
+    pub request_id: u64,
+    /// Tenant the request is accounted against (admission quotas).
+    pub tenant: String,
+    /// Quality-of-service class.
+    pub qos: QosClass,
+    /// Registered model name.
+    pub model: String,
+    /// Operand bit-width of the registered model.
+    pub v_bits: u32,
+    /// Deadline budget in microseconds measured from decode; 0 = none.
+    pub deadline_us: u64,
+    /// Input activation tensor.
+    pub input: Tensor3,
+}
+
+/// One completed inference (daemon → client).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InferResponse {
+    /// Correlation id from the request.
+    pub request_id: u64,
+    /// Shard that executed the job.
+    pub shard: u32,
+    /// True when the scalar degraded tier served the job.
+    pub degraded: bool,
+    /// DSP block operations the job stood in for.
+    pub dsp_ops: u64,
+    /// Multiplications executed.
+    pub mults: u64,
+    /// Final activation tensor.
+    pub output: Tensor3,
+}
+
+/// A typed refusal (daemon → client).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// Correlation id, or 0 when the failure is not attributable to a
+    /// decoded request (e.g. the frame itself was corrupt).
+    pub request_id: u64,
+    /// Typed error code.
+    pub code: ErrorCode,
+    /// Human-readable message (the server-side `SdmmError` display).
+    pub message: String,
+}
+
+/// One wire frame. Types 1–7 on the wire; anything else is refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// Inference request (type 1, client → daemon).
+    Request(InferRequest),
+    /// Inference response (type 2, daemon → client).
+    Response(InferResponse),
+    /// Typed refusal (type 3, daemon → client).
+    Error(ErrorFrame),
+    /// Liveness probe (type 4, client → daemon).
+    Ping,
+    /// Liveness reply (type 5, daemon → client).
+    Pong,
+    /// Graceful drain request (type 6, client → daemon): the daemon
+    /// stops accepting, answers everything in flight, and exits.
+    Shutdown,
+    /// Drain acknowledged (type 7, daemon → client).
+    ShutdownAck,
+}
+
+impl Frame {
+    fn frame_type(&self) -> u16 {
+        match self {
+            Frame::Request(_) => 1,
+            Frame::Response(_) => 2,
+            Frame::Error(_) => 3,
+            Frame::Ping => 4,
+            Frame::Pong => 5,
+            Frame::Shutdown => 6,
+            Frame::ShutdownAck => 7,
+        }
+    }
+
+    /// Short name for diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Request(_) => "request",
+            Frame::Response(_) => "response",
+            Frame::Error(_) => "error",
+            Frame::Ping => "ping",
+            Frame::Pong => "pong",
+            Frame::Shutdown => "shutdown",
+            Frame::ShutdownAck => "shutdown-ack",
+        }
+    }
+
+    /// Build the [`Frame::Error`] a server-side failure maps to.
+    pub fn error_for(request_id: u64, e: &SdmmError) -> Frame {
+        Frame::Error(ErrorFrame {
+            request_id,
+            code: ErrorCode::for_error(e),
+            message: e.to_string(),
+        })
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Request(r) => {
+                put_u64(&mut p, r.request_id);
+                p.push(r.qos.as_u8());
+                put_u32(&mut p, r.v_bits);
+                put_u64(&mut p, r.deadline_us);
+                put_str(&mut p, &r.tenant);
+                put_str(&mut p, &r.model);
+                put_tensor(&mut p, &r.input);
+            }
+            Frame::Response(r) => {
+                put_u64(&mut p, r.request_id);
+                put_u32(&mut p, r.shard);
+                p.push(r.degraded as u8);
+                put_u64(&mut p, r.dsp_ops);
+                put_u64(&mut p, r.mults);
+                put_tensor(&mut p, &r.output);
+            }
+            Frame::Error(e) => {
+                put_u64(&mut p, e.request_id);
+                p.extend_from_slice(&e.code.as_u16().to_le_bytes());
+                put_u32(&mut p, e.message.len() as u32);
+                p.extend_from_slice(e.message.as_bytes());
+            }
+            Frame::Ping | Frame::Pong | Frame::Shutdown | Frame::ShutdownAck => {}
+        }
+        p
+    }
+
+    /// Encode the frame: header, payload, FNV-1a seal.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(12 + payload.len() + 8);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.frame_type().to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let seal = fnv1a64(&out);
+        out.extend_from_slice(&seal.to_le_bytes());
+        out
+    }
+
+    /// Decode one complete frame from a byte slice (header + payload +
+    /// seal, nothing more). Every malformation is a typed
+    /// [`SdmmError::CorruptFrame`].
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        if bytes.len() < 20 {
+            return Err(SdmmError::CorruptFrame(format!(
+                "frame too short: {} bytes (minimum 20)",
+                bytes.len()
+            )));
+        }
+        let (hdr, rest) = bytes.split_at(12);
+        let (ty, len) = validate_header(hdr)?;
+        if rest.len() != len as usize + 8 {
+            return Err(SdmmError::CorruptFrame(format!(
+                "length field says {len} payload bytes, frame carries {}",
+                rest.len().saturating_sub(8)
+            )));
+        }
+        let payload = &rest[..len as usize];
+        let seal = u64::from_le_bytes(rest[len as usize..].try_into().unwrap());
+        check_seal(hdr, payload, seal)?;
+        parse_payload(ty, payload)
+    }
+}
+
+fn validate_header(hdr: &[u8]) -> Result<(u16, u32)> {
+    if hdr[..4] != MAGIC {
+        return Err(SdmmError::CorruptFrame(format!(
+            "bad magic {:02x?} (expected {:02x?})",
+            &hdr[..4],
+            MAGIC
+        )));
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != WIRE_VERSION {
+        return Err(SdmmError::CorruptFrame(format!(
+            "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+        )));
+    }
+    let ty = u16::from_le_bytes([hdr[6], hdr[7]]);
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(SdmmError::CorruptFrame(format!(
+            "payload length {len} exceeds the {MAX_PAYLOAD}-byte bound"
+        )));
+    }
+    Ok((ty, len))
+}
+
+fn check_seal(hdr: &[u8], payload: &[u8], seal: u64) -> Result<()> {
+    let expect = fnv_extend(fnv_extend(FNV_OFFSET, hdr), payload);
+    if seal != expect {
+        return Err(SdmmError::CorruptFrame(format!(
+            "seal mismatch: frame carries {seal:#018x}, content hashes to {expect:#018x}"
+        )));
+    }
+    Ok(())
+}
+
+fn parse_payload(ty: u16, payload: &[u8]) -> Result<Frame> {
+    let mut c = Cur { b: payload, pos: 0 };
+    let frame = match ty {
+        1 => Frame::Request(InferRequest {
+            request_id: c.u64()?,
+            qos: QosClass::from_u8(c.u8()?)?,
+            v_bits: c.u32()?,
+            deadline_us: c.u64()?,
+            tenant: c.str16()?,
+            model: c.str16()?,
+            input: c.tensor()?,
+        }),
+        2 => Frame::Response(InferResponse {
+            request_id: c.u64()?,
+            shard: c.u32()?,
+            degraded: c.u8()? != 0,
+            dsp_ops: c.u64()?,
+            mults: c.u64()?,
+            output: c.tensor()?,
+        }),
+        3 => {
+            let request_id = c.u64()?;
+            let code = ErrorCode::from_u16(c.u16()?)?;
+            let mlen = c.u32()? as usize;
+            let raw = c.take(mlen)?;
+            let message = String::from_utf8(raw.to_vec()).map_err(|_| {
+                SdmmError::CorruptFrame("error message is not UTF-8".into())
+            })?;
+            Frame::Error(ErrorFrame { request_id, code, message })
+        }
+        4 => Frame::Ping,
+        5 => Frame::Pong,
+        6 => Frame::Shutdown,
+        7 => Frame::ShutdownAck,
+        other => {
+            return Err(SdmmError::CorruptFrame(format!("unknown frame type {other}")))
+        }
+    };
+    if c.pos != payload.len() {
+        return Err(SdmmError::CorruptFrame(format!(
+            "{} trailing payload byte(s) after a type-{ty} frame",
+            payload.len() - c.pos
+        )));
+    }
+    Ok(frame)
+}
+
+/// Read one frame from a blocking stream.
+///
+/// * `Ok(None)` — the peer closed cleanly at a frame boundary.
+/// * `Err(CorruptFrame)` — garbage, a truncated frame (EOF mid-frame)
+///   or a peer that stalled mid-frame past the tolerance.
+/// * `Err(Io)` with `WouldBlock`/`TimedOut` — a read timeout fired
+///   *before any byte of a frame arrived*; nothing was consumed and
+///   the caller may retry (the serving daemon uses this to poll its
+///   shutdown flag).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut hdr = [0u8; 12];
+    loop {
+        match r.read(&mut hdr[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(SdmmError::Io(e)),
+        }
+    }
+    fill(r, &mut hdr[1..])?;
+    let (ty, len) = validate_header(&hdr)?;
+    let mut rest = vec![0u8; len as usize + 8];
+    fill(r, &mut rest)?;
+    let payload = &rest[..len as usize];
+    let seal = u64::from_le_bytes(rest[len as usize..].try_into().unwrap());
+    check_seal(&hdr, payload, seal)?;
+    parse_payload(ty, payload)
+}
+
+/// Fill `buf` completely, mapping mid-frame EOF and mid-frame stalls
+/// to typed [`SdmmError::CorruptFrame`] (a frame, once started, must
+/// finish).
+fn fill<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
+    let mut off = 0usize;
+    let mut stalls = 0u32;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(SdmmError::CorruptFrame(format!(
+                    "truncated frame: EOF {off} byte(s) into a {}-byte read",
+                    buf.len()
+                )))
+            }
+            Ok(n) => {
+                off += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                stalls += 1;
+                if stalls > MID_FRAME_STALL_CAP {
+                    return Err(SdmmError::CorruptFrame(
+                        "peer stalled mid-frame (read-timeout tolerance exhausted)".into(),
+                    ));
+                }
+            }
+            Err(e) => return Err(SdmmError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// True when an I/O error is a read-timeout (retryable at a frame
+/// boundary).
+pub fn is_timeout(e: &SdmmError) -> bool {
+    matches!(
+        e,
+        SdmmError::Io(io)
+            if matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+    )
+}
+
+/// Apply a connection-level [`FrameFault`] to an encoded frame — the
+/// mutation half of the seeded wire-protocol corruption sweep
+/// (EXPERIMENTS.md §Open-loop serving). `Flip` and `Truncate` leave
+/// the seal stale so framing must catch them; `Reseal` recomputes the
+/// seal after a semantic corruption, so the frame passes the checksum
+/// and the *decoder or admission layer* must still refuse it typed.
+pub fn mutate_frame(frame: &[u8], fault: &FrameFault) -> Vec<u8> {
+    let mut out = frame.to_vec();
+    match *fault {
+        FrameFault::Flip { pos, mask } => {
+            let i = (pos % out.len() as u64) as usize;
+            out[i] ^= if mask == 0 { 1 } else { mask };
+        }
+        FrameFault::Truncate { keep } => {
+            let k = 1 + (keep % (out.len() as u64 - 1)) as usize;
+            out.truncate(k);
+        }
+        FrameFault::Reseal { tweak, pos, mask } => {
+            apply_reseal_tweak(&mut out, tweak, pos, mask);
+            reseal(&mut out);
+        }
+    }
+    out
+}
+
+/// Recompute and patch the trailing FNV-1a seal of an encoded frame
+/// (no-op on frames shorter than the 20-byte minimum).
+pub fn reseal(frame: &mut [u8]) {
+    if frame.len() < 20 {
+        return;
+    }
+    let n = frame.len() - 8;
+    let seal = fnv1a64(&frame[..n]);
+    frame[n..].copy_from_slice(&seal.to_le_bytes());
+}
+
+/// Semantic corruptions for request frames, chosen so each lands on a
+/// *typed* refusal: admission (unknown model), corrupt payload
+/// (length-field lies, shape lies) or a deadline expiry. Offsets
+/// follow the request payload layout; a frame too short for a tweak
+/// falls back to truncation (also typed).
+fn apply_reseal_tweak(frame: &mut Vec<u8>, tweak: u8, pos: u64, mask: u8) {
+    // Request payload offsets (absolute, after the 12-byte header):
+    //   12 id u64 | 20 qos u8 | 21 v_bits u32 | 25 deadline u64 |
+    //   33 tenant_len u16 | 35 tenant | .. model_len u16 | model | ...
+    let ok = match tweak % 5 {
+        0 => write_at(frame, 21, &21u32.to_le_bytes()), // v_bits 21: no such model
+        1 => write_at(frame, 33, &0xffffu16.to_le_bytes()), // tenant_len overflow
+        2 => write_at(frame, 25, &1u64.to_le_bytes()),  // 1 microsecond deadline
+        3 => flip_model_byte(frame, pos, mask),         // model name -> unknown
+        4 => bump_shape(frame),                         // c+1: dims disagree with data
+        _ => unreachable!(),
+    };
+    if !ok {
+        frame.truncate(frame.len().min(13));
+    }
+}
+
+fn write_at(frame: &mut [u8], off: usize, bytes: &[u8]) -> bool {
+    if off + bytes.len() > frame.len().saturating_sub(8) {
+        return false;
+    }
+    frame[off..off + bytes.len()].copy_from_slice(bytes);
+    true
+}
+
+fn request_model_offset(frame: &[u8]) -> Option<(usize, usize)> {
+    if frame.len() < 37 + 8 {
+        return None;
+    }
+    let tlen = u16::from_le_bytes([frame[33], frame[34]]) as usize;
+    let mpos = 35 + tlen;
+    if mpos + 2 + 8 > frame.len() {
+        return None;
+    }
+    let mlen = u16::from_le_bytes([frame[mpos], frame[mpos + 1]]) as usize;
+    if mlen == 0 || mpos + 2 + mlen + 8 > frame.len() {
+        return None;
+    }
+    Some((mpos + 2, mlen))
+}
+
+fn flip_model_byte(frame: &mut [u8], pos: u64, mask: u8) -> bool {
+    let Some((moff, mlen)) = request_model_offset(frame) else {
+        return false;
+    };
+    // XOR within the low ASCII bits so the name stays valid UTF-8 and
+    // the refusal is admission's UnknownModel, not a parse error.
+    let i = moff + (pos % mlen as u64) as usize;
+    let m = (mask & 0x1f) | 1;
+    frame[i] ^= m;
+    true
+}
+
+fn bump_shape(frame: &mut [u8]) -> bool {
+    let Some((moff, mlen)) = request_model_offset(frame) else {
+        return false;
+    };
+    let coff = moff + mlen;
+    if coff + 4 + 8 > frame.len() {
+        return false;
+    }
+    let c = u32::from_le_bytes(frame[coff..coff + 4].try_into().unwrap());
+    frame[coff..coff + 4].copy_from_slice(&c.wrapping_add(1).to_le_bytes());
+    true
+}
+
+// ---- payload primitives ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let len = s.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&s.as_bytes()[..len]);
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor3) {
+    put_u32(out, t.c as u32);
+    put_u32(out, t.h as u32);
+    put_u32(out, t.w as u32);
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            return Err(SdmmError::CorruptFrame(format!(
+                "payload underflow: need {n} byte(s) at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| SdmmError::CorruptFrame("string field is not UTF-8".into()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor3> {
+        let c = self.u32()? as usize;
+        let h = self.u32()? as usize;
+        let w = self.u32()? as usize;
+        let elems = (c as u64) * (h as u64) * (w as u64);
+        if elems > MAX_TENSOR_ELEMS {
+            return Err(SdmmError::CorruptFrame(format!(
+                "tensor of {elems} elements exceeds the {MAX_TENSOR_ELEMS} bound"
+            )));
+        }
+        let remaining = (self.b.len() - self.pos) as u64;
+        if remaining != elems * 8 {
+            return Err(SdmmError::CorruptFrame(format!(
+                "tensor dims ({c},{h},{w}) want {} data byte(s), payload carries {remaining}",
+                elems * 8
+            )));
+        }
+        let mut data = Vec::with_capacity(elems as usize);
+        for _ in 0..elems {
+            data.push(i64::from_le_bytes(self.take(8)?.try_into().unwrap()));
+        }
+        Ok(Tensor3 { c, h, w, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_request() -> Frame {
+        Frame::Request(InferRequest {
+            request_id: 0xabcd_0001,
+            tenant: "tenant-0".into(),
+            qos: QosClass::Batch,
+            model: "demo".into(),
+            v_bits: 8,
+            deadline_us: 0,
+            input: Tensor3 {
+                c: 2,
+                h: 3,
+                w: 3,
+                data: (0..18).map(|i| i as i64 - 9).collect(),
+            },
+        })
+    }
+
+    #[test]
+    fn fnv_matches_the_artifact_store_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        // Incremental == one-shot over a split slice.
+        let all = fnv1a64(b"sdmm-frame");
+        let split = fnv_extend(fnv_extend(FNV_OFFSET, b"sdmm-"), b"frame");
+        assert_eq!(all, split);
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exact() {
+        let frames = vec![
+            demo_request(),
+            Frame::Response(InferResponse {
+                request_id: 7,
+                shard: 2,
+                degraded: true,
+                dsp_ops: 1000,
+                mults: 3000,
+                output: Tensor3::zeros(1, 2, 2),
+            }),
+            Frame::Error(ErrorFrame {
+                request_id: 0,
+                code: ErrorCode::Admission,
+                message: "unknown model nope@8b".into(),
+            }),
+            Frame::Ping,
+            Frame::Pong,
+            Frame::Shutdown,
+            Frame::ShutdownAck,
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            assert_eq!(Frame::decode(&bytes).unwrap(), f, "slice decode of {}", f.kind());
+            let mut r = std::io::Cursor::new(bytes);
+            assert_eq!(read_frame(&mut r).unwrap(), Some(f));
+            assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF after one frame");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_refused_typed() {
+        let bytes = demo_request().encode();
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x40;
+            match Frame::decode(&m) {
+                Err(SdmmError::CorruptFrame(_)) => {}
+                other => panic!("flip at byte {i} not refused as corrupt: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncations_are_refused_typed() {
+        let bytes = demo_request().encode();
+        for keep in [1usize, 5, 11, 12, 13, bytes.len() - 9, bytes.len() - 1] {
+            let mut r = std::io::Cursor::new(bytes[..keep].to_vec());
+            match read_frame(&mut r) {
+                Err(SdmmError::CorruptFrame(_)) => {}
+                other => panic!("truncation to {keep} bytes not refused: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn resealed_mutations_pass_the_seal_but_fail_decode_or_admission() {
+        use crate::fault::FrameFault;
+        let bytes = demo_request().encode();
+        // Tweak 1 (tenant-length lie) and 4 (shape lie) must fail the
+        // *decoder* even though the seal is valid again.
+        for tweak in [1u8, 4] {
+            let m = mutate_frame(&bytes, &FrameFault::Reseal { tweak, pos: 0, mask: 0x11 });
+            let n = m.len() - 8;
+            assert_eq!(
+                u64::from_le_bytes(m[n..].try_into().unwrap()),
+                fnv1a64(&m[..n]),
+                "reseal tweak {tweak} must carry a valid seal"
+            );
+            assert!(
+                matches!(Frame::decode(&m), Err(SdmmError::CorruptFrame(_))),
+                "tweak {tweak} must fail decode"
+            );
+        }
+        // Tweaks 0 (bit-width), 2 (tight deadline) and 3 (model-name
+        // flip) decode fine — admission or the deadline path refuses
+        // them later.
+        for tweak in [0u8, 2, 3] {
+            let m = mutate_frame(&bytes, &FrameFault::Reseal { tweak, pos: 3, mask: 0x0b });
+            let f = Frame::decode(&m).expect("semantically-corrupt frame still decodes");
+            let Frame::Request(req) = f else { panic!("still a request") };
+            match tweak {
+                0 => assert_eq!(req.v_bits, 21),
+                2 => assert_eq!(req.deadline_us, 1),
+                3 => assert_ne!(req.model, "demo"),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_type_version_and_trailing_bytes_are_refused() {
+        let mut bytes = demo_request().encode();
+        bytes[6] = 99; // frame type
+        reseal(&mut bytes);
+        assert!(matches!(Frame::decode(&bytes), Err(SdmmError::CorruptFrame(_))));
+
+        let mut bytes = demo_request().encode();
+        bytes[4] = 2; // version
+        reseal(&mut bytes);
+        assert!(matches!(Frame::decode(&bytes), Err(SdmmError::CorruptFrame(_))));
+
+        // A ping with a stray payload byte: length field and seal are
+        // consistent, but the ping parser must refuse the leftover.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&4u16.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(0xee);
+        let seal = fnv1a64(&bytes);
+        bytes.extend_from_slice(&seal.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(SdmmError::CorruptFrame(_))));
+    }
+
+    #[test]
+    fn error_code_mapping_covers_the_taxonomy() {
+        use crate::coordinator::AdmitError;
+        let cases = [
+            (SdmmError::CorruptFrame("x".into()), ErrorCode::CorruptFrame),
+            (
+                SdmmError::Admission(AdmitError::UnknownModel("m@8b".into())),
+                ErrorCode::Admission,
+            ),
+            (
+                SdmmError::DeadlineExceeded { waited: std::time::Duration::from_micros(5) },
+                ErrorCode::Deadline,
+            ),
+            (SdmmError::ShardUnavailable { shard: 1 }, ErrorCode::ShardUnavailable),
+            (SdmmError::Runtime("boom".into()), ErrorCode::Internal),
+        ];
+        for (e, code) in cases {
+            assert_eq!(ErrorCode::for_error(&e), code, "{e}");
+            // Context wrappers unwrap to the same code.
+            assert_eq!(ErrorCode::for_error(&e.in_context("serving")), code);
+        }
+    }
+}

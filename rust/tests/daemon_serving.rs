@@ -1,0 +1,364 @@
+//! End-to-end tests for the `sdmm serve` TCP daemon (DESIGN.md §12):
+//! open-loop round trips through the real socket stack, the seeded
+//! wire-protocol mutation sweep, tenant-quota admission, and chaos
+//! replays proving continuous batching stays bit-exact and
+//! exactly-once while shards panic, stall and degrade underneath it.
+
+use sdmm::coordinator::{
+    ModelRegistry, ServingConfig, ServingRuntime, SubmitOptions, SupervisionPolicy,
+};
+use sdmm::fault::{frame_faults, FaultPlan, FaultSpec};
+use sdmm::serve::loadgen::{self, LoadgenConfig, TraceKind};
+use sdmm::serve::wire::{self, ErrorCode, Frame, InferRequest, QosClass};
+use sdmm::serve::{demo_registry, DaemonConfig, DemoWork, ServeDaemon};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Fixed replay seeds, same contract as `tests/chaos_serving.rs`:
+/// `SDMM_CHAOS_SEED` overrides the set for targeted replays.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("SDMM_CHAOS_SEED") {
+        Ok(v) => vec![v.parse().expect("SDMM_CHAOS_SEED must be a u64")],
+        Err(_) => vec![7, 42, 0xC0FFEE],
+    }
+}
+
+fn test_daemon(config: DaemonConfig) -> (ServeDaemon, Vec<DemoWork>) {
+    let registry = Arc::new(ModelRegistry::new());
+    let work = demo_registry(&registry).expect("demo registry");
+    let daemon = ServeDaemon::start(registry, ("127.0.0.1", 0), config).expect("daemon start");
+    (daemon, work)
+}
+
+fn request_frame(wk: &DemoWork, request_id: u64, qos: QosClass, deadline_us: u64) -> Vec<u8> {
+    Frame::Request(InferRequest {
+        request_id,
+        tenant: "tenant-0".into(),
+        qos,
+        model: wk.key.name.clone(),
+        v_bits: wk.key.v_bits,
+        deadline_us,
+        input: wk.input.clone(),
+    })
+    .encode()
+}
+
+#[test]
+fn open_loop_round_trip_is_clean_and_bit_exact() {
+    let (daemon, work) = test_daemon(DaemonConfig {
+        serving: ServingConfig {
+            shards: 3,
+            queue_capacity: 128,
+        },
+        // Big enough that a slow CI runner can't push a tenant to its
+        // bound mid-run (the quota path has its own dedicated test).
+        tenant_quota: 4096,
+        read_timeout: Duration::from_millis(25),
+        ..DaemonConfig::default()
+    });
+    let cfg = LoadgenConfig {
+        addr: daemon.local_addr(),
+        connections: 8,
+        requests: 1200,
+        rate_per_sec: 24_000.0,
+        trace: TraceKind::Poisson,
+        seed: 42,
+        tenants: 4,
+        interactive_pct: 10,
+        deadline: None,
+        recv_grace: Duration::from_secs(30),
+        verify: true,
+    };
+    let report = loadgen::run(&cfg, &work).expect("loadgen run");
+    assert!(report.clean(), "dirty run:\n{}", report.render());
+    assert_eq!(report.sent, 1200);
+    assert_eq!(report.ok, 1200);
+    let stats = daemon.stats();
+    assert_eq!(stats.requests, 1200);
+    assert_eq!(stats.corrupt_frames, 0);
+    assert_eq!(stats.quota_refusals, 0);
+    assert!(stats.batches > 0, "continuous batcher never flushed");
+    assert!(
+        stats.mean_batch_fill() >= 1.0,
+        "fill {:.2}",
+        stats.mean_batch_fill()
+    );
+    let snap = daemon.shutdown();
+    assert_eq!(snap.total_jobs(), 1200);
+    assert_eq!(snap.total_failed(), 0);
+    assert!(snap.healthy(), "daemon left shards unhealthy");
+}
+
+#[test]
+fn wire_mutation_sweep_yields_only_typed_refusals() {
+    let (daemon, work) = test_daemon(DaemonConfig {
+        serving: ServingConfig {
+            shards: 2,
+            queue_capacity: 64,
+        },
+        batch_window: Duration::from_micros(300),
+        read_timeout: Duration::from_millis(25),
+        ..DaemonConfig::default()
+    });
+    let addr = daemon.local_addr();
+    let template = request_frame(&work[0], 7, QosClass::Batch, 0);
+    let faults = frame_faults(0x0D15_EA5E, 256);
+    assert_eq!(faults.len(), 256);
+    let (mut corrupt, mut admission, mut deadline_errs) = (0u32, 0u32, 0u32);
+    for (fi, fault) in faults.iter().enumerate() {
+        let mutated = wire::mutate_frame(&template, fault);
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        s.write_all(&mutated).expect("send mutated frame");
+        // Half-close so a truncated frame reads as EOF-mid-frame on
+        // the daemon instead of a stalled peer.
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let hang_guard = Instant::now() + Duration::from_secs(10);
+        loop {
+            match wire::read_frame(&mut s) {
+                Ok(Some(Frame::Error(e))) => match e.code {
+                    ErrorCode::CorruptFrame => corrupt += 1,
+                    ErrorCode::Admission => admission += 1,
+                    ErrorCode::Deadline => deadline_errs += 1,
+                    other => panic!(
+                        "fault {fi} ({fault:?}): untyped refusal {other:?}: {}",
+                        e.message
+                    ),
+                },
+                Ok(Some(f)) => panic!(
+                    "fault {fi} ({fault:?}): daemon answered a corrupted frame with {}",
+                    f.kind()
+                ),
+                Ok(None) => break,
+                Err(e) if wire::is_timeout(&e) => {
+                    assert!(
+                        Instant::now() < hang_guard,
+                        "fault {fi} ({fault:?}): daemon hung"
+                    );
+                }
+                Err(_) => break, // refusal-by-close is acceptable
+            }
+        }
+    }
+    // The sweep must exercise every refusal category: framing/decoder
+    // (flips, truncations, resealed layout lies), admission (resealed
+    // unknown-model / bit-width lies), and deadline (resealed 1 us
+    // budgets).
+    assert!(corrupt > 0, "sweep never produced a CorruptFrame refusal");
+    assert!(admission > 0, "sweep never produced an Admission refusal");
+    assert!(deadline_errs > 0, "sweep never produced a Deadline refusal");
+    let stats = daemon.stats();
+    assert!(
+        stats.corrupt_frames > 0,
+        "daemon counted no corrupt frames: {stats:?}"
+    );
+
+    // The daemon must still serve a pristine request after the sweep.
+    let mut s = TcpStream::connect(addr).expect("reconnect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&request_frame(&work[0], 99, QosClass::Interactive, 0))
+        .unwrap();
+    match wire::read_frame(&mut s).expect("post-sweep response") {
+        Some(Frame::Response(resp)) => {
+            assert_eq!(resp.request_id, 99);
+            assert_eq!(resp.output, work[0].expected, "post-sweep response not bit-exact");
+        }
+        other => panic!("post-sweep request not served: {other:?}"),
+    }
+    drop(s);
+    let snap = daemon.shutdown();
+    assert!(snap.healthy(), "mutation sweep damaged shard health");
+}
+
+#[test]
+fn tenant_quota_refuses_typed_and_releases() {
+    let (daemon, work) = test_daemon(DaemonConfig {
+        serving: ServingConfig {
+            shards: 1,
+            queue_capacity: 64,
+        },
+        tenant_quota: 1,
+        // Hold the batch so the first request keeps its quota slot
+        // while the rest arrive.
+        batch_window: Duration::from_millis(100),
+        max_batch: 1024,
+        read_timeout: Duration::from_millis(25),
+        ..DaemonConfig::default()
+    });
+    let addr = daemon.local_addr();
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let n = 16u64;
+    for id in 0..n {
+        s.write_all(&request_frame(&work[0], id, QosClass::Batch, 0))
+            .unwrap();
+    }
+    let (mut ok, mut refused) = (0u64, 0u64);
+    for _ in 0..n {
+        match wire::read_frame(&mut s).expect("quota response") {
+            Some(Frame::Response(resp)) => {
+                assert_eq!(resp.request_id, 0, "only the slot holder may succeed");
+                assert_eq!(resp.output, work[0].expected);
+                ok += 1;
+            }
+            Some(Frame::Error(e)) => {
+                assert_eq!(e.code, ErrorCode::Admission, "{}", e.message);
+                assert!(
+                    e.message.contains("quota"),
+                    "refusal should name the quota: {}",
+                    e.message
+                );
+                refused += 1;
+            }
+            other => panic!("unexpected quota-phase frame: {other:?}"),
+        }
+    }
+    assert_eq!((ok, refused), (1, n - 1));
+    // The slot was released when request 0 resolved — the tenant can
+    // submit again.
+    s.write_all(&request_frame(&work[0], 77, QosClass::Interactive, 0))
+        .unwrap();
+    match wire::read_frame(&mut s).expect("post-release response") {
+        Some(Frame::Response(resp)) => assert_eq!(resp.request_id, 77),
+        other => panic!("quota slot never released: {other:?}"),
+    }
+    assert_eq!(daemon.stats().quota_refusals, n - 1);
+    drop(s);
+    let snap = daemon.shutdown();
+    assert!(snap.healthy());
+}
+
+#[test]
+fn chaos_daemon_stays_bit_exact_and_exactly_once() {
+    for seed in chaos_seeds() {
+        let shards = 3usize;
+        let n = 90usize;
+        let registry = Arc::new(ModelRegistry::new());
+        let work = demo_registry(&registry).expect("demo registry");
+
+        // Reference: sequential submit_with on a fault-free runtime
+        // over the same registry (and a cross-check against the demo
+        // ground truth, which came through ServingExec).
+        let ref_rt = ServingRuntime::start(
+            Arc::clone(&registry),
+            ServingConfig {
+                shards: 2,
+                queue_capacity: 64,
+            },
+        )
+        .expect("reference runtime");
+        let mut refs = Vec::new();
+        for wk in &work {
+            let rx = ref_rt
+                .submit_with(&wk.key, wk.input.clone(), SubmitOptions::default())
+                .expect("reference admit");
+            let out = rx.recv().expect("reference resolve").expect("reference ok");
+            assert_eq!(out.output, wk.expected, "reference diverged from demo ground truth");
+            refs.push(out.output);
+        }
+        ref_rt.shutdown();
+
+        // Daemon under a deterministic fault plan: worker panics,
+        // latency spikes, queue stalls, forced scalar degradations.
+        let plan = FaultPlan::generate(seed, &FaultSpec::light(shards, (n / shards) as u64));
+        let policy = SupervisionPolicy {
+            max_restarts: 8,
+            initial_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            default_retry_budget: (plan.panics() as u32).max(2),
+        };
+        let daemon = ServeDaemon::start(
+            Arc::clone(&registry),
+            ("127.0.0.1", 0),
+            DaemonConfig {
+                serving: ServingConfig {
+                    shards,
+                    queue_capacity: 64,
+                },
+                policy,
+                batch_window: Duration::from_micros(300),
+                max_batch: 16,
+                tenant_quota: 0, // quotas off: every request must execute
+                read_timeout: Duration::from_millis(25),
+                fault_plan: Some(plan),
+                ..DaemonConfig::default()
+            },
+        )
+        .expect("chaos daemon start");
+
+        // One pipelined connection: send everything, then demand each
+        // id resolves exactly once, bit-exact vs the sequential
+        // reference (degraded scalar-tier answers included).
+        let mut s = TcpStream::connect(daemon.local_addr()).expect("connect");
+        s.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        for i in 0..n {
+            let qos = if i % 5 == 0 {
+                QosClass::Interactive
+            } else {
+                QosClass::Batch
+            };
+            s.write_all(&request_frame(&work[i % work.len()], i as u64, qos, 0))
+                .unwrap();
+        }
+        let mut seen = vec![false; n];
+        let mut resolved = 0usize;
+        let hang_guard = Instant::now() + Duration::from_secs(60);
+        while resolved < n {
+            match wire::read_frame(&mut s) {
+                Ok(Some(Frame::Response(resp))) => {
+                    let i = resp.request_id as usize;
+                    assert!(i < n, "seed {seed}: unknown id {i}");
+                    assert!(!seen[i], "seed {seed}: request {i} answered twice");
+                    seen[i] = true;
+                    resolved += 1;
+                    assert_eq!(
+                        resp.output,
+                        refs[i % refs.len()],
+                        "seed {seed}: request {i} not bit-exact (degraded={})",
+                        resp.degraded
+                    );
+                }
+                Ok(Some(Frame::Error(e))) => panic!(
+                    "seed {seed}: typed failure leaked through the retry budget: {} ({:?})",
+                    e.message, e.code
+                ),
+                Ok(Some(f)) => panic!("seed {seed}: unexpected {} frame", f.kind()),
+                Ok(None) => panic!("seed {seed}: daemon closed with {resolved}/{n} resolved"),
+                Err(e) if wire::is_timeout(&e) => {
+                    assert!(
+                        Instant::now() < hang_guard,
+                        "seed {seed}: hung with {resolved}/{n} resolved"
+                    );
+                }
+                Err(e) => panic!("seed {seed}: read failed: {e}"),
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "seed {seed}: not every id resolved");
+        // Graceful drain on the same connection.
+        s.write_all(&Frame::Shutdown.encode()).unwrap();
+        let ack_guard = Instant::now() + Duration::from_secs(10);
+        loop {
+            match wire::read_frame(&mut s) {
+                Ok(Some(Frame::ShutdownAck)) | Ok(None) => break,
+                Ok(Some(f)) => panic!("seed {seed}: {} after shutdown", f.kind()),
+                Err(e) if wire::is_timeout(&e) => {
+                    assert!(Instant::now() < ack_guard, "seed {seed}: shutdown hung");
+                }
+                Err(e) => panic!("seed {seed}: shutdown read failed: {e}"),
+            }
+        }
+        let snap = daemon.shutdown();
+        assert!(
+            snap.healthy(),
+            "seed {seed}: shards not healthy after chaos: {}",
+            sdmm::report::serving_summary(&snap)
+        );
+        assert!(
+            snap.total_jobs() as usize >= n,
+            "seed {seed}: {} jobs recorded for {n} requests",
+            snap.total_jobs()
+        );
+    }
+}
