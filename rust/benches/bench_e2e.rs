@@ -137,10 +137,14 @@ fn main() {
 
 /// Part 6: the per-bit-width × per-ISA-rung conv matrix — one
 /// `conv e2e (BatchExec, {bits}-bit, isa={rung})` row per combination
-/// the host supports. These rows are the heart of `BENCH_e2e.json`: the
-/// trajectory gate watches each rung's p50 independently, so a
-/// dispatch-ladder regression (e.g. AVX2 silently falling back to
-/// scalar) shows up as a >10% slowdown on exactly one row family.
+/// the host supports, plus one port-accurate
+/// `conv e2e (ScalarExec, {bits}-bit)` row per width. These rows are
+/// the heart of `BENCH_e2e.json`: the trajectory gate watches each
+/// rung's p50 independently, so a dispatch-ladder regression (e.g.
+/// AVX2 silently falling back to scalar) shows up as a >10% slowdown
+/// on exactly one row family. At 6/4 bits the BatchExec rows ride the
+/// dense multi-lane packing (ki=2/ki=3 inputs per P word), so they
+/// also watch the `p_words_multi` kernels.
 ///
 /// `Isa::set_override` is process-global, but this binary is
 /// single-threaded and every rung is bit-exact (asserted before each
@@ -170,6 +174,17 @@ fn bench_isa_matrix(suite: &mut BenchSuite) {
         let mut batch = BatchExec::new();
         Isa::set_override(Some(Isa::Scalar));
         let golden = batch.run(&model, &input).unwrap().output;
+        // Port-accurate scalar baseline for this width: one DSP op per
+        // packed group on the same dense ki-pixel mapping. Gated
+        // bit-exact against the batch golden before timing.
+        let mut scalar = ScalarExec::new();
+        let out_scalar = scalar.run(&model, &input).unwrap().output;
+        assert_eq!(out_scalar, golden, "{bits}-bit ScalarExec diverged");
+        suite.bench(
+            &format!("conv e2e (ScalarExec, {bits}-bit)"),
+            macs as f64,
+            || scalar.run(&model, &input).unwrap().output.data[0],
+        );
         for isa in Isa::supported() {
             Isa::set_override(Some(isa));
             let out = batch.run(&model, &input).unwrap().output;

@@ -99,6 +99,40 @@ fn main() {
         );
     }
     Isa::set_override(None);
+    // Multi-lane rows: the same cmp layer at 6/4 bits, where the
+    // ki=2/ki=3 port layouts pack multiple dense pixels per P word and
+    // the batch path runs the `p_words_multi` kernels. Each rung is
+    // gated bit-exact against the scalar engine before timing, so these
+    // rows watch both the dense packing and the vectorized kernels.
+    for v in [6u32, 4] {
+        let lim = 1i64 << (v - 1);
+        let wv: Vec<i64> = w.iter().map(|&x| x.clamp(-lim, lim - 1)).collect();
+        let inpv = Tensor3 {
+            c: inp.c,
+            h: inp.h,
+            w: inp.w,
+            data: inp.data.iter().map(|&x| x.clamp(-lim, lim - 1)).collect(),
+        };
+        let sav = SystolicArray::new(SaConfig::paper_prototype(v, PeArch::MultiPack)).unwrap();
+        let planev = sav.pack_plane(&big, &wv).unwrap();
+        let golden = sav.run_conv(&big, &wv, &inpv).unwrap();
+        for isa in Isa::supported() {
+            Isa::set_override(Some(isa));
+            let run = sav.run_conv_batch_with_plane(&big, &planev, &inpv).unwrap();
+            assert_eq!(
+                run.output,
+                golden.output,
+                "{v}-bit multi-lane ISA rung {} diverged",
+                isa.name()
+            );
+            suite.bench(
+                &format!("cmp-layer run_conv_batch MP {v}-bit (isa={})", isa.name()),
+                big_macs,
+                || sav.run_conv_batch_with_plane(&big, &planev, &inpv).unwrap().mults,
+            );
+        }
+        Isa::set_override(None);
+    }
     let reps = if std::env::var("SDMM_BENCH_FAST").is_ok() { 3 } else { 7 };
     let t_scalar = median_secs(reps, || sa.run_conv(&big, &w, &inp).unwrap());
     let t_batch = median_secs(reps, || {

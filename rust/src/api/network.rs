@@ -338,7 +338,9 @@ pub struct FcStage {
     /// compiled with `skip_stats` or loaded from an artifact).
     pub stats: ErrorStats,
     /// DSP block operations one forward pass of this stage stands for
-    /// (`ceil(in_f · out_f / kw)` — kw weights share one DSP op).
+    /// (`ceil(in_f · out_f / (kw·ki))` — kw weight slots × ki input
+    /// lanes share one DSP op under the dense multi-lane mapping; FC
+    /// features are all distinct inputs, so every lane fills).
     pub dsp_ops: u64,
 }
 
@@ -421,7 +423,9 @@ impl NetworkPlan {
         let pools = pool_schedule(&model.convs, model.fcs.first().map(|f| f.0))?;
         let layout = compiler.layout();
         let (v_bits, c_bits) = (layout.v, layout.c);
-        let kw = layout.kw() as u64;
+        // Dense multi-lane accounting: one DSP op carries kw·ki
+        // products (every FC feature is a distinct input).
+        let k_dense = (layout.kw() * layout.ki()) as u64;
 
         let mut stages = Vec::with_capacity(model.convs.len());
         for (i, (layer, w)) in model.convs.iter().zip(conv_weights).enumerate() {
@@ -481,7 +485,7 @@ impl NetworkPlan {
                 out_f,
                 weights: approximate_weights(src, c_bits),
                 stats,
-                dsp_ops: (feat as u64).div_ceil(kw),
+                dsp_ops: (feat as u64).div_ceil(k_dense),
             });
         }
 
@@ -776,7 +780,10 @@ impl NetworkPlan {
             stages.push(NetworkStage { model, pool, guard });
         }
         let c_bits = stages[0].model.layers[0].plane.layout.c;
-        let kw = stages[0].model.layers[0].plane.layout.kw() as u64;
+        // Must mirror the compile-time accounting exactly for artifact
+        // round-trips: kw·ki products per DSP op (dense multi-lane).
+        let layout0 = &stages[0].model.layers[0].plane.layout;
+        let k_dense = (layout0.kw() * layout0.ki()) as u64;
 
         let mut fcs = Vec::new();
         for (fj, f) in j
@@ -831,7 +838,7 @@ impl NetworkPlan {
                 out_f,
                 weights,
                 stats: approximation_error_table(&[], c_bits),
-                dsp_ops: (feat as u64).div_ceil(kw),
+                dsp_ops: (feat as u64).div_ceil(k_dense),
             });
         }
 

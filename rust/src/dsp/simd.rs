@@ -221,6 +221,34 @@ pub fn p_words_lane0_on(isa: Isa, t: &PreparedTuple, p: &[u64], neg: &[u64], out
     }
 }
 
+/// Lane-parallel raw P words for a dense **multi-lane** input stream —
+/// ki distinct inputs per group, `p`/`neg` lane-major with stride
+/// `out.len()` (the `BatchLanes` layout) — dispatched on
+/// [`Isa::active`]. Bit-identical to [`PreparedTuple::p_words_multi`],
+/// the scalar reference. Unlike the lane-0 kernel this assembles the
+/// full B word (per-lane shift+OR at the layout's `b_offsets`),
+/// accumulates the C corrections per (active slot, lane), and applies
+/// the `2^43·a24·b17` bias — the 4-bit top lane reaches B bit 17.
+/// Idle (zero) lanes contribute nothing, so zero-padded tail groups
+/// are sound.
+pub fn p_words_multi(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+    p_words_multi_on(Isa::active(), t, p, neg, out)
+}
+
+/// [`p_words_multi`] pinned to one rung (clamped to the host's best).
+pub fn p_words_multi_on(isa: Isa, t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+    match isa.min(Isa::detect()) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: rung clamped to Isa::detect(), so the required
+        // features are present.
+        Isa::Avx2 => unsafe { x86::p_words_multi_avx2(t, p, neg, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::p_words_multi_sse41(t, p, neg, out) },
+        _ => t.p_words_multi(p, neg, out),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // ReLU
 // ---------------------------------------------------------------------------
@@ -472,6 +500,94 @@ mod x86 {
         }
         if g < n {
             t.p_words_lane0(&p[g..n], &neg[g..n], &mut out[g..n]);
+        }
+    }
+
+    /// Multi-lane P words, 4 groups per iteration. Per input lane i the
+    /// kernel loads the contiguous lane-major stream, ORs `pv << boff_i`
+    /// into B, and accumulates the (slot, lane) corrections
+    /// `nv & (NEG_s << boff_i)` + `(pv >> n_s) << (aoff_s + boff_i)`
+    /// into C (constants hoisted by LLVM — they are loop-invariant).
+    /// The product `A·B` stays a single `mul_epu32`: A < 2^25 and the
+    /// full B word < 2^18 both fit the low dwords. The bias term
+    /// isolates B bit 17 (`a24` ∈ {0, 1}, so the AND selects it).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn p_words_multi_avx2(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        let groups = out.len();
+        let ki = t.ki();
+        let a = _mm256_set1_epi64x(t.a_word as i64);
+        let m48 = _mm256_set1_epi64x(mask(48) as i64);
+        let a24 = _mm256_set1_epi64x(t.a24 as i64);
+        let mut g = 0usize;
+        while g + 4 <= groups {
+            let mut b = _mm256_setzero_si256();
+            let mut c = _mm256_setzero_si256();
+            for i in 0..ki {
+                let boff = t.b_offsets[i];
+                let pv = _mm256_loadu_si256(p.as_ptr().add(i * groups + g) as *const __m256i);
+                let nv = _mm256_loadu_si256(neg.as_ptr().add(i * groups + g) as *const __m256i);
+                b = _mm256_or_si256(b, _mm256_sll_epi64(pv, _mm_cvtsi32_si128(boff as i32)));
+                for s in 0..t.n_active {
+                    let negw = _mm256_set1_epi64x((t.act_neg[s] << boff) as i64);
+                    c = _mm256_add_epi64(c, _mm256_and_si256(nv, negw));
+                    let sh = _mm256_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
+                    let sh =
+                        _mm256_sll_epi64(sh, _mm_cvtsi32_si128((t.act_aoff[s] + boff) as i32));
+                    c = _mm256_add_epi64(c, sh);
+                }
+            }
+            let prod = _mm256_mul_epu32(a, b);
+            let bias = _mm256_sll_epi64(
+                _mm256_and_si256(_mm256_srl_epi64(b, _mm_cvtsi32_si128(17)), a24),
+                _mm_cvtsi32_si128(43),
+            );
+            let res = _mm256_and_si256(
+                _mm256_add_epi64(_mm256_add_epi64(prod, c), bias),
+                m48,
+            );
+            _mm256_storeu_si256(out.as_mut_ptr().add(g) as *mut __m256i, res);
+            g += 4;
+        }
+        if g < groups {
+            t.p_words_multi_strided(p, neg, groups, g, &mut out[g..]);
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn p_words_multi_sse41(t: &PreparedTuple, p: &[u64], neg: &[u64], out: &mut [u64]) {
+        let groups = out.len();
+        let ki = t.ki();
+        let a = _mm_set1_epi64x(t.a_word as i64);
+        let m48 = _mm_set1_epi64x(mask(48) as i64);
+        let a24 = _mm_set1_epi64x(t.a24 as i64);
+        let mut g = 0usize;
+        while g + 2 <= groups {
+            let mut b = _mm_setzero_si128();
+            let mut c = _mm_setzero_si128();
+            for i in 0..ki {
+                let boff = t.b_offsets[i];
+                let pv = _mm_loadu_si128(p.as_ptr().add(i * groups + g) as *const __m128i);
+                let nv = _mm_loadu_si128(neg.as_ptr().add(i * groups + g) as *const __m128i);
+                b = _mm_or_si128(b, _mm_sll_epi64(pv, _mm_cvtsi32_si128(boff as i32)));
+                for s in 0..t.n_active {
+                    let negw = _mm_set1_epi64x((t.act_neg[s] << boff) as i64);
+                    c = _mm_add_epi64(c, _mm_and_si128(nv, negw));
+                    let sh = _mm_srl_epi64(pv, _mm_cvtsi32_si128(t.act_n[s] as i32));
+                    let sh = _mm_sll_epi64(sh, _mm_cvtsi32_si128((t.act_aoff[s] + boff) as i32));
+                    c = _mm_add_epi64(c, sh);
+                }
+            }
+            let prod = _mm_mul_epu32(a, b);
+            let bias = _mm_sll_epi64(
+                _mm_and_si128(_mm_srl_epi64(b, _mm_cvtsi32_si128(17)), a24),
+                _mm_cvtsi32_si128(43),
+            );
+            let res = _mm_and_si128(_mm_add_epi64(_mm_add_epi64(prod, c), bias), m48);
+            _mm_storeu_si128(out.as_mut_ptr().add(g) as *mut __m128i, res);
+            g += 2;
+        }
+        if g < groups {
+            t.p_words_multi_strided(p, neg, groups, g, &mut out[g..]);
         }
     }
 
@@ -925,6 +1041,43 @@ mod tests {
             let (want, _) = infer::requantize(&t, bits);
             for &isa in &Isa::supported() {
                 assert_eq!(requantize_on(isa, &t, bits).0, want, "isa={isa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn p_words_multi_rungs_match_scalar_all_layouts() {
+        use crate::packing::{pack_approx, Layout};
+        let mut rng = Rng::new(11);
+        for v in [8u32, 6, 4] {
+            let l = Layout::for_bits(v).unwrap();
+            let ki = l.ki();
+            let lim = 1i64 << (v - 1);
+            for round in 0..20 {
+                let ws: Vec<i64> = (0..l.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                let t = pack_approx(&l, &ws).unwrap();
+                let pt = PreparedTuple::prepare(&t);
+                // Dense multi-lane stream, lane-major with stride =
+                // group count; odd group counts exercise the strided
+                // scalar tails of both vector rungs.
+                let groups = 63 + round % 3;
+                let xs: Vec<i64> = (0..groups * ki)
+                    .map(|_| rng.range_i64(-lim, lim - 1))
+                    .collect();
+                let mut p = vec![0u64; ki * groups];
+                let mut neg = vec![0u64; ki * groups];
+                for (f, &x) in xs.iter().enumerate() {
+                    let idx = (f % ki) * groups + f / ki;
+                    p[idx] = crate::util::bits::zext(x, v);
+                    neg[idx] = if x < 0 { u64::MAX } else { 0 };
+                }
+                let mut want = vec![0u64; groups];
+                pt.p_words_multi(&p, &neg, &mut want);
+                for &isa in &Isa::supported() {
+                    let mut got = vec![0u64; groups];
+                    p_words_multi_on(isa, &pt, &p, &neg, &mut got);
+                    assert_eq!(got, want, "isa={isa:?} v={v} ws={ws:?}");
+                }
             }
         }
     }

@@ -350,7 +350,11 @@ impl PackedPlane {
 
     /// Execute the convolution this plane was built for on the batch
     /// engine: lane-parallel over output pixels, thread-parallel over
-    /// output-channel tiles. Returns the output tensor plus the DSP-op
+    /// output-channel tiles. For ki > 1 layouts (6/4-bit) every input
+    /// lane is filled with a distinct output pixel — one P word carries
+    /// ki×kw products, so the DSP-op count drops to `ceil(n_pix/ki)`
+    /// per (tap, tuple) — and the dense multi-lane SIMD kernel runs
+    /// the whole stream. Returns the output tensor plus the DSP-op
     /// and multiplication counts the run stands in for (identical to
     /// the scalar simulator's accounting). Bit-exact with
     /// `conv2d_int(input, plane.effective_weights(layer), layer)`.
@@ -378,27 +382,45 @@ impl PackedPlane {
             self.tiles.iter().all(|t| t.prepared.len() == t.tuples.len()),
             "plane built without batch forms (use PackedPlane::build, not build_scalar)"
         );
+        let ki = self.layout.ki();
         let results = crate::util::par::par_map(self.tiles.len(), |ti| {
             let tile = &self.tiles[ti];
             let mut engine = BatchEngine::new();
             let mut acc = vec![0i64; tile.gg * n_pix];
             let mut xs = vec![0i64; n_pix];
-            let mut lanes = BatchLanes::pack_lane0(&self.layout, &xs);
+            // ki = 1: the classic dense lane-0 stream. ki > 1: dense
+            // multi-lane — consecutive output pixels fill the input
+            // lanes, so each tap needs only ceil(n_pix/ki) P words.
+            let mut lanes = if ki == 1 {
+                BatchLanes::pack_lane0(&self.layout, &xs)
+            } else {
+                BatchLanes::pack_multi(&self.layout, &xs)
+            };
             let mut scratch: Vec<u64> = Vec::with_capacity(n_pix);
             let mut mults = 0u64;
             for ic in 0..icg {
                 for ky in 0..k {
                     for kx in 0..k {
                         gather_tap(input, layer, tile.grp * icg + ic, ky, kx, &mut xs);
-                        lanes.repack_lane0(&xs);
+                        if ki == 1 {
+                            lanes.repack_lane0(&xs);
+                        } else {
+                            lanes.repack_multi(&xs);
+                        }
                         let tap = (ic * k + ky) * k + kx;
                         let prepared = self.tap_prepared(ti, tap);
                         let mut j = 0;
                         for pt in prepared {
                             let take = kw.min(tile.gg - j);
-                            engine.accumulate_lane0(
-                                pt, &lanes, &mut scratch, &mut acc, j, n_pix, take,
-                            );
+                            if ki == 1 {
+                                engine.accumulate_lane0(
+                                    pt, &lanes, &mut scratch, &mut acc, j, n_pix, take,
+                                );
+                            } else {
+                                engine.accumulate_multi(
+                                    pt, &lanes, &mut scratch, &mut acc, j, n_pix, take,
+                                );
+                            }
                             mults += (take * n_pix) as u64;
                             j += take;
                         }
@@ -425,7 +447,11 @@ impl PackedPlane {
     /// [`SdmmEngine`]: every product goes through the DSP48E1 model
     /// (toggle statistics accumulate on the caller's engine — the power
     /// model's input). Bit-identical outputs and op accounting to
-    /// [`execute_conv`](Self::execute_conv); one tuple per DSP op.
+    /// [`execute_conv`](Self::execute_conv); one tuple per DSP op. The
+    /// dense mapping is the same one the batch path uses: for ki > 1
+    /// layouts each DSP op carries ki consecutive output pixels in its
+    /// input lanes (the final pixel group zero-padded), so a tap costs
+    /// `ceil(n_pix/ki)` ops per tuple rather than `n_pix`.
     ///
     /// This is the one scalar conv loop in the crate: the systolic
     /// array's [`run_conv`](crate::sa::SystolicArray::run_conv) and the
@@ -440,6 +466,7 @@ impl PackedPlane {
         assert_eq!(input.c, layer.in_ch);
         assert_eq!(input.h, layer.in_hw);
         let o_hw = layer.out_hw();
+        let n_pix = o_hw * o_hw;
         let icg = layer.in_ch / layer.groups;
         let kk = layer.kernel;
         let kw = self.layout.kw();
@@ -448,23 +475,32 @@ impl PackedPlane {
         let mut dsp_ops = 0u64;
         let mut mults = 0u64;
         for (ti, tile) in self.tiles.iter().enumerate() {
-            // Heap accumulator sized to the tile: group sizes are not
-            // bounded by the paper's 3/4/6 (Compiler::with_group), so a
-            // fixed small array would be an overflow panic waiting.
-            let mut acc = vec![0i64; tile.gg];
-            for oy in 0..o_hw {
-                for ox in 0..o_hw {
-                    acc.fill(0);
-                    for ic in 0..icg {
-                        for ky in 0..kk {
-                            for kx in 0..kk {
+            // Heap accumulator sized to the tile × lane group: group
+            // sizes are not bounded by the paper's 3/4/6
+            // (Compiler::with_group), so a fixed small array would be
+            // an overflow panic waiting.
+            let mut acc = vec![0i64; tile.gg * ki];
+            // Walk the flat output-pixel grid in lane groups of ki.
+            let mut pg0 = 0usize;
+            while pg0 < n_pix {
+                let gcount = ki.min(n_pix - pg0);
+                acc.fill(0);
+                for ic in 0..icg {
+                    for ky in 0..kk {
+                        for kx in 0..kk {
+                            // One tap value per live lane (consecutive
+                            // output pixels); padding taps stream a zero
+                            // through the datapath (the hardware does
+                            // multiply them), so they count as real
+                            // multiplications. Lanes past `gcount` are
+                            // the zero-padded tail group and count as
+                            // nothing.
+                            let mut inputs = [0i64; 4];
+                            for (i, inp) in inputs.iter_mut().enumerate().take(gcount) {
+                                let (oy, ox) = ((pg0 + i) / o_hw, (pg0 + i) % o_hw);
                                 let iy = (oy * layer.stride + ky) as i64 - layer.pad as i64;
                                 let ix = (ox * layer.stride + kx) as i64 - layer.pad as i64;
-                                // padding taps stream a zero through the
-                                // datapath (the hardware does multiply
-                                // them), so they count as real
-                                // multiplications
-                                let x = if iy < 0
+                                *inp = if iy < 0
                                     || iy >= input.h as i64
                                     || ix < 0
                                     || ix >= input.w as i64
@@ -473,35 +509,37 @@ impl PackedPlane {
                                 } else {
                                     input.at(tile.grp * icg + ic, iy as usize, ix as usize)
                                 };
-                                let tap = (ic * kk + ky) * kk + kx;
-                                let tuples = self.tap_tuples(ti, tap);
-                                // replicate x across the ki input lanes
-                                // (same pixel)
-                                let mut inputs = [0i64; 4];
-                                inputs[..ki].fill(x);
-                                let mut prods = [0i64; 8];
-                                let mut j = 0;
-                                for tuple in tuples {
-                                    let take = kw.min(tile.gg - j);
-                                    engine.execute_into(
-                                        tuple,
-                                        &inputs[..ki],
-                                        &mut prods[..kw * ki],
-                                    );
-                                    dsp_ops += 1;
-                                    for t in 0..take {
-                                        acc[j + t] += prods[t * ki];
+                            }
+                            let tap = (ic * kk + ky) * kk + kx;
+                            let tuples = self.tap_tuples(ti, tap);
+                            let mut prods = [0i64; 8];
+                            let mut j = 0;
+                            for tuple in tuples {
+                                let take = kw.min(tile.gg - j);
+                                engine.execute_into(
+                                    tuple,
+                                    &inputs[..ki],
+                                    &mut prods[..kw * ki],
+                                );
+                                dsp_ops += 1;
+                                for t in 0..take {
+                                    for i in 0..gcount {
+                                        acc[(j + t) * ki + i] += prods[t * ki + i];
                                         mults += 1;
                                     }
-                                    j += take;
                                 }
+                                j += take;
                             }
                         }
                     }
-                    for (j, &a) in acc.iter().enumerate() {
-                        out.set(tile.oc0 + j, oy, ox, a);
+                }
+                for j in 0..tile.gg {
+                    for i in 0..gcount {
+                        let (oy, ox) = ((pg0 + i) / o_hw, (pg0 + i) % o_hw);
+                        out.set(tile.oc0 + j, oy, ox, acc[j * ki + i]);
                     }
                 }
+                pg0 += gcount;
             }
         }
         (out, dsp_ops, mults)

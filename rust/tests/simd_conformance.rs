@@ -3,15 +3,20 @@
 //!
 //! Four legs:
 //!
-//! 1. **Seeded sweep** (N = 512 random planes): every stage kind the
-//!    inference pipeline vectorizes — SDMM multiply (P words), ReLU,
-//!    2×2 maxpool, symmetric requantization, FC head — diffed
-//!    bit-for-bit against its scalar reference on every dispatch rung
-//!    the host supports, via the rung-pinned `*_on` kernel variants
-//!    (no global state, safe under parallel test threads).
+//! 1. **Seeded sweeps** (N = 512 random planes each): every stage kind
+//!    the inference pipeline vectorizes — SDMM multiply (P words, both
+//!    the dense lane-0 stream and the dense multi-lane stream with ki
+//!    distinct inputs per group), ReLU, 2×2 maxpool, symmetric
+//!    requantization, FC head — diffed bit-for-bit against its scalar
+//!    reference on every dispatch rung the host supports, via the
+//!    rung-pinned `*_on` kernel variants (no global state, safe under
+//!    parallel test threads). The multi-lane sweep checks two
+//!    independent oracles: the per-group `p_word` kernel and the
+//!    port-accurate `SdmmEngine`.
 //! 2. **Sign-correction port edges**: exhaustive input enumeration for
 //!    tuples that toggle the DSP48E1 `a24`/`b17` sign bits, against the
-//!    port-accurate `SdmmEngine` oracle.
+//!    port-accurate `SdmmEngine` oracle — once through the dispatched
+//!    batch path, once rung-pinned through `p_words_multi_on`.
 //! 3. **End-to-end**: `InferenceSession` over random networks ×
 //!    {8, 6, 4} bits × every `CompressionPolicy`, against the fully
 //!    scalar `ReferenceNet` (which never touches the SIMD tier — the
@@ -177,6 +182,139 @@ fn seeded_sweep_512_planes_scalar_vs_simd_all_stage_kinds() {
             );
         }
     }
+}
+
+/// Independently-built lane-major streams for a dense multi-lane
+/// packing (the documented `BatchLanes::pack_multi` layout, rebuilt so
+/// the test does not trust the packer it is checking): lane i of group
+/// g at `p[i * groups + g]`, tail group zero-padded.
+fn multi_streams(xs: &[i64], ki: usize, v: u32) -> (Vec<u64>, Vec<u64>, usize) {
+    let groups = xs.len().div_ceil(ki);
+    let vmask = (1u64 << v) - 1;
+    let mut p = vec![0u64; ki * groups];
+    let mut neg = vec![0u64; ki * groups];
+    for (f, &x) in xs.iter().enumerate() {
+        let idx = (f % ki) * groups + f / ki;
+        p[idx] = (x as u64) & vmask;
+        neg[idx] = if x < 0 { u64::MAX } else { 0 };
+    }
+    (p, neg, groups)
+}
+
+#[test]
+fn seeded_sweep_512_multi_lane_every_rung_vs_p_word_and_engine() {
+    // The dense multi-lane leg of leg 1: N = 512 random planes with ki
+    // *distinct* inputs per group (the 6/4-bit conv mapping), every
+    // rung's `p_words_multi_on` diffed against BOTH scalar oracles —
+    // the per-group `PreparedTuple::p_word` and the port-accurate
+    // `SdmmEngine` — plus the dispatched `execute_raw_batch` path over
+    // `BatchLanes::pack_multi` (zero-padded tails included).
+    let rungs = Isa::supported();
+    let mut rng = Rng::new(0x3A9E_51D);
+    for round in 0..512u64 {
+        let bits = [8u32, 6, 4][(round % 3) as usize];
+        let lim = 1i64 << (bits - 1);
+        let layout = Layout::for_bits(bits).unwrap();
+        let ki = layout.ki();
+        let ws: Vec<i64> = (0..layout.kw())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let tuple = pack_approx(&layout, &ws).unwrap();
+        let pt = PreparedTuple::prepare(&tuple);
+        // Lengths off the ki boundary exercise the padded tail group
+        // and, with odd group counts, the vector kernels' scalar tails.
+        let n = 1 + rng.below(96) as usize;
+        let xs: Vec<i64> = (0..n).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+        let (p, neg, groups) = multi_streams(&xs, ki, bits);
+
+        // Oracle 1: the port-accurate engine over zero-padded groups.
+        let mut padded = xs.clone();
+        padded.resize(groups * ki, 0);
+        let mut engine = SdmmEngine::new();
+        let want = scalar_raw_reference(&mut engine, &tuple, &padded);
+        // Oracle 2: the per-group p_word kernel must agree with it.
+        for (g, group) in padded.chunks(ki).enumerate() {
+            let (gp, gneg, _) = multi_streams(group, ki, bits);
+            assert_eq!(
+                pt.p_word(&gp, &gneg),
+                want[g],
+                "round {round}: p_word oracle disagrees with engine (bits {bits})"
+            );
+        }
+        for &isa in &rungs {
+            let mut got = vec![0u64; groups];
+            simd::p_words_multi_on(isa, &pt, &p, &neg, &mut got);
+            assert_eq!(
+                got,
+                want,
+                "round {round}: p_words_multi rung {} diverged (bits {bits}, ws {ws:?})",
+                isa.name()
+            );
+        }
+        // The dispatched batch path over the real packer agrees too.
+        let lanes = BatchLanes::pack_multi(&layout, &xs);
+        assert_eq!(lanes.groups(), groups);
+        assert_eq!(lanes.real(), n);
+        let mut got = vec![0u64; groups];
+        BatchEngine::new().execute_raw_batch(&pt, &lanes, &mut got);
+        assert_eq!(got, want, "round {round}: dispatched pack_multi path diverged");
+    }
+}
+
+#[test]
+fn multi_lane_sign_correction_edges_every_rung_exhaustive() {
+    // Rung-pinned twin of the dispatched edge sweep below: for tuples
+    // that toggle the DSP48E1 `a24` sign bit and layouts whose lanes
+    // can toggle `b17` (4-bit lane 2: zext(-x, 4) << 14 reaches bit
+    // 17), every ki-lane input combination is enumerated odometer-style
+    // and `p_words_multi_on` is diffed per rung against the
+    // port-accurate engine — per-lane sign edges included by
+    // construction, since every lane sweeps its full signed range.
+    let cases: [(u32, &[i64]); 4] = [
+        (8, &[1, 1, 15]),
+        (8, &[-100, 44, 15]),
+        (6, &[5, -3]),
+        (4, &[5, -3]),
+    ];
+    let rungs = Isa::supported();
+    let (mut saw_a24, mut saw_b17) = (false, false);
+    for (bits, ws) in cases {
+        let layout = Layout::for_bits(bits).unwrap();
+        let tuple = pack_approx(&layout, ws).unwrap();
+        let pt = PreparedTuple::prepare(&tuple);
+        saw_a24 |= (tuple.a_word >> 24) & 1 == 1;
+        let lim = 1i64 << (bits - 1);
+        let ki = layout.ki();
+        let per_lane = (2 * lim) as usize;
+        let total = per_lane.pow(ki as u32);
+        let mut full = Vec::with_capacity(total * ki);
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut group = vec![0i64; ki];
+            for lane in group.iter_mut() {
+                *lane = (rem % per_lane) as i64 - lim;
+                rem /= per_lane;
+            }
+            saw_b17 |= (tuple.layout.b_word(&group) >> 17) & 1 == 1;
+            full.extend_from_slice(&group);
+        }
+        let mut engine = SdmmEngine::new();
+        let want = scalar_raw_reference(&mut engine, &tuple, &full);
+        let (p, neg, groups) = multi_streams(&full, ki, bits);
+        assert_eq!(groups, total);
+        for &isa in &rungs {
+            let mut got = vec![0u64; total];
+            simd::p_words_multi_on(isa, &pt, &p, &neg, &mut got);
+            assert_eq!(
+                got,
+                want,
+                "multi-lane edge diverged ({bits} bit, ws {ws:?}, rung {})",
+                isa.name()
+            );
+        }
+    }
+    assert!(saw_a24, "edge set never toggled a24 — cases need rework");
+    assert!(saw_b17, "edge set never toggled b17 — cases need rework");
 }
 
 #[test]
