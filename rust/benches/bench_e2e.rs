@@ -28,12 +28,18 @@
 //! persistent connection — a single interactive round-trip per
 //! iteration, then a pipelined batch of 16 batch-QoS requests per
 //! iteration (EXPERIMENTS.md §Open-loop serving protocol).
+//!
+//! Part 8 (default run): the packing-generation matrix — one BatchExec
+//! conv row per generation (DSP48E1 baseline / overpacked / DSP58) at
+//! 8 and 6 bits, each gated scalar≡batch bit-exact, asserting the
+//! overpacked generation's strictly-fewer-DSP-ops acceptance bound
+//! before timing.
 
 use sdmm::api::{ApproxPolicy, BatchExec, Compiler, Executor, ScalarExec, SystolicExec};
 use sdmm::cnn::infer::{relu, requantize, Tensor3};
 use sdmm::cnn::zoo::ConvLayer;
 use sdmm::coordinator::{ModelKey, ModelRegistry, ModelSpec, ServingConfig, ServingRuntime};
-use sdmm::dsp::Isa;
+use sdmm::dsp::{Isa, PackGeneration};
 use sdmm::report::serving_summary;
 use sdmm::sa::{PeArch, SaConfig, SystolicArray};
 use sdmm::util::bench::{write_snapshot, BenchSuite};
@@ -123,6 +129,7 @@ fn main() {
     } else {
         bench_native(&mut suite);
         bench_isa_matrix(&mut suite);
+        bench_generations(&mut suite);
         serving(&mut suite);
         // Part 7 rides in the default run too: the perf-trajectory
         // gate snapshots this invocation, so the daemon rows are only
@@ -196,6 +203,70 @@ fn bench_isa_matrix(suite: &mut BenchSuite) {
             );
         }
         Isa::set_override(None);
+    }
+}
+
+/// Part 8: the packing-generation matrix — one
+/// `conv e2e (BatchExec, {bits}-bit, gen={name})` row per generation
+/// at 8 and 6 bits, the widths where the overpacked 4-/6-pack carries
+/// more slots than the DSP48E1 baseline. Each generation is gated
+/// scalar≡batch bit-exact before timing, and the run asserts the
+/// acceptance inequality directly: at equal width and identical
+/// workload the overpacked generation must issue strictly fewer DSP
+/// ops than the baseline. On first capture these rows show up as
+/// `added` in `bench-diff` (added rows never fail the gate); they join
+/// the committed `BENCH_e2e.json` trajectory at the next snapshot
+/// refresh.
+fn bench_generations(suite: &mut BenchSuite) {
+    let mut rng = Rng::new(29);
+    for &bits in &[8u32, 6] {
+        let lim = 1i64 << (bits - 1);
+        let layers = vec![
+            ConvLayer::new("p1", 12, 8, 16, 3, 1, 1, 1),
+            ConvLayer::new("p2", 12, 16, 16, 3, 1, 1, 1),
+        ];
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect())
+            .collect();
+        let mut input = Tensor3::zeros(layers[0].in_ch, layers[0].in_hw, layers[0].in_hw);
+        input.data = (0..input.data.len())
+            .map(|_| rng.range_i64(-lim, lim - 1))
+            .collect();
+        let macs: u64 = layers.iter().map(|l| l.macs()).sum();
+        let mut dsp_ops = std::collections::BTreeMap::new();
+        for generation in PackGeneration::ALL {
+            let model = Compiler::for_generation(generation, bits)
+                .unwrap()
+                .approximate(ApproxPolicy { skip_stats: true, ..ApproxPolicy::nearest() })
+                .pack_model("bench-gen", &layers, &weights)
+                .unwrap();
+            let mut scalar = ScalarExec::new();
+            let mut batch = BatchExec::new();
+            let golden = scalar.run(&model, &input).unwrap();
+            let out = batch.run(&model, &input).unwrap();
+            assert_eq!(
+                out.output, golden.output,
+                "{bits}-bit gen={generation}: batch diverged from scalar"
+            );
+            dsp_ops.insert(generation.name(), out.dsp_ops);
+            suite.bench(
+                &format!("conv e2e (BatchExec, {bits}-bit, gen={})", generation.name()),
+                macs as f64,
+                || batch.run(&model, &input).unwrap().output.data[0],
+            );
+        }
+        assert!(
+            dsp_ops["overpacked"] < dsp_ops["dsp48e1"],
+            "{bits}-bit: overpacked must use strictly fewer DSP ops than the baseline \
+             ({} vs {})",
+            dsp_ops["overpacked"],
+            dsp_ops["dsp48e1"],
+        );
+        println!(
+            "  -> {bits}-bit DSP ops/inference: dsp48e1 {}, overpacked {}, dsp58 {}",
+            dsp_ops["dsp48e1"], dsp_ops["overpacked"], dsp_ops["dsp58"]
+        );
     }
 }
 

@@ -7,10 +7,10 @@ use crate::cnn::zoo::ConvLayer;
 use crate::compress::{
     prune_magnitude, CompressedPlane, CompressionPolicy, DEFAULT_PRUNE_SPARSITY,
 };
+use crate::dsp::PackGeneration;
 use crate::error::{Result, SdmmError};
-use crate::manip::approximation_error_table;
+use crate::manip::approximation_error_table_in;
 use crate::packing::{pack_approx, pack_exact, Layout, PackedPlane, PackedTuple, Wrom};
-use crate::sa::PeArch;
 use std::sync::Arc;
 
 /// How weights map onto representable SDMM magnitudes.
@@ -99,8 +99,30 @@ impl Compiler<NeedsPolicy> {
     /// Start a compile with distinct weight (`c`) and input (`v`) bit
     /// widths (the paper's Table 2 (W,I) grid).
     pub fn for_bits_wc(c: u32, v: u32) -> Result<Compiler<NeedsPolicy>> {
-        let layout = Layout::for_bits_wc(c, v)?;
-        let group = PeArch::MultiPack.mults_per_dsp(v);
+        Self::for_generation_wc(PackGeneration::Dsp48E1, c, v)
+    }
+
+    /// Start a compile for `v`-bit operands on an explicit packing
+    /// generation — the DSP48E1 baseline, the DSP-Packing-style
+    /// overpacked scheme, or the DSP58 wide-pack (see
+    /// [`PackGeneration`]). `for_bits` is `for_generation` at the
+    /// baseline generation.
+    pub fn for_generation(generation: PackGeneration, v: u32) -> Result<Compiler<NeedsPolicy>> {
+        Self::for_generation_wc(generation, v, v)
+    }
+
+    /// [`for_generation`](Self::for_generation) with distinct weight
+    /// (`c`) and input (`v`) bit widths.
+    pub fn for_generation_wc(
+        generation: PackGeneration,
+        c: u32,
+        v: u32,
+    ) -> Result<Compiler<NeedsPolicy>> {
+        let layout = Layout::for_generation_wc(generation, c, v)?;
+        // Output channels per DSP = multiplications per DSP op. At the
+        // baseline this is the paper's 3/4/6 grouping; other
+        // generations carry their own k.
+        let group = layout.k();
         Ok(Compiler {
             layout,
             group,
@@ -218,10 +240,13 @@ impl Compiler<Ready> {
             ));
         }
         let plane = PackedPlane::build(&self.layout, self.group, weights, layer)?;
+        // The stats sweep must mirror the packing math: overpacked
+        // layouts approximate against the 2-bit MW set, not the
+        // baseline 3-bit one.
         let stats = if self.state.policy.skip_stats {
-            approximation_error_table(&[], self.layout.c)
+            approximation_error_table_in(&[], self.layout.c, self.layout.mw_bits)
         } else {
-            approximation_error_table(weights, self.layout.c)
+            approximation_error_table_in(weights, self.layout.c, self.layout.mw_bits)
         };
         Ok(CompiledLayer {
             layer: layer.clone(),
@@ -248,6 +273,17 @@ impl Compiler<Ready> {
     ) -> Result<CompiledModel> {
         if layers.is_empty() {
             return Err(SdmmError::InvalidModel(format!("model {name} has no layers")));
+        }
+        if self.state.compression.compresses()
+            && self.layout.generation != PackGeneration::Dsp48E1
+        {
+            // The WROM interns paper-form (MW, n, s) entries with 3-bit
+            // MW fields; overpacked/DSP58 tuples do not round-trip
+            // through it, so compression stays a baseline-only stage.
+            return Err(SdmmError::UnsupportedBackend(format!(
+                "off-chip compression supports the dsp48e1 baseline only (generation {})",
+                self.layout.generation
+            )));
         }
         if weights.len() != layers.len() {
             return Err(SdmmError::InvalidModel(format!(
@@ -337,6 +373,55 @@ mod tests {
     fn paper_group_sizes() {
         for (v, g) in [(8u32, 3usize), (6, 4), (4, 6)] {
             assert_eq!(Compiler::for_bits(v).unwrap().group(), g, "v={v}");
+        }
+    }
+
+    #[test]
+    fn generation_group_sizes_follow_layout_k() {
+        let cases = [
+            (PackGeneration::Overpacked, 8u32, 4usize),
+            (PackGeneration::Overpacked, 6, 6),
+            (PackGeneration::Overpacked, 4, 6),
+            (PackGeneration::Dsp58, 8, 4),
+            (PackGeneration::Dsp58, 6, 4),
+            (PackGeneration::Dsp58, 4, 6),
+        ];
+        for (g, v, k) in cases {
+            let c = Compiler::for_generation(g, v).unwrap();
+            assert_eq!(c.group(), k, "{g} v={v}");
+            assert_eq!(c.layout().generation, g);
+        }
+    }
+
+    #[test]
+    fn generation_pack_model_round_trips() {
+        let layer = ConvLayer::new("c1", 6, 2, 4, 3, 1, 1, 1);
+        let mut rng = Rng::new(9);
+        let w: Vec<i64> =
+            (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let m = Compiler::for_generation(PackGeneration::Overpacked, 8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .pack_model("m", &[layer], std::slice::from_ref(&w))
+            .unwrap();
+        assert_eq!(m.group, 4);
+        assert_eq!(m.layers[0].plane.layout.generation, PackGeneration::Overpacked);
+        // stats swept against the overpacked 2-bit MW set
+        assert_eq!(m.layers[0].stats.count, w.len() as u64);
+    }
+
+    #[test]
+    fn compression_refused_off_baseline() {
+        let layer = ConvLayer::new("c1", 6, 2, 4, 3, 1, 1, 1);
+        let w: Vec<i64> = vec![1; layer.params() as usize];
+        for g in [PackGeneration::Overpacked, PackGeneration::Dsp58] {
+            let err = Compiler::for_generation(g, 8)
+                .unwrap()
+                .approximate(ApproxPolicy::nearest())
+                .compress(CompressionPolicy::Wrc)
+                .pack_model("m", std::slice::from_ref(&layer), std::slice::from_ref(&w))
+                .unwrap_err();
+            assert!(matches!(err, SdmmError::UnsupportedBackend(_)), "{g}: {err}");
         }
     }
 

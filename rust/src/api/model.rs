@@ -4,6 +4,7 @@ use crate::cnn::infer::Tensor3;
 use crate::cnn::zoo::ConvLayer;
 use crate::compress::{CompressedPlane, CompressionPolicy, CompressionRate};
 use crate::coordinator::ModelKey;
+use crate::dsp::PackGeneration;
 use crate::error::{Result, SdmmError};
 use crate::manip::ErrorStats;
 use crate::packing::{PackedPlane, Wrom};
@@ -87,6 +88,17 @@ impl CompiledModel {
         ModelKey::new(&self.name, self.v_bits)
     }
 
+    /// The packing generation the model was compiled for (every layer
+    /// shares one — [`validate_structure`](Self::validate_structure)
+    /// enforces it). An empty hand-assembled model reports the
+    /// baseline.
+    pub fn generation(&self) -> PackGeneration {
+        self.layers
+            .first()
+            .map(|l| l.plane.layout.generation)
+            .unwrap_or(PackGeneration::Dsp48E1)
+    }
+
     /// Expected input tensor shape `(c, h, w)`.
     ///
     /// Panics on a hand-assembled model with no layers;
@@ -164,8 +176,15 @@ impl CompiledModel {
                 )));
             }
         }
+        let generation = self.generation();
         for (i, cl) in self.layers.iter().enumerate() {
             let l = &cl.layer;
+            if cl.plane.layout.generation != generation {
+                return Err(SdmmError::InvalidModel(format!(
+                    "model {} layer {i}: plane packed for generation {}, model is {}",
+                    self.name, cl.plane.layout.generation, generation
+                )));
+            }
             if cl.plane.layout.v != self.v_bits {
                 return Err(SdmmError::InvalidModel(format!(
                     "model {} layer {i}: plane packed at {} bits, model compiled at {} bits",

@@ -99,13 +99,14 @@ use super::compiler::{Compiler, Ready};
 use super::exec::Executor;
 use super::model::CompiledModel;
 use crate::cnn::infer::{
-    acc_fits_48bit, approximate_weights, conv2d_int, fc_int, maxpool2, relu, requantize, Tensor3,
+    acc_fits_48bit, approximate_weights_in, conv2d_int, fc_int, maxpool2, relu, requantize,
+    Tensor3,
 };
 use crate::cnn::zoo::{ConvLayer, Model};
 use crate::compress::{prune_magnitude, CompressionPolicy};
 use crate::dsp::simd;
 use crate::error::{Context, Result, SdmmError};
-use crate::manip::{approximation_error_table, ErrorStats};
+use crate::manip::{approximation_error_table, approximation_error_table_in, ErrorStats};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -475,15 +476,18 @@ impl NetworkPlan {
             } else {
                 wf
             };
+            // FC heads approximate with the same MW set as the conv
+            // planes so a generation's accuracy delta covers the whole
+            // network, not just its conv stages.
             let stats = if compiler.policy().skip_stats {
-                approximation_error_table(&[], c_bits)
+                approximation_error_table_in(&[], c_bits, layout.mw_bits)
             } else {
-                approximation_error_table(src, c_bits)
+                approximation_error_table_in(src, c_bits, layout.mw_bits)
             };
             fcs.push(FcStage {
                 in_f,
                 out_f,
-                weights: approximate_weights(src, c_bits),
+                weights: approximate_weights_in(src, c_bits, layout.mw_bits),
                 stats,
                 dsp_ops: (feat as u64).div_ceil(k_dense),
             });

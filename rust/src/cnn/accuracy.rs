@@ -30,6 +30,7 @@ use super::weights::synth_layer_weights;
 use super::zoo::{tiny_cnn, tiny_imagenet_cnn, Model, ModelKind};
 use crate::api::network::{top1, InferenceSession, NetworkPlan, ReferenceNet};
 use crate::api::{ApproxPolicy, BatchExec, Compiler, Executor};
+use crate::dsp::PackGeneration;
 use crate::error::{Result, SdmmError};
 use crate::manip::{approximation_error_table, ErrorStats};
 use crate::util::rng::Rng;
@@ -177,6 +178,8 @@ pub fn classification_delta(w_bits: u32, a_bits: u32, samples: usize, seed: u64)
 /// One row of the network-level accuracy-delta table (`sdmm eval`).
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkAccuracyRow {
+    /// Packing generation the SDMM plan was compiled for.
+    pub generation: PackGeneration,
     /// Weight/activation bit width of this row.
     pub w_bits: u32,
     /// Images evaluated.
@@ -215,6 +218,25 @@ pub fn network_accuracy_table(samples: usize, seed: u64) -> Result<Vec<NetworkAc
 /// bit level and this protocol measures at the task level.
 pub fn network_accuracy_table_with(
     exec: &mut dyn Executor,
+    samples: usize,
+    seed: u64,
+) -> Result<Vec<NetworkAccuracyRow>> {
+    network_accuracy_table_gen(exec, PackGeneration::Dsp48E1, samples, seed)
+}
+
+/// [`network_accuracy_table_with`] on an explicit packing generation —
+/// one row per weight width in {8, 6, 4}, compiled through
+/// [`Compiler::for_generation`]. The teacher, reference nets, images
+/// and quantized weights are identical across generations (same seed
+/// stream), so rows from different generations are directly
+/// comparable: any difference is the generation's approximation /
+/// truncation model, nothing else. At 4 bits every shipped generation
+/// is exact (the 2-bit MW set {0,1,3} covers all 4-bit magnitudes and
+/// the overpacked 4-bit layout carries no truncation), so the
+/// `sdmm eval` identity gate applies per generation.
+pub fn network_accuracy_table_gen(
+    exec: &mut dyn Executor,
+    generation: PackGeneration,
     samples: usize,
     seed: u64,
 ) -> Result<Vec<NetworkAccuracyRow>> {
@@ -267,7 +289,8 @@ pub fn network_accuracy_table_with(
             .collect();
         let (fcq, _) = quantize_symmetric(&fc_wf, w_bits);
         let quant_net = ReferenceNet::new(&model, wq.clone(), vec![fcq.clone()], w_bits)?;
-        let compiler = Compiler::for_bits(w_bits)?.approximate(ApproxPolicy::nearest());
+        let compiler =
+            Compiler::for_generation(generation, w_bits)?.approximate(ApproxPolicy::nearest());
         let plan = NetworkPlan::compile(&compiler, "tinyimagenet", &model, &wq, &[fcq])?;
         let mut session = InferenceSession::new(&plan, &mut *exec);
 
@@ -290,6 +313,7 @@ pub fn network_accuracy_table_with(
         let err_quant = wrong_q as f64 / samples as f64 * 100.0;
         let err_approx = wrong_a as f64 / samples as f64 * 100.0;
         rows.push(NetworkAccuracyRow {
+            generation,
             w_bits,
             samples,
             top1_agreement: agree as f64 / samples as f64 * 100.0,
@@ -347,5 +371,20 @@ mod tests {
         let r4 = rows.iter().find(|r| r.w_bits == 4).unwrap();
         assert_eq!(r4.top1_agreement, 100.0, "{r4:?}");
         assert_eq!(r4.delta_pp, 0.0, "{r4:?}");
+    }
+
+    #[test]
+    fn network_table_4bit_exact_on_every_generation() {
+        // The 2-bit MW set {0,1,3} covers every 4-bit magnitude and the
+        // overpacked 4-bit layout has no truncation, so the identity
+        // gate holds beyond the baseline.
+        let mut batch = BatchExec::new();
+        for g in [PackGeneration::Overpacked, PackGeneration::Dsp58] {
+            let rows = network_accuracy_table_gen(&mut batch, g, 2, 11).unwrap();
+            let r4 = rows.iter().find(|r| r.w_bits == 4).unwrap();
+            assert_eq!(r4.generation, g, "{r4:?}");
+            assert_eq!(r4.top1_agreement, 100.0, "{g}: {r4:?}");
+            assert_eq!(r4.delta_pp, 0.0, "{g}: {r4:?}");
+        }
     }
 }

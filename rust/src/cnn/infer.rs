@@ -9,7 +9,7 @@
 
 use super::quant::{quantize_symmetric, QuantParams};
 use super::zoo::ConvLayer;
-use crate::manip::approximate_signed;
+use crate::manip::approximate_signed_in;
 
 /// A [C, H, W] integer tensor.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -49,9 +49,15 @@ impl Tensor3 {
 /// Replace every quantized weight with its approximated value
 /// (Eq. 4 + sign) — the transformation the SDMM hardware applies.
 pub fn approximate_weights(qweights: &[i64], c_bits: u32) -> Vec<i64> {
+    approximate_weights_in(qweights, c_bits, 3)
+}
+
+/// [`approximate_weights`] under an explicit MW field width — the
+/// overpacked generation approximates into the 2-bit `{0, 1, 3}` set.
+pub fn approximate_weights_in(qweights: &[i64], c_bits: u32, mw_bits: u32) -> Vec<i64> {
     qweights
         .iter()
-        .map(|&w| match approximate_signed(w, c_bits) {
+        .map(|&w| match approximate_signed_in(w, c_bits, mw_bits) {
             None => 0,
             Some((neg, a)) => {
                 if neg {

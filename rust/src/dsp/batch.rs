@@ -62,10 +62,12 @@ use crate::error::{Result, SdmmError};
 use crate::packing::{Layout, PackedTuple};
 use crate::util::bits::{mask, sext, zext};
 
-/// Maximum weight slots per tuple across every supported layout
-/// (8-bit: 3×1, 6-bit: 2×2, 4-bit: 2×3 — see `packing::layout`).
+/// Maximum weight slots per tuple across every supported layout and
+/// generation (baseline 8-bit: 3×1; everything else packs ≤ 2 slots —
+/// see `packing::layout`).
 pub const MAX_KW: usize = 3;
-/// Maximum input lanes per tuple across every supported layout.
+/// Maximum input lanes per tuple across every supported layout and
+/// generation.
 pub const MAX_KI: usize = 3;
 
 /// Input-independent constants of one packed tuple, hoisted out of the
@@ -74,11 +76,19 @@ pub const MAX_KI: usize = 3;
 pub struct PreparedTuple {
     /// Unsigned A-port word.
     pub a_word: u64,
-    /// 1 when A bit 24 is set (the v=8 top-slot MW ≥ 4 case). Shared
-    /// with the `dsp::simd` multi-lane kernels (the `2^43·a24·b17`
-    /// bias term needs it).
+    /// 1 when the A word sets the generation's A-port sign bit (only
+    /// the baseline v=8 top-slot MW ≥ 4 case can — every other
+    /// generation's top MW field sits below its port's sign bit).
+    /// Shared with the `dsp::simd` multi-lane kernels: their
+    /// `2^43·a24·b17` bias term is the E1-geometry correction, and it
+    /// stays unconditionally correct across generations precisely
+    /// because this flag is 0 whenever the geometry is not E1's.
     pub(crate) a24: u64,
-    v: u32,
+    /// Packed lane width `vp = v − trunc` (equals `v` on every
+    /// non-truncating layout).
+    vp: u32,
+    /// Input bits dropped before packing (overpacked 6-bit layout).
+    trunc: u32,
     ki: usize,
     kw: usize,
     /// B-word offset per input lane, shared with the `dsp::simd`
@@ -99,20 +109,24 @@ pub struct PreparedTuple {
     slot_s: [u32; MAX_KW],
     slot_w: [u32; MAX_KW],
     slot_aoff: [u32; MAX_KW],
+    /// Truncation compensation per slot (0 everywhere when trunc = 0).
+    slot_comp: [i64; MAX_KW],
 }
 
 impl PreparedTuple {
     /// Hoist a packed tuple's input-independent constants (done once
     /// per tuple at plane-build time).
     pub fn prepare(t: &PackedTuple) -> PreparedTuple {
-        let v = t.layout.v;
+        let vp = t.layout.vp();
+        let trunc = t.layout.trunc;
         let ki = t.layout.ki();
         let kw = t.slots.len();
         assert!(kw <= MAX_KW && ki <= MAX_KI, "layout exceeds batch bounds");
         let mut p = PreparedTuple {
             a_word: t.a_word,
-            a24: (t.a_word >> 24) & 1,
-            v,
+            a24: (t.a_word >> (t.layout.a_port_bits() - 1)) & 1,
+            vp,
+            trunc,
             ki,
             kw,
             b_offsets: [0; MAX_KI],
@@ -126,6 +140,7 @@ impl PreparedTuple {
             slot_s: [0; MAX_KW],
             slot_w: [0; MAX_KW],
             slot_aoff: [0; MAX_KW],
+            slot_comp: [0; MAX_KW],
         };
         for (i, &off) in t.layout.b_offsets.iter().enumerate() {
             p.b_offsets[i] = off;
@@ -135,15 +150,16 @@ impl PreparedTuple {
             p.slot_negated[j] = slot.negative;
             p.slot_n[j] = slot.n;
             p.slot_s[j] = slot.s;
-            p.slot_w[j] = v + slot.mw_width;
+            p.slot_w[j] = vp + slot.mw_width;
             p.slot_aoff[j] = t.a_offsets[j];
+            p.slot_comp[j] = slot.comp(trunc);
             if slot.zero {
                 continue;
             }
-            // Top min(n, v) bits of the v-bit window: the sign bits that
-            // `zext(input >> n, v)` pulls in for negative inputs.
-            let hi = !(mask(v) >> slot.n) & mask(v);
-            let base = (mask(slot.mw_width) - slot.mw) << v;
+            // Top min(n, vp) bits of the vp-bit window: the sign bits
+            // that `zext(ip >> n, vp)` pulls in for negative inputs.
+            let hi = !(mask(vp) >> slot.n) & mask(vp);
+            let base = (mask(slot.mw_width) - slot.mw) << vp;
             let a = p.n_active;
             p.act_n[a] = slot.n;
             p.act_aoff[a] = t.a_offsets[j];
@@ -303,7 +319,8 @@ impl PreparedTuple {
     }
 
     /// Post-process one product slot out of a raw P word (identical to
-    /// `PackedTuple::unpack_slot`, using the hoisted constants).
+    /// `PackedTuple::unpack_slot`, using the hoisted constants;
+    /// `p_lane` is the packed `zext(x >>a trunc, vp)` lane pattern).
     #[inline]
     pub fn unpack_slot(&self, p: u64, j: usize, i: usize, p_lane: u64) -> i64 {
         if self.slot_zero[j] {
@@ -315,11 +332,8 @@ impl PreparedTuple {
         let val = sext(p >> off, w);
         let concat = (val << n) | (p_lane & mask(n)) as i64;
         let r = concat << self.slot_s[j];
-        if self.slot_negated[j] {
-            -r
-        } else {
-            r
-        }
+        let q = if self.slot_negated[j] { -r } else { r };
+        (q << self.trunc) + self.slot_comp[j]
     }
 }
 
@@ -335,6 +349,9 @@ pub struct BatchLanes {
     ki: usize,
     groups: usize,
     v: u32,
+    /// Input bits dropped before packing (the layout's `trunc`; lane
+    /// patterns are `zext(x >>a trunc, v − trunc)`).
+    trunc: u32,
     /// Real (non-padding) flat lane entries: flat index `g·ki + i`
     /// below `real` is a live input, at or above it is tail padding
     /// (zero lanes the pack left in the final group).
@@ -368,6 +385,7 @@ impl BatchLanes {
             ki,
             groups,
             v: layout.v,
+            trunc: layout.trunc,
             real: inputs.len(),
             lane0_only: ki == 1,
             p: vec![0; inputs.len()],
@@ -391,6 +409,7 @@ impl BatchLanes {
             ki,
             groups,
             v: layout.v,
+            trunc: layout.trunc,
             real: xs.len(),
             lane0_only: ki == 1,
             p: vec![0; groups * ki],
@@ -420,6 +439,7 @@ impl BatchLanes {
             ki,
             groups: xs.len(),
             v: layout.v,
+            trunc: layout.trunc,
             real: xs.len(),
             lane0_only: true,
             p: vec![0; xs.len() * ki],
@@ -441,7 +461,7 @@ impl BatchLanes {
         );
         for (g, &x) in xs.iter().enumerate() {
             debug_assert!(crate::util::bits::fits_signed(x, self.v));
-            self.p[g] = zext(x, self.v);
+            self.p[g] = zext(x >> self.trunc, self.v - self.trunc);
             self.neg[g] = if x < 0 { u64::MAX } else { 0 };
         }
     }
@@ -453,7 +473,7 @@ impl BatchLanes {
         for (f, &x) in xs.iter().enumerate() {
             debug_assert!(crate::util::bits::fits_signed(x, self.v));
             let idx = (f % ki) * groups + f / ki;
-            self.p[idx] = zext(x, self.v);
+            self.p[idx] = zext(x >> self.trunc, self.v - self.trunc);
             self.neg[idx] = if x < 0 { u64::MAX } else { 0 };
         }
     }
@@ -513,7 +533,7 @@ impl BatchLanes {
 /// BatchEngine::new().execute_raw_batch(&prepared, &lanes, &mut raw);
 ///
 /// // Identity, evaluated by hand for the first input:
-/// let b = tuple.layout.b_word(&[-77]);
+/// let b = tuple.layout.b_word(&[-77]).unwrap();
 /// let c = tuple.c_word(&[-77]);
 /// let (a24, b17) = ((tuple.a_word >> 24) & 1, (b >> 17) & 1);
 /// let p = tuple
@@ -628,6 +648,8 @@ impl BatchEngine {
             let n = tuple.slot_n[j];
             let s = tuple.slot_s[j];
             let negated = tuple.slot_negated[j];
+            let trunc = tuple.trunc;
+            let comp = tuple.slot_comp[j];
             let row = &mut acc[(row0 + j) * stride..(row0 + j) * stride + groups];
             let lowmask = mask(n);
             // Lane 0 is the dense prefix of the lane-major arrays —
@@ -637,11 +659,8 @@ impl BatchEngine {
                 let val = sext(pw >> off, w);
                 let concat = (val << n) | (pl & lowmask) as i64;
                 let r = concat << s;
-                if negated {
-                    *rv -= r;
-                } else {
-                    *rv += r;
-                }
+                let q = if negated { -r } else { r };
+                *rv += (q << trunc) + comp;
             }
         }
     }
@@ -689,16 +708,15 @@ impl BatchEngine {
             for (i, o) in offs.iter_mut().enumerate().take(ki) {
                 *o = aoff + tuple.b_offsets[i];
             }
+            let trunc = tuple.trunc;
+            let comp = tuple.slot_comp[j];
             let row = &mut acc[(row0 + j) * stride..(row0 + j) * stride + real];
             let unpack = |pw: u64, pl: u64, off: u32| -> i64 {
                 let val = sext(pw >> off, w);
                 let concat = (val << n) | (pl & lowmask) as i64;
                 let r = concat << s;
-                if negated {
-                    -r
-                } else {
-                    r
-                }
+                let q = if negated { -r } else { r };
+                (q << trunc) + comp
             };
             // Group-outer / lane-inner: accumulator writes are
             // contiguous and each lane stream is read sequentially.
@@ -724,7 +742,7 @@ impl BatchEngine {
         let mut p_lanes = [0u64; MAX_KI];
         let mut negs = [0u64; MAX_KI];
         for (i, &x) in inputs.iter().enumerate() {
-            p_lanes[i] = zext(x, self.v_of(tuple));
+            p_lanes[i] = zext(x >> tuple.trunc, tuple.vp);
             negs[i] = if x < 0 { u64::MAX } else { 0 };
         }
         self.ops += 1;
@@ -736,10 +754,6 @@ impl BatchEngine {
                     .collect()
             })
             .collect()
-    }
-
-    fn v_of(&self, tuple: &PreparedTuple) -> u32 {
-        tuple.v
     }
 
     /// Zero the op counter.
@@ -886,7 +900,7 @@ mod tests {
         let mut batch = BatchEngine::new();
         for i3 in [-8i64, -1] {
             let inputs = [3i64, -2, i3];
-            assert!((l.b_word(&inputs) >> 17) & 1 == 1, "edge not exercised");
+            assert!((l.b_word(&inputs).unwrap() >> 17) & 1 == 1, "edge not exercised");
             let lanes = BatchLanes::pack(&l, &inputs).unwrap();
             let mut raw = vec![0u64; 1];
             batch.execute_raw_batch(&pt, &lanes, &mut raw);
@@ -1008,6 +1022,63 @@ mod tests {
                 }
             }
             assert_eq!(batch.ops, lanes.groups() as u64);
+        }
+    }
+
+    #[test]
+    fn batch_matches_engine_every_generation() {
+        use crate::dsp::PackGeneration;
+        for generation in PackGeneration::ALL {
+            for v in [8u32, 6, 4] {
+                let l = Layout::for_generation(generation, v).unwrap();
+                let lim = 1i64 << (v - 1);
+                let mut rng =
+                    crate::util::rng::Rng::new(300 + v as u64 + generation.tag() as u64 * 16);
+                for _ in 0..60 {
+                    let ws: Vec<i64> =
+                        (0..l.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                    let t = pack_approx(&l, &ws).unwrap();
+                    let pt = PreparedTuple::prepare(&t);
+                    let mut scalar = SdmmEngine::new();
+                    let mut batch = BatchEngine::new();
+                    let inputs: Vec<i64> = (0..l.ki() * 8)
+                        .map(|_| rng.range_i64(-lim, lim - 1))
+                        .collect();
+                    let lanes = BatchLanes::pack(&l, &inputs).unwrap();
+                    let mut raw = vec![0u64; lanes.groups()];
+                    batch.execute_raw_batch(&pt, &lanes, &mut raw);
+                    assert_eq!(
+                        raw,
+                        scalar_raw_reference(&mut scalar, &t, &inputs),
+                        "{generation} v={v} ws={ws:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_accumulation_matches_model_truncated_layout() {
+        // The overpacked 6-bit layout accumulates modeled products
+        // ((W̃·(x>>2))<<2 + comp), not exact ones — pin the batch
+        // accumulator to the model.
+        use crate::dsp::PackGeneration;
+        let l = Layout::for_generation(PackGeneration::Overpacked, 6).unwrap();
+        let t = pack_approx(&l, &[-25, 31]).unwrap();
+        let pt = PreparedTuple::prepare(&t);
+        let n = 17usize;
+        let xs: Vec<i64> = (0..n as i64).map(|f| ((f * 11) % 64) - 32).collect();
+        let lanes = BatchLanes::pack_multi(&l, &xs);
+        let mut batch = BatchEngine::new();
+        let mut scratch = Vec::new();
+        let kw = l.kw();
+        let mut acc = vec![0i64; kw * n];
+        batch.accumulate_multi(&pt, &lanes, &mut scratch, &mut acc, 0, n, kw);
+        for j in 0..kw {
+            for (f, &x) in xs.iter().enumerate() {
+                let want = t.modeled_products(&[x, 0, 0])[j][0];
+                assert_eq!(acc[j * n + f], want, "j={j} x={x}");
+            }
         }
     }
 

@@ -80,18 +80,35 @@ impl Dsp48E1 {
     /// D are interpreted as signed two's complement, exactly like the
     /// silicon). Returns the 48-bit P output pattern.
     pub fn exec(&mut self, op: DspOp, a: u64, b: u64, c: u64, d: u64) -> u64 {
-        let a_t = a & mask(A_BITS);
-        let b_t = b & mask(B_BITS);
+        self.exec_ports(op, a, b, c, d, A_BITS, B_BITS)
+    }
+
+    /// [`exec`](Self::exec) with explicit multiplier port widths — the
+    /// same dataflow at another generation's geometry (DSP58: 27×24).
+    /// The ALU/C/P width stays 48 for every generation this crate packs
+    /// for (the DSP58's 58-bit ALU headroom is unused — DESIGN.md §3).
+    pub fn exec_ports(
+        &mut self,
+        op: DspOp,
+        a: u64,
+        b: u64,
+        c: u64,
+        d: u64,
+        a_bits: u32,
+        b_bits: u32,
+    ) -> u64 {
+        let a_t = a & mask(a_bits);
+        let b_t = b & mask(b_bits);
         let c_t = c & mask(C_BITS);
-        let d_t = d & mask(D_BITS);
+        let d_t = d & mask(a_bits);
 
-        let a_s = sext(a_t, A_BITS);
-        let b_s = sext(b_t, B_BITS);
-        let d_s = sext(d_t, D_BITS);
+        let a_s = sext(a_t, a_bits);
+        let b_s = sext(b_t, b_bits);
+        let d_s = sext(d_t, a_bits);
 
-        // Pre-adder (25-bit wrap, like silicon).
+        // Pre-adder (A-port-width wrap, like silicon).
         let mult_in = match op {
-            DspOp::PreAddMultAddC => sext((a_s.wrapping_add(d_s)) as u64 & mask(A_BITS), A_BITS),
+            DspOp::PreAddMultAddC => sext((a_s.wrapping_add(d_s)) as u64 & mask(a_bits), a_bits),
             _ => a_s,
         };
 
@@ -212,6 +229,24 @@ mod tests {
         let a26 = 1u64 << 25 | 3;
         let p = d.exec(DspOp::Mult, a26, 2, 0, 0);
         assert_eq!(sext(p, P_BITS), 6);
+    }
+
+    #[test]
+    fn dsp58_port_widths_sign_boundaries() {
+        let mut d = Dsp48E1::new();
+        // A bit 24 set: sign bit on the 25-bit E1 port, a plain positive
+        // value on the 27-bit DSP58 port.
+        let a = 1u64 << 24;
+        let p25 = d.exec(DspOp::Mult, a, 2, 0, 0);
+        let p27 = d.exec_ports(DspOp::Mult, a, 2, 0, 0, 27, 24);
+        assert_eq!(sext(p25, P_BITS), -(1i64 << 25));
+        assert_eq!(sext(p27, P_BITS), 1i64 << 25);
+        // B bit 17: sign on 18-bit, positive on 24-bit.
+        let b = 1u64 << 17;
+        let p18 = d.exec(DspOp::Mult, 3, b, 0, 0);
+        let p24 = d.exec_ports(DspOp::Mult, 3, b, 0, 0, 27, 24);
+        assert_eq!(sext(p18, P_BITS), -3 * (1i64 << 17));
+        assert_eq!(sext(p24, P_BITS), 3 * (1i64 << 17));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! SDMM execution engine: drives the DSP48E1 primitive with packed
 //! operands (paper Fig. 5, "multiple parameter multiplication" stage).
 
-use super::dsp48::{Dsp48E1, DspOp, A_BITS, B_BITS};
+use super::dsp48::{Dsp48E1, DspOp};
 use crate::packing::PackedTuple;
 use crate::util::bits::mask;
 
@@ -37,25 +37,36 @@ impl SdmmEngine {
     }
 
     /// Execute and return the raw 48-bit P word (before post-processing).
+    ///
+    /// Inputs must already be in the layout's signed range — executors
+    /// validate once up front (`Layout::b_word` is the typed-error API).
     pub fn execute_raw(&mut self, tuple: &PackedTuple, inputs: &[i64]) -> u64 {
-        let b = tuple.layout.b_word(inputs);
+        let a_bits = tuple.layout.a_port_bits();
+        let b_bits = tuple.layout.b_port_bits();
+        let b = tuple
+            .layout
+            .b_word(inputs)
+            .expect("inputs validated upstream");
         let mut c = tuple.c_word(inputs);
         if tuple.a_sign_correction() {
-            // The 25-bit A port is signed; a packed word with bit 24 set
-            // would be read as negative. Pre-bias the C word by B << 25
-            // so the signed product plus bias equals the unsigned
-            // product the packing math assumes (DESIGN.md §3).
-            c = c.wrapping_add(b << A_BITS) & mask(48);
+            // The A port is signed; a packed word with the top port bit
+            // set would be read as negative. Pre-bias the C word by
+            // B << a_bits so the signed product plus bias equals the
+            // unsigned product the packing math assumes (DESIGN.md §3).
+            // Only the baseline v=8 layout can reach the sign bit.
+            c = c.wrapping_add(b << a_bits) & mask(48);
             self.corrections += 1;
         }
-        if (b >> (B_BITS - 1)) & 1 == 1 {
-            // Same for the signed 18-bit B port: a negative top input
-            // (4-bit layout, third input at bits 14..17) sets bit 17.
-            // Bias by A << 18 (A is a positive packed word).
-            c = c.wrapping_add(tuple.a_word << B_BITS) & mask(48);
+        if (b >> (b_bits - 1)) & 1 == 1 {
+            // Same for the signed B port: a negative top input in the
+            // highest lane sets its sign bit (e.g. the E1 4-bit layout's
+            // third input at bits 14..17). Bias by A << b_bits (A is a
+            // positive packed word whenever this fires).
+            c = c.wrapping_add(tuple.a_word << b_bits) & mask(48);
             self.corrections += 1;
         }
-        self.dsp.exec(DspOp::MultAddC, tuple.a_word, b, c, 0)
+        self.dsp
+            .exec_ports(DspOp::MultAddC, tuple.a_word, b, c, 0, a_bits, b_bits)
     }
 
     /// Toggle/op statistics of the underlying DSP model.
@@ -153,6 +164,34 @@ mod tests {
                     assert_eq!(
                         e.execute(&t, &[i1, i2, i3]),
                         t.expected_products(&[i1, i2, i3])
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_modeled_products_every_generation() {
+        use crate::dsp::PackGeneration;
+        for generation in PackGeneration::ALL {
+            for v in [8u32, 6, 4] {
+                let l = Layout::for_generation(generation, v).unwrap();
+                let hi = (1i64 << (v - 1)) - 1;
+                let ws: Vec<i64> = (0..l.kw() as i64)
+                    .map(|j| if j % 2 == 0 { -hi + j } else { hi - j })
+                    .collect();
+                let t = pack_approx(&l, &ws).unwrap();
+                let mut e = SdmmEngine::new();
+                for step in 0..64i64 {
+                    let inputs: Vec<i64> = (0..l.ki() as i64)
+                        .map(|i| ((step * 7 + i * 13) % (2 * hi + 2)) - hi - 1)
+                        .collect();
+                    // modeled == expected on every non-truncating layout;
+                    // on overpacked 6-bit it is the bit-level contract.
+                    assert_eq!(
+                        e.execute(&t, &inputs),
+                        t.modeled_products(&inputs),
+                        "{generation} v={v} inputs={inputs:?}"
                     );
                 }
             }

@@ -1,10 +1,14 @@
-//! DSP block generations (paper §2.1).
+//! DSP block generations (paper §2.1) and the packing-generation
+//! family built on top of them.
 //!
 //! The paper prototypes on the 7-series **DSP48E1** (25×18 multiplier,
 //! 25-bit pre-adder) and describes the UltraScale **DSP48E2** (27×18,
 //! 27-bit pre-adder). The extra two multiplicand bits matter for the
 //! *exact* (non-approximated) mode: more tuples fit without
-//! fine-tuning — quantified by `report::ablation`.
+//! fine-tuning — quantified by `report::ablation`. The Versal **DSP58**
+//! widens both multiplier ports (27×24) and the ALU (58-bit), which is
+//! what lets the [`PackGeneration::Dsp58`] wide-pack recover exactness
+//! at higher k (DESIGN.md §3, "Packing generations").
 
 /// A DSP block generation: port widths of the multiply-add datapath.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -13,6 +17,8 @@ pub enum DspGeneration {
     Dsp48E1,
     /// Xilinx UltraScale / UltraScale+.
     Dsp48E2,
+    /// Xilinx Versal (27×24 multiplier, 58-bit ALU).
+    Dsp58,
 }
 
 impl DspGeneration {
@@ -21,30 +27,161 @@ impl DspGeneration {
         match self {
             DspGeneration::Dsp48E1 => 25,
             DspGeneration::Dsp48E2 => 27,
+            DspGeneration::Dsp58 => 27,
         }
     }
 
     /// Multiplier (B) port width.
     pub const fn b_bits(&self) -> u32 {
-        18
+        match self {
+            DspGeneration::Dsp48E1 | DspGeneration::Dsp48E2 => 18,
+            DspGeneration::Dsp58 => 24,
+        }
     }
 
     /// Accumulator / C port width.
     pub const fn c_bits(&self) -> u32 {
-        48
+        match self {
+            DspGeneration::Dsp48E1 | DspGeneration::Dsp48E2 => 48,
+            DspGeneration::Dsp58 => 58,
+        }
     }
 
-    /// Pre-adder width (same as A on both generations).
+    /// Pre-adder width (same as A on all three generations).
     pub const fn preadder_bits(&self) -> u32 {
         self.a_bits()
     }
 
-    /// Display name ("DSP48E1" / "DSP48E2").
+    /// Display name ("DSP48E1" / "DSP48E2" / "DSP58").
     pub const fn name(&self) -> &'static str {
         match self {
             DspGeneration::Dsp48E1 => "DSP48E1",
             DspGeneration::Dsp48E2 => "DSP48E2",
+            DspGeneration::Dsp58 => "DSP58",
         }
+    }
+}
+
+/// A packing generation: which port-layout family the compiler packs
+/// for, selectable at [`Compiler::for_generation`].
+///
+/// Three members (DESIGN.md §3 "Packing generations"):
+///
+/// * [`Dsp48E1`](PackGeneration::Dsp48E1) — the paper's exact baseline
+///   (k = 3/4/6 at 8/6/4-bit).
+/// * [`Overpacked`](PackGeneration::Overpacked) — DSP-Packing-style
+///   (arXiv 2203.11028) approximate overpacking on the same DSP48E1
+///   ports: a 2-bit MW field (set {0, 1, 3}) shrinks slots below
+///   `v + MW_A_BITS`, and at 6-bit the inputs are packed truncated by
+///   2 bits with a per-slot compensation term. k = 4/6/6.
+/// * [`Dsp58`](PackGeneration::Dsp58) — wide-pack on the Versal DSP58
+///   (27×24): the wider ports recover *exactness* at k = 4 for 8-bit.
+///
+/// [`Compiler::for_generation`]: crate::api::Compiler::for_generation
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PackGeneration {
+    /// Paper baseline: exact 3/4/6-pack on DSP48E1 ports.
+    Dsp48E1,
+    /// Approximate overpacked 4/6/6-pack on DSP48E1 ports.
+    Overpacked,
+    /// Exact wide-pack (4/4/6) on DSP58 ports.
+    Dsp58,
+}
+
+impl PackGeneration {
+    /// Every shipped generation, in artifact-tag order.
+    pub const ALL: [PackGeneration; 3] = [
+        PackGeneration::Dsp48E1,
+        PackGeneration::Overpacked,
+        PackGeneration::Dsp58,
+    ];
+
+    /// The DSP hardware generation this packing family targets.
+    pub const fn dsp(&self) -> DspGeneration {
+        match self {
+            PackGeneration::Dsp48E1 | PackGeneration::Overpacked => DspGeneration::Dsp48E1,
+            PackGeneration::Dsp58 => DspGeneration::Dsp58,
+        }
+    }
+
+    /// A (multiplicand) port width of the target block.
+    pub const fn a_port_bits(&self) -> u32 {
+        self.dsp().a_bits()
+    }
+
+    /// B (multiplier) port width of the target block.
+    pub const fn b_port_bits(&self) -> u32 {
+        self.dsp().b_bits()
+    }
+
+    /// Width of the manipulated-parameter (MW) field packed per slot:
+    /// 3 bits (set {0,1,3,5,7}) for the exact generations, 2 bits
+    /// (set {0,1,3}) for the overpacked one.
+    pub const fn mw_bits(&self) -> u32 {
+        match self {
+            PackGeneration::Overpacked => 2,
+            PackGeneration::Dsp48E1 | PackGeneration::Dsp58 => 3,
+        }
+    }
+
+    /// Input truncation `t` applied before packing at input width `v`:
+    /// the B lane carries `zext(x >> t, v − t)` and the unpacked
+    /// product is compensated by `⌊W̃·(2^t − 1)/2⌋` per slot. Non-zero
+    /// only for the overpacked 6-bit layout.
+    pub const fn trunc_for(&self, v: u32) -> u32 {
+        match (self, v) {
+            (PackGeneration::Overpacked, 6) => 2,
+            _ => 0,
+        }
+    }
+
+    /// Does this generation produce bit-exact products `W̃·I` at input
+    /// width `v`? False only where inputs are truncated (overpacked
+    /// 6-bit); everywhere else the P-word identity is exact and the
+    /// only approximation is the weight quantization already reported
+    /// by [`ErrorStats`](crate::manip::ErrorStats).
+    pub const fn product_exact(&self, v: u32) -> bool {
+        self.trunc_for(v) == 0
+    }
+
+    /// Artifact tag byte (stored in the `sdmm-model.bin` v2 header's
+    /// former reserved slot; v1 artifacts read back as the baseline).
+    pub const fn tag(&self) -> u8 {
+        match self {
+            PackGeneration::Dsp48E1 => 0,
+            PackGeneration::Overpacked => 1,
+            PackGeneration::Dsp58 => 2,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag).
+    pub const fn from_tag(tag: u8) -> Option<PackGeneration> {
+        match tag {
+            0 => Some(PackGeneration::Dsp48E1),
+            1 => Some(PackGeneration::Overpacked),
+            2 => Some(PackGeneration::Dsp58),
+            _ => None,
+        }
+    }
+
+    /// Display name (CLI flag values and bench/eval row labels).
+    pub const fn name(&self) -> &'static str {
+        match self {
+            PackGeneration::Dsp48E1 => "dsp48e1",
+            PackGeneration::Overpacked => "overpacked",
+            PackGeneration::Dsp58 => "dsp58",
+        }
+    }
+
+    /// Parse a CLI-style name (the inverse of [`name`](Self::name)).
+    pub fn parse(s: &str) -> Option<PackGeneration> {
+        PackGeneration::ALL.iter().copied().find(|g| g.name() == s)
+    }
+}
+
+impl std::fmt::Display for PackGeneration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -79,6 +216,19 @@ mod tests {
         assert_eq!(DspGeneration::Dsp48E2.a_bits(), 27);
         assert_eq!(DspGeneration::Dsp48E1.b_bits(), 18);
         assert_eq!(DspGeneration::Dsp48E2.c_bits(), 48);
+        assert_eq!(DspGeneration::Dsp58.a_bits(), 27);
+        assert_eq!(DspGeneration::Dsp58.b_bits(), 24);
+        assert_eq!(DspGeneration::Dsp58.c_bits(), 58);
+    }
+
+    #[test]
+    fn pack_generation_tags_round_trip() {
+        for g in PackGeneration::ALL {
+            assert_eq!(PackGeneration::from_tag(g.tag()), Some(g));
+            assert_eq!(PackGeneration::parse(g.name()), Some(g));
+        }
+        assert_eq!(PackGeneration::from_tag(3), None);
+        assert_eq!(PackGeneration::parse("dsp48e2"), None);
     }
 
     #[test]
@@ -100,16 +250,55 @@ mod tests {
     }
 
     #[test]
-    fn e1_matches_packing_module() {
-        // the generation-parametric check agrees with packing::is_feasible_exact
-        let layout = crate::packing::Layout::for_bits(8).unwrap();
-        let mut rng = crate::util::rng::Rng::new(56);
-        for _ in 0..5000 {
-            let t: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
-            assert_eq!(
-                is_feasible_exact_on(DspGeneration::Dsp48E1, 8, &t),
-                crate::packing::is_feasible_exact(&layout, &t)
-            );
+    fn dsp58_feasibility_matches_e2_multiplicand() {
+        // DSP58 shares the 27-bit A port with E2; exact-mode
+        // feasibility (A-port + 48-bit-C bound) can only grow via the
+        // wider C. With k=3 tuples at 8-bit, off ≤ 3·(8+3) = 33 < 48,
+        // so the two agree everywhere on the paper's grid.
+        let mut rng = crate::util::rng::Rng::new(57);
+        for v in [8u32, 6, 4] {
+            for _ in 0..2000 {
+                let t: Vec<i64> = (0..3).map(|_| rng.range_i64(-128, 127)).collect();
+                assert_eq!(
+                    is_feasible_exact_on(DspGeneration::Dsp48E2, v, &t),
+                    is_feasible_exact_on(DspGeneration::Dsp58, v, &t),
+                );
+            }
         }
+    }
+
+    #[test]
+    fn e1_matches_packing_module() {
+        // the generation-parametric check agrees with
+        // packing::is_feasible_exact over the full (W, I) grid, not
+        // just the 8-bit corner: weights drawn from the W width's
+        // range, feasibility checked at the I width's layout.
+        let mut rng = crate::util::rng::Rng::new(56);
+        for w_bits in [8u32, 6, 4] {
+            for v_bits in [8u32, 6, 4] {
+                let layout = crate::packing::Layout::for_bits_wc(w_bits, v_bits).unwrap();
+                let lim = 1i64 << (w_bits - 1);
+                for _ in 0..2000 {
+                    let t: Vec<i64> =
+                        (0..layout.kw()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+                    assert_eq!(
+                        is_feasible_exact_on(DspGeneration::Dsp48E1, v_bits, &t),
+                        crate::packing::is_feasible_exact(&layout, &t),
+                        "(W={w_bits}, I={v_bits}) drift on {t:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_generations_report_exact_products() {
+        for v in [8u32, 6, 4] {
+            assert!(PackGeneration::Dsp48E1.product_exact(v));
+            assert!(PackGeneration::Dsp58.product_exact(v));
+        }
+        assert!(PackGeneration::Overpacked.product_exact(8));
+        assert!(!PackGeneration::Overpacked.product_exact(6));
+        assert!(PackGeneration::Overpacked.product_exact(4));
     }
 }

@@ -31,4 +31,4 @@ pub use batch::{scalar_raw_reference, BatchEngine, BatchLanes, PreparedTuple};
 pub use simd::Isa;
 pub use dsp48::{Dsp48E1, DspOp, DspStats};
 pub use engine::{MacUnit, SdmmEngine};
-pub use generation::{is_feasible_exact_on, DspGeneration};
+pub use generation::{is_feasible_exact_on, DspGeneration, PackGeneration};

@@ -136,9 +136,10 @@ fn print_usage() {
          sdmm compile [--bits N] [--policy none|wrc|wrc-huffman|prune-wrc-huffman]\n\
          \x20            [--out DIR] [--sparsity F] [--seed S]\n\
          sdmm eval [--samples N] [--seed S] [--backend scalar|batch|systolic|serving]\n\
-         \x20            [--smoke]   whole-network accuracy-delta protocol (top-1\n\
-         \x20            agreement vs the exact int reference at 8/6/4-bit; gates\n\
-         \x20            on exact 4-bit agreement)\n\
+         \x20            [--generation dsp48e1|overpacked|dsp58|all] [--smoke]\n\
+         \x20            whole-network accuracy-delta protocol (top-1 agreement vs\n\
+         \x20            the exact int reference at 8/6/4-bit per packing generation;\n\
+         \x20            gates on exact 4-bit agreement for every generation)\n\
          sdmm report <table1..6|fig4|fig7|fig9|fig10|rom|network|accuracy|ablation|all>\n\
          \x20            [--artifacts DIR]\n\
          sdmm serve [--addr A] [--port P] [--shards N] [--queue-capacity N]\n\
@@ -374,39 +375,49 @@ fn cmd_compile(args: &Args) -> Result<()> {
 /// §Accuracy): deterministic synthetic Tiny-ImageNet-like images
 /// through the `api::network` pipeline on a chosen executor backend,
 /// top-1 agreement against the exact integer reference plus error
-/// deltas vs the float teacher, one row per weight width in {8, 6, 4}.
-/// Exits non-zero unless the 4-bit row is *exactly* agreement 100% /
-/// delta 0 pp (the approximation is the identity below 6 bits — any
-/// deviation is a conformance bug, not noise).
+/// deltas vs the float teacher — one row per weight width in {8, 6, 4}
+/// per packing generation (`--generation dsp48e1|overpacked|dsp58|all`,
+/// default all). Exits non-zero unless every generation's 4-bit row is
+/// *exactly* agreement 100% / delta 0 pp: all shipped generations are
+/// exact at 4 bits (the 2-bit MW set covers every 4-bit magnitude and
+/// no 4-bit layout truncates), so any deviation is a conformance bug,
+/// not noise.
 fn cmd_eval(args: &Args) -> Result<()> {
-    use sdmm::api::{BatchExec, ScalarExec, ServingExec, SystolicExec};
-    use sdmm::cnn::accuracy::network_accuracy_table_with;
+    use sdmm::api::{BatchExec, Executor, ScalarExec, ServingExec, SystolicExec};
+    use sdmm::cnn::accuracy::{network_accuracy_table_gen, NetworkAccuracyRow};
     use sdmm::coordinator::ServingConfig;
+    use sdmm::dsp::PackGeneration;
 
     let smoke = args.flags.contains_key("smoke");
     let samples = args.flag_usize("samples", if smoke { 8 } else { 48 })?;
     let seed = args.flag_usize("seed", 2024)? as u64;
     let backend = args.flag("backend", "batch");
+    let gen_flag = args.flag("generation", "all");
+    let gens: Vec<PackGeneration> = if gen_flag == "all" {
+        PackGeneration::ALL.to_vec()
+    } else {
+        vec![PackGeneration::parse(&gen_flag).with_context(|| {
+            format!("unknown generation {gen_flag:?} (dsp48e1|overpacked|dsp58|all)")
+        })?]
+    };
+    let run = |e: &mut dyn Executor| -> Result<Vec<NetworkAccuracyRow>> {
+        let mut rows = Vec::new();
+        for &g in &gens {
+            rows.extend(network_accuracy_table_gen(e, g, samples, seed)?);
+        }
+        Ok(rows)
+    };
     let t0 = Instant::now();
     let rows = match backend.as_str() {
-        "scalar" => {
-            let mut e = ScalarExec::new();
-            network_accuracy_table_with(&mut e, samples, seed)?
-        }
-        "batch" => {
-            let mut e = BatchExec::new();
-            network_accuracy_table_with(&mut e, samples, seed)?
-        }
-        "systolic" => {
-            let mut e = SystolicExec::new();
-            network_accuracy_table_with(&mut e, samples, seed)?
-        }
+        "scalar" => run(&mut ScalarExec::new())?,
+        "batch" => run(&mut BatchExec::new())?,
+        "systolic" => run(&mut SystolicExec::new())?,
         "serving" => {
             let mut e = ServingExec::start(ServingConfig {
                 shards: sdmm::util::par::num_threads(),
                 queue_capacity: 64,
             })?;
-            let rows = network_accuracy_table_with(&mut e, samples, seed)?;
+            let rows = run(&mut e)?;
             e.shutdown();
             rows
         }
@@ -422,23 +433,29 @@ fn cmd_eval(args: &Args) -> Result<()> {
     );
     print!("{}", sdmm::report::render_accuracy_rows(&rows));
     println!(
-        "({} images x 3 widths in {:.2}s)",
+        "({} images x 3 widths x {} generation(s) in {:.2}s)",
         samples,
+        gens.len(),
         t0.elapsed().as_secs_f64()
     );
-    let r4 = rows
-        .iter()
-        .find(|r| r.w_bits == 4)
-        .context("4-bit row missing")?;
-    if r4.top1_agreement != 100.0 || r4.delta_pp != 0.0 {
-        bail!(
-            "4-bit conformance gate FAILED: agreement {:.2}%, delta {:+.2} pp \
-             (4-bit approximation must be the identity)",
-            r4.top1_agreement,
-            r4.delta_pp
-        );
+    for &g in &gens {
+        let r4 = rows
+            .iter()
+            .find(|r| r.generation == g && r.w_bits == 4)
+            .with_context(|| format!("4-bit row missing for generation {g}"))?;
+        if r4.top1_agreement != 100.0 || r4.delta_pp != 0.0 {
+            bail!(
+                "4-bit conformance gate FAILED ({g}): agreement {:.2}%, delta {:+.2} pp \
+                 (every generation's 4-bit approximation must be the identity)",
+                r4.top1_agreement,
+                r4.delta_pp
+            );
+        }
     }
-    println!("4-bit conformance gate OK: agreement 100%, delta +0.00 pp");
+    println!(
+        "4-bit conformance gate OK ({} generation(s)): agreement 100%, delta +0.00 pp",
+        gens.len()
+    );
     Ok(())
 }
 

@@ -4,13 +4,27 @@
 //! manipulated parameter at 3 bits, which fixes the number of parameters
 //! per DSP block and shrinks the WROM to at most a few thousand entries.
 //!
+//! The overpacked packing generation (DESIGN.md §3) narrows the field to
+//! 2 bits — `MW_A ∈ {0,1,3}` — which is what frees the A-port room for a
+//! fourth 8-bit slot; every entry point below therefore has an `*_in`
+//! variant parameterized on the MW field width.
+//!
 //! Key reproduced claims (tested below):
 //! * 128 of 256 signed 8-bit parameters are exactly representable
 //!   (64 of 128 magnitudes; signs double it; the paper counts ±).
 //! * every signed parameter below 6 bits is exact (so 4-bit columns of
 //!   Table 2 are exactly zero).
 
-use super::{manipulate, Manipulated, APPROX_MW};
+use super::{manipulate, Manipulated, APPROX_MW, APPROX_MW_2};
+
+/// The allowed MW set for a given MW field width (3 → paper Eq. 4,
+/// 2 → the overpacked generation's narrowed set).
+pub const fn approx_mw_set(mw_bits: u32) -> &'static [u8] {
+    match mw_bits {
+        2 => &APPROX_MW_2,
+        _ => &APPROX_MW,
+    }
+}
 
 /// A fully-resolved approximate parameter: the nearest value of the
 /// constrained form, plus its decomposition.
@@ -20,7 +34,7 @@ pub struct ApproxParam {
     pub original: u64,
     /// Approximated magnitude actually implemented.
     pub approx: u64,
-    /// Decomposition of `approx` with `mw ∈ {0,1,3,5,7}`.
+    /// Decomposition of `approx` with `mw` in the allowed set.
     pub m: Manipulated,
 }
 
@@ -37,12 +51,17 @@ impl ApproxParam {
 }
 
 /// All representable magnitudes `2^s(1+2^n·MW_A) ≤ max_mag` under the
-/// approximation, sorted ascending. `max_mag` is typically `2^(c-1)`
-/// for signed c-bit parameters.
+/// 3-bit approximation, sorted ascending. `max_mag` is typically
+/// `2^(c-1)` for signed c-bit parameters.
 pub fn representable_magnitudes(max_mag: u64) -> Vec<u64> {
+    representable_magnitudes_in(max_mag, 3)
+}
+
+/// [`representable_magnitudes`] under an `mw_bits`-wide MW field.
+pub fn representable_magnitudes_in(max_mag: u64, mw_bits: u32) -> Vec<u64> {
     let mut set = std::collections::BTreeSet::new();
     let top = 64 - max_mag.leading_zeros();
-    for &mw in &APPROX_MW {
+    for &mw in approx_mw_set(mw_bits) {
         for n in 0..=top {
             let base = 1u64 + ((mw as u64) << n);
             if base > max_mag {
@@ -70,21 +89,26 @@ pub fn representable_magnitudes(max_mag: u64) -> Vec<u64> {
 /// not exceed the fixed-point range of the original parameter).
 ///
 /// Hot path of the packing compiler: the representable set per
-/// `max_mag` is memoized (perf pass; see EXPERIMENTS.md §Perf —
-/// rebuilding the BTreeSet per call cost ~1 µs/weight).
+/// `(max_mag, mw_bits)` is memoized (perf pass; see EXPERIMENTS.md
+/// §Perf — rebuilding the BTreeSet per call cost ~1 µs/weight).
 pub fn approximate(magnitude: u64, max_mag: u64) -> ApproxParam {
+    approximate_in(magnitude, max_mag, 3)
+}
+
+/// [`approximate`] under an `mw_bits`-wide MW field.
+pub fn approximate_in(magnitude: u64, max_mag: u64, mw_bits: u32) -> ApproxParam {
     assert!(magnitude > 0, "approximate(0): use an explicit zero slot");
     assert!(magnitude <= max_mag);
     // Fast path: already representable?
     let m = manipulate(magnitude);
-    if APPROX_MW.contains(&(m.mw.min(255) as u8)) {
+    if approx_mw_set(mw_bits).contains(&(m.mw.min(255) as u8)) {
         return ApproxParam {
             original: magnitude,
             approx: magnitude,
             m,
         };
     }
-    let best = nearest_representable(magnitude, max_mag);
+    let best = nearest_representable(magnitude, max_mag, mw_bits);
     ApproxParam {
         original: magnitude,
         approx: best,
@@ -95,13 +119,14 @@ pub fn approximate(magnitude: u64, max_mag: u64) -> ApproxParam {
 /// Memoized nearest-representable lookup. Small `max_mag` (the common
 /// 4/6/8/16-bit cases) get a direct per-magnitude table; larger ranges
 /// fall back to a cached sorted set + binary search.
-fn nearest_representable(magnitude: u64, max_mag: u64) -> u64 {
+fn nearest_representable(magnitude: u64, max_mag: u64, mw_bits: u32) -> u64 {
     use std::collections::HashMap;
     use std::sync::{Mutex, OnceLock};
     const TABLE_LIMIT: u64 = 1 << 16;
+    type Key = (u64, u32);
 
-    static TABLES: OnceLock<Mutex<HashMap<u64, std::sync::Arc<Vec<u32>>>>> = OnceLock::new();
-    static SETS: OnceLock<Mutex<HashMap<u64, std::sync::Arc<Vec<u64>>>>> = OnceLock::new();
+    static TABLES: OnceLock<Mutex<HashMap<Key, std::sync::Arc<Vec<u32>>>>> = OnceLock::new();
+    static SETS: OnceLock<Mutex<HashMap<Key, std::sync::Arc<Vec<u64>>>>> = OnceLock::new();
 
     let nearest_in = |reps: &[u64]| -> u64 {
         let idx = reps.partition_point(|&r| r < magnitude);
@@ -126,9 +151,9 @@ fn nearest_representable(magnitude: u64, max_mag: u64) -> u64 {
         let table = {
             let mut guard = tables.lock().unwrap();
             guard
-                .entry(max_mag)
+                .entry((max_mag, mw_bits))
                 .or_insert_with(|| {
-                    let reps = representable_magnitudes(max_mag);
+                    let reps = representable_magnitudes_in(max_mag, mw_bits);
                     let mut t = vec![0u32; max_mag as usize + 1];
                     for mag in 1..=max_mag {
                         let idx = reps.partition_point(|&r| r < mag);
@@ -157,8 +182,8 @@ fn nearest_representable(magnitude: u64, max_mag: u64) -> u64 {
     let reps = {
         let mut guard = sets.lock().unwrap();
         guard
-            .entry(max_mag)
-            .or_insert_with(|| std::sync::Arc::new(representable_magnitudes(max_mag)))
+            .entry((max_mag, mw_bits))
+            .or_insert_with(|| std::sync::Arc::new(representable_magnitudes_in(max_mag, mw_bits)))
             .clone()
     };
     nearest_in(&reps)
@@ -167,6 +192,15 @@ fn nearest_representable(magnitude: u64, max_mag: u64) -> u64 {
 /// Approximate a signed value; returns (negative, ApproxParam) or `None`
 /// for zero (which gets an explicit zero slot downstream).
 pub fn approximate_signed(value: i64, c_bits: u32) -> Option<(bool, ApproxParam)> {
+    approximate_signed_in(value, c_bits, 3)
+}
+
+/// [`approximate_signed`] under an `mw_bits`-wide MW field.
+pub fn approximate_signed_in(
+    value: i64,
+    c_bits: u32,
+    mw_bits: u32,
+) -> Option<(bool, ApproxParam)> {
     if value == 0 {
         return None;
     }
@@ -175,7 +209,7 @@ pub fn approximate_signed(value: i64, c_bits: u32) -> Option<(bool, ApproxParam)
     // so we clamp the max magnitude to 2^(c-1) which covers -2^(c-1).
     let max_mag = 1u64 << (c_bits - 1);
     let mag = (value.unsigned_abs()).min(max_mag);
-    Some((value < 0, approximate(mag, max_mag)))
+    Some((value < 0, approximate_in(mag, max_mag, mw_bits)))
 }
 
 #[cfg(test)]
@@ -191,6 +225,19 @@ mod tests {
         // 6-bit: 28 of 32 magnitudes; 4-bit: all 8 magnitudes.
         assert_eq!(representable_magnitudes(32).len(), 28);
         assert_eq!(representable_magnitudes(8).len(), 8);
+    }
+
+    #[test]
+    fn narrow_set_is_a_subset() {
+        for max_mag in [8u64, 32, 128] {
+            let wide = representable_magnitudes_in(max_mag, 3);
+            for m in representable_magnitudes_in(max_mag, 2) {
+                assert!(wide.contains(&m), "2-bit rep {m} missing from 3-bit set");
+            }
+        }
+        // All 4-bit magnitudes stay exact even under the 2-bit set:
+        // 3 = 1+2·1, 5 = 1+4·1, 7 = 1+2·3.
+        assert_eq!(representable_magnitudes_in(8, 2).len(), 8);
     }
 
     #[test]
@@ -212,6 +259,16 @@ mod tests {
     }
 
     #[test]
+    fn mw_always_in_narrow_set_too() {
+        for mag in 1..=128u64 {
+            let a = approximate_in(mag, 128, 2);
+            assert!(APPROX_MW_2.contains(&(a.m.mw as u8)), "{a:?}");
+            assert_eq!(a.m.value(), a.approx);
+            assert!(a.m.mw <= 3, "2-bit MW field overflow: {a:?}");
+        }
+    }
+
+    #[test]
     fn error_at_most_one_lsb_of_gap() {
         // The representable set is dense enough that 8-bit error ≤ 4.
         let mut worst = 0;
@@ -219,15 +276,24 @@ mod tests {
             worst = worst.max(approximate(mag, 128).abs_error());
         }
         assert!(worst <= 4, "worst 8-bit approx error {worst}");
+        // The narrowed 2-bit set is coarser but still bounded: ≤ 8.
+        let mut worst2 = 0;
+        for mag in 1..=128u64 {
+            worst2 = worst2.max(approximate_in(mag, 128, 2).abs_error());
+        }
+        assert!(worst2 >= worst, "narrower set cannot be more accurate");
+        assert!(worst2 <= 8, "worst 8-bit 2-bit-MW approx error {worst2}");
     }
 
     #[test]
     fn approximation_idempotent() {
-        for mag in 1..=128u64 {
-            let a = approximate(mag, 128);
-            let b = approximate(a.approx, 128);
-            assert!(b.exact());
-            assert_eq!(b.approx, a.approx);
+        for mw_bits in [2u32, 3] {
+            for mag in 1..=128u64 {
+                let a = approximate_in(mag, 128, mw_bits);
+                let b = approximate_in(a.approx, 128, mw_bits);
+                assert!(b.exact());
+                assert_eq!(b.approx, a.approx);
+            }
         }
     }
 
@@ -241,6 +307,8 @@ mod tests {
         assert_eq!(a.approx, 22);
         // 44 is exactly representable (MW=5).
         assert!(approximate(44, 128).exact());
+        // ... but not under the 2-bit set: 44 = 4·11 needs MW 5 or 11.
+        assert!(!approximate_in(44, 128, 2).exact());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! how far does the approximated value sit from the quantized one, and
 //! what does that do to a dot product's signal-to-noise ratio.
 
-use super::approx::approximate_signed;
+use super::approx::approximate_signed_in;
 use crate::util::stats::Summary;
 
 /// Aggregate error statistics of approximating a set of signed c-bit
@@ -37,8 +37,15 @@ impl ErrorStats {
 }
 
 /// Compute approximation error statistics for a slice of signed
-/// quantized weights at `c_bits`.
+/// quantized weights at `c_bits` (the paper's 3-bit MW set).
 pub fn approximation_error_table(weights: &[i64], c_bits: u32) -> ErrorStats {
+    approximation_error_table_in(weights, c_bits, 3)
+}
+
+/// [`approximation_error_table`] under an `mw_bits`-wide MW field —
+/// the overpacked generation (mw_bits = 2) reports its coarser
+/// weight-quantization error through the same [`ErrorStats`].
+pub fn approximation_error_table_in(weights: &[i64], c_bits: u32, mw_bits: u32) -> ErrorStats {
     let mut changed = 0;
     let mut abs_error = Summary::new();
     let mut rel_error = Summary::new();
@@ -46,7 +53,7 @@ pub fn approximation_error_table(weights: &[i64], c_bits: u32) -> ErrorStats {
     let mut count = 0u64;
     for &w in weights {
         count += 1;
-        let Some((neg, a)) = approximate_signed(w, c_bits) else {
+        let Some((neg, a)) = approximate_signed_in(w, c_bits, mw_bits) else {
             // zero weight: exact (explicit zero slot)
             continue;
         };

@@ -15,11 +15,18 @@
 mod approx;
 mod error;
 
-pub use approx::{approximate, approximate_signed, representable_magnitudes, ApproxParam};
-pub use error::{approximation_error_table, ErrorStats};
+pub use approx::{
+    approx_mw_set, approximate, approximate_in, approximate_signed, approximate_signed_in,
+    representable_magnitudes, representable_magnitudes_in, ApproxParam,
+};
+pub use error::{approximation_error_table, approximation_error_table_in, ErrorStats};
 
 /// Allowed manipulated-parameter values under the approximation (Eq. 4).
 pub const APPROX_MW: [u8; 5] = [0, 1, 3, 5, 7];
+
+/// The overpacked generation's narrowed 2-bit MW set (DESIGN.md §3):
+/// coarser weight approximation in exchange for a narrower A-port slot.
+pub const APPROX_MW_2: [u8; 3] = [0, 1, 3];
 
 /// Result of Algorithm 1 on a positive magnitude:
 /// `magnitude = 2^s · (1 + 2^n · mw)` with `mw` odd or zero, minimal.

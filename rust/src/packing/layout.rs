@@ -1,38 +1,59 @@
 //! DSP port layouts for the SDMM.
 //!
-//! A layout fixes, for a given input bit width `v`:
-//! * how many weight slots go in the multiplicand port A (25-bit) and at
-//!   which offsets,
-//! * how many input variables pack into the multiplier port B (18-bit),
-//! * the product-slot width `w = v + mw_width`.
+//! A layout fixes, for a given input bit width `v` and packing
+//! generation:
+//! * how many weight slots go in the multiplicand port A and at which
+//!   offsets,
+//! * how many input variables pack into the multiplier port B,
+//! * the product-slot width `w = (v − t) + mw_bits` (t is the input
+//!   truncation, non-zero only for the overpacked 6-bit layout).
 //!
 //! Product slot (j, i) lands at bit `a_off[j] + b_off[i]` of `A·B` and
 //! must be `w` bits wide with no overlap — validated by
 //! [`Layout::validate`] and exhaustively by the packing tests.
 //!
-//! The three shipped layouts meet the paper's multiplies/DSP (k = 3/4/6
-//! for v = 8/6/4) within DSP48E1 port widths (DESIGN.md §3):
+//! The shipped layouts per generation (DESIGN.md §3):
 //!
-//! | v | kw×ki | A offsets | B offsets | slot width |
-//! |---|-------|-----------|-----------|------------|
-//! | 8 | 3×1   | 0,11,22   | 0         | 11         |
-//! | 6 | 2×2   | 0,18      | 0,9       | 9          |
-//! | 4 | 2×3   | 0,21      | 0,7,14    | 7          |
+//! | generation | v | kw×ki | A offsets | B offsets | slot | ports | exact |
+//! |------------|---|-------|-----------|-----------|------|-------|-------|
+//! | dsp48e1    | 8 | 3×1   | 0,11,22   | 0         | 11   | 25×18 | yes   |
+//! | dsp48e1    | 6 | 2×2   | 0,18      | 0,9       | 9    | 25×18 | yes   |
+//! | dsp48e1    | 4 | 2×3   | 0,21      | 0,7,14    | 7    | 25×18 | yes   |
+//! | overpacked | 8 | 2×2   | 0,20      | 0,10      | 10   | 25×18 | MW set |
+//! | overpacked | 6 | 2×3   | 0,18      | 0,6,12    | 6    | 25×18 | no (t=2) |
+//! | overpacked | 4 | 2×3   | 0,18      | 0,6,12    | 6    | 25×18 | yes   |
+//! | dsp58      | 8 | 2×2   | 0,22      | 0,11      | 11   | 27×24 | yes   |
+//! | dsp58      | 6 | 2×2   | 0,18      | 0,9       | 9    | 27×24 | yes   |
+//! | dsp58      | 4 | 2×3   | 0,21      | 0,7,14    | 7    | 27×24 | yes   |
+//!
+//! The baseline rows meet the paper's multiplies/DSP (k = 3/4/6 for
+//! v = 8/6/4); the overpacked rows trade weight-approximation coarseness
+//! (2-bit MW set {0,1,3}) and, at 6-bit, a compensated 2-bit input
+//! truncation for strictly more multiplications per block (k = 4/6/6);
+//! the DSP58 rows recover exactness at k = 4 for 8-bit on the wider
+//! 27×24 ports.
 
-use crate::bail;
+use crate::dsp::PackGeneration;
 use crate::error::{Result, SdmmError};
 
 /// DSP48E1 A (multiplicand) port width (paper Fig. 1).
 pub const A_PORT_BITS: u32 = 25;
 /// DSP48E1 B (multiplier) port width.
 pub const B_PORT_BITS: u32 = 18;
-/// DSP48E1 C (add) port width.
+/// DSP48E1 C (add) port width — also the modeled P-word width for
+/// every generation (the DSP58 layouts keep their packed products
+/// within 48 bits, so its 58-bit ALU headroom is never exercised).
 pub const C_PORT_BITS: u32 = 48;
-/// Width of the approximated manipulated parameter (Eq. 4).
+/// Width of the approximated manipulated parameter (Eq. 4) in the
+/// exact generations; the overpacked generation narrows this to 2.
 pub const MW_A_BITS: u32 = 3;
 
+fn invalid(msg: String) -> SdmmError {
+    SdmmError::InvalidConfig(msg)
+}
+
 /// A packing layout: placement of weight slots and input variables on
-/// the DSP ports.
+/// the DSP ports of one [`PackGeneration`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Layout {
     /// Input variable bit width (v).
@@ -44,32 +65,64 @@ pub struct Layout {
     pub a_offsets: Vec<u32>,
     /// Bit offsets of the packed inputs within the B word.
     pub b_offsets: Vec<u32>,
-    /// Product slot width `w = v + MW_A_BITS`.
+    /// Product slot width `w = (v − trunc) + mw_bits`.
     pub slot_width: u32,
+    /// The packing generation this layout targets (fixes port widths,
+    /// the MW field width and the approximation set).
+    pub generation: PackGeneration,
+    /// Input truncation `t`: B lanes carry `zext(x >> t, v − t)` and
+    /// unpacked products are compensated by `⌊W̃·(2^t − 1)/2⌋`.
+    pub trunc: u32,
+    /// Width of the per-slot MW field (3 exact, 2 overpacked).
+    pub mw_bits: u32,
 }
 
 impl Layout {
-    /// The paper's layout for a given input bit width (8, 6 or 4).
+    /// The paper's DSP48E1 baseline layout for a given input bit width
+    /// (8, 6 or 4).
     pub fn for_bits(v: u32) -> Result<Layout> {
         Self::for_bits_wc(v, v)
     }
 
-    /// Layout with distinct weight/input widths (Table 2 sweeps (W,I)
-    /// over {8,6,4}²). The slot geometry depends only on the *input*
-    /// width (slot = v + 3); the weight width `c` bounds magnitudes.
+    /// Baseline layout with distinct weight/input widths (Table 2
+    /// sweeps (W,I) over {8,6,4}²). The slot geometry depends only on
+    /// the *input* width; the weight width `c` bounds magnitudes.
     pub fn for_bits_wc(c: u32, v: u32) -> Result<Layout> {
-        let (a_offsets, b_offsets): (Vec<u32>, Vec<u32>) = match v {
-            8 => (vec![0, 11, 22], vec![0]),
-            6 => (vec![0, 18], vec![0, 9]),
-            4 => (vec![0, 21], vec![0, 7, 14]),
+        Self::for_generation_wc(PackGeneration::Dsp48E1, c, v)
+    }
+
+    /// The shipped layout of `generation` at input width `v` (8, 6
+    /// or 4) with weights of the same width.
+    pub fn for_generation(generation: PackGeneration, v: u32) -> Result<Layout> {
+        Self::for_generation_wc(generation, v, v)
+    }
+
+    /// The shipped layout of `generation` with distinct weight/input
+    /// widths (see the module table).
+    pub fn for_generation_wc(generation: PackGeneration, c: u32, v: u32) -> Result<Layout> {
+        use PackGeneration::*;
+        let (a_offsets, b_offsets): (Vec<u32>, Vec<u32>) = match (generation, v) {
+            (Dsp48E1, 8) => (vec![0, 11, 22], vec![0]),
+            (Dsp48E1, 6) => (vec![0, 18], vec![0, 9]),
+            (Dsp48E1, 4) => (vec![0, 21], vec![0, 7, 14]),
+            (Overpacked, 8) => (vec![0, 20], vec![0, 10]),
+            (Overpacked, 6) | (Overpacked, 4) => (vec![0, 18], vec![0, 6, 12]),
+            (Dsp58, 8) => (vec![0, 22], vec![0, 11]),
+            (Dsp58, 6) => (vec![0, 18], vec![0, 9]),
+            (Dsp58, 4) => (vec![0, 21], vec![0, 7, 14]),
             _ => return Err(SdmmError::UnsupportedBitWidth { v }),
         };
+        let trunc = generation.trunc_for(v);
+        let mw_bits = generation.mw_bits();
         let l = Layout {
             v,
             c,
             a_offsets,
             b_offsets,
-            slot_width: v + MW_A_BITS,
+            slot_width: (v - trunc) + mw_bits,
+            generation,
+            trunc,
+            mw_bits,
         };
         l.validate()?;
         Ok(l)
@@ -85,9 +138,31 @@ impl Layout {
         self.b_offsets.len()
     }
 
-    /// Multiplications per DSP block (the paper's k: 3/4/6).
+    /// Multiplications per DSP block (the paper's k: 3/4/6 on the
+    /// baseline, 4/6/6 overpacked, 4/4/6 on DSP58).
     pub fn k(&self) -> usize {
         self.kw() * self.ki()
+    }
+
+    /// Packed input width `v − trunc` (what a B lane actually carries).
+    pub fn vp(&self) -> u32 {
+        self.v - self.trunc
+    }
+
+    /// A (multiplicand) port width of this layout's generation.
+    pub fn a_port_bits(&self) -> u32 {
+        self.generation.a_port_bits()
+    }
+
+    /// B (multiplier) port width of this layout's generation.
+    pub fn b_port_bits(&self) -> u32 {
+        self.generation.b_port_bits()
+    }
+
+    /// Does this layout produce bit-exact products `W̃·I`? (False only
+    /// for the truncated overpacked 6-bit layout.)
+    pub fn product_exact(&self) -> bool {
+        self.trunc == 0
     }
 
     /// Bit position of product slot (weight j, input i).
@@ -95,58 +170,116 @@ impl Layout {
         self.a_offsets[j] + self.b_offsets[i]
     }
 
-    /// Check port widths and product-slot disjointness.
+    /// Check port widths and product-slot disjointness. Any malformed
+    /// layout — including empty offset vectors — comes back as a typed
+    /// [`SdmmError`], never a panic (the fuzz surface for custom
+    /// layouts; `tests/generation_conformance.rs`). Offset arithmetic
+    /// saturates, so even absurd field values cannot overflow here.
     pub fn validate(&self) -> Result<()> {
         if self.v < 2 || self.v > 16 || self.c < 2 || self.c > 16 {
-            bail!("bit widths out of range: v={} c={}", self.v, self.c);
+            return Err(invalid(format!(
+                "bit widths out of range: v={} c={}",
+                self.v, self.c
+            )));
+        }
+        if self.trunc >= self.v {
+            return Err(invalid(format!(
+                "truncation {} consumes the whole {}-bit input",
+                self.trunc, self.v
+            )));
+        }
+        if self.mw_bits < 1 || self.mw_bits > MW_A_BITS {
+            return Err(invalid(format!(
+                "MW field width {} outside 1..={MW_A_BITS}",
+                self.mw_bits
+            )));
+        }
+        if self.slot_width != self.vp() + self.mw_bits {
+            return Err(invalid(format!(
+                "slot width {} != packed input width {} + MW width {}",
+                self.slot_width,
+                self.vp(),
+                self.mw_bits
+            )));
         }
         // A port: top slot's MW field must fit.
-        let a_need = self.a_offsets.iter().max().unwrap() + MW_A_BITS;
-        if a_need > A_PORT_BITS {
-            bail!("A word needs {a_need} bits > {A_PORT_BITS}");
+        let a_top = self
+            .a_offsets
+            .iter()
+            .max()
+            .ok_or_else(|| invalid("layout has no A-word weight slots".into()))?;
+        let a_need = a_top.saturating_add(self.mw_bits);
+        if a_need > self.a_port_bits() {
+            return Err(invalid(format!(
+                "A word needs {a_need} bits > {} ({})",
+                self.a_port_bits(),
+                self.generation.dsp().name()
+            )));
         }
         // B port: top input field must fit.
-        let b_need = self.b_offsets.iter().max().unwrap() + self.v;
-        if b_need > B_PORT_BITS {
-            bail!("B word needs {b_need} bits > {B_PORT_BITS}");
+        let b_top = self
+            .b_offsets
+            .iter()
+            .max()
+            .ok_or_else(|| invalid("layout has no B-word input lanes".into()))?;
+        let b_need = b_top.saturating_add(self.vp());
+        if b_need > self.b_port_bits() {
+            return Err(invalid(format!(
+                "B word needs {b_need} bits > {} ({})",
+                self.b_port_bits(),
+                self.generation.dsp().name()
+            )));
         }
-        // Product slots must be disjoint and fit the 48-bit ALU.
+        // Product slots must be disjoint and fit the modeled 48-bit
+        // P word (the DSP58 58-bit ALU headroom is deliberately left
+        // unused so every generation shares one P-word identity).
         let mut slots: Vec<u32> = (0..self.kw())
             .flat_map(|j| (0..self.ki()).map(move |i| (j, i)))
-            .map(|(j, i)| self.slot_offset(j, i))
+            .map(|(j, i)| self.a_offsets[j].saturating_add(self.b_offsets[i]))
             .collect();
         slots.sort_unstable();
         for pair in slots.windows(2) {
             if pair[1] - pair[0] < self.slot_width {
-                bail!(
+                return Err(invalid(format!(
                     "product slots at bits {} and {} overlap (width {})",
-                    pair[0],
-                    pair[1],
-                    self.slot_width
-                );
+                    pair[0], pair[1], self.slot_width
+                )));
             }
         }
-        let p_need = slots.last().unwrap() + self.slot_width;
+        // kw ≥ 1 and ki ≥ 1 were checked above, so `slots` is non-empty.
+        let p_need = slots[slots.len() - 1].saturating_add(self.slot_width);
         if p_need > C_PORT_BITS {
-            bail!("packed product needs {p_need} bits > {C_PORT_BITS}");
+            return Err(invalid(format!(
+                "packed product needs {p_need} bits > {C_PORT_BITS}"
+            )));
         }
         Ok(())
     }
 
     /// Pack signed inputs into the B word (zero-extended bit patterns —
-    /// the sign is restored through the SEx words, paper §3.3.2).
-    pub fn b_word(&self, inputs: &[i64]) -> u64 {
-        assert_eq!(inputs.len(), self.ki(), "expected {} inputs", self.ki());
+    /// the sign is restored through the SEx words, paper §3.3.2; under
+    /// a truncating layout each lane carries `zext(x >> t, v − t)`).
+    ///
+    /// Arity and per-input range are checked *unconditionally*: a value
+    /// wider than `v` bits would silently smear into the neighbouring
+    /// B lane, so it is a typed refusal in release builds too (not the
+    /// former `debug_assert!`).
+    pub fn b_word(&self, inputs: &[i64]) -> Result<u64> {
+        if inputs.len() != self.ki() {
+            return Err(SdmmError::ArityMismatch {
+                what: "b_word inputs",
+                got: inputs.len(),
+                expected: self.ki(),
+            });
+        }
         let mut b = 0u64;
         for (i, &inp) in inputs.iter().enumerate() {
-            debug_assert!(
-                crate::util::bits::fits_signed(inp, self.v),
-                "input {inp} exceeds {} bits",
-                self.v
-            );
-            b |= crate::util::bits::zext(inp, self.v) << self.b_offsets[i];
+            if !crate::util::bits::fits_signed(inp, self.v) {
+                return Err(SdmmError::InputOutOfRange { v_bits: self.v });
+            }
+            b |= crate::util::bits::zext(inp >> self.trunc, self.vp()) << self.b_offsets[i];
         }
-        b
+        Ok(b)
     }
 }
 
@@ -163,18 +296,34 @@ mod tests {
     }
 
     #[test]
+    fn generation_k_values() {
+        // Overpacking beats the baseline k at 8 and 6 bits on the same
+        // DSP48E1 ports; DSP58 beats it at 8 bits while staying exact.
+        assert_eq!(Layout::for_generation(PackGeneration::Overpacked, 8).unwrap().k(), 4);
+        assert_eq!(Layout::for_generation(PackGeneration::Overpacked, 6).unwrap().k(), 6);
+        assert_eq!(Layout::for_generation(PackGeneration::Overpacked, 4).unwrap().k(), 6);
+        assert_eq!(Layout::for_generation(PackGeneration::Dsp58, 8).unwrap().k(), 4);
+        assert_eq!(Layout::for_generation(PackGeneration::Dsp58, 6).unwrap().k(), 4);
+        assert_eq!(Layout::for_generation(PackGeneration::Dsp58, 4).unwrap().k(), 6);
+    }
+
+    #[test]
     fn all_layouts_validate() {
-        for v in [4, 6, 8] {
-            for c in [4, 6, 8] {
-                Layout::for_bits_wc(c, v).unwrap();
+        for g in PackGeneration::ALL {
+            for v in [4, 6, 8] {
+                for c in [4, 6, 8] {
+                    Layout::for_generation_wc(g, c, v).unwrap();
+                }
             }
         }
     }
 
     #[test]
     fn unsupported_width_rejected() {
-        assert!(Layout::for_bits(5).is_err());
-        assert!(Layout::for_bits(16).is_err());
+        for g in PackGeneration::ALL {
+            assert!(Layout::for_generation(g, 5).is_err());
+            assert!(Layout::for_generation(g, 16).is_err());
+        }
     }
 
     #[test]
@@ -203,26 +352,72 @@ mod tests {
     #[test]
     fn b_word_packs_negative_inputs() {
         let l = Layout::for_bits(6).unwrap();
-        let b = l.b_word(&[-1, -32]);
+        let b = l.b_word(&[-1, -32]).unwrap();
         // -1 -> 0b111111 at bit 0; -32 -> 0b100000 at bit 9.
         assert_eq!(b, 0b111111 | (0b100000 << 9));
     }
 
     #[test]
-    #[should_panic(expected = "expected 3 inputs")]
-    fn b_word_arity_checked() {
-        Layout::for_bits(4).unwrap().b_word(&[1, 2]);
+    fn b_word_truncating_layout_drops_low_bits() {
+        let l = Layout::for_generation(PackGeneration::Overpacked, 6).unwrap();
+        assert_eq!(l.vp(), 4);
+        // 13 >> 2 = 3; -5 >> 2 = -2 (arithmetic) -> 0b1110; 0 -> 0.
+        let b = l.b_word(&[13, -5, 0]).unwrap();
+        assert_eq!(b, 0b0011 | (0b1110 << 6));
+    }
+
+    #[test]
+    fn b_word_arity_is_a_typed_error() {
+        let err = Layout::for_bits(4).unwrap().b_word(&[1, 2]).unwrap_err();
+        assert!(matches!(
+            err,
+            SdmmError::ArityMismatch { got: 2, expected: 3, .. }
+        ));
+    }
+
+    #[test]
+    fn b_word_range_is_a_typed_error_in_release_too() {
+        // The old check was debug_assert!-only: in a release build an
+        // over-wide input silently smeared into the neighbouring lane.
+        // This test is compiled in every profile.
+        let l = Layout::for_bits(6).unwrap();
+        for bad in [32i64, -33, 1 << 20, i64::MIN] {
+            let err = l.b_word(&[bad, 0]).unwrap_err();
+            assert!(
+                matches!(err, SdmmError::InputOutOfRange { v_bits: 6 }),
+                "input {bad} gave {err}"
+            );
+        }
+        // Boundary values stay accepted.
+        assert!(l.b_word(&[31, -32]).is_ok());
+    }
+
+    fn custom(a_offsets: Vec<u32>, b_offsets: Vec<u32>) -> Layout {
+        Layout {
+            v: 8,
+            c: 8,
+            a_offsets,
+            b_offsets,
+            slot_width: 11,
+            generation: PackGeneration::Dsp48E1,
+            trunc: 0,
+            mw_bits: 3,
+        }
     }
 
     #[test]
     fn overlapping_layout_rejected() {
-        let l = Layout {
-            v: 8,
-            c: 8,
-            a_offsets: vec![0, 5], // 5 < slot width 11 -> overlap
-            b_offsets: vec![0],
-            slot_width: 11,
-        };
-        assert!(l.validate().is_err());
+        // 5 < slot width 11 -> overlap
+        assert!(custom(vec![0, 5], vec![0]).validate().is_err());
+    }
+
+    #[test]
+    fn empty_offsets_are_typed_errors_not_panics() {
+        // Former panic paths: `.max().unwrap()` / `slots.last().unwrap()`
+        // on empty offset vectors.
+        for l in [custom(vec![], vec![0]), custom(vec![0], vec![]), custom(vec![], vec![])] {
+            let err = l.validate().unwrap_err();
+            assert!(matches!(err, SdmmError::InvalidConfig(_)), "{err}");
+        }
     }
 }

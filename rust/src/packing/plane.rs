@@ -669,6 +669,112 @@ mod tests {
     }
 
     #[test]
+    fn execute_conv_matches_reference_exact_generations() {
+        // Product-exact non-baseline layouts: conv equals the golden
+        // integer conv over the plane's effective (re-approximated)
+        // weights, on both execution paths.
+        use crate::dsp::PackGeneration;
+        for (generation, v) in [
+            (PackGeneration::Overpacked, 8u32),
+            (PackGeneration::Overpacked, 4),
+            (PackGeneration::Dsp58, 8),
+            (PackGeneration::Dsp58, 6),
+            (PackGeneration::Dsp58, 4),
+        ] {
+            let l = Layout::for_generation(generation, v).unwrap();
+            assert!(l.product_exact());
+            let group = l.k();
+            let layer = ConvLayer::new("t", 6, 4, 7, 3, 2, 1, 1);
+            let lim = 1i64 << (v - 1);
+            let mut rng = Rng::new(200 + v as u64 + generation.tag() as u64 * 8);
+            let w: Vec<i64> =
+                (0..layer.params()).map(|_| rng.range_i64(-lim, lim - 1)).collect();
+            let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+            input.data = (0..input.data.len())
+                .map(|_| rng.range_i64(-lim, lim - 1))
+                .collect();
+            let plane = PackedPlane::build(&l, group, &w, &layer).unwrap();
+            let golden =
+                crate::cnn::infer::conv2d_int(&input, &plane.effective_weights(&layer), &layer);
+            let (out, dsp_ops, mults) = plane.execute_conv(&input, &layer);
+            assert_eq!(out, golden, "{generation} v={v} (batch)");
+            assert_eq!(mults, layer.macs());
+            assert!(dsp_ops > 0 && dsp_ops < mults);
+            let mut engine = SdmmEngine::new();
+            let (out_s, _, _) = plane.execute_conv_scalar(&input, &layer, &mut engine);
+            assert_eq!(out_s, golden, "{generation} v={v} (scalar)");
+        }
+    }
+
+    #[test]
+    fn execute_conv_truncated_layout_matches_model() {
+        // Overpacked 6-bit (trunc = 2): the conv equals the *modeled*
+        // conv — inputs pre-shifted, result re-scaled, plus the
+        // per-output-channel compensation constant Σ_tap comp(W̃_tap)
+        // (comp is added per product, padding zeros included, exactly
+        // like the datapath).
+        use crate::dsp::PackGeneration;
+        let l = Layout::for_generation(PackGeneration::Overpacked, 6).unwrap();
+        let t = l.trunc;
+        let layer = ConvLayer::new("t", 6, 4, 7, 3, 2, 1, 1);
+        let mut rng = Rng::new(207);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-32, 31)).collect();
+        let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+        input.data = (0..input.data.len()).map(|_| rng.range_i64(-32, 31)).collect();
+        let plane = PackedPlane::build(&l, l.k(), &w, &layer).unwrap();
+        let eff = plane.effective_weights(&layer);
+        let mut shifted = input.clone();
+        for x in shifted.data.iter_mut() {
+            *x >>= t;
+        }
+        let mut golden = crate::cnn::infer::conv2d_int(&shifted, &eff, &layer);
+        let icg = layer.in_ch / layer.groups;
+        let taps_per_oc = icg * layer.kernel * layer.kernel;
+        let n_pix = layer.out_hw() * layer.out_hw();
+        for oc in 0..layer.out_ch {
+            let comp_sum: i64 = (0..taps_per_oc)
+                .map(|tap| {
+                    let wv = eff[oc * taps_per_oc + tap];
+                    wv * ((1i64 << t) - 1) / 2
+                })
+                .sum();
+            for p in 0..n_pix {
+                golden.data[oc * n_pix + p] = (golden.data[oc * n_pix + p] << t) + comp_sum;
+            }
+        }
+        let (out, _, _) = plane.execute_conv(&input, &layer);
+        assert_eq!(out, golden, "batch path");
+        let mut engine = SdmmEngine::new();
+        let (out_s, _, _) = plane.execute_conv_scalar(&input, &layer, &mut engine);
+        assert_eq!(out_s, golden, "scalar path");
+    }
+
+    #[test]
+    fn overpacked_8bit_needs_fewer_dsp_ops_than_baseline() {
+        // The overpacking claim in op-accounting form: at equal 8-bit
+        // width and equal multiplication count, the overpacked 2×2
+        // layout (k = 4) takes strictly fewer DSP ops than the baseline
+        // 3×1 (k = 3).
+        use crate::dsp::PackGeneration;
+        let layer = ConvLayer::new("t", 6, 4, 7, 3, 2, 1, 1);
+        let mut rng = Rng::new(208);
+        let w: Vec<i64> = (0..layer.params()).map(|_| rng.range_i64(-128, 127)).collect();
+        let mut input = Tensor3::zeros(layer.in_ch, layer.in_hw, layer.in_hw);
+        input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+        let base = Layout::for_bits(8).unwrap();
+        let over = Layout::for_generation(PackGeneration::Overpacked, 8).unwrap();
+        let p_base = PackedPlane::build(&base, base.k(), &w, &layer).unwrap();
+        let p_over = PackedPlane::build(&over, over.k(), &w, &layer).unwrap();
+        let (_, ops_base, mults_base) = p_base.execute_conv(&input, &layer);
+        let (_, ops_over, mults_over) = p_over.execute_conv(&input, &layer);
+        assert_eq!(mults_base, mults_over);
+        assert!(
+            ops_over < ops_base,
+            "overpacked {ops_over} ops vs baseline {ops_base}"
+        );
+    }
+
+    #[test]
     fn scalar_only_build_skips_batch_forms() {
         let l = Layout::for_bits(8).unwrap();
         let layer = layer();

@@ -5,19 +5,24 @@
 //! Eq. 5–8; see DESIGN.md §3 for the derivation):
 //!
 //! ```text
-//! slot(j,i) = low_w( MW_j · Iu_i  +  SEx_{j,i} )                w = v+3
-//! SEx_{j,i} = ((2^m - 1 - MW_j) · neg(I_i)) << v  |  (I_i >>a n_j) mod 2^v
-//! product   = sign_j · ( (sext_w(slot) << n_j | Iu_i[n_j-1:0]) << s_j )
+//! slot(j,i) = low_w( MW_j · Iu_i  +  SEx_{j,i} )                w = vp+m
+//! SEx_{j,i} = ((2^m - 1 - MW_j) · neg(I_i)) << vp | (Ip_i >>a n_j) mod 2^vp
+//! product   = sign_j · ( (sext_w(slot) << n_j | Ipu_i[n_j-1:0]) << s_j )
 //! ```
 //!
-//! where `Iu` is the zero-extended bit pattern of the signed input and
-//! `m` is the MW field width (3 under the approximation). Every slot
-//! value stays in `[0, 2^w)` so slots never interact through carries —
-//! that is what makes the single wide multiply + single wide add of the
-//! DSP block carry k independent multiplications.
+//! where `Ip = I >>a t` is the (possibly truncated) packed input,
+//! `vp = v − t` its width, `Ipu` its zero-extended bit pattern, and `m`
+//! is the MW field width (3 under the paper's approximation, 2 under
+//! the overpacked generation). Every slot value stays in `[0, 2^w)` so
+//! slots never interact through carries — that is what makes the single
+//! wide multiply + single wide add of the DSP block carry k independent
+//! multiplications. Under a truncating layout (overpacked 6-bit,
+//! t = 2) the recovered product is `(W̃_j·Ip_i) << t` plus the per-slot
+//! compensation `comp_j = ⌊W̃_j·(2^t − 1)/2⌋` — the DSP-Packing-style
+//! expected-value correction for the dropped input bits.
 
-use super::layout::{Layout, A_PORT_BITS, MW_A_BITS};
-use crate::manip::{approximate_signed, manipulate};
+use super::layout::Layout;
+use crate::manip::{approximate_signed_in, manipulate};
 use crate::error::{Result, SdmmError};
 use crate::util::bits::{mask, sext, zext};
 
@@ -31,8 +36,8 @@ pub struct Slot {
     pub negative: bool,
     /// Manipulated parameter (MW_A under approximation).
     pub mw: u64,
-    /// Width of the MW field in the A word (3 in approx mode; the true
-    /// bit length in exact mode).
+    /// Width of the MW field in the A word (the layout's `mw_bits` in
+    /// approx mode; the true bit length in exact mode).
     pub mw_width: u32,
     /// Inner shift n.
     pub n: u32,
@@ -54,13 +59,13 @@ impl Slot {
         }
     }
 
-    fn from_signed(value: i64, c_bits: u32) -> Slot {
-        match approximate_signed(value, c_bits) {
+    fn from_signed(value: i64, c_bits: u32, mw_bits: u32) -> Slot {
+        match approximate_signed_in(value, c_bits, mw_bits) {
             None => Slot {
                 zero: true,
                 negative: false,
                 mw: 0,
-                mw_width: MW_A_BITS,
+                mw_width: mw_bits,
                 n: 0,
                 s: 0,
                 magnitude: 0,
@@ -69,7 +74,7 @@ impl Slot {
                 zero: false,
                 negative: neg,
                 mw: a.m.mw,
-                mw_width: MW_A_BITS,
+                mw_width: mw_bits,
                 n: a.m.n,
                 s: a.m.s,
                 magnitude: a.approx,
@@ -100,6 +105,18 @@ impl Slot {
             magnitude: m.value(),
         }
     }
+
+    /// The truncation compensation this slot contributes under `t` bits
+    /// of input truncation: `⌊W̃·(2^t − 1)/2⌋` (toward zero), the
+    /// expected value of `W̃·r` over the dropped remainder
+    /// `r = I − (I >>a t) · 2^t ∈ [0, 2^t)`. Zero for `t = 0`.
+    pub fn comp(&self, trunc: u32) -> i64 {
+        if trunc == 0 || self.zero {
+            0
+        } else {
+            self.value() * ((1i64 << trunc) - 1) / 2
+        }
+    }
 }
 
 /// A tuple of weights packed for one DSP block.
@@ -115,14 +132,15 @@ pub struct PackedTuple {
     /// Per-slot A-word offsets (equal to layout.a_offsets in approx
     /// mode; cumulative variable-width offsets in exact mode).
     pub a_offsets: Vec<u32>,
-    /// Slot widths (v + mw_width per slot).
+    /// Slot widths (vp + mw_width per slot).
     pub slot_widths: Vec<u32>,
 }
 
 /// Pack a tuple of signed weights in *approximation mode* (Eq. 4): every
-/// weight moves to the nearest representable value, MW fits in 3 bits,
-/// the layout's fixed offsets apply. This always succeeds — the property
-/// the paper's fine-tuning step exists to provide in exact mode.
+/// weight moves to the nearest representable value under the layout's
+/// MW set, MW fits in `layout.mw_bits`, the layout's fixed offsets
+/// apply. This always succeeds — the property the paper's fine-tuning
+/// step exists to provide in exact mode.
 pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
     if weights.len() != layout.kw() {
         return Err(SdmmError::ArityMismatch {
@@ -141,7 +159,10 @@ pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
             return Err(SdmmError::WeightOutOfRange { weight: w, c_bits: c });
         }
     }
-    let slots: Vec<Slot> = weights.iter().map(|&w| Slot::from_signed(w, c)).collect();
+    let slots: Vec<Slot> = weights
+        .iter()
+        .map(|&w| Slot::from_signed(w, c, layout.mw_bits))
+        .collect();
     let mut a_word = 0u64;
     for (j, slot) in slots.iter().enumerate() {
         a_word |= slot.mw << layout.a_offsets[j];
@@ -159,11 +180,11 @@ pub fn pack_approx(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
 /// Eq. 6-style sign extension): slot widths vary with each weight's MW
 /// bit length; fails when the tuple does not fit the A port — the
 /// condition fine-tuning repairs (§3.3.4). Exact mode supports only
-/// single-input layouts (the paper's Eq. 8 form).
+/// single-input, non-truncating layouts (the paper's Eq. 8 form).
 pub fn pack_exact(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
-    if layout.ki() != 1 {
+    if layout.ki() != 1 || layout.trunc != 0 {
         return Err(SdmmError::UnsupportedBackend(
-            "exact mode requires a single-input layout".into(),
+            "exact mode requires a single-input, non-truncating layout".into(),
         ));
     }
     if weights.len() != layout.kw() {
@@ -186,9 +207,10 @@ pub fn pack_exact(layout: &Layout, weights: &[i64]) -> Result<PackedTuple> {
         off += w;
     }
     let a_need = a_offsets.last().unwrap() + slots.last().unwrap().mw_width;
-    if a_need > A_PORT_BITS {
+    if a_need > layout.a_port_bits() {
         return Err(SdmmError::TupleOverflow(format!(
-            "A word needs {a_need} > {A_PORT_BITS} bits (fine-tuning required)"
+            "A word needs {a_need} > {} bits (fine-tuning required)",
+            layout.a_port_bits()
         )));
     }
     if off > 48 {
@@ -215,25 +237,29 @@ impl PackedTuple {
         self.slots.iter().map(|s| s.value()).collect()
     }
 
-    /// Does the A word set the sign bit of the signed 25-bit A port?
-    /// (Happens for v=8 when the top slot's MW ≥ 4; the engine then adds
-    /// the `B << 25` correction through the C port — DESIGN.md §3.)
+    /// Does the A word set the sign bit of the generation's signed A
+    /// port? (Happens for the baseline v=8 layout when the top slot's
+    /// MW ≥ 4; the engine then adds the `B << a_port` correction
+    /// through the C port — DESIGN.md §3. Structurally impossible on
+    /// the overpacked and DSP58 layouts, whose top MW field sits below
+    /// the sign bit.)
     pub fn a_sign_correction(&self) -> bool {
-        (self.a_word >> (A_PORT_BITS - 1)) & 1 == 1
+        (self.a_word >> (self.layout.a_port_bits() - 1)) & 1 == 1
     }
 
     /// Sign-extension word SEx for (slot j, input i) — Eq. 7 (approx,
-    /// m = 3) and its Eq. 6 generalization (exact, m = mw_width).
+    /// m = mw_bits) and its Eq. 6 generalization (exact, m = mw_width).
     pub fn sex_word(&self, j: usize, input: i64) -> u64 {
         let slot = &self.slots[j];
         if slot.zero {
             return 0;
         }
-        let v = self.layout.v;
+        let vp = self.layout.vp();
+        let ip = input >> self.layout.trunc;
         let m = slot.mw_width;
-        let neg = input < 0;
+        let neg = ip < 0;
         let mask_mw = (mask(m) - slot.mw) * (neg as u64);
-        (mask_mw << v) | zext(input >> slot.n, v)
+        (mask_mw << vp) | zext(ip >> slot.n, vp)
     }
 
     /// Build the accumulator (C port) word for a set of inputs: the sum
@@ -252,32 +278,43 @@ impl PackedTuple {
 
     /// Post-process one product slot out of the 48-bit DSP result `p`
     /// (paper Fig. 5 "post-processing"): extract the w-bit field,
-    /// sign-interpret, concatenate `I[n-1:0]`, shift by s, apply the
-    /// weight sign, gate zeros.
+    /// sign-interpret, concatenate `Ip[n-1:0]`, shift by s, apply the
+    /// weight sign, gate zeros — then re-scale by the truncation and
+    /// add the compensation term (both no-ops for `t = 0`).
     pub fn unpack_slot(&self, p: u64, j: usize, i: usize, input: i64) -> i64 {
         let slot = &self.slots[j];
         if slot.zero {
             return 0;
         }
+        let t = self.layout.trunc;
+        let vp = self.layout.vp();
+        let ip = input >> t;
         let off = self.a_offsets[j] + self.layout.b_offsets[i];
-        let w = self.layout.v + slot.mw_width;
+        let w = vp + slot.mw_width;
         let field = (p >> off) & mask(w);
         let s_val = sext(field, w);
-        let concat = (s_val << slot.n) | (zext(input, self.layout.v) & mask(slot.n)) as i64;
+        let concat = (s_val << slot.n) | (zext(ip, vp) & mask(slot.n)) as i64;
         let r = concat << slot.s;
-        if slot.negative {
-            -r
-        } else {
-            r
-        }
+        let q = if slot.negative { -r } else { r };
+        (q << t) + slot.comp(t)
     }
 
     /// Non-allocating unpack: `out[j * ki + i] = Ŵ_j · I_i`.
     /// (Perf-pass addition: the nested-Vec `unpack_all` costs ~65 ns of
     /// allocation per DSP op — this is the simulator hot path.)
+    ///
+    /// The output-size check is a *hard* assert: a short buffer would
+    /// silently drop products in release builds (the same
+    /// release-silent pattern `Layout::b_word` had).
     pub fn unpack_into(&self, p: u64, inputs: &[i64], out: &mut [i64]) {
         let ki = self.layout.ki();
-        debug_assert_eq!(out.len(), self.slots.len() * ki);
+        assert_eq!(
+            out.len(),
+            self.slots.len() * ki,
+            "unpack_into buffer holds {} products, tuple yields {}",
+            out.len(),
+            self.slots.len() * ki
+        );
         for j in 0..self.slots.len() {
             for (i, &inp) in inputs.iter().enumerate() {
                 out[j * ki + i] = self.unpack_slot(p, j, i, inp);
@@ -299,11 +336,30 @@ impl PackedTuple {
     }
 
     /// Reference products `Ŵ_j · I_i` computed directly (the oracle the
-    /// DSP path must match bit-for-bit).
+    /// DSP path must match bit-for-bit on non-truncating layouts).
     pub fn expected_products(&self, inputs: &[i64]) -> Vec<Vec<i64>> {
         self.slots
             .iter()
             .map(|s| inputs.iter().map(|&i| s.value() * i).collect())
+            .collect()
+    }
+
+    /// The products the DSP path *models* under this layout:
+    /// `(Ŵ_j · (I_i >>a t)) << t + comp_j`. Identical to
+    /// [`expected_products`](Self::expected_products) when `t = 0`;
+    /// on the truncated overpacked layout this is the bit-level oracle
+    /// and `expected_products` is the accuracy target the error model
+    /// measures against.
+    pub fn modeled_products(&self, inputs: &[i64]) -> Vec<Vec<i64>> {
+        let t = self.layout.trunc;
+        self.slots
+            .iter()
+            .map(|s| {
+                inputs
+                    .iter()
+                    .map(|&i| ((s.value() * (i >> t)) << t) + s.comp(t))
+                    .collect()
+            })
             .collect()
     }
 }
@@ -311,13 +367,18 @@ impl PackedTuple {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dsp::PackGeneration;
 
     /// Emulate the full DSP op in plain integer math (the dsp module has
     /// the port-accurate version; this keeps tuple tests self-contained).
+    /// A is read signed at the generation's port width, B unsigned (the
+    /// B-sign correction is algebraically folded: sext(A)·B + a_sign
+    /// correction ≡ A·B mod 2^48 — DESIGN.md §3).
     fn run(t: &PackedTuple, inputs: &[i64]) -> u64 {
-        let b = t.layout.b_word(inputs);
-        let a_s = sext(t.a_word, A_PORT_BITS); // signed 25-bit port
-        let corr = if t.a_sign_correction() { b << A_PORT_BITS } else { 0 };
+        let a_bits = t.layout.a_port_bits();
+        let b = t.layout.b_word(inputs).unwrap();
+        let a_s = sext(t.a_word, a_bits); // signed A port
+        let corr = if t.a_sign_correction() { b << a_bits } else { 0 };
         ((a_s as i128 * b as i128) as u64)
             .wrapping_add(t.c_word(inputs))
             .wrapping_add(corr)
@@ -382,6 +443,110 @@ mod tests {
     }
 
     #[test]
+    fn overpacked_8bit_k4_exact_products() {
+        // 2×2 on the same DSP48E1 ports: 4 products per op, each still
+        // the exact W̃·I of the (coarser) 2-bit-MW approximation.
+        let l = Layout::for_generation(PackGeneration::Overpacked, 8).unwrap();
+        assert_eq!((l.kw(), l.ki()), (2, 2));
+        let t = pack_approx(&l, &[-97, 113]).unwrap();
+        // No slot can reach the A-port sign bit (top field is 20..22).
+        assert!(!t.a_sign_correction());
+        for s in &t.slots {
+            assert!(s.mw <= 3, "2-bit MW field: {s:?}");
+        }
+        for i1 in -128..=127i64 {
+            for i2 in [-128i64, -17, 0, 1, 127] {
+                let p = run(&t, &[i1, i2]);
+                assert_eq!(
+                    t.unpack_all(p, &[i1, i2]),
+                    t.expected_products(&[i1, i2]),
+                    "i1={i1} i2={i2}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overpacked_4bit_fully_exact() {
+        // All 4-bit magnitudes are representable even under {0,1,3}
+        // (3 = 1+2·1, 5 = 1+4·1, 7 = 1+2·3) and t = 0: bit-exact k=6.
+        let l = Layout::for_generation(PackGeneration::Overpacked, 4).unwrap();
+        assert_eq!(l.k(), 6);
+        for w1 in -8..8i64 {
+            for w2 in -8..8i64 {
+                let t = pack_approx(&l, &[w1, w2]).unwrap();
+                assert_eq!(t.values(), vec![w1, w2]);
+                for i in [-8i64, -3, 0, 7] {
+                    let inputs = [i, -i.max(-7), 1];
+                    let p = run(&t, &inputs);
+                    assert_eq!(t.unpack_all(p, &inputs), t.expected_products(&inputs));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overpacked_6bit_matches_modeled_products() {
+        // The truncated layout is bit-exact against its *model*
+        // ((W̃·(I>>2))<<2 + comp) for every weight pair and input — the
+        // approximation lives in the model, not in the DSP replay.
+        let l = Layout::for_generation(PackGeneration::Overpacked, 6).unwrap();
+        assert_eq!((l.k(), l.trunc, l.vp()), (6, 2, 4));
+        for w1 in [-32i64, -21, -1, 0, 3, 19, 31] {
+            for w2 in [-32i64, -5, 0, 7, 24, 31] {
+                let t = pack_approx(&l, &[w1, w2]).unwrap();
+                for i1 in -32..32i64 {
+                    let inputs = [i1, -17, 30];
+                    let p = run(&t, &inputs);
+                    assert_eq!(
+                        t.unpack_all(p, &inputs),
+                        t.modeled_products(&inputs),
+                        "w=({w1},{w2}) i1={i1}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overpacked_6bit_error_bounded() {
+        // |modeled − W̃·I| = |comp − W̃·r| with r ∈ [0, 2^t): bounded by
+        // 1.5·|W̃| + 1 at t = 2 — the error model DESIGN.md §3 documents.
+        let l = Layout::for_generation(PackGeneration::Overpacked, 6).unwrap();
+        for w in -32..=32i64 {
+            let t = pack_approx(&l, &[w, 0]).unwrap();
+            let wt = t.slots[0].value();
+            for i in -32..32i64 {
+                let modeled = t.modeled_products(&[i, 0, 0])[0][0];
+                let err = (modeled - wt * i).abs();
+                let bound = 3 * wt.abs() / 2 + 1;
+                assert!(err <= bound, "w={w} (W̃={wt}) i={i}: err {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn dsp58_8bit_k4_exact() {
+        // Wide-pack: 2×2 at full 3-bit MW on the 27×24 ports — exact
+        // products at k=4 where the baseline manages k=3.
+        let l = Layout::for_generation(PackGeneration::Dsp58, 8).unwrap();
+        assert_eq!((l.kw(), l.ki(), l.k()), (2, 2, 4));
+        let t = pack_approx(&l, &[-44, 15]).unwrap(); // 15 -> MW=7: top field 22..25
+        // Bits 22..25 of A are set, but the DSP58 sign bit is bit 26.
+        assert!(!t.a_sign_correction());
+        for i1 in -128..=127i64 {
+            for i2 in [-128i64, -1, 0, 1, 127] {
+                let p = run(&t, &[i1, i2]);
+                assert_eq!(
+                    t.unpack_all(p, &[i1, i2]),
+                    t.expected_products(&[i1, i2]),
+                    "i1={i1} i2={i2}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn zero_weight_slot() {
         let l = Layout::for_bits(8).unwrap();
         let t = pack_approx(&l, &[0, -1, 0]).unwrap();
@@ -428,5 +593,16 @@ mod tests {
         // 23 -> 22 (see manip tests), -23 -> -22.
         let t = pack_approx(&l, &[23, -23, 44]).unwrap();
         assert_eq!(t.values(), vec![22, -22, 44]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unpack_into buffer")]
+    fn unpack_into_short_buffer_is_a_hard_error() {
+        // Previously a debug_assert!: a short buffer silently dropped
+        // products in release builds.
+        let l = Layout::for_bits(6).unwrap();
+        let t = pack_approx(&l, &[1, 2]).unwrap();
+        let mut out = [0i64; 3]; // needs kw*ki = 4
+        t.unpack_into(0, &[0, 0], &mut out);
     }
 }

@@ -11,14 +11,20 @@ pub fn render_accuracy_rows(rows: &[NetworkAccuracyRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
-        "{:>6} {:>8} {:>12} {:>10} {:>10} {:>10}",
-        "W=I", "samples", "top1 agree", "err(q)%", "err(a)%", "delta pp"
+        "{:>10} {:>6} {:>8} {:>12} {:>10} {:>10} {:>10}",
+        "gen", "W=I", "samples", "top1 agree", "err(q)%", "err(a)%", "delta pp"
     );
     for r in rows {
         let _ = writeln!(
             s,
-            "{:>6} {:>8} {:>11.2}% {:>10.2} {:>10.2} {:>+10.2}",
-            r.w_bits, r.samples, r.top1_agreement, r.err_quant, r.err_approx, r.delta_pp
+            "{:>10} {:>6} {:>8} {:>11.2}% {:>10.2} {:>10.2} {:>+10.2}",
+            r.generation.name(),
+            r.w_bits,
+            r.samples,
+            r.top1_agreement,
+            r.err_quant,
+            r.err_approx,
+            r.delta_pp
         );
     }
     s
@@ -55,6 +61,7 @@ mod tests {
     #[test]
     fn renders_rows() {
         let rows = [NetworkAccuracyRow {
+            generation: crate::dsp::PackGeneration::Dsp48E1,
             w_bits: 8,
             samples: 10,
             top1_agreement: 90.0,

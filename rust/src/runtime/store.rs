@@ -27,7 +27,7 @@
 //! streams):
 //!
 //! ```text
-//! magic "SDMM" | version u16 | policy u8 | reserved u8
+//! magic "SDMM" | version u16 | policy u8 | generation u8
 //! v_bits u8 | c_bits u8 | group u16 | name (u16 len + utf8) | layers u32
 //! [policy != none]  WROM: group_size u8, addr_bits u8, entries u32,
 //!                   then per entry group_size x (zero u8, mw u8, n u8, s u8)
@@ -42,6 +42,7 @@
 
 use crate::api::{CompiledLayer, CompiledModel};
 use crate::cnn::zoo::ConvLayer;
+use crate::dsp::PackGeneration;
 use crate::compress::{
     huffman_decode, huffman_encode_with, rle_decode_sparse, CompressedPlane, CompressionPolicy,
     CompressionRate, HuffmanCode,
@@ -61,7 +62,9 @@ pub const BIN_NAME: &str = "sdmm-model.bin";
 pub const MANIFEST_NAME: &str = "manifest.json";
 
 const MAGIC: &[u8; 4] = b"SDMM";
-const VERSION: u16 = 1;
+// v1: baseline-only, byte 7 reserved as zero. v2: byte 7 carries the
+// PackGeneration tag (v1 artifacts read back as the baseline).
+const VERSION: u16 = 2;
 
 /// Summary of one written artifact (returned by
 /// [`CompiledModel::save`]).
@@ -300,11 +303,19 @@ pub fn save_model(model: &CompiledModel, dir: &Path) -> Result<ArtifactInfo> {
         )));
     }
     let layout = &model.layers[0].plane.layout;
+    if model.compression.compresses() && layout.generation != PackGeneration::Dsp48E1 {
+        // Mirrors Compiler::pack_model: the WROM's paper-form entries
+        // only describe baseline tuples.
+        return Err(SdmmError::InvalidModel(format!(
+            "generation {} models cannot be saved under a compressing policy",
+            layout.generation
+        )));
+    }
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     put_u16(&mut buf, VERSION);
     buf.push(model.compression.tag());
-    buf.push(0);
+    buf.push(layout.generation.tag());
     buf.push(layout.v as u8);
     buf.push(layout.c as u8);
     let group = u16::try_from(model.group)
@@ -468,11 +479,12 @@ fn manifest_text(
         None => (0, 0, 100.0),
     };
     let layout = &model.layers[0].plane.layout;
-    let fields: [(&str, Json); 16] = [
+    let fields: [(&str, Json); 17] = [
         ("format", Json::Str("sdmm-model".into())),
         ("version", Json::Num(VERSION as f64)),
         ("bin", Json::Str(BIN_NAME.into())),
         ("name", Json::Str(model.name.clone())),
+        ("generation", Json::Str(layout.generation.name().into())),
         ("v_bits", Json::Num(layout.v as f64)),
         ("c_bits", Json::Num(layout.c as f64)),
         ("group", Json::Num(model.group as f64)),
@@ -581,16 +593,28 @@ fn parse_model(bytes: &[u8]) -> Result<(CompiledModel, u64)> {
         return Err(corrupt("bad magic (not an sdmm-model artifact)"));
     }
     let version = r.u16()?;
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         return Err(corrupt(format!(
-            "artifact version {version} unsupported (this build reads v{VERSION})"
+            "artifact version {version} unsupported (this build reads v1..=v{VERSION})"
         )));
     }
     let policy = CompressionPolicy::from_tag(r.u8()?)?;
-    let _reserved = r.u8()?;
+    // v1 wrote a reserved zero here; v2 stores the packing generation.
+    let gen_byte = r.u8()?;
+    let generation = if version == 1 {
+        PackGeneration::Dsp48E1
+    } else {
+        PackGeneration::from_tag(gen_byte)
+            .ok_or_else(|| corrupt(format!("unknown packing generation tag {gen_byte}")))?
+    };
+    if policy.compresses() && generation != PackGeneration::Dsp48E1 {
+        return Err(corrupt(format!(
+            "generation {generation} artifacts cannot carry a compressed stream"
+        )));
+    }
     let v_bits = r.u8()? as u32;
     let c_bits = r.u8()? as u32;
-    let layout = Layout::for_bits_wc(c_bits, v_bits)?;
+    let layout = Layout::for_generation_wc(generation, c_bits, v_bits)?;
     let group = r.u16()? as usize;
     if group == 0 {
         return Err(corrupt("zero DSP group size"));
@@ -994,6 +1018,91 @@ mod tests {
         let b = BatchExec::new().run(&loaded, &input).unwrap();
         assert_eq!(a.output, b.output);
         assert_eq!((a.dsp_ops, a.mults), (b.dsp_ops, b.mults));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn seeded_model(generation: PackGeneration, policy: CompressionPolicy) -> CompiledModel {
+        let layers = [ConvLayer::new("g1", 6, 3, 4, 3, 1, 1, 1)];
+        let mut rng = Rng::new(41);
+        let weights: Vec<Vec<i64>> = layers
+            .iter()
+            .map(|l| (0..l.params()).map(|_| rng.range_i64(-128, 127)).collect())
+            .collect();
+        Compiler::for_generation(generation, 8)
+            .unwrap()
+            .approximate(ApproxPolicy::nearest())
+            .compress(policy)
+            .pack_model("gen-store", &layers, &weights)
+            .unwrap()
+    }
+
+    #[test]
+    fn save_load_round_trips_generation() {
+        for generation in [PackGeneration::Overpacked, PackGeneration::Dsp58] {
+            let dir = std::env::temp_dir().join(format!(
+                "sdmm-store-gen-{}-{}-{:?}",
+                generation,
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let model = seeded_model(generation, CompressionPolicy::None);
+            save_model(&model, &dir).unwrap();
+            let loaded = load_model(&dir).unwrap();
+            assert_eq!(loaded.generation(), generation);
+            assert_eq!(loaded.group, model.group);
+            let mut rng = Rng::new(42);
+            let mut input = Tensor3::zeros(3, 6, 6);
+            input.data = (0..input.data.len()).map(|_| rng.range_i64(-128, 127)).collect();
+            let a = BatchExec::new().run(&model, &input).unwrap();
+            let b = BatchExec::new().run(&loaded, &input).unwrap();
+            assert_eq!(a.output, b.output, "{generation}");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn version_1_artifacts_read_as_baseline() {
+        let dir = std::env::temp_dir().join(format!(
+            "sdmm-store-v1-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = seeded_model(PackGeneration::Dsp48E1, CompressionPolicy::None);
+        let info = save_model(&model, &dir).unwrap();
+        let mut bytes = std::fs::read(&info.bin_path).unwrap();
+        // Rewrite the header as a v1 artifact (the generation byte was
+        // reserved-zero there, which a baseline model already wrote)
+        // and restamp the footer.
+        bytes[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let loaded = load_model_bytes(&bytes).unwrap();
+        assert_eq!(loaded.generation(), PackGeneration::Dsp48E1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_generation_tag_is_a_typed_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "sdmm-store-badgen-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = seeded_model(PackGeneration::Dsp48E1, CompressionPolicy::None);
+        let info = save_model(&model, &dir).unwrap();
+        let mut bytes = std::fs::read(&info.bin_path).unwrap();
+        bytes[7] = 0xee;
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            load_model_bytes(&bytes),
+            Err(SdmmError::CorruptArtifact(_))
+        ));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

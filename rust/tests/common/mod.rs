@@ -12,6 +12,7 @@
 
 use sdmm::api::{ApproxPolicy, Compiler, CompressionPolicy, NetworkPlan};
 use sdmm::cnn::infer::Tensor3;
+use sdmm::dsp::PackGeneration;
 use sdmm::cnn::zoo::{ConvLayer, Model, ModelKind};
 use sdmm::util::rng::Rng;
 use std::path::PathBuf;
@@ -207,8 +208,23 @@ pub fn compile_plan(
     name: &str,
     policy: CompressionPolicy,
 ) -> NetworkPlan {
+    compile_plan_gen(PackGeneration::Dsp48E1, fx_bits, model, cw, fw, name, policy)
+}
+
+/// [`compile_plan`] on an explicit packing generation (the
+/// cross-generation conformance suite replays the golden vectors on
+/// the DSP58 layouts through this).
+pub fn compile_plan_gen(
+    generation: PackGeneration,
+    fx_bits: u32,
+    model: &Model,
+    cw: &[Vec<i64>],
+    fw: &[Vec<i64>],
+    name: &str,
+    policy: CompressionPolicy,
+) -> NetworkPlan {
     NetworkPlan::compile(
-        &Compiler::for_bits(fx_bits)
+        &Compiler::for_generation(generation, fx_bits)
             .unwrap()
             .approximate(ApproxPolicy::nearest())
             .compress(policy),

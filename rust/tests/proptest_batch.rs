@@ -198,7 +198,7 @@ fn prop_b_sign_correction_edge_bit_exact() {
         },
         |(ws, is)| {
             for group in is.chunks(3) {
-                if (layout.b_word(group) >> 17) & 1 != 1 {
+                if (layout.b_word(group).unwrap() >> 17) & 1 != 1 {
                     return Err(format!("edge not exercised for {group:?}").into());
                 }
             }

@@ -295,7 +295,7 @@ fn multi_lane_sign_correction_edges_every_rung_exhaustive() {
                 *lane = (rem % per_lane) as i64 - lim;
                 rem /= per_lane;
             }
-            saw_b17 |= (tuple.layout.b_word(&group) >> 17) & 1 == 1;
+            saw_b17 |= (tuple.layout.b_word(&group).unwrap() >> 17) & 1 == 1;
             full.extend_from_slice(&group);
         }
         let mut engine = SdmmEngine::new();
@@ -352,7 +352,7 @@ fn sign_correction_port_edges_a24_b17_exhaustive() {
                 *lane = (rem % per_lane) as i64 - lim;
                 rem /= per_lane;
             }
-            saw_b17 |= (tuple.layout.b_word(&group) >> 17) & 1 == 1;
+            saw_b17 |= (tuple.layout.b_word(&group).unwrap() >> 17) & 1 == 1;
             full.extend_from_slice(&group);
         }
         let mut engine = SdmmEngine::new();
